@@ -1,0 +1,40 @@
+//! Run the automated tiling exploration over the whole model zoo and
+//! print a Table-2-style summary (the paper's headline experiment).
+//!
+//! ```bash
+//! cargo run --release --example explore_zoo            # small models
+//! cargo run --release --example explore_zoo -- all     # + POS, SSD (slow)
+//! ```
+//!
+//! Expected shape (paper Table 2): KWS & TXT tiled only by FDT; the CNNs
+//! (MW, CIF, RAD) favour FFMT for savings but pay MAC overhead where
+//! fused chains are deep; FDT never adds a single MAC.
+
+use fdt::coordinator::FlowOptions;
+use fdt::models;
+use fdt::report;
+
+fn main() {
+    let all = std::env::args().any(|a| a == "all");
+    let names: &[&str] = if all {
+        &["KWS", "TXT", "MW", "POS", "SSD", "CIF", "RAD"]
+    } else {
+        &["KWS", "TXT", "MW", "CIF", "RAD"]
+    };
+    let opts = FlowOptions::default();
+    let mut rows = Vec::new();
+    for n in names {
+        let g = models::by_name(n).unwrap();
+        eprintln!("exploring {n} ({} ops)...", g.ops.len());
+        rows.push(report::table2_row(&g, &opts));
+    }
+    print!("{}", report::render_table2(&rows));
+
+    println!("\nPer-model flow statistics (§5.1):");
+    for r in &rows {
+        println!(
+            "  {:<5} FFMT {:>4} configs in {:>10.2?} | FDT {:>4} configs in {:>10.2?}",
+            r.model, r.ffmt_configs, r.ffmt_elapsed, r.fdt_configs, r.fdt_elapsed
+        );
+    }
+}

@@ -1,0 +1,105 @@
+//! End-to-end driver: the full three-layer stack on the KWS model.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example keyword_spotting
+//! ```
+//!
+//! Demonstrates every layer composing:
+//!
+//! 1. **L3 flow** — the Rust coordinator explores tiling configurations
+//!    for the KWS (DS-CNN) graph and reports the paper's headline
+//!    numbers: FFMT finds nothing (feature maps collapse to 1x1), FDT
+//!    reduces RAM with zero MAC overhead (Table 2, row 1).
+//! 2. **Interpreter equivalence** — the tiled graph computes the same
+//!    function as the original.
+//! 3. **L2/L1 artifacts via PJRT** — loads the JAX-lowered untiled and
+//!    FDT(Pallas)-tiled HLO, runs batched inference requests from Rust
+//!    (Python is not on the request path), checks numerics, and reports
+//!    latency/throughput.
+
+use fdt::coordinator::{optimize, FlowOptions};
+use fdt::models;
+use fdt::report;
+use fdt::runtime::{artifacts_dir, max_artifact_diff, Buffer, Runtime};
+
+fn main() {
+    let g = models::kws();
+    println!("=== L3: automated tiling exploration on {} ===", g.name);
+    println!("{}", g.summary());
+
+    // Paper Table 2, KWS row: FFMT cannot tile this model at all.
+    let ffmt = report::run_family(&g, true, false, &FlowOptions::default());
+    println!(
+        "FFMT: RAM {} -> {} B ({:.1}% — the 1x1 maps block feature-map tiling)",
+        ffmt.initial.ram,
+        ffmt.final_eval.ram,
+        ffmt.ram_savings_pct()
+    );
+
+    let fdt = report::run_family(&g, false, true, &FlowOptions::default());
+    println!(
+        "FDT:  RAM {} -> {} B ({:.1}% saved), MACs {:+.1}% (always 0 for FDT)",
+        fdt.initial.ram,
+        fdt.final_eval.ram,
+        fdt.ram_savings_pct(),
+        fdt.mac_overhead_pct()
+    );
+    for it in &fdt.iterations {
+        println!("  {} : {} -> {} B", it.config, it.ram_before, it.ram_after);
+    }
+
+    println!("\n=== interpreter equivalence (tiled vs untiled graph) ===");
+    let inputs = fdt::exec::random_inputs(&g, 11);
+    let a = fdt::exec::run(&g, &inputs).expect("untiled");
+    let b = fdt::exec::run(&fdt.graph, &inputs).expect("tiled");
+    let d = fdt::exec::max_abs_diff(&a, &b);
+    println!("max |diff| = {d:.2e} {}", if d < 1e-4 { "OK" } else { "FAIL" });
+    assert!(d < 1e-4);
+
+    println!("\n=== L2/L1: PJRT inference over AOT artifacts ===");
+    let dir = artifacts_dir();
+    let untiled_path = dir.join("kws_untiled.hlo.txt");
+    if !untiled_path.exists() {
+        println!("artifacts missing — run `make artifacts` first; skipping PJRT stage");
+        return;
+    }
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let untiled = rt.load(&untiled_path).expect("load untiled");
+    let tiled = rt.load(dir.join("kws_fdt.hlo.txt")).expect("load fdt");
+
+    // Numerical equivalence of the two lowerings on random MFCC frames.
+    let mut rng = fdt::graph::Rng::new(5);
+    let mk_input = |rng: &mut fdt::graph::Rng| {
+        let data: Vec<f32> = (0..49 * 10 * 8).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        Buffer::new(vec![49, 10, 8], data)
+    };
+    let mut worst = 0f32;
+    for _ in 0..8 {
+        let inp = [mk_input(&mut rng)];
+        worst = worst.max(max_artifact_diff(&untiled, &tiled, &inp).expect("diff"));
+    }
+    println!("untiled vs FDT artifact, 8 random inputs: max |diff| = {worst:.2e}");
+    assert!(worst < 1e-4);
+
+    // Serve a batch of requests through the tiled engine, report latency.
+    let n = 200;
+    let mut lat = Vec::with_capacity(n);
+    let t0 = std::time::Instant::now();
+    for _ in 0..n {
+        let inp = [mk_input(&mut rng)];
+        let t = std::time::Instant::now();
+        let out = tiled.run_f32(&inp).expect("inference");
+        lat.push(t.elapsed());
+        // 12 softmax probabilities; argmax = detected keyword.
+        assert_eq!(out[0].len(), 12);
+    }
+    let total = t0.elapsed();
+    lat.sort();
+    println!(
+        "{n} requests: {:.0} req/s, p50 {:?}, p99 {:?}",
+        n as f64 / total.as_secs_f64(),
+        lat[n / 2],
+        lat[(n * 99 / 100).min(n - 1)]
+    );
+    println!("\nall stages OK");
+}

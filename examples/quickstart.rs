@@ -1,0 +1,54 @@
+//! Quickstart: optimize a model's memory with the automated tiling flow.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds the TXT model (embedding -> mean -> dense — tileable *only* by
+//! FDT, paper §5.2), runs the Fig-3 exploration, and prints the memory
+//! plan before and after.
+
+use fdt::coordinator::{optimize, plan_graph, FlowOptions};
+use fdt::graph::fusion::fuse;
+use fdt::models;
+
+fn main() {
+    // 1. A model. `models::` has all seven of the paper's Table-2 graphs,
+    //    or build your own with `fdt::graph::GraphBuilder`.
+    let g = models::txt();
+    println!("{}\n", g.summary());
+
+    // 2. The automated exploration flow (schedule -> layout -> critical
+    //    buffer -> path discovery -> transform -> repeat, Fig. 3).
+    let opts = FlowOptions::default();
+    let result = optimize(&g, &opts);
+
+    println!(
+        "RAM: {} B -> {} B  ({:.1}% saved)",
+        result.initial.ram,
+        result.final_eval.ram,
+        result.ram_savings_pct()
+    );
+    println!(
+        "MACs: {} -> {}  ({:+.1}% — FDT never adds compute)",
+        result.initial.macs,
+        result.final_eval.macs,
+        result.mac_overhead_pct()
+    );
+    for it in &result.iterations {
+        println!("  applied: {} on {}", it.config, it.critical_buffer);
+    }
+
+    // 3. The optimized graph is a plain Graph: schedule it, plan its
+    //    layout, export DOT, or run it in the reference interpreter.
+    let grouping = fuse(&result.graph);
+    let (_m, s, l) = plan_graph(&result.graph, &grouping, &opts);
+    println!("\nfinal schedule: {} steps, peak {} B", s.order.len(), s.peak);
+    println!("final layout arena: {} B (optimal={})", l.total, l.optimal);
+
+    // 4. Numerics are preserved (FDT changes memory, not behaviour).
+    let inputs = fdt::exec::random_inputs(&g, 7);
+    let a = fdt::exec::run(&g, &inputs).expect("untiled run");
+    let b = fdt::exec::run(&result.graph, &inputs).expect("tiled run");
+    println!("max |untiled - tiled| = {:.2e}", fdt::exec::max_abs_diff(&a, &b));
+}

@@ -1,0 +1,94 @@
+//! Serving driver: batched KWS inference over the FDT artifact with a
+//! multi-producer request queue — the L3 "request path" with Python
+//! nowhere in sight.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_kws -- [N_REQS] [N_CLIENTS]
+//! ```
+//!
+//! Architecture (vllm-router-style, scaled to a microcontroller model):
+//! client threads push requests into a bounded channel; the leader thread
+//! drains the queue, runs inference on the PJRT engine, and completes
+//! requests; latency/throughput percentiles are reported at the end.
+
+use fdt::runtime::{artifacts_dir, Buffer, Runtime};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+struct Request {
+    input: Buffer,
+    submitted: Instant,
+    done: mpsc::Sender<(usize, Duration)>,
+    id: usize,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_reqs: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(400);
+    let n_clients: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let dir = artifacts_dir();
+    let path = dir.join("kws_fdt.hlo.txt");
+    if !path.exists() {
+        eprintln!("artifact missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let engine = rt.load(&path).expect("load kws_fdt");
+    println!("serving {} on {} ({} clients, {} requests)", engine.name(), rt.platform(), n_clients, n_reqs);
+
+    let (tx, rx) = mpsc::sync_channel::<Request>(64); // bounded: backpressure
+    let (done_tx, done_rx) = mpsc::channel();
+
+    // Client threads: generate random MFCC windows, submit, await.
+    let mut clients = Vec::new();
+    for c in 0..n_clients {
+        let tx = tx.clone();
+        let done_tx = done_tx.clone();
+        let quota = n_reqs / n_clients + usize::from(c < n_reqs % n_clients);
+        clients.push(std::thread::spawn(move || {
+            let mut rng = fdt::graph::Rng::new(100 + c as u64);
+            for i in 0..quota {
+                let data: Vec<f32> =
+                    (0..49 * 10 * 8).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+                let req = Request {
+                    input: Buffer::new(vec![49, 10, 8], data),
+                    submitted: Instant::now(),
+                    done: done_tx.clone(),
+                    id: c * 1_000_000 + i,
+                };
+                tx.send(req).expect("queue closed");
+            }
+        }));
+    }
+    drop(tx);
+    drop(done_tx);
+
+    // Leader loop (main thread — PJRT handles are not Send): drain the
+    // queue, execute, complete.
+    let t0 = Instant::now();
+    let mut served = 0usize;
+    while let Ok(req) = rx.recv() {
+        let out = engine.run_f32(&[req.input]).expect("inference");
+        debug_assert_eq!(out[0].len(), 12);
+        let _ = req.done.send((req.id, req.submitted.elapsed()));
+        served += 1;
+    }
+    let mut lat: Vec<Duration> = done_rx.iter().map(|(_, d)| d).collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+    let total = t0.elapsed();
+
+    lat.sort();
+    let pct = |p: usize| lat[(lat.len() * p / 100).min(lat.len() - 1)];
+    println!(
+        "served {served} requests in {:.2?}: {:.0} req/s\n  e2e latency p50 {:?}  p90 {:?}  p99 {:?}  max {:?}",
+        total,
+        served as f64 / total.as_secs_f64(),
+        pct(50),
+        pct(90),
+        pct(99),
+        lat[lat.len() - 1]
+    );
+}

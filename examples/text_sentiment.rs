@@ -1,0 +1,79 @@
+//! TXT walkthrough: the model FFMT cannot touch at all (paper §5.2).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example text_sentiment
+//! ```
+//!
+//! The TXT critical buffer is the [256, 64] embedding-lookup output inside
+//! `gather -> mean -> dense` — no convolution, no spatial locality, so
+//! feature-map tiling has nothing to split. FDT tiles the embedding
+//! dimension: gather is the Fan-Out, mean a PART op, dense the Fan-In
+//! (paper: 76.2% RAM saved, the largest number in Table 2).
+
+use fdt::coordinator::{plan_graph, FlowOptions};
+use fdt::graph::fusion::fuse;
+use fdt::models;
+use fdt::report;
+use fdt::runtime::{artifacts_dir, max_artifact_diff, Buffer, Runtime};
+
+fn main() {
+    let g = models::txt();
+    println!("{}\n", g.summary());
+
+    // FFMT finds nothing: no spatially-local ops around the buffer.
+    let ffmt = report::run_family(&g, true, false, &FlowOptions::default());
+    println!(
+        "FFMT: {} -> {} B ({:.1}%) — embedding/mean have no feature maps",
+        ffmt.initial.ram,
+        ffmt.final_eval.ram,
+        ffmt.ram_savings_pct()
+    );
+
+    // FDT tiles it hard.
+    let fdt = report::run_family(&g, false, true, &FlowOptions::default());
+    println!(
+        "FDT:  {} -> {} B ({:.1}% saved; paper reports 76.2%), MACs {:+.1}%",
+        fdt.initial.ram,
+        fdt.final_eval.ram,
+        fdt.ram_savings_pct(),
+        fdt.mac_overhead_pct()
+    );
+    for it in &fdt.iterations {
+        println!("  {}", it.config);
+    }
+
+    // Show the final memory plan: schedule + arena layout.
+    let grouping = fuse(&fdt.graph);
+    let (m, s, l) = plan_graph(&fdt.graph, &grouping, &FlowOptions::default());
+    println!("\nfinal arena ({} B):", l.total);
+    print!("{}", fdt::layout::render(&m, &l));
+    let _ = s;
+
+    // Interpreter equivalence.
+    let inputs = fdt::exec::random_inputs(&g, 21);
+    let a = fdt::exec::run(&g, &inputs).expect("untiled");
+    let b = fdt::exec::run(&fdt.graph, &inputs).expect("tiled");
+    println!("\ninterpreter max |diff| = {:.2e}", fdt::exec::max_abs_diff(&a, &b));
+
+    // PJRT: run the JAX/Pallas artifacts on real token ids.
+    let dir = artifacts_dir();
+    if !dir.join("txt_untiled.hlo.txt").exists() {
+        println!("artifacts missing — run `make artifacts`; skipping PJRT stage");
+        return;
+    }
+    let rt = Runtime::cpu().expect("PJRT client");
+    let untiled = rt.load(dir.join("txt_untiled.hlo.txt")).expect("untiled");
+    let tiled = rt.load(dir.join("txt_fdt.hlo.txt")).expect("tiled");
+    let mut rng = fdt::graph::Rng::new(3);
+    let mut worst = 0f32;
+    for _ in 0..8 {
+        let tokens: Vec<i32> = (0..256).map(|_| (rng.next_u64() % 10_000) as i32).collect();
+        let inp = [Buffer::new_i32(vec![256], tokens)];
+        worst = worst.max(max_artifact_diff(&untiled, &tiled, &inp).expect("diff"));
+        let score = tiled.run_f32(&inp).expect("run")[0][0];
+        assert!((0.0..=1.0).contains(&score), "sigmoid output in range");
+    }
+    println!("PJRT untiled vs FDT, 8 random sentences: max |diff| = {worst:.2e}");
+    assert!(worst < 1e-4);
+    println!("OK");
+}

@@ -1,0 +1,137 @@
+"""AOT lowering: JAX/Pallas models -> HLO *text* artifacts for Rust.
+
+Run once at build time (``make artifacts``); the Rust coordinator loads
+the emitted ``artifacts/*.hlo.txt`` through the ``xla`` crate's PJRT CPU
+client and never touches Python again.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md). Lowered with
+``return_tuple=True`` so the Rust side unwraps a tuple uniformly.
+
+Each model is lowered in *both* forms (untiled jnp reference and
+FDT-tiled Pallas) with identical baked weights, giving the Rust test
+suite an end-to-end numerical-equivalence oracle. ``manifest.json``
+records every artifact's input/output signature for the serving examples.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax computation -> HLO text via StableHLO round-trip."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the baked weights must survive the text
+    # round-trip (default printing elides them as `constant({...})`).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def build_entries():
+    """(name, fn, example_args, meta) for every artifact."""
+    dp = model.init_dense_pair_params()
+    kws = model.init_kws_params()
+    txt = model.init_txt_params()
+    d = model.DENSE_PAIR_DIMS
+
+    # Weights are closed over (baked as HLO constants); only activations
+    # cross the Rust<->artifact boundary.
+    entries = [
+        (
+            "dense_pair_untiled",
+            lambda x: (model.dense_pair(dp, x),),
+            [_spec((d["batch"], d["inp"]), jnp.float32)],
+        ),
+        (
+            "dense_pair_fdt",
+            lambda x: (model.dense_pair_fdt(dp, x, partitions=8),),
+            [_spec((d["batch"], d["inp"]), jnp.float32)],
+        ),
+        (
+            "kws_untiled",
+            lambda x: (model.kws_forward(kws, x),),
+            [_spec(model.KWS_INPUT_SHAPE, jnp.float32)],
+        ),
+        (
+            "kws_fdt",
+            lambda x: (model.kws_forward_fdt(kws, x, partitions=8),),
+            [_spec(model.KWS_INPUT_SHAPE, jnp.float32)],
+        ),
+        (
+            "txt_untiled",
+            lambda t: (model.txt_forward(txt, t),),
+            [_spec((model.TXT_SEQ,), jnp.int32)],
+        ),
+        (
+            "txt_fdt",
+            lambda t: (model.txt_forward_fdt(txt, t, partitions=8),),
+            [_spec((model.TXT_SEQ,), jnp.int32)],
+        ),
+    ]
+    return entries
+
+
+def lower_all(out_dir: str, only: list[str] | None = None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for name, fn, specs in build_entries():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        # Record the runtime signature for the Rust loader.
+        outs = jax.eval_shape(fn, *specs)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(s.shape), "dtype": s.dtype.name} for s in specs
+            ],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": o.dtype.name} for o in outs
+            ],
+            "hlo_bytes": len(text),
+        }
+        print(f"  {name}: {len(text)} chars -> {path}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    args = ap.parse_args()
+
+    manifest = lower_all(args.out, args.only)
+    mpath = os.path.join(args.out, "manifest.json")
+    existing = {}
+    if args.only and os.path.exists(mpath):
+        with open(mpath) as f:
+            existing = json.load(f)
+    existing.update(manifest)
+    with open(mpath, "w") as f:
+        json.dump(existing, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath} ({len(existing)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

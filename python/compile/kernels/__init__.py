@@ -1,0 +1,25 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+* ``fdt_dense_pair`` — the FDT hot-spot: fused dense pair, depth-tiled
+  (Fan-Out / Fan-In / Merge, paper Fig. 2) + its 1x1-conv-pair wrapper.
+* ``fdt_embed_mean_dense`` — FDT over gather -> mean -> dense (the TXT
+  critical path, §5.2).
+* ``part_dwconv2d`` — channel-partitioned depthwise conv (the PART block).
+* ``ref`` — pure-jnp oracles for all of the above.
+"""
+
+from . import ref
+from .fdt_dense_pair import fdt_conv_pair_1x1, fdt_dense_pair
+from .fdt_embed import fdt_embed_mean_dense
+from .fdt_kws_head import fdt_kws_head, kws_head_ref
+from .part_dwconv import part_dwconv2d
+
+__all__ = [
+    "ref",
+    "fdt_dense_pair",
+    "fdt_conv_pair_1x1",
+    "fdt_embed_mean_dense",
+    "fdt_kws_head",
+    "kws_head_ref",
+    "part_dwconv2d",
+]

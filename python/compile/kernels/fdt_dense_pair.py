@@ -1,0 +1,133 @@
+"""Pallas kernel: Fused Depthwise Tiling of a dense pair (paper Fig. 2).
+
+The FDT hot-spot — two consecutive dense (fully-connected) layers whose
+intermediate [B, H] activation is the critical buffer — tiled into P
+depthwise partitions:
+
+  * **FDT Fan-Out**: partition p computes hidden slice
+    ``h_p = act1(x @ W1[:, p·Hp:(p+1)·Hp] + b1[p·Hp:(p+1)·Hp])`` from the
+    *full* input (every output neuron needs all inputs, §3).
+  * **FDT Fan-In**: partition p contributes the *partial sum*
+    ``h_p @ W2[p·Hp:(p+1)·Hp, :]`` — valid because a dense op is a sum of
+    products, so partials recombine by elementwise addition.
+  * **Merge**: after the last partition, the appended merge op adds the
+    bias and applies the (nonlinear) activation exactly once.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the partition index
+is the Pallas **grid** dimension; each grid step keeps one weight slice
+pair (W1 column block + W2 row block) and the [B, Hp] hidden tile resident
+in VMEM, accumulating into the [B, O] output block — the same
+"intermediate never materializes in slow memory" schedule the paper builds
+for MCU SRAM. MXU-friendliness: each step is two dense (B×I)·(I×Hp) and
+(B×Hp)·(Hp×O) contractions.
+
+Lowered with ``interpret=True`` — real-TPU Mosaic lowering cannot execute
+on the CPU PJRT plugin (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import apply_act
+
+
+def _kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, *, act1: str, act2: str):
+    p = pl.program_id(0)
+    nump = pl.num_programs(0)
+
+    # Fan-Out: full input x [B, I] against this partition's W1 slice
+    # [I, Hp] -> hidden tile [B, Hp]; per-partition bias slice; act1 is
+    # elementwise, hence a PART op that stays inside the partition.
+    h = apply_act(
+        jnp.dot(x_ref[...], w1_ref[...], preferred_element_type=jnp.float32)
+        + b1_ref[...],
+        act1,
+    )
+
+    # Fan-In: partial sum [B, O] of this partition's W2 row block.
+    partial = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(p == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(p != 0)
+    def _acc():
+        o_ref[...] += partial
+
+    # Merge op: bias + nonlinear activation applied exactly once, after
+    # all partial sums are in (§3: "a new appended Merge operation").
+    @pl.when(p == nump - 1)
+    def _merge():
+        o_ref[...] = apply_act(o_ref[...] + b2_ref[...], act2)
+
+
+def fdt_dense_pair(
+    x,
+    w1,
+    b1,
+    w2,
+    b2,
+    *,
+    partitions: int,
+    act1: str = "relu",
+    act2: str = "identity",
+):
+    """FDT-tiled dense pair; numerically equal to ``ref.dense_pair_ref``.
+
+    Args:
+      x: [B, I] input (full buffer available to every partition).
+      w1: [I, H] first-layer weights (H is split: Fan-Out).
+      b1: [H] first-layer bias.
+      w2: [H, O] second-layer weights (H is split: Fan-In).
+      b2: [O] second-layer bias (merge-side, applied once).
+      partitions: P, number of depthwise partitions; must divide H.
+      act1/act2: activation names (see ``ref.apply_act``).
+    """
+    b, i = x.shape
+    i2, h = w1.shape
+    h2, o = w2.shape
+    assert i == i2 and h == h2, (x.shape, w1.shape, w2.shape)
+    assert h % partitions == 0, f"H={h} not divisible by P={partitions}"
+    hp = h // partitions
+
+    kernel = functools.partial(_kernel, act1=act1, act2=act2)
+    return pl.pallas_call(
+        kernel,
+        grid=(partitions,),
+        in_specs=[
+            pl.BlockSpec((b, i), lambda p: (0, 0)),  # x: full, every step
+            pl.BlockSpec((i, hp), lambda p: (0, p)),  # W1 column block
+            pl.BlockSpec((hp,), lambda p: (p,)),  # b1 slice
+            pl.BlockSpec((hp, o), lambda p: (p, 0)),  # W2 row block
+            pl.BlockSpec((o,), lambda p: (0,)),  # b2: full (merge)
+        ],
+        out_specs=pl.BlockSpec((b, o), lambda p: (0, 0)),  # accumulator
+        out_shape=jax.ShapeDtypeStruct((b, o), jnp.float32),
+        interpret=True,
+    )(
+        x.astype(jnp.float32),
+        w1.astype(jnp.float32),
+        b1.astype(jnp.float32),
+        w2.astype(jnp.float32),
+        b2.astype(jnp.float32),
+    )
+
+
+def fdt_conv_pair_1x1(x, w1, b1, w2, b2, *, partitions: int, act1="relu", act2="relu"):
+    """FDT on a pair of 1x1 convolutions (the KWS head case, §5.2).
+
+    A 1x1 conv over an [H, W, C] map is the dense pair applied per pixel,
+    so the spatial dims flatten into the batch dim of the kernel.
+    """
+    hh, ww, cin = x.shape
+    y = fdt_dense_pair(
+        x.reshape(hh * ww, cin), w1, b1, w2, b2,
+        partitions=partitions, act1=act1, act2=act2,
+    )
+    return y.reshape(hh, ww, -1)

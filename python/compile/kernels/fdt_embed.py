@@ -1,0 +1,94 @@
+"""Pallas kernel: FDT over the TXT critical path (gather -> mean -> dense).
+
+The paper's TXT model (§5.2) holds its critical buffer — the [S, E]
+embedding-lookup output — inside a sequence that FFMT cannot tile at all:
+an embedding lookup (TensorFlow ``gather``) followed by a mean axis
+reduction. FDT tiles the *embedding dimension* E:
+
+  * **Fan-Out**: partition p gathers only the E/P-wide column slice of the
+    embedding table for all S tokens — an [S, Ep] tile instead of [S, E].
+  * **PART**: the mean over the token axis acts per-column, so it runs
+    independently inside each partition -> [Ep].
+  * **Fan-In**: the dense head consumes the partial mean against its
+    matching weight row block, contributing an [H] partial sum.
+  * **Merge**: bias + activation once after the last partition.
+
+The [S, E] critical buffer never exists in full — only [S, Ep] tiles live
+at any step, which is exactly the paper's 76.2 % RAM reduction mechanism.
+
+Grid = partitions; the token ids are a full (small) block each step; the
+table is blocked along columns so each VMEM-resident tile is [V, Ep].
+interpret=True (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import apply_act
+
+
+def _kernel(tok_ref, table_ref, w_ref, b_ref, o_ref, *, act: str):
+    p = pl.program_id(0)
+    nump = pl.num_programs(0)
+
+    # Fan-Out: gather this partition's embedding columns for all tokens.
+    e = jnp.take(table_ref[...], tok_ref[...], axis=0)  # [S, Ep]
+    # PART: the mean reduces the token axis independently per column.
+    m = jnp.mean(e.astype(jnp.float32), axis=0)  # [Ep]
+    # Fan-In: partial sum against the matching dense weight row block.
+    partial = jnp.dot(m, w_ref[...], preferred_element_type=jnp.float32)  # [H]
+
+    @pl.when(p == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(p != 0)
+    def _acc():
+        o_ref[...] += partial
+
+    @pl.when(p == nump - 1)
+    def _merge():
+        o_ref[...] = apply_act(o_ref[...] + b_ref[...], act)
+
+
+def fdt_embed_mean_dense(tokens, table, w, b, *, partitions: int, act: str = "relu"):
+    """FDT-tiled gather->mean->dense; equals ``ref.embed_mean_dense_ref``.
+
+    Args:
+      tokens: [S] int32 token ids.
+      table: [V, E] embedding table (E is split).
+      w: [E, H] dense weights (row-blocked: Fan-In).
+      b: [H] dense bias (merge-side).
+      partitions: P; must divide E.
+    """
+    (s,) = tokens.shape
+    v, e = table.shape
+    e2, h = w.shape
+    assert e == e2, (table.shape, w.shape)
+    assert e % partitions == 0, f"E={e} not divisible by P={partitions}"
+    ep = e // partitions
+
+    kernel = functools.partial(_kernel, act=act)
+    return pl.pallas_call(
+        kernel,
+        grid=(partitions,),
+        in_specs=[
+            pl.BlockSpec((s,), lambda p: (0,)),  # tokens: full
+            pl.BlockSpec((v, ep), lambda p: (0, p)),  # table column block
+            pl.BlockSpec((ep, h), lambda p: (p, 0)),  # W row block
+            pl.BlockSpec((h,), lambda p: (0,)),  # bias: full (merge)
+        ],
+        out_specs=pl.BlockSpec((h,), lambda p: (0,)),
+        out_shape=jax.ShapeDtypeStruct((h,), jnp.float32),
+        interpret=True,
+    )(
+        tokens.astype(jnp.int32),
+        table.astype(jnp.float32),
+        w.astype(jnp.float32),
+        b.astype(jnp.float32),
+    )

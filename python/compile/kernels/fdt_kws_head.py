@@ -1,0 +1,135 @@
+"""Pallas kernel: FDT over the KWS critical path (§5.2).
+
+In the KWS (DS-CNN) model "the critical buffer is involved in a sequence
+of convolutions that reduce the feature map size down to 1x1, which can
+not be split by FFMT" — concretely:
+
+    1x1 conv (64ch)  ->  [H, W, 64] critical buffer
+    full-kernel depthwise conv (HxW, VALID)  ->  [1, 1, 64]
+    1x1 conv (192ch)
+
+FDT tiles the channel dimension of the [H, W, 64] buffer:
+
+  * **Fan-Out**: the 1x1 conv is a per-pixel dense layer; partition p
+    computes its Cp-channel slice from the *full* input map.
+  * **PART**: the full-kernel depthwise conv reduces each channel's map
+    to a scalar independently (a spatially-weighted sum) — no
+    cross-channel dependency, so it stays inside the partition.
+  * **Fan-In**: the next 1x1 conv (at 1x1 spatial = a dense layer) takes
+    partial sums over the channel slices; **Merge** adds bias + act once.
+
+Each grid step holds one [H, W, Cp] tile — the full [H, W, 64] critical
+buffer never materializes, which is the paper's 18.1 % KWS RAM saving.
+
+VMEM/block view: x map tile + W1 column block + dw filter slice + W2 row
+block + [O] accumulator; the fan-out contraction is a (HW×Cin)·(Cin×Cp)
+MXU matmul, the reduction a VPU elementwise-sum.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import apply_act
+
+
+def _kernel(x_ref, w1_ref, b1_ref, fdw_ref, bdw_ref, w2_ref, b2_ref, o_ref,
+            *, act1: str, actdw: str, act2: str):
+    p = pl.program_id(0)
+    nump = pl.num_programs(0)
+
+    x = x_ref[...].astype(jnp.float32)  # [H, W, Cin] (full input map)
+    h, w, cin = x.shape
+
+    # Fan-Out: 1x1 conv = per-pixel dense; this partition's channels only.
+    hid = jnp.dot(
+        x.reshape(h * w, cin), w1_ref[...], preferred_element_type=jnp.float32
+    ) + b1_ref[...]
+    hid = apply_act(hid, act1).reshape(h, w, -1)  # [H, W, Cp]
+
+    # PART: full-kernel VALID depthwise conv == spatially-weighted sum per
+    # channel; reduces the partition's map to a [Cp] vector.
+    red = jnp.sum(hid * fdw_ref[...].astype(jnp.float32), axis=(0, 1)) + bdw_ref[...]
+    red = apply_act(red, actdw)  # [Cp]
+
+    # Fan-In: partial sum of the next 1x1 conv (dense at 1x1 spatial).
+    partial = jnp.dot(red, w2_ref[...], preferred_element_type=jnp.float32)  # [O]
+
+    @pl.when(p == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(p != 0)
+    def _acc():
+        o_ref[...] += partial
+
+    @pl.when(p == nump - 1)
+    def _merge():
+        o_ref[...] = apply_act(o_ref[...] + b2_ref[...], act2)
+
+
+def fdt_kws_head(x, w1, b1, fdw, bdw, w2, b2, *, partitions: int,
+                 act1: str = "relu", actdw: str = "relu", act2: str = "relu"):
+    """FDT-tiled 1x1-conv -> full-kernel dwconv -> 1x1-conv sequence.
+
+    Args:
+      x: [H, W, Cin] input feature map (full; Fan-Out needs all inputs).
+      w1: [Cin, C] pointwise weights (C split: Fan-Out).
+      b1: [C] bias.
+      fdw: [H, W, C] depthwise filter (VALID, kernel == map size).
+      bdw: [C] depthwise bias.
+      w2: [C, O] next pointwise weights (C split: Fan-In).
+      b2: [O] merge-side bias.
+      partitions: P; must divide C.
+
+    Returns [O] — the [1, 1, O] map squeezed.
+    """
+    h, w, cin = x.shape
+    cin2, c = w1.shape
+    hf, wf, c2 = fdw.shape
+    c3, o = w2.shape
+    assert cin == cin2 and c == c2 == c3 and (hf, wf) == (h, w), \
+        (x.shape, w1.shape, fdw.shape, w2.shape)
+    assert c % partitions == 0, f"C={c} not divisible by P={partitions}"
+    cp = c // partitions
+
+    kernel = functools.partial(_kernel, act1=act1, actdw=actdw, act2=act2)
+    return pl.pallas_call(
+        kernel,
+        grid=(partitions,),
+        in_specs=[
+            pl.BlockSpec((h, w, cin), lambda p: (0, 0, 0)),  # x: full
+            pl.BlockSpec((cin, cp), lambda p: (0, p)),  # W1 column block
+            pl.BlockSpec((cp,), lambda p: (p,)),
+            pl.BlockSpec((h, w, cp), lambda p: (0, 0, p)),  # dw filter slice
+            pl.BlockSpec((cp,), lambda p: (p,)),
+            pl.BlockSpec((cp, o), lambda p: (p, 0)),  # W2 row block
+            pl.BlockSpec((o,), lambda p: (0,)),
+        ],
+        out_specs=pl.BlockSpec((o,), lambda p: (0,)),
+        out_shape=jax.ShapeDtypeStruct((o,), jnp.float32),
+        interpret=True,
+    )(
+        x.astype(jnp.float32),
+        w1.astype(jnp.float32),
+        b1.astype(jnp.float32),
+        fdw.astype(jnp.float32),
+        bdw.astype(jnp.float32),
+        w2.astype(jnp.float32),
+        b2.astype(jnp.float32),
+    )
+
+
+def kws_head_ref(x, w1, b1, fdw, bdw, w2, b2, *, act1="relu", actdw="relu",
+                 act2="relu"):
+    """Untiled oracle for ``fdt_kws_head`` (plain jnp, full buffers)."""
+    h, w, cin = x.shape
+    hid = apply_act(
+        x.reshape(h * w, cin).astype(jnp.float32) @ w1 + b1, act1
+    ).reshape(h, w, -1)
+    red = apply_act(jnp.sum(hid * fdw, axis=(0, 1)) + bdw, actdw)
+    return apply_act(red @ w2 + b2, act2)

@@ -1,0 +1,77 @@
+"""Pallas kernel: depthwise conv as a PART block, channel-partitioned.
+
+Depthwise convolutions are the paper's canonical PART op (§4.4): "every
+output channel only depends on its respective input channel", so the
+channel dimension splits trivially — no fan-out/fan-in, no partial sums.
+Each grid step convolves one channel block with its own filter slice.
+
+This kernel exists so an FDT path that *interleaves* a depthwise conv
+between the Fan-Out and Fan-In ops (KWS's DS-CNN blocks do exactly that)
+still lowers into a single blocked HLO. Spatial conv inside the kernel is
+expressed as a shift-and-accumulate over the (small, static) kernel
+window, which interpret-mode lowers to plain HLO slices/adds — and which
+on real TPU hardware maps to VPU element-wise ops over VMEM-resident
+tiles (depthwise convs have no MXU contraction to exploit).
+
+Restrictions (all the zoo needs): stride 1, SAME padding, odd kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import apply_act
+
+
+def _kernel(x_ref, f_ref, b_ref, o_ref, *, kh: int, kw: int, act: str):
+    x = x_ref[...].astype(jnp.float32)  # [H, W, Cp]
+    f = f_ref[...].astype(jnp.float32)  # [kh, kw, Cp]
+    h, w, _ = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((ph, ph), (pw, pw), (0, 0)))
+    acc = jnp.zeros_like(x)
+    # Static double loop over the window: unrolled at trace time into
+    # shift-multiply-accumulate — every tap is an elementwise VPU op.
+    for dy in range(kh):
+        for dx in range(kw):
+            acc = acc + xp[dy : dy + h, dx : dx + w, :] * f[dy, dx, :]
+    o_ref[...] = apply_act(acc + b_ref[...], act)
+
+
+def part_dwconv2d(x, f, b, *, partitions: int, act: str = "relu"):
+    """Channel-partitioned depthwise conv; equals ``ref.dwconv2d_ref``
+    (stride 1, SAME).
+
+    Args:
+      x: [H, W, C] input map.
+      f: [kh, kw, C] depthwise filters (odd kh, kw).
+      b: [C] bias.
+      partitions: P; must divide C.
+    """
+    h, w, c = x.shape
+    kh, kw, c2 = f.shape
+    assert c == c2 and kh % 2 == 1 and kw % 2 == 1, (x.shape, f.shape)
+    assert c % partitions == 0, f"C={c} not divisible by P={partitions}"
+    cp = c // partitions
+
+    kernel = functools.partial(_kernel, kh=kh, kw=kw, act=act)
+    return pl.pallas_call(
+        kernel,
+        grid=(partitions,),
+        in_specs=[
+            pl.BlockSpec((h, w, cp), lambda p: (0, 0, p)),  # channel block
+            pl.BlockSpec((kh, kw, cp), lambda p: (0, 0, p)),  # filter slice
+            pl.BlockSpec((cp,), lambda p: (p,)),  # bias slice
+        ],
+        out_specs=pl.BlockSpec((h, w, cp), lambda p: (0, 0, p)),
+        out_shape=jax.ShapeDtypeStruct((h, w, c), jnp.float32),
+        interpret=True,
+    )(
+        x.astype(jnp.float32),
+        f.astype(jnp.float32),
+        b.astype(jnp.float32),
+    )

@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here that is
+written with plain `jax.numpy` ops only — no Pallas, no partitioning. The
+pytest suite (and hypothesis sweeps) assert `assert_allclose` between each
+kernel and its oracle over shape/partition/dtype grids. The oracles also
+serve as the *untiled* compute definitions for the L2 models, which is how
+we show FDT preserves numerics end to end.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def apply_act(x, act: str):
+    """Activation function by name (the subset the paper's models use)."""
+    if act == "identity":
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    if act == "sigmoid":
+        return 1.0 / (1.0 + jnp.exp(-x))
+    if act == "tanh":
+        return jnp.tanh(x)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def dense_pair_ref(x, w1, b1, w2, b2, act1: str = "relu", act2: str = "identity"):
+    """Untiled reference of the FDT dense pair (paper Fig. 2).
+
+    ``y = act2((act1(x @ w1 + b1)) @ w2 + b2)`` — two consecutive dense
+    layers. FDT tiles the hidden dimension H of the [B, H] intermediate.
+
+    Shapes: x [B, I], w1 [I, H], b1 [H], w2 [H, O], b2 [O] -> [B, O].
+    """
+    h = apply_act(x @ w1 + b1, act1)
+    return apply_act(h @ w2 + b2, act2)
+
+
+def embed_mean_dense_ref(tokens, table, w, b, act: str = "relu"):
+    """Untiled reference of the TXT critical path.
+
+    Embedding lookup (gather) -> mean over the token axis -> dense head.
+    FDT tiles the embedding dimension E: gather is the Fan-Out, mean is a
+    PART op (no cross-channel deps), dense is the Fan-In.
+
+    Shapes: tokens [S] int32, table [V, E], w [E, H], b [H] -> [H].
+    """
+    e = jnp.take(table, tokens, axis=0)  # [S, E]
+    m = jnp.mean(e, axis=0)  # [E]
+    return apply_act(m @ w + b, act)
+
+
+def dwconv2d_ref(x, f, b, stride=(1, 1), padding: str = "SAME", act: str = "relu"):
+    """Depthwise 2-D convolution, channels-last.
+
+    Shapes: x [H, W, C], f [kh, kw, C], b [C] -> [H', W', C]. Each output
+    channel depends only on its own input channel — the PART block of the
+    paper's path discovery (trivially FDT-tileable along C).
+    """
+    import jax.lax as lax
+
+    xn = x[None].astype(jnp.float32)  # [1, H, W, C]
+    # HWIO with feature_group_count=C: filter [kh, kw, 1, C].
+    fn = f[:, :, None, :].astype(jnp.float32)
+    y = lax.conv_general_dilated(
+        xn,
+        fn,
+        window_strides=stride,
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=x.shape[-1],
+    )[0]
+    return apply_act(y + b, act)
+
+
+def conv2d_ref(x, f, b, stride=(1, 1), padding: str = "SAME", act: str = "relu"):
+    """Standard 2-D convolution, channels-last.
+
+    Shapes: x [H, W, Cin], f [kh, kw, Cin, Cout], b [Cout] -> [H', W', Cout].
+    """
+    import jax.lax as lax
+
+    xn = x[None].astype(jnp.float32)
+    y = lax.conv_general_dilated(
+        xn,
+        f.astype(jnp.float32),
+        window_strides=stride,
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    return apply_act(y + b, act)
+
+
+def conv_pair_1x1_ref(x, w1, b1, w2, b2, act1: str = "relu", act2: str = "relu"):
+    """Untiled reference for a pair of 1x1 convolutions over [H, W, C] maps.
+
+    A 1x1 conv is a dense layer applied at every pixel, so the FDT dense
+    pair applies pointwise: this is the KWS head case (feature maps reduced
+    to 1x1 make FFMT inapplicable, §5.2).
+    """
+    hh, ww, cin = x.shape
+    flat = x.reshape(hh * ww, cin)
+    y = dense_pair_ref(flat, w1, b1, w2, b2, act1, act2)
+    return y.reshape(hh, ww, -1)

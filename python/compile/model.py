@@ -1,0 +1,201 @@
+"""L2: the paper's evaluated models as JAX compute graphs (build-time).
+
+The two models the paper singles out as *only* tileable by FDT (§5.2) are
+defined here in both forms:
+
+* **KWS** — MLPerf-Tiny keyword spotting (DS-CNN): conv stem, depthwise
+  block, full-kernel depthwise reduction to 1x1, pointwise head. The
+  FDT-tiled variant routes the critical pointwise->dwreduce->pointwise
+  sequence through the ``fdt_kws_head`` Pallas kernel.
+* **TXT** — text sentiment: embedding lookup -> mean -> dense head. The
+  FDT-tiled variant routes gather->mean->dense through
+  ``fdt_embed_mean_dense``.
+
+Plus a standalone **dense pair** (paper Fig. 2) in both forms, used as the
+minimal kernel artifact and by the quickstart example.
+
+Shapes mirror ``rust/src/models/mod.rs`` exactly — the Rust coordinator
+plans memory for the same graphs these functions compute, and the PJRT
+equivalence tests run both lowerings on identical inputs.
+
+Weights are synthetic but *deterministic* (seeded): the untiled and tiled
+artifacts bake identical constants, so `untiled(x) == tiled(x)` is a real
+end-to-end equivalence check. Numerics are f32 — the paper's int8
+quantization affects the *memory accounting* (done in Rust), not the
+tiling semantics proved here.
+
+Python never runs at request time: these functions exist to be AOT-lowered
+by ``aot.py`` into ``artifacts/*.hlo.txt``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# deterministic synthetic weights
+# ---------------------------------------------------------------------------
+
+
+def _init(key, shape, scale=None):
+    """He-style init, deterministic per key."""
+    fan_in = shape[0] if len(shape) <= 2 else int(jnp.prod(jnp.array(shape[:-1])))
+    scale = scale if scale is not None else (2.0 / max(fan_in, 1)) ** 0.5
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# dense pair (paper Fig. 2) — the minimal FDT demonstrator
+# ---------------------------------------------------------------------------
+
+DENSE_PAIR_DIMS = dict(batch=4, inp=64, hidden=256, out=32)
+
+
+def init_dense_pair_params(seed: int = 0):
+    d = DENSE_PAIR_DIMS
+    k = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return {
+        "w1": _init(k[0], (d["inp"], d["hidden"])),
+        "b1": _init(k[1], (d["hidden"],), scale=0.1),
+        "w2": _init(k[2], (d["hidden"], d["out"])),
+        "b2": _init(k[3], (d["out"],), scale=0.1),
+    }
+
+
+def dense_pair(params, x):
+    """Untiled dense pair: act2(act1(x@W1+b1)@W2+b2)."""
+    return ref.dense_pair_ref(
+        x, params["w1"], params["b1"], params["w2"], params["b2"],
+        act1="relu", act2="identity",
+    )
+
+
+def dense_pair_fdt(params, x, partitions: int = 8):
+    """FDT-tiled dense pair via the Pallas kernel."""
+    return kernels.fdt_dense_pair(
+        x, params["w1"], params["b1"], params["w2"], params["b2"],
+        partitions=partitions, act1="relu", act2="identity",
+    )
+
+
+# ---------------------------------------------------------------------------
+# KWS — DS-CNN keyword spotting (rust: models::kws)
+# ---------------------------------------------------------------------------
+
+KWS_INPUT_SHAPE = (49, 10, 8)  # MFCC frames x coefficients x stacked maps
+KWS_CLASSES = 12
+
+
+def init_kws_params(seed: int = 1):
+    k = jax.random.split(jax.random.PRNGKey(seed), 16)
+    return {
+        # stem conv: (10,4) stride (2,2) SAME, 8 -> 64 channels
+        "c0_w": _init(k[0], (10, 4, 8, 64)),
+        "c0_b": _init(k[1], (64,), scale=0.1),
+        # depthwise 3x3
+        "dw1_f": _init(k[2], (3, 3, 64), scale=0.3),
+        "dw1_b": _init(k[3], (64,), scale=0.1),
+        # channel-expanding pointwise 64 -> 96: the FDT Fan-Out; its
+        # [25, 5, 96] output is the critical buffer
+        "pw1_w": _init(k[4], (64, 96)),
+        "pw1_b": _init(k[5], (96,), scale=0.1),
+        # full-kernel depthwise (25,5) VALID -> 1x1: the PART op
+        "dwr_f": _init(k[6], (25, 5, 96), scale=0.05),
+        "dwr_b": _init(k[7], (96,), scale=0.1),
+        # pointwise head 96 -> 192: the FDT Fan-In; then 192 -> 192
+        "h1_w": _init(k[8], (96, 192)),
+        "h1_b": _init(k[9], (192,), scale=0.1),
+        "h2_w": _init(k[10], (192, 192)),
+        "h2_b": _init(k[11], (192,), scale=0.1),
+        # classifier
+        "fc_w": _init(k[12], (192, KWS_CLASSES)),
+        "fc_b": _init(k[13], (KWS_CLASSES,), scale=0.1),
+    }
+
+
+def _kws_stem(params, x):
+    """Shared untileable stem: conv -> dwconv -> [25, 5, 64]."""
+    y = ref.conv2d_ref(x, params["c0_w"], params["c0_b"],
+                       stride=(2, 2), padding="SAME", act="relu")
+    y = ref.dwconv2d_ref(y, params["dw1_f"], params["dw1_b"],
+                         stride=(1, 1), padding="SAME", act="relu")
+    return y  # [25, 5, 64]
+
+
+def _kws_tail(params, h1):
+    """Shared head tail: 192 -> 192 pointwise + classifier + softmax."""
+    y = ref.apply_act(h1 @ params["h2_w"] + params["h2_b"], "relu")
+    logits = y @ params["fc_w"] + params["fc_b"]
+    return jax.nn.softmax(logits)
+
+
+def kws_forward(params, x):
+    """Untiled KWS forward: [49, 10, 8] f32 -> [12] class probabilities."""
+    y = _kws_stem(params, x)
+    # critical sequence, untiled: materializes the full [25, 5, 96]
+    # buffer between the expanding pointwise conv and the reduction.
+    red = kernels.kws_head_ref(
+        y, params["pw1_w"], params["pw1_b"],
+        params["dwr_f"], params["dwr_b"], params["h1_w"], params["h1_b"],
+        act1="relu", actdw="relu", act2="relu",
+    )
+    return _kws_tail(params, red)
+
+
+def kws_forward_fdt(params, x, partitions: int = 8):
+    """FDT-tiled KWS: the critical path runs through the Pallas kernel.
+
+    The [25, 5, 96] critical buffer is channel-split into P partitions:
+    pointwise Fan-Out (64 -> 96/P per step), dwconv-reduce PART, 192-wide
+    Fan-In with Merge — per partition only a [25, 5, 96/P] tile is live.
+    """
+    y = _kws_stem(params, x)
+    red = kernels.fdt_kws_head(
+        y, params["pw1_w"], params["pw1_b"],
+        params["dwr_f"], params["dwr_b"], params["h1_w"], params["h1_b"],
+        partitions=partitions, act1="relu", actdw="relu", act2="relu",
+    )
+    return _kws_tail(params, red)
+
+
+# ---------------------------------------------------------------------------
+# TXT — text sentiment (rust: models::txt)
+# ---------------------------------------------------------------------------
+
+TXT_SEQ = 256
+TXT_VOCAB = 10_000
+TXT_EMBED = 64
+TXT_HIDDEN = 16
+
+
+def init_txt_params(seed: int = 2):
+    k = jax.random.split(jax.random.PRNGKey(seed), 6)
+    return {
+        "table": _init(k[0], (TXT_VOCAB, TXT_EMBED), scale=0.1),
+        "w1": _init(k[1], (TXT_EMBED, TXT_HIDDEN)),
+        "b1": _init(k[2], (TXT_HIDDEN,), scale=0.1),
+        "w2": _init(k[3], (TXT_HIDDEN, 1)),
+        "b2": _init(k[4], (1,), scale=0.1),
+    }
+
+
+def txt_forward(params, tokens):
+    """Untiled TXT forward: [256] int32 token ids -> [1] sentiment."""
+    h = ref.embed_mean_dense_ref(
+        tokens, params["table"], params["w1"], params["b1"], act="relu"
+    )
+    return ref.apply_act(h @ params["w2"] + params["b2"], "sigmoid")
+
+
+def txt_forward_fdt(params, tokens, partitions: int = 8):
+    """FDT-tiled TXT: gather->mean->dense through the Pallas kernel; the
+    [256, 64] embedding buffer never exists in full (paper: −76.2 % RAM)."""
+    h = kernels.fdt_embed_mean_dense(
+        tokens, params["table"], params["w1"], params["b1"],
+        partitions=partitions, act="relu",
+    )
+    return ref.apply_act(h @ params["w2"] + params["b2"], "sigmoid")

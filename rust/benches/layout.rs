@@ -1,0 +1,65 @@
+//! Bench: **§5.1 layout planning** — exact B&B (the paper's MILP
+//! substitute) vs. the TVM-style hill-climb/simulated-annealing heuristic
+//! vs. greedy first-fit.
+//!
+//! The paper reports the optimal planner beating the TVM heuristic by
+//! 16.8% on the (tiled) TXT model and matching it elsewhere. This bench
+//! reproduces the comparison on tiled zoo graphs and times each planner.
+//!
+//! ```bash
+//! cargo bench --bench layout
+//! ```
+
+use fdt::analysis::MemModel;
+use fdt::bench::{bench, header};
+use fdt::coordinator::{optimize, FlowOptions};
+use fdt::graph::fusion::fuse;
+use fdt::layout::{self, heuristic, LayoutOptions};
+use fdt::models;
+use fdt::sched::{self, SchedOptions};
+use std::time::Duration;
+
+fn main() {
+    header(
+        "layout",
+        "layout arena size (B) + planner runtime: first-fit vs SA heuristic vs exact B&B",
+    );
+    println!(
+        "{:<6} {:>8} {:>10} {:>10} {:>10} {:>10} {:>12} {:>12}",
+        "Model", "buffers", "first-fit", "SA", "exact", "SA gap%", "t(SA)", "t(exact)"
+    );
+    let opts = FlowOptions::default();
+    for name in ["TXT", "KWS", "MW", "CIF", "RAD"] {
+        let g = models::by_name(name).unwrap();
+        // Compare on the *tiled* graph (the planners diverge most there).
+        let tiled = optimize(&g, &opts).graph;
+        let grouping = fuse(&tiled);
+        let m = MemModel::new(&tiled, &grouping);
+        let s = sched::schedule(&m, SchedOptions::default());
+        let conflicts = m.conflicts(&s.order);
+
+        let ff = heuristic::first_fit_by_size(&m.sizes, &conflicts);
+        let sa = heuristic::hill_climb_sa(&m.sizes, &conflicts, 2000, 7);
+        let exact = layout::plan(&m, &s.order, LayoutOptions::default());
+
+        let t_sa = bench(1, 5, Duration::from_millis(200), || {
+            heuristic::hill_climb_sa(&m.sizes, &conflicts, 2000, 7).total
+        });
+        let t_ex = bench(1, 5, Duration::from_millis(200), || {
+            layout::plan(&m, &s.order, LayoutOptions::default()).total
+        });
+        println!(
+            "{:<6} {:>8} {:>10} {:>10} {:>10} {:>10.1} {:>12.2?} {:>12.2?}",
+            name,
+            m.sizes.len(),
+            ff.total,
+            sa.total,
+            exact.total,
+            100.0 * (sa.total as f64 - exact.total as f64) / sa.total.max(1) as f64,
+            t_sa.median,
+            t_ex.median
+        );
+        assert!(exact.total <= sa.total, "exact planner must never lose");
+        assert!(exact.total <= ff.total);
+    }
+}

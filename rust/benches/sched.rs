@@ -1,0 +1,84 @@
+//! Bench: **§5.1 memory-aware scheduling** runtime.
+//!
+//! The paper reports 37.9 s (Serenity/MILP, [1]) and ~37 s (their own
+//! MILP + Gurobi) to optimally schedule the irregularly-wired
+//! SwiftNet-like cell. Our exact branch-and-bound substitute must solve
+//! the same class of graph; this bench times it against the SP-graph
+//! polynomial algorithm (where applicable) and the hill–valley heuristic.
+//!
+//! ```bash
+//! cargo bench --bench sched
+//! ```
+
+use fdt::analysis::MemModel;
+use fdt::bench::{bench, header};
+use fdt::graph::fusion::fuse;
+use fdt::models;
+use fdt::sched::{self, SchedOptions};
+use std::time::Duration;
+
+fn main() {
+    header(
+        "sched",
+        "scheduler runtime + peak quality; paper baseline: ~37 s MILP on SwiftNet",
+    );
+    println!(
+        "{:<10} {:>7} {:>12} {:>12} {:>10} {:>14} {:>14}",
+        "Graph", "groups", "strategy", "peak (B)", "optimal", "t(median)", "heuristic peak"
+    );
+    for name in ["SWIFTNET", "KWS", "TXT", "MW", "CIF", "RAD", "FIG5"] {
+        let g = models::by_name(name).unwrap();
+        let grouping = fuse(&g);
+        let m = MemModel::new(&g, &grouping);
+        let s = sched::schedule(&m, SchedOptions::default());
+        let t = bench(1, 5, Duration::from_millis(300), || {
+            sched::schedule(&m, SchedOptions::default()).peak
+        });
+        // Heuristic comparison: hill-valley only.
+        let heur = sched::schedule(
+            &m,
+            SchedOptions { bnb_node_budget: 0, use_sp: false },
+        );
+        println!(
+            "{:<10} {:>7} {:>12} {:>12} {:>10} {:>14.3?} {:>14}",
+            name,
+            m.n(),
+            s.strategy,
+            s.peak,
+            s.optimal,
+            t.median,
+            heur.peak
+        );
+        assert!(s.peak <= heur.peak, "exact/SP must not lose to the heuristic");
+    }
+
+    // Scaling: random SP graphs of growing size through the SP scheduler.
+    println!("\nSP-scheduler scaling (random series-parallel graphs):");
+    for n in [16usize, 32, 64, 128] {
+        let g = models::swiftnet_like(); // placeholder for width reference
+        let _ = g;
+        let graph = random_sp_chain(n);
+        let grouping = fuse(&graph);
+        let m = MemModel::new(&graph, &grouping);
+        let t = bench(1, 3, Duration::from_millis(200), || {
+            sched::schedule(&m, SchedOptions::default()).peak
+        });
+        println!("  n={n:<4} median {:?}", t.median);
+    }
+}
+
+/// Build a branchy-but-SP graph with `n` conv nodes (parallel pairs).
+fn random_sp_chain(n: usize) -> fdt::Graph {
+    use fdt::graph::{ActKind, DType, GraphBuilder, OpKind, Padding};
+    let mut b = GraphBuilder::new("sp");
+    let mut x = b.input("x", vec![8, 8, 4], DType::I8);
+    let mut i = 0;
+    while i < n {
+        // Parallel pair merged by Add (series-parallel by construction).
+        let a = b.conv2d(x, 4, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+        let c = b.conv2d(x, 4, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+        x = b.op(OpKind::Add, vec![a, c]);
+        i += 2;
+    }
+    b.finish(vec![x])
+}

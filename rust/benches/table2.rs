@@ -1,0 +1,77 @@
+//! Bench: regenerate **Table 2** — the paper's headline result.
+//!
+//! For each of the seven evaluated models, run the automated exploration
+//! twice (FFMT-only / FDT-only) and print RAM savings and MAC overhead
+//! next to the paper's reported numbers. Absolute values differ (our
+//! models are architecture-faithful synthetics), but the *shape* must
+//! hold: KWS/TXT tile only with FDT; FDT overhead is always zero; FFMT
+//! pays MACs where fused conv chains are deep (POS, CIF).
+//!
+//! ```bash
+//! cargo bench --bench table2                 # small models (fast)
+//! cargo bench --bench table2 -- all          # + POS & SSD (minutes)
+//! ```
+
+use fdt::bench::{header, time_once};
+use fdt::coordinator::FlowOptions;
+use fdt::models;
+use fdt::report;
+
+/// Paper Table 2 reference rows: (model, ffmt_sav, fdt_sav, ffmt_ovh, fdt_ovh).
+const PAPER: &[(&str, f64, f64, f64, f64)] = &[
+    ("KWS", 0.0, 18.1, 0.0, 0.0),
+    ("TXT", 0.0, 76.2, 0.0, 0.0),
+    ("MW", 60.9, 35.5, 0.0, 0.0),
+    ("POS", 45.3, 4.4, 45.1, 0.0),
+    ("SSD", 39.4, 14.6, 0.2, 0.0),
+    ("CIF", 57.1, 5.0, 9.0, 0.0),
+    ("RAD", 26.3, 18.8, 0.0, 0.0),
+];
+
+fn main() {
+    let all = std::env::args().any(|a| a == "all");
+    header(
+        "table2",
+        "Table 2 reproduction: RAM savings % and MAC overhead % per model/family\n\
+         (paper numbers in parentheses; shape must match, magnitudes are model-dependent)",
+    );
+    let names: Vec<&str> = if all {
+        vec!["KWS", "TXT", "MW", "POS", "SSD", "CIF", "RAD"]
+    } else {
+        vec!["KWS", "TXT", "MW", "CIF", "RAD"]
+    };
+    let opts = FlowOptions::default();
+    println!(
+        "{:<6} {:>22} {:>22} {:>22} {:>22} {:>10}",
+        "Model", "FFMT sav% (paper)", "FDT sav% (paper)", "FFMT ovh% (paper)", "FDT ovh% (paper)", "time"
+    );
+    let mut shape_ok = true;
+    for n in &names {
+        let g = models::by_name(n).unwrap();
+        let (row, dt) = time_once(|| report::table2_row(&g, &opts));
+        let p = PAPER.iter().find(|p| p.0 == *n).unwrap();
+        println!(
+            "{:<6} {:>13.1} ({:>5.1}) {:>13.1} ({:>5.1}) {:>13.1} ({:>5.1}) {:>13.1} ({:>5.1}) {:>10.2?}",
+            row.model,
+            row.ffmt_savings(), p.1,
+            row.fdt_savings(), p.2,
+            row.ffmt_overhead(), p.3,
+            row.fdt_overhead(), p.4,
+            dt
+        );
+        // Shape assertions (who wins / zero-overhead property).
+        if row.fdt_overhead().abs() > 1e-9 {
+            println!("  !! FDT produced MAC overhead on {n}");
+            shape_ok = false;
+        }
+        let fdt_only_model = *n == "KWS" || *n == "TXT";
+        if fdt_only_model && (row.ffmt_savings() > 1.0 || row.fdt_savings() < 5.0) {
+            println!("  !! {n} should be FDT-only tileable");
+            shape_ok = false;
+        }
+    }
+    println!("\nshape {}", if shape_ok { "OK" } else { "MISMATCH" });
+    if !shape_ok {
+        std::process::exit(1);
+    }
+}

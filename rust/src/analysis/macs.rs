@@ -1,0 +1,70 @@
+//! Static multiply-accumulate (MAC) counting.
+//!
+//! The paper estimates run time by statically counting MACs of the final
+//! optimized graph (§5): DNN cost is dominated by matrix multiplies, and
+//! FFMT's recompute overhead shows up directly as extra MACs while FDT
+//! adds none. Non-MAC ops (pool, pad, activation, merge) count zero, as
+//! in the paper.
+
+use crate::graph::{Graph, Op, OpKind};
+
+/// MACs performed by a single op.
+pub fn op_macs(g: &Graph, op: &Op) -> u64 {
+    let out = &g.tensor(op.output).shape;
+    match &op.kind {
+        OpKind::Conv2d { .. } => {
+            let w = &g.tensor(op.inputs[1]).shape; // [kh, kw, cin, cout]
+            (out[0] * out[1] * w[3] * w[0] * w[1] * w[2]) as u64
+        }
+        OpKind::DepthwiseConv2d { .. } => {
+            let w = &g.tensor(op.inputs[1]).shape; // [kh, kw, c]
+            (out[0] * out[1] * w[2] * w[0] * w[1]) as u64
+        }
+        OpKind::Dense => {
+            let w = &g.tensor(op.inputs[1]).shape; // [in, out]
+            (w[0] * w[1]) as u64
+        }
+        // Everything else performs no multiply-accumulates (bias adds,
+        // activations, pooling, data movement, FDT merge additions).
+        _ => 0,
+    }
+}
+
+/// Total MACs of a graph.
+pub fn graph_macs(g: &Graph) -> u64 {
+    g.ops.iter().map(|o| op_macs(g, o)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ActKind, DType, GraphBuilder, Padding};
+
+    #[test]
+    fn conv_macs() {
+        let mut b = GraphBuilder::new("m");
+        let x = b.input("x", vec![8, 8, 3], DType::I8);
+        let y = b.conv2d(x, 16, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+        let g = b.finish(vec![y]);
+        // 8*8 outputs * 16 cout * 3*3*3 = 27648
+        assert_eq!(graph_macs(&g), 8 * 8 * 16 * 27);
+    }
+
+    #[test]
+    fn dense_macs() {
+        let mut b = GraphBuilder::new("m");
+        let x = b.input("x", vec![100], DType::I8);
+        let y = b.dense_act(x, 10, ActKind::Identity);
+        let g = b.finish(vec![y]);
+        assert_eq!(graph_macs(&g), 1000);
+    }
+
+    #[test]
+    fn depthwise_macs() {
+        let mut b = GraphBuilder::new("m");
+        let x = b.input("x", vec![10, 10, 8], DType::I8);
+        let y = b.dwconv(x, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+        let g = b.finish(vec![y]);
+        assert_eq!(graph_macs(&g), 10 * 10 * 8 * 9);
+    }
+}

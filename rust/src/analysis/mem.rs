@@ -1,0 +1,407 @@
+//! Buffer liveness and peak-memory evaluation over fusion groups.
+//!
+//! This is the cost model shared by the scheduler, the layout planner and
+//! path discovery. The task model follows the paper (§4.1): the output of
+//! an operation is a single shared buffer usable by all consumers (no
+//! per-edge copies); a buffer is live from the start of its producing
+//! group until its last consumer finishes; model inputs are live from the
+//! beginning and model outputs until the end (they are written/read as a
+//! whole by the application and cannot be tiled).
+//!
+//! **SPLIT/CONCAT elision.** Like TVM's storage rewrite, the explicit
+//! `Slice` and `Concat` ops inserted by tiling are zero-copy:
+//!
+//! * a `Slice` output is a *view* into its source buffer (partitions read
+//!   the still-live source directly);
+//! * a tensor whose only consumer is a `Concat` is a view into the concat
+//!   *output* (each partition writes its sub-region directly).
+//!
+//! Without this aliasing, the concat step would hold every partition
+//! output plus the destination live at once and fused tiling could never
+//! reduce memory. Aliased tensors share a *storage root*; liveness and
+//! layout operate on roots.
+
+use crate::graph::fusion::{GroupId, Grouping};
+use crate::graph::{Graph, OpKind, TensorId, TensorKind};
+
+/// Memory cost of one scheduled step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepCost {
+    /// Bytes live while the group executes (inputs + outputs + carried).
+    pub during: usize,
+    /// Bytes live after the group finishes (dead buffers freed).
+    pub after: usize,
+}
+
+/// Memory profile of a (partial) schedule.
+#[derive(Debug, Clone, Default)]
+pub struct Profile {
+    pub steps: Vec<StepCost>,
+    pub peak: usize,
+}
+
+/// Precomputed liveness facts for evaluating schedules of one grouping.
+pub struct MemModel<'a> {
+    pub g: &'a Graph,
+    pub grouping: &'a Grouping,
+    /// RAM buffers: group outputs + model inputs.
+    pub buffers: Vec<TensorId>,
+    /// tensor -> index into `buffers` (usize::MAX if not RAM).
+    pub buffer_index: Vec<usize>,
+    /// buffer -> size in bytes.
+    pub sizes: Vec<usize>,
+    /// buffer -> producing group (None = model input). For concat-root
+    /// buffers written by several groups this is the *concat* group; use
+    /// [`MemModel::writers`] for layout lifetimes.
+    pub producer: Vec<Option<GroupId>>,
+    /// buffer -> all groups writing into it (aliased partial writes).
+    pub writers: Vec<Vec<GroupId>>,
+    /// buffer -> consuming groups (deduplicated).
+    pub consumers: Vec<Vec<GroupId>>,
+    /// buffer -> is model output.
+    pub is_output: Vec<bool>,
+    /// group -> buffers it reads.
+    pub group_reads: Vec<Vec<usize>>,
+    /// group -> buffers it writes.
+    pub group_writes: Vec<Vec<usize>>,
+    /// Bytes of model inputs + outputs (always-live floor).
+    pub io_bytes: usize,
+}
+
+impl<'a> MemModel<'a> {
+    pub fn new(g: &'a Graph, grouping: &'a Grouping) -> Self {
+        // ---- storage-root resolution (SPLIT/CONCAT elision) ----------
+        let producers_t = g.producers();
+        let consumers_t = g.consumers();
+        let mut root_memo: Vec<Option<TensorId>> = vec![None; g.tensors.len()];
+        fn resolve(
+            t: TensorId,
+            g: &Graph,
+            producers_t: &[Option<usize>],
+            consumers_t: &[Vec<usize>],
+            memo: &mut Vec<Option<TensorId>>,
+        ) -> TensorId {
+            if let Some(r) = memo[t] {
+                return r;
+            }
+            memo[t] = Some(t); // break cycles defensively
+            // Rule 1: a Slice output is a view into its source.
+            let r = if let Some(p) = producers_t[t] {
+                if matches!(g.op(p).kind, OpKind::Slice { .. }) {
+                    resolve(g.op(p).inputs[0], g, producers_t, consumers_t, memo)
+                } else {
+                    alias_into_concat(t, g, producers_t, consumers_t, memo)
+                }
+            } else {
+                alias_into_concat(t, g, producers_t, consumers_t, memo)
+            };
+            memo[t] = Some(r);
+            r
+        }
+        // Rule 2: a tensor whose only consumer is a Concat is a view into
+        // the concat output; a tensor whose only consumer is a Merge
+        // aliases the merge's accumulator (partial sums accumulate
+        // in-place, DeeperThings-style — N partials never coexist).
+        // Merge aliasing requires equal buffer sizes (i32 accumulator).
+        fn alias_into_concat(
+            t: TensorId,
+            g: &Graph,
+            producers_t: &[Option<usize>],
+            consumers_t: &[Vec<usize>],
+            memo: &mut Vec<Option<TensorId>>,
+        ) -> TensorId {
+            if g.outputs.contains(&t) || g.tensor(t).kind == TensorKind::Input {
+                return t;
+            }
+            if consumers_t[t].len() == 1 {
+                let c = consumers_t[t][0];
+                let out = g.op(c).output;
+                match g.op(c).kind {
+                    OpKind::Concat { .. } => {
+                        return resolve(out, g, producers_t, consumers_t, memo)
+                    }
+                    OpKind::Merge { .. } if g.tensor(out).bytes() == g.tensor(t).bytes() => {
+                        return resolve(out, g, producers_t, consumers_t, memo)
+                    }
+                    _ => {}
+                }
+            }
+            t
+        }
+        let mut root = vec![0usize; g.tensors.len()];
+        for t in 0..g.tensors.len() {
+            root[t] = resolve(t, g, &producers_t, &consumers_t, &mut root_memo);
+        }
+
+        // ---- buffer universe: roots of model inputs + group outputs --
+        let mut buffers = Vec::new();
+        let mut buffer_index = vec![usize::MAX; g.tensors.len()];
+        let push = |t: TensorId, buffers: &mut Vec<TensorId>, buffer_index: &mut Vec<usize>| {
+            if buffer_index[t] == usize::MAX {
+                buffer_index[t] = buffers.len();
+                buffers.push(t);
+            }
+        };
+        for &t in &g.inputs {
+            push(root[t], &mut buffers, &mut buffer_index);
+        }
+        for outs in &grouping.outputs {
+            for &t in outs {
+                push(root[t], &mut buffers, &mut buffer_index);
+            }
+        }
+        // Extend the tensor->buffer map through aliases.
+        let buffer_of =
+            |t: TensorId, buffer_index: &[usize]| -> usize { buffer_index[root[t]] };
+
+        let sizes: Vec<usize> = buffers.iter().map(|&t| g.tensor(t).bytes()).collect();
+
+        let mut writers: Vec<Vec<GroupId>> = vec![Vec::new(); buffers.len()];
+        let mut producer: Vec<Option<GroupId>> = vec![None; buffers.len()];
+        for (gid, outs) in grouping.outputs.iter().enumerate() {
+            for &t in outs {
+                let b = buffer_of(t, &buffer_index);
+                if b == usize::MAX {
+                    continue;
+                }
+                if !writers[b].contains(&gid) {
+                    writers[b].push(gid);
+                }
+                producer[b] = Some(gid);
+            }
+        }
+        let is_output: Vec<bool> = {
+            let mut v = vec![false; buffers.len()];
+            for &t in &g.outputs {
+                let b = buffer_of(t, &buffer_index);
+                if b != usize::MAX {
+                    v[b] = true;
+                }
+            }
+            v
+        };
+
+        let mut group_reads: Vec<Vec<usize>> = vec![Vec::new(); grouping.len()];
+        let mut group_writes: Vec<Vec<usize>> = vec![Vec::new(); grouping.len()];
+        for (gid, ins) in grouping.inputs.iter().enumerate() {
+            for &t in ins {
+                let b = buffer_of(t, &buffer_index);
+                if b != usize::MAX && !group_reads[gid].contains(&b) {
+                    group_reads[gid].push(b);
+                }
+            }
+        }
+        for (gid, outs) in grouping.outputs.iter().enumerate() {
+            for &t in outs {
+                let b = buffer_of(t, &buffer_index);
+                if b != usize::MAX && !group_writes[gid].contains(&b) {
+                    group_writes[gid].push(b);
+                }
+            }
+        }
+        // A group both reading and writing the same aliased buffer (e.g.
+        // the Concat group itself, or a Slice view) must not double-free:
+        // drop such reads.
+        for gid in 0..grouping.len() {
+            let writes = group_writes[gid].clone();
+            group_reads[gid].retain(|b| !writes.contains(b));
+        }
+        // Consumers derived from the final reads so that liveness
+        // counting matches exactly.
+        let mut consumers: Vec<Vec<GroupId>> = vec![Vec::new(); buffers.len()];
+        for (gid, reads) in group_reads.iter().enumerate() {
+            for &b in reads {
+                if !consumers[b].contains(&gid) {
+                    consumers[b].push(gid);
+                }
+            }
+        }
+
+        let io_bytes = buffers
+            .iter()
+            .enumerate()
+            .filter(|&(i, &t)| g.tensor(t).kind == TensorKind::Input || is_output[i])
+            .map(|(i, _)| sizes[i])
+            .sum();
+
+        MemModel {
+            g,
+            grouping,
+            buffers,
+            buffer_index,
+            sizes,
+            producer,
+            writers,
+            consumers,
+            is_output,
+            group_reads,
+            group_writes,
+            io_bytes,
+        }
+    }
+
+    /// Number of groups.
+    pub fn n(&self) -> usize {
+        self.grouping.len()
+    }
+
+    /// Evaluate the peak memory of a complete schedule (group order).
+    pub fn peak(&self, schedule: &[GroupId]) -> usize {
+        self.profile(schedule).peak
+    }
+
+    /// Full per-step memory profile of a schedule.
+    ///
+    /// Maintains a running live-set: model inputs start live; a group's
+    /// outputs become live when it runs; a buffer is freed once all its
+    /// consumers have run (model outputs are never freed).
+    pub fn profile(&self, schedule: &[GroupId]) -> Profile {
+        debug_assert_eq!(schedule.len(), self.n());
+        let mut remaining: Vec<usize> = self.consumers.iter().map(|c| c.len()).collect();
+        let mut live = vec![false; self.buffers.len()];
+        let mut live_bytes = 0usize;
+        for (b, p) in self.producer.iter().enumerate() {
+            if p.is_none() {
+                live[b] = true;
+                live_bytes += self.sizes[b];
+            }
+        }
+        let mut steps = Vec::with_capacity(schedule.len());
+        let mut peak = live_bytes;
+        for &gid in schedule {
+            // Outputs become live for the duration of the group.
+            for &b in &self.group_writes[gid] {
+                if !live[b] {
+                    live[b] = true;
+                    live_bytes += self.sizes[b];
+                }
+            }
+            let during = live_bytes;
+            peak = peak.max(during);
+            // Consume inputs; free fully-consumed non-output buffers.
+            for &b in &self.group_reads[gid] {
+                remaining[b] -= 1;
+                if remaining[b] == 0 && !self.is_output[b] && live[b] {
+                    live[b] = false;
+                    live_bytes -= self.sizes[b];
+                }
+            }
+            // Outputs that nobody consumes (and are not model outputs)
+            // die immediately.
+            for &b in &self.group_writes[gid] {
+                if remaining[b] == 0 && !self.is_output[b] && live[b] {
+                    live[b] = false;
+                    live_bytes -= self.sizes[b];
+                }
+            }
+            steps.push(StepCost { during, after: live_bytes });
+        }
+        Profile { steps, peak }
+    }
+
+    /// Buffer lifetimes `[birth_step, death_step]` (inclusive, in schedule
+    /// positions) for layout planning. Model inputs are born at step 0,
+    /// model outputs die at the last step.
+    pub fn lifetimes(&self, schedule: &[GroupId]) -> Vec<(usize, usize)> {
+        let mut pos = vec![0usize; self.n()];
+        for (i, &gid) in schedule.iter().enumerate() {
+            pos[gid] = i;
+        }
+        let last = schedule.len().saturating_sub(1);
+        self.buffers
+            .iter()
+            .enumerate()
+            .map(|(b, _)| {
+                // Aliased (concat) buffers have several writers: born at
+                // the first partial write.
+                let birth = self.writers[b].iter().map(|&gid| pos[gid]).min().unwrap_or(0);
+                let death = if self.is_output[b] {
+                    last
+                } else {
+                    self.consumers[b]
+                        .iter()
+                        .map(|&gid| pos[gid])
+                        .chain(self.writers[b].iter().map(|&gid| pos[gid]))
+                        .max()
+                        .unwrap_or(birth)
+                };
+                (birth, death)
+            })
+            .collect()
+    }
+
+    /// Pairs of buffers whose lifetimes overlap (conflicts for layout).
+    pub fn conflicts(&self, schedule: &[GroupId]) -> Vec<(usize, usize)> {
+        let lt = self.lifetimes(schedule);
+        let mut c = Vec::new();
+        for i in 0..lt.len() {
+            for j in (i + 1)..lt.len() {
+                if lt[i].0 <= lt[j].1 && lt[j].0 <= lt[i].1 {
+                    c.push((i, j));
+                }
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::fusion::fuse;
+    use crate::graph::{ActKind, DType, GraphBuilder, Padding};
+
+    fn chain() -> Graph {
+        let mut b = GraphBuilder::new("c");
+        let x = b.input("x", vec![8, 8, 4], DType::I8); // 256 B
+        let y = b.conv2d(x, 16, (3, 3), (1, 1), Padding::Same, ActKind::Relu); // 1024 B
+        let z = b.conv2d(y, 2, (3, 3), (1, 1), Padding::Same, ActKind::Relu); // 128 B
+        b.finish(vec![z])
+    }
+
+    #[test]
+    fn chain_profile() {
+        let g = chain();
+        let grouping = fuse(&g);
+        let m = MemModel::new(&g, &grouping);
+        assert_eq!(m.n(), 2);
+        let p = m.profile(&[0, 1]);
+        // step 0: x(256) + y(1024) = 1280; step 1: y + z + x? x freed
+        // after step 0 (its only consumer ran). 1024 + 128 = 1152.
+        assert_eq!(p.steps[0].during, 1280);
+        assert_eq!(p.steps[1].during, 1152);
+        assert_eq!(p.peak, 1280);
+    }
+
+    #[test]
+    fn diamond_schedule_order_matters() {
+        // x -> a (big), x -> b (small), a+b -> out.
+        let mut bld = GraphBuilder::new("d");
+        let x = bld.input("x", vec![8, 8, 4], DType::I8);
+        let a = bld.conv2d(x, 32, (3, 3), (1, 1), Padding::Same, ActKind::Relu); // 2048
+        let b2 = bld.conv2d(x, 32, (1, 1), (1, 1), Padding::Valid, ActKind::Relu); // 2048
+        let s = bld.op(crate::graph::OpKind::Add, vec![a, b2]);
+        let g = bld.finish(vec![s]);
+        let grouping = fuse(&g);
+        let m = MemModel::new(&g, &grouping);
+        assert_eq!(m.n(), 3);
+        let p = m.profile(&[0, 1, 2]);
+        // The add step holds both branch outputs plus its own output:
+        // 3 x 2048; the branches' step peak is x + a + b2 = 4352.
+        assert_eq!(p.peak, 3 * 2048);
+    }
+
+    #[test]
+    fn lifetimes_and_conflicts() {
+        let g = chain();
+        let grouping = fuse(&g);
+        let m = MemModel::new(&g, &grouping);
+        let lt = m.lifetimes(&[0, 1]);
+        // x: [0,0], y: [0,1], z: [1,1]
+        let bx = m.buffer_index[g.inputs[0]];
+        assert_eq!(lt[bx], (0, 0));
+        let conflicts = m.conflicts(&[0, 1]);
+        // x-y overlap, y-z overlap, x-z don't.
+        assert_eq!(conflicts.len(), 2);
+    }
+}

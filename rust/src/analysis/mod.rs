@@ -1,0 +1,10 @@
+//! Static analyses over the graph IR: MAC counting, buffer liveness and
+//! peak-memory evaluation, and series-parallel decomposition.
+
+mod macs;
+mod mem;
+mod sp;
+
+pub use macs::{graph_macs, op_macs};
+pub use mem::{MemModel, Profile, StepCost};
+pub use sp::{decompose_sp, SpTree};

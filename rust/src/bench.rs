@@ -1,0 +1,70 @@
+//! Minimal benchmarking harness (criterion is not in the offline vendor
+//! set — DESIGN.md §Substitutions).
+//!
+//! Provides warmup + repeated timing with median/mean/min reporting, a
+//! tabular printer shared by the `benches/` binaries, and a stable
+//! `black_box`. Each bench binary is a plain `main` (`harness = false`)
+//! that prints the same rows/series the paper's corresponding table or
+//! figure reports.
+
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from deleting a computed value.
+pub fn black_box<T>(x: T) -> T {
+    // `std::hint::black_box` is stable; indirection here keeps call sites
+    // uniform with the criterion idiom.
+    std::hint::black_box(x)
+}
+
+/// Timing statistics over repeated runs.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub runs: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub max: Duration,
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "median {:>10.3?}  mean {:>10.3?}  min {:>10.3?}  max {:>10.3?}  ({} runs)",
+            self.median, self.mean, self.min, self.max, self.runs
+        )
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured runs, then measured runs until
+/// both `min_runs` and `min_time` are satisfied (capped at `max_runs`).
+pub fn bench<T>(warmup: usize, min_runs: usize, min_time: Duration, mut f: impl FnMut() -> T) -> Stats {
+    const MAX_RUNS: usize = 1000;
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(min_runs);
+    let t0 = Instant::now();
+    while samples.len() < min_runs || (t0.elapsed() < min_time && samples.len() < MAX_RUNS) {
+        let t = Instant::now();
+        black_box(f());
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let n = samples.len();
+    let mean = samples.iter().sum::<Duration>() / n as u32;
+    Stats { runs: n, min: samples[0], median: samples[n / 2], mean, max: samples[n - 1] }
+}
+
+/// One-shot measurement for long-running cases (flow explorations).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t = Instant::now();
+    let v = f();
+    (v, t.elapsed())
+}
+
+/// Standard bench header so all bench binaries look uniform.
+pub fn header(name: &str, what: &str) {
+    println!("=== bench: {name} ===");
+    println!("{what}\n");
+}

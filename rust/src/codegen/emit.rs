@@ -1,0 +1,508 @@
+//! C emission: one loop nest per primitive op, in schedule order.
+//!
+//! Every operand access goes through its [`View`] (storage base + element
+//! offset + per-axis strides), which is how SPLIT/CONCAT elision, merge
+//! accumulation and in-place fused epilogues appear in the generated
+//! code. Loop bounds and strides are compile-time constants — the same
+//! static-code discipline as TVM's AoT micro backend, which lets the host
+//! compiler vectorize and lets `FDT_ARENA_BYTES` be the whole RAM story.
+
+use super::{Storage, View};
+use crate::graph::fusion::Grouping;
+use crate::graph::{ActKind, Graph, Op, OpKind, Padding, TensorKind};
+
+pub struct Emitter<'a> {
+    g: &'a Graph,
+    grouping: &'a Grouping,
+    order: &'a [usize],
+    views: &'a [View],
+    /// Arena byte offsets per slot id.
+    offsets: &'a [usize],
+    body: String,
+    /// Merge ops whose accumulator has been zero-initialized.
+    zeroed_merges: Vec<usize>,
+}
+
+fn act_expr(a: ActKind, x: &str) -> String {
+    match a {
+        ActKind::Identity => x.to_string(),
+        ActKind::Relu => format!("fmaxf(0.0f, {x})"),
+        ActKind::Relu6 => format!("fminf(6.0f, fmaxf(0.0f, {x}))"),
+        ActKind::Sigmoid => format!("(1.0f / (1.0f + expf(-({x}))))"),
+        ActKind::Tanh => format!("tanhf({x})"),
+    }
+}
+
+fn pad_before(padding: Padding, in_h: usize, in_w: usize, k: (usize, usize), s: (usize, usize)) -> (i64, i64) {
+    match padding {
+        Padding::Valid => (0, 0),
+        Padding::Same => {
+            let oh = in_h.div_ceil(s.0);
+            let ow = in_w.div_ceil(s.1);
+            let th = ((oh - 1) * s.0 + k.0).saturating_sub(in_h);
+            let tw = ((ow - 1) * s.1 + k.1).saturating_sub(in_w);
+            ((th / 2) as i64, (tw / 2) as i64)
+        }
+        Padding::Explicit(h, w) => (h.0 as i64, w.0 as i64),
+    }
+}
+
+/// Sanitize a tensor name into a C identifier.
+fn cname(s: &str) -> String {
+    let mut out: String = s
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect();
+    if out.chars().next().is_none_or(|c| c.is_ascii_digit()) {
+        out.insert(0, 'w');
+    }
+    out
+}
+
+impl<'a> Emitter<'a> {
+    pub fn new(
+        g: &'a Graph,
+        grouping: &'a Grouping,
+        order: &'a [usize],
+        views: &'a [View],
+        offsets: &'a [usize],
+    ) -> Self {
+        Emitter { g, grouping, order, views, offsets, body: String::new(), zeroed_merges: Vec::new() }
+    }
+
+    /// Base pointer expression for a view's storage.
+    fn base(&self, v: &View) -> String {
+        match v.storage {
+            Storage::Arena(id) => format!("(A + {})", self.offsets[id] / 4),
+            Storage::Weight(t) => cname(&self.g.tensor(t).name),
+            Storage::Input(i) => format!("in{i}"),
+        }
+    }
+
+    /// Element expression `BASE[off + Σ coord*stride]`.
+    fn at(&self, v: &View, coords: &[String]) -> String {
+        assert_eq!(coords.len(), v.strides.len(), "rank mismatch");
+        let mut terms = vec![v.off.to_string()];
+        for (c, s) in coords.iter().zip(&v.strides) {
+            if *s != 0 {
+                terms.push(format!("({c})*{s}"));
+            }
+        }
+        format!("{}[{}]", self.base(v), terms.join(" + "))
+    }
+
+    /// Flat-index expression: decompose `i` over the view's shape.
+    fn at_flat(&self, v: &View, i: &str) -> String {
+        let coords: Vec<String> = match v.shape.len() {
+            0 => vec![],
+            1 => vec![format!("({i})")],
+            _ => {
+                let inner: Vec<usize> = super::dense_strides(&v.shape);
+                v.shape
+                    .iter()
+                    .enumerate()
+                    .map(|(d, &dim)| {
+                        if d == 0 {
+                            format!("(({i}) / {})", inner[0])
+                        } else {
+                            format!("((({i}) / {}) % {})", inner[d], dim)
+                        }
+                    })
+                    .collect()
+            }
+        };
+        self.at(v, &coords)
+    }
+
+    fn line(&mut self, indent: usize, s: impl AsRef<str>) {
+        for _ in 0..indent {
+            self.body.push_str("  ");
+        }
+        self.body.push_str(s.as_ref());
+        self.body.push('\n');
+    }
+
+    /// Emit the whole translation unit.
+    pub fn emit(&mut self, arena_bytes: usize, arena_bytes_int8: usize) -> Result<String, String> {
+        // Schedule order over primitive ops.
+        let op_order: Vec<usize> = self
+            .order
+            .iter()
+            .flat_map(|&gid| self.grouping.groups[gid].iter().copied())
+            .collect();
+
+        for &oid in &op_order {
+            let op = self.g.op(oid).clone();
+            self.line(1, format!("/* {} : {} */", op.name, op.kind.mnemonic()));
+            self.emit_op(oid, &op)?;
+        }
+
+        // Copy model outputs to the out parameters.
+        for (k, &t) in self.g.outputs.iter().enumerate() {
+            let v = self.views[t].clone();
+            let n = v.numel();
+            let src = self.at_flat(&v, "i");
+            self.line(1, format!("for (int i = 0; i < {n}; i++) out{k}[i] = {src};"));
+        }
+
+        // ---- assemble the unit ----
+        let mut s = String::new();
+        s += &format!(
+            "/* generated by fdt codegen — model {} (AoT static C, f32 simulation build) */\n",
+            self.g.name
+        );
+        s += "#include <math.h>\n#include <stdint.h>\n#include <string.h>\n\n";
+        s += &format!("#define FDT_ARENA_BYTES {arena_bytes}\n");
+        s += &format!("#define FDT_ARENA_BYTES_INT8 {arena_bytes_int8} /* deployment (int8 model) RAM from the flow */\n\n");
+        s += "static float fdt_arena[FDT_ARENA_BYTES / 4]; /* .bss — the planned RAM arena */\n\n";
+
+        // Weights to .rodata.
+        let mut rom = 0usize;
+        for t in &self.g.tensors {
+            if t.kind != TensorKind::Weight {
+                continue;
+            }
+            let data = t.data.as_ref().expect("checked in generate()");
+            rom += data.len() * 4;
+            s += &format!("static const float {}[{}] = {{", cname(&t.name), data.len().max(1));
+            for (i, x) in data.iter().enumerate() {
+                if i % 8 == 0 {
+                    s += "\n  ";
+                }
+                s += &format!("{:?}f, ", x);
+            }
+            s += "\n};\n";
+        }
+        s += &format!("\n#define FDT_ROM_BYTES {rom}\n\n");
+
+        // Entry point.
+        let ins: Vec<String> = (0..self.g.inputs.len()).map(|i| format!("const float* in{i}")).collect();
+        let outs: Vec<String> = (0..self.g.outputs.len()).map(|k| format!("float* out{k}")).collect();
+        s += &format!(
+            "int fdt_model_run({}, {}) {{\n  float* const A = fdt_arena;\n",
+            ins.join(", "),
+            outs.join(", ")
+        );
+        s += &self.body;
+        s += "  return 0;\n}\n";
+        Ok(s)
+    }
+
+    fn view(&self, t: usize) -> View {
+        self.views[t].clone()
+    }
+
+    /// Zero the merge accumulator before its first aliased partial runs.
+    fn ensure_merge_zeroed(&mut self, merge_op: usize) {
+        if self.zeroed_merges.contains(&merge_op) {
+            return;
+        }
+        self.zeroed_merges.push(merge_op);
+        let out = self.view(self.g.op(merge_op).output);
+        let n = out.numel();
+        let dst = self.at_flat(&out, "i");
+        self.line(1, format!("for (int i = 0; i < {n}; i++) {dst} = 0.0f; /* merge acc init */"));
+    }
+
+    /// If this op's output is an in-place FDT partial, prepare and return
+    /// the accumulating assignment operator.
+    fn out_assign(&mut self, op: &Op) -> &'static str {
+        let v = &self.views[op.output];
+        if v.accumulate {
+            // Find the Merge consumer to zero its accumulator once.
+            let consumers = self.g.consumers();
+            let m = consumers[op.output]
+                .iter()
+                .copied()
+                .find(|&c| matches!(self.g.op(c).kind, OpKind::Merge { .. }));
+            if let Some(m) = m {
+                self.ensure_merge_zeroed(m);
+            }
+            "+="
+        } else {
+            "="
+        }
+    }
+
+    fn emit_op(&mut self, _oid: usize, op: &Op) -> Result<(), String> {
+        match &op.kind {
+            OpKind::Conv2d { stride, padding } => self.emit_conv(op, *stride, *padding, false),
+            OpKind::DepthwiseConv2d { stride, padding } => self.emit_conv(op, *stride, *padding, true),
+            OpKind::Dense => self.emit_dense(op),
+            OpKind::BiasAdd => self.emit_bias(op),
+            OpKind::Activation(a) => self.emit_act(op, *a),
+            OpKind::MaxPool2d { ksize, stride, padding } => self.emit_pool(op, *ksize, *stride, *padding, true),
+            OpKind::AvgPool2d { ksize, stride, padding } => self.emit_pool(op, *ksize, *stride, *padding, false),
+            OpKind::GlobalAvgPool => self.emit_gap(op),
+            OpKind::Add | OpKind::Mul => self.emit_binary(op),
+            OpKind::Pad { pads } => self.emit_pad(op, pads.clone()),
+            OpKind::Reshape { .. } => self.emit_reshape(op),
+            OpKind::Softmax => self.emit_softmax(op),
+            OpKind::Gather => self.emit_gather(op),
+            OpKind::ReduceMean { axis, .. } => self.emit_mean(op, *axis),
+            OpKind::Slice { .. } => Ok(()), // pure view
+            OpKind::Concat { axis } => self.emit_concat(op, *axis),
+            OpKind::Merge { act } => self.emit_merge(op, *act),
+        }
+    }
+
+    fn emit_conv(&mut self, op: &Op, stride: (usize, usize), padding: Padding, depthwise: bool) -> Result<(), String> {
+        let assign = self.out_assign(op);
+        let x = self.view(op.inputs[0]);
+        let w = self.view(op.inputs[1]);
+        let o = self.view(op.output);
+        let (ih, iw) = (x.shape[0], x.shape[1]);
+        let (oh, ow, oc) = (o.shape[0], o.shape[1], o.shape[2]);
+        let (kh, kw) = (w.shape[0], w.shape[1]);
+        let (pt, pl) = pad_before(padding, ih, iw, (kh, kw), stride);
+        let cin = x.shape[2];
+        self.line(1, format!("for (int y = 0; y < {oh}; y++) for (int xx = 0; xx < {ow}; xx++) {{"));
+        self.line(2, format!("for (int co = 0; co < {oc}; co++) {{"));
+        self.line(3, "float acc = 0.0f;");
+        self.line(3, format!("for (int dy = 0; dy < {kh}; dy++) {{"));
+        self.line(4, format!("int sy = y*{} + dy - {pt}; if (sy < 0 || sy >= {ih}) continue;", stride.0));
+        self.line(4, format!("for (int dx = 0; dx < {kw}; dx++) {{"));
+        self.line(5, format!("int sx = xx*{} + dx - {pl}; if (sx < 0 || sx >= {iw}) continue;", stride.1));
+        if depthwise {
+            let xi = self.at(&x, &["sy".into(), "sx".into(), "co".into()]);
+            let wi = self.at(&w, &["dy".into(), "dx".into(), "co".into()]);
+            self.line(5, format!("acc += {xi} * {wi};"));
+        } else {
+            let xi = self.at(&x, &["sy".into(), "sx".into(), "ci".into()]);
+            let wi = self.at(&w, &["dy".into(), "dx".into(), "ci".into(), "co".into()]);
+            self.line(5, format!("for (int ci = 0; ci < {cin}; ci++) acc += {xi} * {wi};"));
+        }
+        self.line(4, "}");
+        self.line(3, "}");
+        let out = self.at(&o, &["y".into(), "xx".into(), "co".into()]);
+        self.line(3, format!("{out} {assign} acc;"));
+        self.line(2, "}");
+        self.line(1, "}");
+        Ok(())
+    }
+
+    fn emit_dense(&mut self, op: &Op) -> Result<(), String> {
+        let assign = self.out_assign(op);
+        let x = self.view(op.inputs[0]);
+        let w = self.view(op.inputs[1]);
+        let o = self.view(op.output);
+        let (fin, fout) = (w.shape[0], w.shape[1]);
+        let xi = self.at_flat(&x, "i");
+        let wi = self.at(&w, &["i".into(), "oo".into()]);
+        let out = self.at_flat(&o, "oo");
+        self.line(1, format!("for (int oo = 0; oo < {fout}; oo++) {{"));
+        self.line(2, "float acc = 0.0f;");
+        self.line(2, format!("for (int i = 0; i < {fin}; i++) acc += {xi} * {wi};"));
+        self.line(2, format!("{out} {assign} acc;"));
+        self.line(1, "}");
+        Ok(())
+    }
+
+    fn emit_bias(&mut self, op: &Op) -> Result<(), String> {
+        let x = self.view(op.inputs[0]);
+        let b = self.view(op.inputs[1]);
+        let o = self.view(op.output);
+        let c = b.shape[0];
+        let n = o.numel();
+        let xi = self.at_flat(&x, "i");
+        let bi = self.at_flat(&b, &format!("i % {c}"));
+        let out = self.at_flat(&o, "i");
+        self.line(1, format!("for (int i = 0; i < {n}; i++) {out} = {xi} + {bi};"));
+        Ok(())
+    }
+
+    fn emit_act(&mut self, op: &Op, a: ActKind) -> Result<(), String> {
+        let x = self.view(op.inputs[0]);
+        let o = self.view(op.output);
+        let n = o.numel();
+        let xi = self.at_flat(&x, "i");
+        let out = self.at_flat(&o, "i");
+        let e = act_expr(a, &xi);
+        self.line(1, format!("for (int i = 0; i < {n}; i++) {out} = {e};"));
+        Ok(())
+    }
+
+    fn emit_pool(&mut self, op: &Op, ksize: (usize, usize), stride: (usize, usize), padding: Padding, is_max: bool) -> Result<(), String> {
+        let x = self.view(op.inputs[0]);
+        let o = self.view(op.output);
+        let (ih, iw, c) = (x.shape[0], x.shape[1], x.shape[2]);
+        let (oh, ow) = (o.shape[0], o.shape[1]);
+        let (pt, pl) = pad_before(padding, ih, iw, ksize, stride);
+        self.line(1, format!("for (int y = 0; y < {oh}; y++) for (int xx = 0; xx < {ow}; xx++) for (int ch = 0; ch < {c}; ch++) {{"));
+        self.line(2, "float best = -INFINITY; float sum = 0.0f; int cnt = 0;");
+        self.line(2, format!("for (int dy = 0; dy < {}; dy++) {{", ksize.0));
+        self.line(3, format!("int sy = y*{} + dy - {pt}; if (sy < 0 || sy >= {ih}) continue;", stride.0));
+        self.line(3, format!("for (int dx = 0; dx < {}; dx++) {{", ksize.1));
+        self.line(4, format!("int sx = xx*{} + dx - {pl}; if (sx < 0 || sx >= {iw}) continue;", stride.1));
+        let xi = self.at(&x, &["sy".into(), "sx".into(), "ch".into()]);
+        self.line(4, format!("float v = {xi}; if (v > best) best = v; sum += v; cnt++;"));
+        self.line(3, "}");
+        self.line(2, "}");
+        let out = self.at(&o, &["y".into(), "xx".into(), "ch".into()]);
+        if is_max {
+            self.line(2, format!("{out} = best;"));
+        } else {
+            self.line(2, format!("{out} = sum / (cnt > 0 ? cnt : 1);"));
+        }
+        self.line(1, "}");
+        Ok(())
+    }
+
+    fn emit_gap(&mut self, op: &Op) -> Result<(), String> {
+        let x = self.view(op.inputs[0]);
+        let o = self.view(op.output);
+        let (h, w, c) = (x.shape[0], x.shape[1], x.shape[2]);
+        let xi = self.at(&x, &["y".into(), "xx".into(), "ch".into()]);
+        let out = self.at_flat(&o, "ch");
+        self.line(1, format!("for (int ch = 0; ch < {c}; ch++) {{"));
+        self.line(2, "float acc = 0.0f;");
+        self.line(2, format!("for (int y = 0; y < {h}; y++) for (int xx = 0; xx < {w}; xx++) acc += {xi};"));
+        self.line(2, format!("{out} = acc / {}.0f;", h * w));
+        self.line(1, "}");
+        Ok(())
+    }
+
+    fn emit_binary(&mut self, op: &Op) -> Result<(), String> {
+        let a = self.view(op.inputs[0]);
+        let b = self.view(op.inputs[1]);
+        let o = self.view(op.output);
+        let n = o.numel();
+        let ai = self.at_flat(&a, "i");
+        let bi = self.at_flat(&b, "i");
+        let out = self.at_flat(&o, "i");
+        let sym = if matches!(op.kind, OpKind::Add) { "+" } else { "*" };
+        self.line(1, format!("for (int i = 0; i < {n}; i++) {out} = {ai} {sym} {bi};"));
+        Ok(())
+    }
+
+    fn emit_pad(&mut self, op: &Op, pads: Vec<(usize, usize)>) -> Result<(), String> {
+        let x = self.view(op.inputs[0]);
+        let o = self.view(op.output);
+        let n = o.numel();
+        let zero = self.at_flat(&o, "i");
+        self.line(1, format!("for (int i = 0; i < {n}; i++) {zero} = 0.0f;"));
+        // Copy with shifted coordinates (rank <= 3 in the zoo).
+        let coords: Vec<String> = (0..x.shape.len()).map(|d| format!("c{d}")).collect();
+        let shifted: Vec<String> =
+            coords.iter().zip(&pads).map(|(c, p)| format!("{c} + {}", p.0)).collect();
+        let src = self.at(&x, &coords);
+        let dst = self.at(&o, &shifted);
+        let mut loops = String::new();
+        for (d, &dim) in x.shape.iter().enumerate() {
+            loops += &format!("for (int c{d} = 0; c{d} < {dim}; c{d}++) ");
+        }
+        self.line(1, format!("{loops}{dst} = {src};"));
+        Ok(())
+    }
+
+    fn emit_reshape(&mut self, op: &Op) -> Result<(), String> {
+        let x = self.view(op.inputs[0]);
+        let o = self.view(op.output);
+        // View case: same storage & offset — nothing to do.
+        if x.off == o.off && format!("{:?}", x.storage) == format!("{:?}", o.storage) && x.is_dense() {
+            return Ok(());
+        }
+        let n = o.numel();
+        let xi = self.at_flat(&x, "i");
+        let out = self.at_flat(&o, "i");
+        self.line(1, format!("for (int i = 0; i < {n}; i++) {out} = {xi};"));
+        Ok(())
+    }
+
+    fn emit_softmax(&mut self, op: &Op) -> Result<(), String> {
+        let x = self.view(op.inputs[0]);
+        let o = self.view(op.output);
+        let n = o.numel();
+        let xi = self.at_flat(&x, "i");
+        let out = self.at_flat(&o, "i");
+        self.line(1, "{");
+        self.line(2, "float m = -INFINITY, sum = 0.0f;");
+        self.line(2, format!("for (int i = 0; i < {n}; i++) if ({xi} > m) m = {xi};"));
+        self.line(2, format!("for (int i = 0; i < {n}; i++) {{ {out} = expf({xi} - m); sum += {out}; }}"));
+        self.line(2, format!("for (int i = 0; i < {n}; i++) {out} /= sum;"));
+        self.line(1, "}");
+        Ok(())
+    }
+
+    fn emit_gather(&mut self, op: &Op) -> Result<(), String> {
+        let table = self.view(op.inputs[0]);
+        let idx = self.view(op.inputs[1]);
+        let o = self.view(op.output);
+        let (seq, emb) = (o.shape[0], o.shape[1]);
+        let ix = self.at_flat(&idx, "i");
+        let ti = self.at(&table, &["row".into(), "e".into()]);
+        let out = self.at(&o, &["i".into(), "e".into()]);
+        self.line(1, format!("for (int i = 0; i < {seq}; i++) {{"));
+        self.line(2, format!("int row = (int){ix};"));
+        self.line(2, format!("for (int e = 0; e < {emb}; e++) {out} = {ti};"));
+        self.line(1, "}");
+        Ok(())
+    }
+
+    fn emit_mean(&mut self, op: &Op, axis: usize) -> Result<(), String> {
+        let x = self.view(op.inputs[0]);
+        let o = self.view(op.output);
+        let n = x.shape[axis];
+        let outer: usize = x.shape[..axis].iter().product();
+        let inner: usize = x.shape[axis + 1..].iter().product();
+        let xi = self.at_flat(&x, &format!("(oo*{n} + a)*{inner} + ii"));
+        let out = self.at_flat(&o, &format!("oo*{inner} + ii"));
+        self.line(1, format!("for (int oo = 0; oo < {outer}; oo++) for (int ii = 0; ii < {inner}; ii++) {{"));
+        self.line(2, "float acc = 0.0f;");
+        self.line(2, format!("for (int a = 0; a < {n}; a++) acc += {xi};"));
+        self.line(2, format!("{out} = acc / {n}.0f;"));
+        self.line(1, "}");
+        Ok(())
+    }
+
+    fn emit_concat(&mut self, op: &Op, axis: usize) -> Result<(), String> {
+        // Aliased inputs already live in the destination; copy the rest.
+        let o = self.view(op.output);
+        let mut pos = 0usize;
+        for &t in &op.inputs {
+            let x = self.view(t);
+            let aliased = x.off == o.off + pos * o.strides[axis]
+                && format!("{:?}", x.storage) == format!("{:?}", o.storage);
+            if !aliased {
+                let coords: Vec<String> = (0..x.shape.len()).map(|d| format!("c{d}")).collect();
+                let dst_coords: Vec<String> = coords
+                    .iter()
+                    .enumerate()
+                    .map(|(d, c)| if d == axis { format!("{c} + {pos}") } else { c.clone() })
+                    .collect();
+                let src = self.at(&x, &coords);
+                let dst = self.at(&o, &dst_coords);
+                let mut loops = String::new();
+                for (d, &dim) in x.shape.iter().enumerate() {
+                    loops += &format!("for (int c{d} = 0; c{d} < {dim}; c{d}++) ");
+                }
+                self.line(1, format!("{loops}{dst} = {src};"));
+            }
+            pos += x.shape[axis];
+        }
+        Ok(())
+    }
+
+    fn emit_merge(&mut self, op: &Op, a: ActKind) -> Result<(), String> {
+        let o = self.view(op.output);
+        let n = o.numel();
+        let out = self.at_flat(&o, "i");
+        let any_aliased = op.inputs.iter().any(|&t| self.views[t].accumulate);
+        let mut first_plain = !any_aliased;
+        for &t in &op.inputs {
+            let x = self.view(t);
+            if x.accumulate {
+                continue; // already accumulated in place by its producer
+            }
+            let xi = self.at_flat(&x, "i");
+            let sym = if first_plain { "=" } else { "+=" };
+            first_plain = false;
+            self.line(1, format!("for (int i = 0; i < {n}; i++) {out} {sym} {xi};"));
+        }
+        if !matches!(a, ActKind::Identity) {
+            let e = act_expr(a, &out);
+            self.line(1, format!("for (int i = 0; i < {n}; i++) {out} = {e};"));
+        }
+        Ok(())
+    }
+}

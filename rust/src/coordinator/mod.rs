@@ -1,0 +1,319 @@
+//! The automated tiling exploration flow (Fig. 3).
+//!
+//! ```text
+//! G_in -> schedule -> layout L -> critical buffers B_i
+//!      -> path discovery -> configs C_i -> transform -> G_i
+//!      -> schedule+layout each -> L_min
+//!      -> if L_min < L: G_opt = argmin, repeat; else next B_i; stop.
+//! ```
+//!
+//! Candidate configurations are evaluated concurrently on OS threads
+//! (each evaluation is an independent transform + schedule + layout).
+
+use crate::analysis::{graph_macs, MemModel};
+use crate::graph::fusion::fuse;
+use crate::graph::{Graph, TensorId, TensorKind};
+use crate::layout::{self, heuristic, Layout, LayoutOptions};
+use crate::sched::{self, SchedOptions, Schedule};
+use crate::tiling::discovery::{discover, DiscoveryOptions};
+use crate::tiling::PathConfig;
+use crate::transform::apply_tiling;
+
+/// Measured cost of a graph under the full deployment flow.
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    /// Arena size of the planned layout (intermediate RAM incl. model
+    /// I/O buffers).
+    pub ram: usize,
+    /// Static MAC count.
+    pub macs: u64,
+    /// Weight bytes (ROM).
+    pub rom: usize,
+    /// Schedule peak (== ram unless fragmentation).
+    pub sched_peak: usize,
+    pub sched_strategy: &'static str,
+    pub layout_optimal: bool,
+}
+
+/// Flow tuning knobs.
+#[derive(Debug, Clone)]
+pub struct FlowOptions {
+    pub sched: SchedOptions,
+    pub layout: LayoutOptions,
+    pub discovery: DiscoveryOptions,
+    /// Cheap scheduling budget used while screening candidates; the
+    /// winning graph is re-evaluated at full budget.
+    pub screening_sched: SchedOptions,
+    /// Maximum Fig-3 iterations (tiling applications).
+    pub max_iterations: usize,
+    /// Critical-buffer candidates examined per iteration.
+    pub max_candidates: usize,
+    /// Worker threads for candidate evaluation.
+    pub threads: usize,
+    /// §5.2 performance-optimized design point: reject configurations
+    /// whose cumulative MAC overhead (vs. the *original* graph) exceeds
+    /// this percentage. `None` = memory-optimized design (paper default).
+    pub max_mac_overhead_pct: Option<f64>,
+}
+
+impl Default for FlowOptions {
+    fn default() -> Self {
+        FlowOptions {
+            sched: SchedOptions::default(),
+            layout: LayoutOptions::default(),
+            discovery: DiscoveryOptions::default(),
+            screening_sched: SchedOptions { bnb_node_budget: 50_000, use_sp: true },
+            max_iterations: 8,
+            max_candidates: 6,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            max_mac_overhead_pct: None,
+        }
+    }
+}
+
+/// One accepted tiling application.
+#[derive(Debug, Clone)]
+pub struct IterationLog {
+    pub critical_buffer: String,
+    pub config: String,
+    pub ram_before: usize,
+    pub ram_after: usize,
+    pub configs_tested: usize,
+}
+
+/// Result of the full exploration.
+#[derive(Debug, Clone)]
+pub struct FlowResult {
+    pub graph: Graph,
+    pub initial: Evaluation,
+    pub final_eval: Evaluation,
+    pub iterations: Vec<IterationLog>,
+    pub configs_tested: usize,
+    pub elapsed: std::time::Duration,
+}
+
+impl FlowResult {
+    pub fn ram_savings_pct(&self) -> f64 {
+        if self.initial.ram == 0 {
+            return 0.0;
+        }
+        100.0 * (self.initial.ram as f64 - self.final_eval.ram as f64) / self.initial.ram as f64
+    }
+    pub fn mac_overhead_pct(&self) -> f64 {
+        if self.initial.macs == 0 {
+            return 0.0;
+        }
+        100.0 * (self.final_eval.macs as f64 - self.initial.macs as f64) / self.initial.macs as f64
+    }
+}
+
+/// Evaluate a graph end to end: fuse, schedule, plan layout.
+pub fn evaluate(g: &Graph, sched_opts: SchedOptions, layout_opts: LayoutOptions) -> Evaluation {
+    let grouping = fuse(g);
+    let m = MemModel::new(g, &grouping);
+    let s = sched::schedule(&m, sched_opts);
+    let l = layout::plan(&m, &s.order, layout_opts);
+    Evaluation {
+        ram: l.total,
+        macs: graph_macs(g),
+        rom: g.rom_bytes(),
+        sched_peak: s.peak,
+        sched_strategy: s.strategy,
+        layout_optimal: l.optimal,
+    }
+}
+
+/// Schedule + layout, returning all three artifacts (for reports).
+pub fn plan_graph<'a>(
+    g: &'a Graph,
+    grouping: &'a crate::graph::fusion::Grouping,
+    opts: &FlowOptions,
+) -> (MemModel<'a>, Schedule, Layout) {
+    let m = MemModel::new(g, grouping);
+    let s = sched::schedule(&m, opts.sched);
+    let l = layout::plan(&m, &s.order, opts.layout);
+    (m, s, l)
+}
+
+/// Critical-buffer detection (§4.3): intermediate buffers that are
+/// "solely responsible" for the layout size — removing one shrinks a
+/// quick re-layout. Returned largest-first.
+pub fn critical_buffers(m: &MemModel, schedule: &[usize], l: &Layout) -> Vec<TensorId> {
+    let conflicts = m.conflicts(schedule);
+    let mut cands: Vec<(usize, TensorId)> = Vec::new();
+    for (b, &t) in m.buffers.iter().enumerate() {
+        let tensor = m.g.tensor(t);
+        // Model I/O cannot be tiled.
+        if tensor.kind == TensorKind::Input || m.is_output[b] {
+            continue;
+        }
+        // Quick what-if: re-layout with this buffer removed.
+        let mut sizes = m.sizes.clone();
+        sizes[b] = 0;
+        let without = heuristic::first_fit_by_size(&sizes, &conflicts);
+        if without.total < l.total {
+            cands.push((m.sizes[b], t));
+        }
+    }
+    cands.sort_by_key(|&(s, _)| std::cmp::Reverse(s));
+    cands.into_iter().map(|(_, t)| t).collect()
+}
+
+/// Screen a batch of configs in parallel; returns `(best_ram, index)`.
+/// `mac_cap` is the absolute MAC budget (original MACs scaled by the
+/// overhead threshold); configurations exceeding it are rejected.
+fn screen_configs(
+    g: &Graph,
+    configs: &[PathConfig],
+    opts: &FlowOptions,
+    mac_cap: Option<u64>,
+) -> (Option<(usize, usize)>, usize) {
+    let screen_one = |g: &Graph, c: &PathConfig, opts: &FlowOptions| {
+        screen_one(g, c, opts, mac_cap)
+    };
+    let results: Vec<Option<usize>> = if opts.threads <= 1 || configs.len() <= 1 {
+        configs.iter().map(|c| screen_one(g, c, opts)).collect()
+    } else {
+        let mut results: Vec<Option<usize>> = vec![None; configs.len()];
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let slots: Vec<std::sync::Mutex<Option<usize>>> =
+            (0..configs.len()).map(|_| std::sync::Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..opts.threads.min(configs.len()) {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= configs.len() {
+                        break;
+                    }
+                    let r = screen_one(g, &configs[i], opts);
+                    *slots[i].lock().unwrap() = r;
+                });
+            }
+        });
+        for (i, s) in slots.into_iter().enumerate() {
+            results[i] = s.into_inner().unwrap();
+        }
+        results
+    };
+    let tested = results.len();
+    let best = results
+        .into_iter()
+        .enumerate()
+        .filter_map(|(i, r)| r.map(|ram| (ram, i)))
+        .min();
+    (best, tested)
+}
+
+/// Evaluate one candidate cheaply. `None` when the transform is invalid
+/// for this graph (e.g. partition count exceeding channels) or the MAC
+/// budget is exceeded (§5.2 performance-optimized design).
+fn screen_one(g: &Graph, cfg: &PathConfig, opts: &FlowOptions, mac_cap: Option<u64>) -> Option<usize> {
+    let tiled = apply_tiling(g, cfg).ok()?;
+    if let Some(cap) = mac_cap {
+        if graph_macs(&tiled) > cap {
+            return None;
+        }
+    }
+    let grouping = fuse(&tiled);
+    let m = MemModel::new(&tiled, &grouping);
+    let s = sched::schedule(&m, opts.screening_sched);
+    // Screening uses the first-fit layout (fast); the exact planner runs
+    // on the winner only. First-fit is an upper bound, so a winning
+    // candidate never gets worse after exact planning.
+    let conflicts = m.conflicts(&s.order);
+    let l = heuristic::first_fit_by_size(&m.sizes, &conflicts);
+    Some(l.total)
+}
+
+/// Run the full Fig-3 exploration on `g`.
+pub fn optimize(g: &Graph, opts: &FlowOptions) -> FlowResult {
+    let t0 = std::time::Instant::now();
+    let initial = evaluate(g, opts.sched, opts.layout);
+    // MAC budget relative to the *original* graph, so overhead cannot
+    // accumulate past the threshold over iterations.
+    let mac_cap = opts
+        .max_mac_overhead_pct
+        .map(|pct| (initial.macs as f64 * (1.0 + pct / 100.0)).floor() as u64);
+    let mut current = g.clone();
+    let mut current_eval = initial.clone();
+    let mut iterations = Vec::new();
+    let mut configs_tested = 0usize;
+
+    'outer: for _ in 0..opts.max_iterations {
+        let grouping = fuse(&current);
+        let (m, s, l) = plan_graph(&current, &grouping, opts);
+        let candidates = critical_buffers(&m, &s.order, &l);
+
+        for t in candidates.into_iter().take(opts.max_candidates) {
+            let configs = discover(&current, t, &opts.discovery);
+            if configs.is_empty() {
+                continue;
+            }
+            let (best, tested) = screen_configs(&current, &configs, opts, mac_cap);
+            configs_tested += tested;
+            let Some((_, idx)) = best else { continue };
+            // Re-evaluate the winner at full fidelity.
+            let tiled = match apply_tiling(&current, &configs[idx]) {
+                Ok(t) => t,
+                Err(_) => continue,
+            };
+            let eval = evaluate(&tiled, opts.sched, opts.layout);
+            if eval.ram < current_eval.ram {
+                iterations.push(IterationLog {
+                    critical_buffer: current.tensor(t).name.clone(),
+                    config: configs[idx].describe(&current),
+                    ram_before: current_eval.ram,
+                    ram_after: eval.ram,
+                    configs_tested: tested,
+                });
+                current = tiled;
+                current_eval = eval;
+                continue 'outer; // re-plan the new graph (Fig 3 loop-back)
+            }
+        }
+        break; // no candidate improved: flow terminates
+    }
+
+    FlowResult {
+        graph: current,
+        initial,
+        final_eval: current_eval,
+        iterations,
+        configs_tested,
+        elapsed: t0.elapsed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn txt_flow_reduces_memory_substantially() {
+        let g = crate::models::txt();
+        let r = optimize(&g, &FlowOptions::default());
+        assert!(
+            r.ram_savings_pct() > 50.0,
+            "TXT should tile its embedding buffer: {:.1}% (init {} -> {})",
+            r.ram_savings_pct(),
+            r.initial.ram,
+            r.final_eval.ram
+        );
+        assert_eq!(r.final_eval.macs, r.initial.macs, "FDT adds no MACs");
+        // The tiled graph still computes the same function.
+        let inputs = crate::exec::random_inputs(&g, 3);
+        let a = crate::exec::run(&g, &inputs).unwrap();
+        let b = crate::exec::run(&r.graph, &inputs).unwrap();
+        assert!(crate::exec::max_abs_diff(&a, &b) < 1e-4);
+    }
+
+    #[test]
+    fn fdt_only_flow_never_adds_macs() {
+        let mut opts = FlowOptions::default();
+        opts.discovery.enable_ffmt = false;
+        for g in [crate::models::radar(), crate::models::fig5_example()] {
+            let r = optimize(&g, &opts);
+            assert_eq!(r.final_eval.macs, r.initial.macs, "{}", g.name);
+        }
+    }
+}

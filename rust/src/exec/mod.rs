@@ -1,0 +1,517 @@
+//! Reference interpreter: executes a graph in f32 on the CPU.
+//!
+//! Used to prove the central invariant of the paper's transform: a tiled
+//! graph computes *exactly* the same function as the untiled original
+//! ("memory optimization without changing any DNN behavior"). Not a fast
+//! path — the serving hot path goes through [`crate::runtime`] (PJRT).
+
+use crate::graph::{ActKind, Graph, Op, OpKind, Padding, TensorKind};
+use std::collections::HashMap;
+
+/// A dense f32 tensor value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Value {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Value {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Value { shape, data }
+    }
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Value { shape, data: vec![0.0; n] }
+    }
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+fn act(a: ActKind, x: f32) -> f32 {
+    match a {
+        ActKind::Identity => x,
+        ActKind::Relu => x.max(0.0),
+        ActKind::Relu6 => x.clamp(0.0, 6.0),
+        ActKind::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+        ActKind::Tanh => x.tanh(),
+    }
+}
+
+/// Resolved (pad_top, pad_left) for a windowed op.
+fn pad_before(padding: Padding, in_h: usize, in_w: usize, k: (usize, usize), s: (usize, usize)) -> (isize, isize) {
+    match padding {
+        Padding::Valid => (0, 0),
+        Padding::Same => {
+            let oh = in_h.div_ceil(s.0);
+            let ow = in_w.div_ceil(s.1);
+            let th = ((oh - 1) * s.0 + k.0).saturating_sub(in_h);
+            let tw = ((ow - 1) * s.1 + k.1).saturating_sub(in_w);
+            ((th / 2) as isize, (tw / 2) as isize)
+        }
+        Padding::Explicit(h, w) => (h.0 as isize, w.0 as isize),
+    }
+}
+
+/// Execute the graph. `inputs` maps model-input tensor names to values.
+/// Returns the model outputs in declaration order.
+pub fn run(g: &Graph, inputs: &HashMap<String, Value>) -> Result<Vec<Value>, String> {
+    let vals = run_all_with(g, inputs, |_, v| v)?;
+    Ok(g.outputs.iter().map(|&t| vals[t].clone()).collect())
+}
+
+/// Execute and return the value of *every* tensor (calibration etc.).
+pub fn run_all(g: &Graph, inputs: &HashMap<String, Value>) -> Result<Vec<Value>, String> {
+    run_all_with(g, inputs, |_, v| v)
+}
+
+/// Execute with a post-op hook: `post(tensor_id, value)` transforms each
+/// op output before downstream consumers see it (used by the int8
+/// simulation in [`crate::quant`] to project activations onto their
+/// quantization grids).
+pub fn run_all_with(
+    g: &Graph,
+    inputs: &HashMap<String, Value>,
+    mut post: impl FnMut(crate::graph::TensorId, Value) -> Value,
+) -> Result<Vec<Value>, String> {
+    let mut vals: Vec<Option<Value>> = vec![None; g.tensors.len()];
+    for t in &g.tensors {
+        match t.kind {
+            TensorKind::Input => {
+                let v = inputs
+                    .get(&t.name)
+                    .ok_or_else(|| format!("missing input {}", t.name))?;
+                if v.shape != t.shape {
+                    return Err(format!("input {} shape {:?} != {:?}", t.name, v.shape, t.shape));
+                }
+                vals[t.id] = Some(v.clone());
+            }
+            TensorKind::Weight => {
+                let data = t
+                    .data
+                    .clone()
+                    .ok_or_else(|| format!("weight {} has no data (model built without_data)", t.name))?;
+                vals[t.id] = Some(Value::new(t.shape.clone(), data));
+            }
+            TensorKind::Intermediate => {}
+        }
+    }
+    for oid in g.topo_order() {
+        let op = g.op(oid);
+        let out = eval(g, op, &vals)?;
+        vals[op.output] = Some(post(op.output, out));
+    }
+    vals.into_iter()
+        .enumerate()
+        .map(|(t, v)| v.ok_or_else(|| format!("tensor {t} not computed")))
+        .collect()
+}
+
+fn eval(g: &Graph, op: &Op, vals: &[Option<Value>]) -> Result<Value, String> {
+    let v = |i: usize| -> &Value { vals[op.inputs[i]].as_ref().expect("topo order violated") };
+    let out_shape = g.tensor(op.output).shape.clone();
+    let r = match &op.kind {
+        OpKind::Conv2d { stride, padding } => {
+            let x = v(0);
+            let w = v(1);
+            let (kh, kw, cin, cout) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+            let (ih, iw) = (x.shape[0], x.shape[1]);
+            let (oh, ow) = (out_shape[0], out_shape[1]);
+            let (pt, pl) = pad_before(*padding, ih, iw, (kh, kw), *stride);
+            let mut out = Value::zeros(out_shape.clone());
+            for y in 0..oh {
+                for xx in 0..ow {
+                    for co in 0..cout {
+                        let mut acc = 0.0f32;
+                        for dy in 0..kh {
+                            let sy = y as isize * stride.0 as isize + dy as isize - pt;
+                            if sy < 0 || sy >= ih as isize {
+                                continue;
+                            }
+                            for dx in 0..kw {
+                                let sx = xx as isize * stride.1 as isize + dx as isize - pl;
+                                if sx < 0 || sx >= iw as isize {
+                                    continue;
+                                }
+                                let xi = (sy as usize * iw + sx as usize) * cin;
+                                let wi = ((dy * kw + dx) * cin) * cout;
+                                for ci in 0..cin {
+                                    acc += x.data[xi + ci] * w.data[wi + ci * cout + co];
+                                }
+                            }
+                        }
+                        out.data[(y * ow + xx) * cout + co] = acc;
+                    }
+                }
+            }
+            out
+        }
+        OpKind::DepthwiseConv2d { stride, padding } => {
+            let x = v(0);
+            let w = v(1);
+            let (kh, kw, c) = (w.shape[0], w.shape[1], w.shape[2]);
+            let (ih, iw) = (x.shape[0], x.shape[1]);
+            let (oh, ow) = (out_shape[0], out_shape[1]);
+            let (pt, pl) = pad_before(*padding, ih, iw, (kh, kw), *stride);
+            let mut out = Value::zeros(out_shape.clone());
+            for y in 0..oh {
+                for xx in 0..ow {
+                    for ch in 0..c {
+                        let mut acc = 0.0f32;
+                        for dy in 0..kh {
+                            let sy = y as isize * stride.0 as isize + dy as isize - pt;
+                            if sy < 0 || sy >= ih as isize {
+                                continue;
+                            }
+                            for dx in 0..kw {
+                                let sx = xx as isize * stride.1 as isize + dx as isize - pl;
+                                if sx < 0 || sx >= iw as isize {
+                                    continue;
+                                }
+                                acc += x.data[(sy as usize * iw + sx as usize) * c + ch]
+                                    * w.data[(dy * kw + dx) * c + ch];
+                            }
+                        }
+                        out.data[(y * ow + xx) * c + ch] = acc;
+                    }
+                }
+            }
+            out
+        }
+        OpKind::Dense => {
+            let x = v(0);
+            let w = v(1);
+            let (fin, fout) = (w.shape[0], w.shape[1]);
+            let mut out = Value::zeros(vec![fout]);
+            for o in 0..fout {
+                let mut acc = 0.0;
+                for i in 0..fin {
+                    acc += x.data[i] * w.data[i * fout + o];
+                }
+                out.data[o] = acc;
+            }
+            out
+        }
+        OpKind::BiasAdd => {
+            let x = v(0);
+            let b = v(1);
+            let c = b.shape[0];
+            let mut out = x.clone();
+            for (i, d) in out.data.iter_mut().enumerate() {
+                *d += b.data[i % c];
+            }
+            out
+        }
+        OpKind::Activation(a) => {
+            let mut out = v(0).clone();
+            for d in out.data.iter_mut() {
+                *d = act(*a, *d);
+            }
+            out
+        }
+        OpKind::MaxPool2d { ksize, stride, padding } | OpKind::AvgPool2d { ksize, stride, padding } => {
+            let is_max = matches!(op.kind, OpKind::MaxPool2d { .. });
+            let x = v(0);
+            let (ih, iw, c) = (x.shape[0], x.shape[1], x.shape[2]);
+            let (oh, ow) = (out_shape[0], out_shape[1]);
+            let (pt, pl) = pad_before(*padding, ih, iw, *ksize, *stride);
+            let mut out = Value::zeros(out_shape.clone());
+            for y in 0..oh {
+                for xx in 0..ow {
+                    for ch in 0..c {
+                        let mut best = f32::NEG_INFINITY;
+                        let mut sum = 0.0f32;
+                        let mut cnt = 0usize;
+                        for dy in 0..ksize.0 {
+                            let sy = y as isize * stride.0 as isize + dy as isize - pt;
+                            if sy < 0 || sy >= ih as isize {
+                                continue;
+                            }
+                            for dx in 0..ksize.1 {
+                                let sx = xx as isize * stride.1 as isize + dx as isize - pl;
+                                if sx < 0 || sx >= iw as isize {
+                                    continue;
+                                }
+                                let val = x.data[(sy as usize * iw + sx as usize) * c + ch];
+                                best = best.max(val);
+                                sum += val;
+                                cnt += 1;
+                            }
+                        }
+                        out.data[(y * ow + xx) * c + ch] =
+                            if is_max { best } else { sum / cnt.max(1) as f32 };
+                    }
+                }
+            }
+            out
+        }
+        OpKind::GlobalAvgPool => {
+            let x = v(0);
+            let (h, w, c) = (x.shape[0], x.shape[1], x.shape[2]);
+            let mut out = Value::zeros(vec![c]);
+            for i in 0..h * w {
+                for ch in 0..c {
+                    out.data[ch] += x.data[i * c + ch];
+                }
+            }
+            for d in out.data.iter_mut() {
+                *d /= (h * w) as f32;
+            }
+            out
+        }
+        OpKind::Add | OpKind::Mul => {
+            let a = v(0);
+            let b = v(1);
+            let mut out = a.clone();
+            for (i, d) in out.data.iter_mut().enumerate() {
+                if matches!(op.kind, OpKind::Add) {
+                    *d += b.data[i];
+                } else {
+                    *d *= b.data[i];
+                }
+            }
+            out
+        }
+        OpKind::Pad { pads } => {
+            let x = v(0);
+            let mut out = Value::zeros(out_shape.clone());
+            // Generic n-d zero pad via index arithmetic.
+            let in_strides = strides(&x.shape);
+            let out_strides = strides(&out_shape);
+            let mut idx = vec![0usize; x.shape.len()];
+            for flat in 0..x.numel() {
+                let mut rem = flat;
+                for (d, &s) in in_strides.iter().enumerate() {
+                    idx[d] = rem / s;
+                    rem %= s;
+                }
+                let mut oflat = 0;
+                for d in 0..idx.len() {
+                    oflat += (idx[d] + pads[d].0) * out_strides[d];
+                }
+                out.data[oflat] = x.data[flat];
+            }
+            out
+        }
+        OpKind::Reshape { .. } => Value::new(out_shape.clone(), v(0).data.clone()),
+        OpKind::Softmax => {
+            let x = v(0);
+            let mut out = x.clone();
+            let m = out.data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0;
+            for d in out.data.iter_mut() {
+                *d = (*d - m).exp();
+                sum += *d;
+            }
+            for d in out.data.iter_mut() {
+                *d /= sum;
+            }
+            out
+        }
+        OpKind::Gather => {
+            let table = v(0);
+            let idx = v(1);
+            let emb = table.shape[1];
+            let mut out = Value::zeros(out_shape.clone());
+            for (i, &ix) in idx.data.iter().enumerate() {
+                let row = ix as usize;
+                if row >= table.shape[0] {
+                    return Err(format!("{}: index {row} out of range", op.name));
+                }
+                out.data[i * emb..(i + 1) * emb]
+                    .copy_from_slice(&table.data[row * emb..(row + 1) * emb]);
+            }
+            out
+        }
+        OpKind::ReduceMean { axis, .. } => {
+            let x = v(0);
+            let n = x.shape[*axis];
+            let mut out = Value::zeros(out_shape.clone());
+            // Accumulate into the output index with `axis` removed
+            // (keepdims produces the same flat layout).
+            let outer: usize = x.shape[..*axis].iter().product();
+            let inner: usize = x.shape[*axis + 1..].iter().product();
+            for o in 0..outer {
+                for i in 0..inner {
+                    let mut acc = 0.0;
+                    for a in 0..n {
+                        acc += x.data[(o * n + a) * inner + i];
+                    }
+                    out.data[o * inner + i] = acc / n as f32;
+                }
+            }
+            out
+        }
+        OpKind::Slice { begins, ends } => {
+            let x = v(0);
+            let in_strides = strides(&x.shape);
+            let out_strides = strides(&out_shape);
+            let mut out = Value::zeros(out_shape.clone());
+            let mut idx = vec![0usize; out_shape.len()];
+            for oflat in 0..out.numel() {
+                let mut rem = oflat;
+                for (d, &s) in out_strides.iter().enumerate() {
+                    idx[d] = rem / s;
+                    rem %= s;
+                }
+                let mut iflat = 0;
+                for d in 0..idx.len() {
+                    iflat += (idx[d] + begins[d]) * in_strides[d];
+                }
+                out.data[oflat] = x.data[iflat];
+            }
+            debug_assert!(begins.iter().zip(ends).all(|(b, e)| b < e));
+            out
+        }
+        OpKind::Concat { axis } => {
+            let mut out = Value::zeros(out_shape.clone());
+            let out_strides = strides(&out_shape);
+            let mut offset = 0usize;
+            for k in 0..op.inputs.len() {
+                let x = v(k);
+                let in_strides = strides(&x.shape);
+                let mut idx = vec![0usize; x.shape.len()];
+                for flat in 0..x.numel() {
+                    let mut rem = flat;
+                    for (d, &s) in in_strides.iter().enumerate() {
+                        idx[d] = rem / s;
+                        rem %= s;
+                    }
+                    let mut oflat = 0;
+                    for d in 0..idx.len() {
+                        let coord = if d == *axis { idx[d] + offset } else { idx[d] };
+                        oflat += coord * out_strides[d];
+                    }
+                    out.data[oflat] = x.data[flat];
+                }
+                offset += x.shape[*axis];
+            }
+            out
+        }
+        OpKind::Merge { act: a } => {
+            let mut out = v(0).clone();
+            for k in 1..op.inputs.len() {
+                let x = v(k);
+                for (i, d) in out.data.iter_mut().enumerate() {
+                    *d += x.data[i];
+                }
+            }
+            for d in out.data.iter_mut() {
+                *d = act(*a, *d);
+            }
+            out
+        }
+    };
+    if r.shape != out_shape {
+        return Err(format!("{}: eval produced {:?}, expected {:?}", op.name, r.shape, out_shape));
+    }
+    Ok(r)
+}
+
+fn strides(shape: &[usize]) -> Vec<usize> {
+    let mut s = vec![1; shape.len()];
+    for d in (0..shape.len().saturating_sub(1)).rev() {
+        s[d] = s[d + 1] * shape[d + 1];
+    }
+    s
+}
+
+/// Deterministic random inputs for every model input of `g`.
+pub fn random_inputs(g: &Graph, seed: u64) -> HashMap<String, Value> {
+    let mut rng = crate::graph::Rng::new(seed);
+    let mut m = HashMap::new();
+    for &t in &g.inputs {
+        let t = g.tensor(t);
+        let n = t.numel();
+        let data: Vec<f32> = match t.dtype {
+            // Index tensors get small non-negative integers (vocab ids
+            // are validated by Gather; 100 keeps them in range for all
+            // zoo models).
+            crate::graph::DType::I32 => (0..n).map(|_| (rng.next_u64() % 100) as f32).collect(),
+            _ => (0..n).map(|_| rng.next_f32()).collect(),
+        };
+        m.insert(t.name.clone(), Value::new(t.shape.clone(), data));
+    }
+    m
+}
+
+/// Max absolute elementwise difference between two output sets.
+pub fn max_abs_diff(a: &[Value], b: &[Value]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let mut m = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.shape, y.shape, "output shapes differ");
+        for (u, v) in x.data.iter().zip(&y.data) {
+            m = m.max((u - v).abs());
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ActKind, DType, GraphBuilder, OpKind, Padding};
+
+    #[test]
+    fn conv_identity_kernel() {
+        let mut b = GraphBuilder::new("c");
+        let x = b.input("x", vec![3, 3, 1], DType::F32);
+        // 1x1 conv with weight 2.0: doubles each element.
+        let w = b.weight_with("w", vec![1, 1, 1, 1], DType::F32, vec![2.0]);
+        let y = b.op(OpKind::Conv2d { stride: (1, 1), padding: Padding::Valid }, vec![x, w]);
+        let g = b.finish(vec![y]);
+        let mut inputs = HashMap::new();
+        inputs.insert("x".into(), Value::new(vec![3, 3, 1], (0..9).map(|i| i as f32).collect()));
+        let out = run(&g, &inputs).unwrap();
+        assert_eq!(out[0].data, (0..9).map(|i| 2.0 * i as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn dense_matches_manual() {
+        let mut b = GraphBuilder::new("d");
+        let x = b.input("x", vec![2], DType::F32);
+        let w = b.weight_with("w", vec![2, 2], DType::F32, vec![1.0, 2.0, 3.0, 4.0]);
+        let y = b.op(OpKind::Dense, vec![x, w]);
+        let g = b.finish(vec![y]);
+        let mut inputs = HashMap::new();
+        inputs.insert("x".into(), Value::new(vec![2], vec![5.0, 7.0]));
+        let out = run(&g, &inputs).unwrap();
+        // y = [5*1 + 7*3, 5*2 + 7*4] = [26, 38]
+        assert_eq!(out[0].data, vec![26.0, 38.0]);
+    }
+
+    #[test]
+    fn gather_mean_runs() {
+        let mut b = GraphBuilder::new("g");
+        let idx = b.input("idx", vec![4], DType::I32);
+        let table = b.weight_with(
+            "t",
+            vec![3, 2],
+            DType::F32,
+            vec![0.0, 0.0, 1.0, 10.0, 2.0, 20.0],
+        );
+        let e = b.op(OpKind::Gather, vec![table, idx]);
+        let m = b.op(OpKind::ReduceMean { axis: 0, keepdims: false }, vec![e]);
+        let g = b.finish(vec![m]);
+        let mut inputs = HashMap::new();
+        inputs.insert("idx".into(), Value::new(vec![4], vec![0.0, 1.0, 2.0, 1.0]));
+        let out = run(&g, &inputs).unwrap();
+        // rows: [0,0],[1,10],[2,20],[1,10] -> mean [1, 10]
+        assert_eq!(out[0].data, vec![1.0, 10.0]);
+    }
+
+    #[test]
+    fn same_padding_conv_matches_window_math() {
+        // 5 rows, stride 2, k 3, SAME: out 3 rows. Verify no panic and
+        // deterministic result.
+        let mut b = GraphBuilder::new("s");
+        let x = b.input("x", vec![5, 5, 2], DType::F32);
+        let y = b.conv2d(x, 3, (3, 3), (2, 2), Padding::Same, ActKind::Relu);
+        let g = b.finish(vec![y]);
+        let inputs = random_inputs(&g, 7);
+        let out = run(&g, &inputs).unwrap();
+        assert_eq!(out[0].shape, vec![3, 3, 3]);
+    }
+}

@@ -1,0 +1,267 @@
+//! Fluent graph construction with automatic shape inference.
+//!
+//! The builder owns a [`Graph`] under construction; op-adding methods
+//! return the output [`TensorId`] so layers chain naturally:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the xla rpath link flags,
+//! // so running would fail to locate libstdc++ from /opt/xla_extension)
+//! use fdt::graph::{GraphBuilder, DType, Padding, ActKind};
+//! let mut b = GraphBuilder::new("tiny");
+//! let x = b.input("x", vec![8, 8, 4], DType::I8);
+//! let y = b.conv2d(x, 8, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+//! let z = b.global_avg_pool(y);
+//! let out = b.dense_act(z, 2, ActKind::Identity);
+//! let g = b.finish(vec![out]);
+//! assert!(g.validate().is_ok());
+//! ```
+
+use super::shape::infer;
+use super::{ActKind, DType, Graph, Op, OpKind, Padding, Tensor, TensorId, TensorKind};
+
+/// Deterministic xorshift PRNG for synthetic weights — weights only need
+/// to be reproducible, not statistically strong.
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+    /// Uniform in [-0.5, 0.5).
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32 - 0.5
+    }
+}
+
+/// Fluent builder; see module docs.
+pub struct GraphBuilder {
+    g: Graph,
+    rng: Rng,
+    /// When false, weight tensors carry no data (large zoo models).
+    pub with_data: bool,
+}
+
+impl GraphBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        GraphBuilder { g: Graph::new(name), rng: Rng::new(0x5eed), with_data: true }
+    }
+
+    /// Builder for large models where interpreter execution is not needed.
+    pub fn without_data(name: impl Into<String>) -> Self {
+        let mut b = Self::new(name);
+        b.with_data = false;
+        b
+    }
+
+    fn add_tensor(
+        &mut self,
+        name: String,
+        shape: Vec<usize>,
+        dtype: DType,
+        kind: TensorKind,
+        data: Option<Vec<f32>>,
+    ) -> TensorId {
+        let id = self.g.tensors.len();
+        self.g.tensors.push(Tensor { id, name, shape, dtype, kind, data });
+        id
+    }
+
+    /// Declare a model input.
+    pub fn input(&mut self, name: &str, shape: Vec<usize>, dtype: DType) -> TensorId {
+        let id = self.add_tensor(name.to_string(), shape, dtype, TensorKind::Input, None);
+        self.g.inputs.push(id);
+        id
+    }
+
+    /// Declare a constant weight with deterministic synthetic data.
+    pub fn weight(&mut self, name: &str, shape: Vec<usize>, dtype: DType) -> TensorId {
+        let data = if self.with_data {
+            let n: usize = shape.iter().product();
+            // Scale down so deep nets keep activations in a sane range.
+            let scale = 1.0 / (n as f32).sqrt().max(1.0);
+            Some((0..n).map(|_| self.rng.next_f32() * scale).collect())
+        } else {
+            None
+        };
+        self.add_tensor(name.to_string(), shape, dtype, TensorKind::Weight, data)
+    }
+
+    /// Declare a weight with explicit data.
+    pub fn weight_with(&mut self, name: &str, shape: Vec<usize>, dtype: DType, data: Vec<f32>) -> TensorId {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        self.add_tensor(name.to_string(), shape, dtype, TensorKind::Weight, Some(data))
+    }
+
+    /// Add an op; the output tensor is created with the inferred shape.
+    pub fn op(&mut self, kind: OpKind, inputs: Vec<TensorId>) -> TensorId {
+        self.op_named(None, kind, inputs)
+    }
+
+    /// Add an op with an explicit name.
+    pub fn op_named(&mut self, name: Option<String>, kind: OpKind, inputs: Vec<TensorId>) -> TensorId {
+        let id = self.g.ops.len();
+        let name = name.unwrap_or_else(|| format!("{}_{}", kind.mnemonic(), id));
+        // Temporary op for inference (output filled after).
+        let tmp = Op { id, name: name.clone(), kind: kind.clone(), inputs: inputs.clone(), output: 0, no_fuse: false };
+        let inferred = infer(&self.g, &tmp)
+            .unwrap_or_else(|e| panic!("shape inference failed for {name}: {e}"));
+        let out = self.add_tensor(
+            format!("{name}_out"),
+            inferred.shape,
+            inferred.dtype,
+            TensorKind::Intermediate,
+            None,
+        );
+        self.g.ops.push(Op { id, name, kind, inputs, output: out, no_fuse: false });
+        out
+    }
+
+    // ---- layer helpers -------------------------------------------------
+
+    /// conv2d + bias + activation (the canonical fused TinyML block).
+    pub fn conv2d(
+        &mut self,
+        x: TensorId,
+        cout: usize,
+        k: (usize, usize),
+        stride: (usize, usize),
+        padding: Padding,
+        act: ActKind,
+    ) -> TensorId {
+        let cin = *self.g.tensor(x).shape.last().unwrap();
+        let n = self.g.ops.len();
+        let w = self.weight(&format!("conv{n}_w"), vec![k.0, k.1, cin, cout], DType::I8);
+        let b = self.weight(&format!("conv{n}_b"), vec![cout], DType::I32);
+        let y = self.op(OpKind::Conv2d { stride, padding }, vec![x, w]);
+        let y = self.op(OpKind::BiasAdd, vec![y, b]);
+        self.activation(y, act)
+    }
+
+    /// depthwise conv + bias + activation.
+    pub fn dwconv(
+        &mut self,
+        x: TensorId,
+        k: (usize, usize),
+        stride: (usize, usize),
+        padding: Padding,
+        act: ActKind,
+    ) -> TensorId {
+        let c = *self.g.tensor(x).shape.last().unwrap();
+        let n = self.g.ops.len();
+        let w = self.weight(&format!("dw{n}_w"), vec![k.0, k.1, c], DType::I8);
+        let b = self.weight(&format!("dw{n}_b"), vec![c], DType::I32);
+        let y = self.op(OpKind::DepthwiseConv2d { stride, padding }, vec![x, w]);
+        let y = self.op(OpKind::BiasAdd, vec![y, b]);
+        self.activation(y, act)
+    }
+
+    /// dense + bias + activation.
+    pub fn dense_act(&mut self, x: TensorId, out: usize, act: ActKind) -> TensorId {
+        let infeat: usize = self.g.tensor(x).shape.iter().product();
+        let n = self.g.ops.len();
+        let w = self.weight(&format!("fc{n}_w"), vec![infeat, out], DType::I8);
+        let b = self.weight(&format!("fc{n}_b"), vec![out], DType::I32);
+        let y = self.op(OpKind::Dense, vec![x, w]);
+        let y = self.op(OpKind::BiasAdd, vec![y, b]);
+        self.activation(y, act)
+    }
+
+    /// Identity-aware activation helper (skips Identity).
+    pub fn activation(&mut self, x: TensorId, act: ActKind) -> TensorId {
+        match act {
+            ActKind::Identity => x,
+            a => self.op(OpKind::Activation(a), vec![x]),
+        }
+    }
+
+    /// Global average pooling `[H,W,C] -> [C]`.
+    pub fn global_avg_pool(&mut self, x: TensorId) -> TensorId {
+        self.op(OpKind::GlobalAvgPool, vec![x])
+    }
+
+    /// Embedding lookup: creates the table weight.
+    pub fn embedding(&mut self, indices: TensorId, vocab: usize, emb: usize) -> TensorId {
+        let n = self.g.ops.len();
+        let table = self.weight(&format!("emb{n}_table"), vec![vocab, emb], DType::I8);
+        self.op(OpKind::Gather, vec![table, indices])
+    }
+
+    pub fn shape_of(&self, t: TensorId) -> &[usize] {
+        &self.g.tensor(t).shape
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.g
+    }
+
+    /// Finalize: set model outputs and return the graph.
+    pub fn finish(mut self, outputs: Vec<TensorId>) -> Graph {
+        self.g.outputs = outputs;
+        debug_assert!(self.g.validate().is_ok(), "{:?}", self.g.validate());
+        self.g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_small_cnn() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![8, 8, 3], DType::I8);
+        let y = b.conv2d(x, 16, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+        assert_eq!(b.shape_of(y), &[8, 8, 16]);
+        let y = b.op(OpKind::MaxPool2d { ksize: (2, 2), stride: (2, 2), padding: Padding::Valid }, vec![y]);
+        assert_eq!(b.shape_of(y), &[4, 4, 16]);
+        let y = b.op(OpKind::GlobalAvgPool, vec![y]);
+        assert_eq!(b.shape_of(y), &[16]);
+        let g = b.finish(vec![y]);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn same_padding_matches_tf() {
+        // 49x10 input, 10x4 kernel, stride 2x2 SAME -> 25x5 (DS-CNN stem).
+        let mut b = GraphBuilder::new("kws_stem");
+        let x = b.input("x", vec![49, 10, 1], DType::I8);
+        let y = b.conv2d(x, 64, (10, 4), (2, 2), Padding::Same, ActKind::Relu);
+        assert_eq!(b.shape_of(y), &[25, 5, 64]);
+    }
+
+    #[test]
+    fn dense_flattens() {
+        let mut b = GraphBuilder::new("d");
+        let x = b.input("x", vec![4, 4, 8], DType::I8);
+        let y = b.dense_act(x, 10, ActKind::Identity);
+        assert_eq!(b.shape_of(y), &[10]);
+    }
+
+    #[test]
+    fn gather_mean_chain() {
+        let mut b = GraphBuilder::new("txt");
+        let idx = b.input("tokens", vec![256], DType::I32);
+        let e = b.embedding(idx, 10000, 64);
+        assert_eq!(b.shape_of(e), &[256, 64]);
+        let m = b.op(OpKind::ReduceMean { axis: 0, keepdims: false }, vec![e]);
+        assert_eq!(b.shape_of(m), &[64]);
+    }
+
+    #[test]
+    fn validate_catches_bad_output() {
+        let mut b = GraphBuilder::new("v");
+        let x = b.input("x", vec![4], DType::I8);
+        let y = b.dense_act(x, 3, ActKind::Relu);
+        let mut g = b.finish(vec![y]);
+        g.tensors[g.ops[0].output].shape = vec![99];
+        assert!(g.validate().is_err());
+    }
+}

@@ -1,0 +1,250 @@
+//! TVM-style operator fusion as an *analysis* (not a graph mutation).
+//!
+//! TVM's AoT backend fuses anchor operations (conv / dense / pool / …)
+//! with trailing injective elementwise ops (bias add, activation) and
+//! leading pads, so the tensors *between* fused ops never materialize and
+//! do not contribute to peak memory (paper §4.5). We reproduce this by
+//! grouping primitive ops; scheduling, liveness and layout all operate on
+//! the group DAG, while path discovery sees the primitive graph ("all
+//! fused operations are transformed into their fine-grained operations").
+
+use super::{Graph, OpId, OpKind, TensorId, TensorKind};
+
+/// Index of a fusion group.
+pub type GroupId = usize;
+
+/// Result of the fusion analysis.
+#[derive(Debug, Clone)]
+pub struct Grouping {
+    /// op -> group.
+    pub group_of: Vec<GroupId>,
+    /// group -> member ops, in execution order.
+    pub groups: Vec<Vec<OpId>>,
+    /// group -> tensors it materializes (group outputs that escape).
+    pub outputs: Vec<Vec<TensorId>>,
+    /// group -> RAM tensors it reads from other groups / model inputs.
+    pub inputs: Vec<Vec<TensorId>>,
+}
+
+impl Grouping {
+    pub fn len(&self) -> usize {
+        self.groups.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty()
+    }
+
+    /// Group-level predecessor sets (by group id, deduplicated).
+    pub fn preds(&self, g: &Graph) -> Vec<Vec<GroupId>> {
+        let producers = g.producers();
+        let mut preds: Vec<Vec<GroupId>> = vec![Vec::new(); self.groups.len()];
+        for (gid, ins) in self.inputs.iter().enumerate() {
+            for &t in ins {
+                if let Some(p) = producers[t] {
+                    let pg = self.group_of[p];
+                    if pg != gid && !preds[gid].contains(&pg) {
+                        preds[gid].push(pg);
+                    }
+                }
+            }
+        }
+        preds
+    }
+
+    /// Group-level successor sets.
+    pub fn succs(&self, g: &Graph) -> Vec<Vec<GroupId>> {
+        let mut succs: Vec<Vec<GroupId>> = vec![Vec::new(); self.groups.len()];
+        for (gid, ps) in self.preds(g).iter().enumerate() {
+            for &p in ps {
+                if !succs[p].contains(&gid) {
+                    succs[p].push(gid);
+                }
+            }
+        }
+        succs
+    }
+}
+
+/// Can `kind` fuse into the group of its (sole-consumer) producer?
+/// These are the injective elementwise epilogues TVM folds into the
+/// anchor op's inner loop.
+fn is_epilogue(kind: &OpKind) -> bool {
+    matches!(kind, OpKind::BiasAdd | OpKind::Activation(_) | OpKind::Reshape { .. })
+}
+
+/// Compute fusion groups over the primitive graph.
+///
+/// Rules (mirroring TVM's fuse_ops for the AoT micro flow):
+/// 1. every op starts as its own group, walked in topo order;
+/// 2. an epilogue op (bias / activation / reshape) joins its producer's
+///    group if it is the producer's *only* consumer and neither op is
+///    marked `no_fuse`;
+/// 3. a `Pad` fuses forward into its single consumer when that consumer
+///    is a conv-like anchor (TVM folds padding into the conv loop nest).
+pub fn fuse(g: &Graph) -> Grouping {
+    let consumers = g.consumers();
+    let producers = g.producers();
+    let order = g.topo_order();
+    let nops = g.ops.len();
+
+    // Union-find over ops.
+    let mut parent: Vec<usize> = (0..nops).collect();
+    fn find(parent: &mut Vec<usize>, x: usize) -> usize {
+        if parent[x] != x {
+            let r = find(parent, parent[x]);
+            parent[x] = r;
+            r
+        } else {
+            x
+        }
+    }
+
+    for &oid in &order {
+        let op = &g.ops[oid];
+        if op.no_fuse {
+            continue;
+        }
+        // Rule 2: epilogue joins producer.
+        if is_epilogue(&op.kind) {
+            let act_in = op.inputs[0];
+            if let Some(p) = producers[act_in] {
+                let sole = consumers[act_in].len() == 1
+                    && !g.outputs.contains(&act_in)
+                    && !g.ops[p].no_fuse;
+                if sole {
+                    let rp = find(&mut parent, p);
+                    let ro = find(&mut parent, oid);
+                    parent[ro] = rp;
+                }
+            }
+        }
+        // Rule 3: pad fuses forward into conv-like sole consumer.
+        if matches!(op.kind, OpKind::Pad { .. }) {
+            let out = op.output;
+            if consumers[out].len() == 1 && !g.outputs.contains(&out) {
+                let c = consumers[out][0];
+                let conv_like = matches!(
+                    g.ops[c].kind,
+                    OpKind::Conv2d { .. }
+                        | OpKind::DepthwiseConv2d { .. }
+                        | OpKind::MaxPool2d { .. }
+                        | OpKind::AvgPool2d { .. }
+                );
+                if conv_like && !g.ops[c].no_fuse {
+                    let rc = find(&mut parent, c);
+                    let ro = find(&mut parent, oid);
+                    parent[rc] = ro; // same set; root choice irrelevant
+                }
+            }
+        }
+    }
+
+    // Collect groups in topo order of their first member.
+    let mut root_to_gid: Vec<Option<GroupId>> = vec![None; nops];
+    let mut groups: Vec<Vec<OpId>> = Vec::new();
+    let mut group_of = vec![0usize; nops];
+    for &oid in &order {
+        let r = find(&mut parent, oid);
+        let gid = match root_to_gid[r] {
+            Some(gid) => gid,
+            None => {
+                let gid = groups.len();
+                root_to_gid[r] = Some(gid);
+                groups.push(Vec::new());
+                gid
+            }
+        };
+        groups[gid].push(oid);
+        group_of[oid] = gid;
+    }
+
+    // Materialized outputs: tensors produced in a group and consumed
+    // outside it (or model outputs).
+    let mut outputs: Vec<Vec<TensorId>> = vec![Vec::new(); groups.len()];
+    let mut inputs: Vec<Vec<TensorId>> = vec![Vec::new(); groups.len()];
+    for (gid, members) in groups.iter().enumerate() {
+        for &oid in members {
+            let out = g.ops[oid].output;
+            let escapes = g.outputs.contains(&out)
+                || consumers[out].iter().any(|&c| group_of[c] != gid);
+            if escapes && !outputs[gid].contains(&out) {
+                outputs[gid].push(out);
+            }
+            for &t in &g.ops[oid].inputs {
+                let tensor = g.tensor(t);
+                if tensor.kind == TensorKind::Weight {
+                    continue;
+                }
+                let internal = producers[t].map(|p| group_of[p] == gid).unwrap_or(false);
+                if !internal && !inputs[gid].contains(&t) {
+                    inputs[gid].push(t);
+                }
+            }
+        }
+    }
+
+    Grouping { group_of, groups, outputs, inputs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ActKind, DType, GraphBuilder, Padding};
+
+    #[test]
+    fn conv_bias_relu_fuses_into_one_group() {
+        let mut b = GraphBuilder::new("f");
+        let x = b.input("x", vec![8, 8, 3], DType::I8);
+        let y = b.conv2d(x, 8, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+        let z = b.conv2d(y, 8, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+        let g = b.finish(vec![z]);
+        let grouping = fuse(&g);
+        // conv+bias+relu, conv+bias+relu -> 2 groups.
+        assert_eq!(grouping.len(), 2);
+        // Only the two group outputs materialize.
+        assert_eq!(grouping.outputs.iter().flatten().count(), 2);
+    }
+
+    #[test]
+    fn no_fuse_flag_blocks_fusion() {
+        let mut b = GraphBuilder::new("nf");
+        let x = b.input("x", vec![16], DType::I8);
+        let y = b.dense_act(x, 8, ActKind::Relu);
+        let mut g = b.finish(vec![y]);
+        for op in &mut g.ops {
+            op.no_fuse = true;
+        }
+        let grouping = fuse(&g);
+        assert_eq!(grouping.len(), 3); // dense, bias, relu all separate
+    }
+
+    #[test]
+    fn branch_point_is_not_fused() {
+        // y feeds both relu and a second conv: bias can fuse, but the
+        // branch output must materialize.
+        let mut b = GraphBuilder::new("br");
+        let x = b.input("x", vec![8, 8, 3], DType::I8);
+        let y = b.conv2d(x, 4, (3, 3), (1, 1), Padding::Same, ActKind::Identity);
+        let a = b.conv2d(y, 4, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+        let c = b.conv2d(y, 4, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+        let s = b.op(crate::graph::OpKind::Add, vec![a, c]);
+        let g = b.finish(vec![s]);
+        let grouping = fuse(&g);
+        // groups: conv1(+bias), conv2(+bias+relu), conv3(+bias+relu), add
+        assert_eq!(grouping.len(), 4);
+    }
+
+    #[test]
+    fn pad_fuses_into_conv() {
+        let mut b = GraphBuilder::new("p");
+        let x = b.input("x", vec![8, 8, 3], DType::I8);
+        let p = b.op(
+            crate::graph::OpKind::Pad { pads: vec![(1, 1), (1, 1), (0, 0)] },
+            vec![x],
+        );
+        let y = b.conv2d(p, 4, (3, 3), (1, 1), Padding::Valid, ActKind::Relu);
+        let g = b.finish(vec![y]);
+        let grouping = fuse(&g);
+        assert_eq!(grouping.len(), 1);
+    }
+}

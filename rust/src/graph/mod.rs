@@ -1,0 +1,378 @@
+//! DNN graph intermediate representation.
+//!
+//! The IR mirrors what a TinyML deployment flow (TVM, TFLM) sees after
+//! import: a DAG of quantized tensor operations with static shapes.
+//! Activations use NHWC layout with an implicit batch of 1 (shapes are
+//! stored without the batch dimension: `[H, W, C]` for images, `[F]` for
+//! dense features, `[S, E]` for token sequences).
+//!
+//! Weights are constant tensors (ROM); intermediate tensors are the
+//! run-time buffers (RAM) that the paper's tiling flow optimizes.
+
+pub mod build;
+mod shape;
+pub mod fusion;
+
+pub use build::{GraphBuilder, Rng};
+
+use std::collections::HashMap;
+use std::fmt;
+
+/// Index of a tensor inside [`Graph::tensors`].
+pub type TensorId = usize;
+/// Index of an op inside [`Graph::ops`].
+pub type OpId = usize;
+
+/// Element type of a tensor. All evaluated models are quantized to 8 bits
+/// (paper §5); FDT fan-in partial sums are 32-bit accumulators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// 8-bit quantized activation / weight.
+    I8,
+    /// 32-bit accumulator or index.
+    I32,
+    /// 32-bit float (used by the float reference path / L2 artifacts).
+    F32,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn size(self) -> usize {
+        match self {
+            DType::I8 => 1,
+            DType::I32 | DType::F32 => 4,
+        }
+    }
+}
+
+/// Role of a tensor in the graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorKind {
+    /// Model input — written as a whole by the application; untileable.
+    Input,
+    /// Produced by an op. RAM unless internal to a fusion group.
+    Intermediate,
+    /// Constant parameter (ROM).
+    Weight,
+}
+
+/// Activation function fused into [`OpKind::Activation`] / [`OpKind::Merge`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActKind {
+    Identity,
+    Relu,
+    Relu6,
+    Sigmoid,
+    Tanh,
+}
+
+/// Spatial padding mode for convolution / pooling ops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Padding {
+    /// TensorFlow SAME: output spatial size = ceil(in / stride).
+    Same,
+    /// No padding.
+    Valid,
+    /// Explicit `((top, bottom), (left, right))`.
+    Explicit((usize, usize), (usize, usize)),
+}
+
+/// Operation kinds. Activation inputs come first in [`Op::inputs`],
+/// followed by weights/bias constants.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// 2-D convolution, NHWC activations, HWIO weights `[kh, kw, cin, cout]`.
+    /// Inputs: `[x, w]`.
+    Conv2d { stride: (usize, usize), padding: Padding },
+    /// Depthwise 2-D convolution, weights `[kh, kw, c]`. Inputs: `[x, w]`.
+    DepthwiseConv2d { stride: (usize, usize), padding: Padding },
+    /// Fully connected: `y[o] = sum_i x[i] * w[i, o]`. Inputs: `[x, w]`.
+    Dense,
+    /// Adds a per-channel bias (last axis). Inputs: `[x, b]`.
+    BiasAdd,
+    /// Elementwise activation function.
+    Activation(ActKind),
+    MaxPool2d { ksize: (usize, usize), stride: (usize, usize), padding: Padding },
+    AvgPool2d { ksize: (usize, usize), stride: (usize, usize), padding: Padding },
+    /// Global average pooling over H and W: `[H,W,C] -> [C]`.
+    GlobalAvgPool,
+    /// Elementwise addition of two activation tensors (residual).
+    Add,
+    /// Elementwise multiplication of two activation tensors.
+    Mul,
+    /// Zero padding; one `(before, after)` pair per axis.
+    Pad { pads: Vec<(usize, usize)> },
+    /// Shape change without data movement.
+    Reshape { shape: Vec<usize> },
+    Softmax,
+    /// Embedding lookup: inputs `[table, indices]`, table `[vocab, emb]`
+    /// (weight), indices `[seq]` (i32) -> `[seq, emb]`.
+    Gather,
+    /// Mean over one axis.
+    ReduceMean { axis: usize, keepdims: bool },
+    /// Full-rank strided-free slice: `out = x[begins..ends]`.
+    Slice { begins: Vec<usize>, ends: Vec<usize> },
+    /// Concatenation along `axis`.
+    Concat { axis: usize },
+    /// FDT merge: elementwise sum of all partial inputs, then activation
+    /// (§3, Fig 2). Partial inputs are pre-activation accumulators.
+    Merge { act: ActKind },
+}
+
+impl OpKind {
+    /// Short mnemonic used in op names and DOT dumps.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            OpKind::Conv2d { .. } => "conv2d",
+            OpKind::DepthwiseConv2d { .. } => "dwconv",
+            OpKind::Dense => "dense",
+            OpKind::BiasAdd => "bias",
+            OpKind::Activation(_) => "act",
+            OpKind::MaxPool2d { .. } => "maxpool",
+            OpKind::AvgPool2d { .. } => "avgpool",
+            OpKind::GlobalAvgPool => "gap",
+            OpKind::Add => "add",
+            OpKind::Mul => "mul",
+            OpKind::Pad { .. } => "pad",
+            OpKind::Reshape { .. } => "reshape",
+            OpKind::Softmax => "softmax",
+            OpKind::Gather => "gather",
+            OpKind::ReduceMean { .. } => "mean",
+            OpKind::Slice { .. } => "slice",
+            OpKind::Concat { .. } => "concat",
+            OpKind::Merge { .. } => "merge",
+        }
+    }
+}
+
+/// A tensor: static shape + dtype + role. Weight tensors may carry data
+/// for interpreter-based equivalence testing; large zoo models skip data
+/// (memory accounting needs only shapes).
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub id: TensorId,
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub kind: TensorKind,
+    /// Constant data (weights only, f32 master copy).
+    pub data: Option<Vec<f32>>,
+}
+
+impl Tensor {
+    /// Number of elements.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+    /// Buffer size in bytes.
+    pub fn bytes(&self) -> usize {
+        self.numel() * self.dtype.size()
+    }
+}
+
+/// An operation node.
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub id: OpId,
+    pub name: String,
+    pub kind: OpKind,
+    pub inputs: Vec<TensorId>,
+    pub output: TensorId,
+    /// Set by the tiling transform to prevent operator fusion across
+    /// partition boundaries (§4.4: the last op of a split path must not
+    /// fuse with CONCAT / Merge).
+    pub no_fuse: bool,
+}
+
+/// A DNN graph: tensors + ops + designated model inputs/outputs.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub name: String,
+    pub tensors: Vec<Tensor>,
+    pub ops: Vec<Op>,
+    pub inputs: Vec<TensorId>,
+    pub outputs: Vec<TensorId>,
+}
+
+impl Graph {
+    pub fn new(name: impl Into<String>) -> Self {
+        Graph { name: name.into(), ..Default::default() }
+    }
+
+    pub fn tensor(&self, id: TensorId) -> &Tensor {
+        &self.tensors[id]
+    }
+
+    pub fn op(&self, id: OpId) -> &Op {
+        &self.ops[id]
+    }
+
+    /// The op producing `t`, if any (inputs and weights have none).
+    pub fn producer(&self, t: TensorId) -> Option<OpId> {
+        self.ops.iter().find(|o| o.output == t).map(|o| o.id)
+    }
+
+    /// Map tensor -> producing op, computed once.
+    pub fn producers(&self) -> Vec<Option<OpId>> {
+        let mut p = vec![None; self.tensors.len()];
+        for o in &self.ops {
+            p[o.output] = Some(o.id);
+        }
+        p
+    }
+
+    /// Map tensor -> consuming ops.
+    pub fn consumers(&self) -> Vec<Vec<OpId>> {
+        let mut c: Vec<Vec<OpId>> = vec![Vec::new(); self.tensors.len()];
+        for o in &self.ops {
+            for &i in &o.inputs {
+                c[i].push(o.id);
+            }
+        }
+        c
+    }
+
+    /// Ops in a valid topological order (ops are appended in topo order by
+    /// the builder; this re-derives one defensively).
+    pub fn topo_order(&self) -> Vec<OpId> {
+        let producers = self.producers();
+        let mut indeg: Vec<usize> = self
+            .ops
+            .iter()
+            .map(|o| o.inputs.iter().filter(|&&t| producers[t].is_some()).count())
+            .collect();
+        let mut fanout: Vec<Vec<OpId>> = vec![Vec::new(); self.ops.len()];
+        for o in &self.ops {
+            for &t in &o.inputs {
+                if let Some(p) = producers[t] {
+                    fanout[p].push(o.id);
+                }
+            }
+        }
+        let mut ready: Vec<OpId> =
+            (0..self.ops.len()).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(self.ops.len());
+        while let Some(op) = ready.pop() {
+            order.push(op);
+            for &s in &fanout[op] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    ready.push(s);
+                }
+            }
+        }
+        assert_eq!(order.len(), self.ops.len(), "graph has a cycle");
+        order
+    }
+
+    /// Validate structural invariants; returns a human-readable error.
+    pub fn validate(&self) -> Result<(), String> {
+        let producers = self.producers();
+        for op in &self.ops {
+            for &t in &op.inputs {
+                if t >= self.tensors.len() {
+                    return Err(format!("op {} reads unknown tensor {t}", op.name));
+                }
+                let tensor = &self.tensors[t];
+                if tensor.kind == TensorKind::Intermediate && producers[t].is_none() {
+                    return Err(format!(
+                        "op {} reads intermediate tensor {} with no producer",
+                        op.name, tensor.name
+                    ));
+                }
+            }
+            let expect = shape::infer(self, op).map_err(|e| format!("{}: {e}", op.name))?;
+            let got = &self.tensors[op.output];
+            if expect.shape != got.shape {
+                return Err(format!(
+                    "op {}: output shape mismatch: inferred {:?}, stored {:?}",
+                    op.name, expect.shape, got.shape
+                ));
+            }
+        }
+        for &o in &self.outputs {
+            if producers[o].is_none() {
+                return Err(format!("model output {} has no producer", self.tensors[o].name));
+            }
+        }
+        // Acyclicity.
+        self.topo_order();
+        Ok(())
+    }
+
+    /// Total weight bytes (ROM).
+    pub fn rom_bytes(&self) -> usize {
+        self.tensors
+            .iter()
+            .filter(|t| t.kind == TensorKind::Weight)
+            .map(|t| t.bytes())
+            .sum()
+    }
+
+    /// Graphviz DOT dump (ops as boxes, RAM tensors as ellipses).
+    pub fn to_dot(&self) -> String {
+        let mut s = format!("digraph \"{}\" {{\n  rankdir=TB;\n", self.name);
+        for t in &self.tensors {
+            if t.kind == TensorKind::Weight {
+                continue;
+            }
+            s += &format!(
+                "  t{} [label=\"{}\\n{:?} {:?}\", shape=ellipse];\n",
+                t.id, t.name, t.shape, t.dtype
+            );
+        }
+        for o in &self.ops {
+            s += &format!("  o{} [label=\"{}\", shape=box];\n", o.id, o.name);
+            for &i in &o.inputs {
+                if self.tensors[i].kind != TensorKind::Weight {
+                    s += &format!("  t{} -> o{};\n", i, o.id);
+                }
+            }
+            s += &format!("  o{} -> t{};\n", o.id, o.output);
+        }
+        s += "}\n";
+        s
+    }
+
+    /// Summary statistics line.
+    pub fn summary(&self) -> String {
+        let ram_tensors = self
+            .tensors
+            .iter()
+            .filter(|t| t.kind != TensorKind::Weight)
+            .count();
+        format!(
+            "{}: {} ops, {} tensors ({} RAM), {:.1} kB ROM",
+            self.name,
+            self.ops.len(),
+            self.tensors.len(),
+            ram_tensors,
+            self.rom_bytes() as f64 / 1024.0
+        )
+    }
+}
+
+impl fmt::Display for Graph {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{}", self.summary())?;
+        let mut by_tensor: HashMap<TensorId, &str> = HashMap::new();
+        for t in &self.tensors {
+            by_tensor.insert(t.id, &t.name);
+        }
+        for op in &self.ops {
+            let ins: Vec<&str> = op.inputs.iter().map(|i| by_tensor[i]).collect();
+            writeln!(
+                f,
+                "  {:24} {:8} ({}) -> {} {:?}",
+                op.name,
+                op.kind.mnemonic(),
+                ins.join(", "),
+                self.tensors[op.output].name,
+                self.tensors[op.output].shape
+            )?;
+        }
+        Ok(())
+    }
+}
+
+pub use shape::{infer as infer_shape, InferredTensor};

@@ -1,0 +1,251 @@
+//! Shape and dtype inference for every [`OpKind`].
+
+use super::{DType, Graph, Op, OpKind, Padding};
+
+/// Result of shape inference for an op output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferredTensor {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// Output spatial size of a conv/pool window along one axis.
+///
+/// Returns `(out, pad_before, pad_after)`.
+pub fn window_out(input: usize, k: usize, stride: usize, padding: Padding, axis: usize) -> Result<(usize, usize, usize), String> {
+    match padding {
+        Padding::Valid => {
+            if input < k {
+                return Err(format!("window {k} larger than input {input} (VALID)"));
+            }
+            Ok(((input - k) / stride + 1, 0, 0))
+        }
+        Padding::Same => {
+            let out = input.div_ceil(stride);
+            let total = ((out - 1) * stride + k).saturating_sub(input);
+            let before = total / 2;
+            let after = total - before;
+            Ok((out, before, after))
+        }
+        Padding::Explicit(h, w) => {
+            let (b, a) = if axis == 0 { h } else { w };
+            let padded = input + b + a;
+            if padded < k {
+                return Err(format!("window {k} larger than padded input {padded}"));
+            }
+            Ok(((padded - k) / stride + 1, b, a))
+        }
+    }
+}
+
+fn spatial(
+    x: &[usize],
+    k: (usize, usize),
+    stride: (usize, usize),
+    padding: Padding,
+) -> Result<(usize, usize), String> {
+    if x.len() != 3 {
+        return Err(format!("expected rank-3 NHWC-without-batch input, got {x:?}"));
+    }
+    let (oh, _, _) = window_out(x[0], k.0, stride.0, padding, 0)?;
+    let (ow, _, _) = window_out(x[1], k.1, stride.1, padding, 1)?;
+    Ok((oh, ow))
+}
+
+/// Infer the output shape/dtype of `op` within `g`.
+pub fn infer(g: &Graph, op: &Op) -> Result<InferredTensor, String> {
+    let t = |i: usize| -> &super::Tensor { g.tensor(op.inputs[i]) };
+    let need = |n: usize| -> Result<(), String> {
+        if op.inputs.len() != n {
+            Err(format!("expected {n} inputs, got {}", op.inputs.len()))
+        } else {
+            Ok(())
+        }
+    };
+    // Output dtype defaults to the dtype stored on the output tensor when
+    // it widens an accumulator (FDT partials are i32); inference reports
+    // the *natural* dtype and `validate` checks shapes only.
+    match &op.kind {
+        OpKind::Conv2d { stride, padding } => {
+            need(2)?;
+            let x = &t(0).shape;
+            let w = &t(1).shape; // [kh, kw, cin, cout]
+            if w.len() != 4 {
+                return Err(format!("conv weight must be HWIO rank-4, got {w:?}"));
+            }
+            if x[2] != w[2] {
+                return Err(format!("conv cin mismatch: input {x:?} vs weight {w:?}"));
+            }
+            let (oh, ow) = spatial(x, (w[0], w[1]), *stride, *padding)?;
+            Ok(InferredTensor { shape: vec![oh, ow, w[3]], dtype: t(0).dtype })
+        }
+        OpKind::DepthwiseConv2d { stride, padding } => {
+            need(2)?;
+            let x = &t(0).shape;
+            let w = &t(1).shape; // [kh, kw, c]
+            if w.len() != 3 {
+                return Err(format!("dwconv weight must be rank-3 [kh,kw,c], got {w:?}"));
+            }
+            if x[2] != w[2] {
+                return Err(format!("dwconv channel mismatch: input {x:?} vs weight {w:?}"));
+            }
+            let (oh, ow) = spatial(x, (w[0], w[1]), *stride, *padding)?;
+            Ok(InferredTensor { shape: vec![oh, ow, x[2]], dtype: t(0).dtype })
+        }
+        OpKind::Dense => {
+            need(2)?;
+            let x = &t(0).shape;
+            let w = &t(1).shape; // [in, out]
+            if w.len() != 2 {
+                return Err(format!("dense weight must be rank-2, got {w:?}"));
+            }
+            let in_features: usize = x.iter().product();
+            if in_features != w[0] {
+                return Err(format!("dense in mismatch: input {x:?} vs weight {w:?}"));
+            }
+            Ok(InferredTensor { shape: vec![w[1]], dtype: t(0).dtype })
+        }
+        OpKind::BiasAdd => {
+            need(2)?;
+            let x = &t(0).shape;
+            let b = &t(1).shape;
+            if b.len() != 1 || b[0] != *x.last().unwrap() {
+                return Err(format!("bias {b:?} does not match last axis of {x:?}"));
+            }
+            Ok(InferredTensor { shape: x.clone(), dtype: t(0).dtype })
+        }
+        OpKind::Activation(_) | OpKind::Softmax => {
+            need(1)?;
+            Ok(InferredTensor { shape: t(0).shape.clone(), dtype: t(0).dtype })
+        }
+        OpKind::MaxPool2d { ksize, stride, padding }
+        | OpKind::AvgPool2d { ksize, stride, padding } => {
+            need(1)?;
+            let x = &t(0).shape;
+            let (oh, ow) = spatial(x, *ksize, *stride, *padding)?;
+            Ok(InferredTensor { shape: vec![oh, ow, x[2]], dtype: t(0).dtype })
+        }
+        OpKind::GlobalAvgPool => {
+            need(1)?;
+            let x = &t(0).shape;
+            if x.len() != 3 {
+                return Err(format!("gap expects rank-3, got {x:?}"));
+            }
+            Ok(InferredTensor { shape: vec![x[2]], dtype: t(0).dtype })
+        }
+        OpKind::Add | OpKind::Mul => {
+            need(2)?;
+            if t(0).shape != t(1).shape {
+                return Err(format!(
+                    "elementwise shape mismatch: {:?} vs {:?}",
+                    t(0).shape,
+                    t(1).shape
+                ));
+            }
+            Ok(InferredTensor { shape: t(0).shape.clone(), dtype: t(0).dtype })
+        }
+        OpKind::Pad { pads } => {
+            need(1)?;
+            let x = &t(0).shape;
+            if pads.len() != x.len() {
+                return Err(format!("pad rank mismatch: {pads:?} vs {x:?}"));
+            }
+            let shape = x
+                .iter()
+                .zip(pads)
+                .map(|(&d, &(b, a))| d + b + a)
+                .collect();
+            Ok(InferredTensor { shape, dtype: t(0).dtype })
+        }
+        OpKind::Reshape { shape } => {
+            need(1)?;
+            let n: usize = t(0).shape.iter().product();
+            let m: usize = shape.iter().product();
+            if n != m {
+                return Err(format!("reshape numel mismatch: {n} vs {m}"));
+            }
+            Ok(InferredTensor { shape: shape.clone(), dtype: t(0).dtype })
+        }
+        OpKind::Gather => {
+            need(2)?;
+            let table = &t(0).shape; // [vocab, emb] weight
+            let idx = &t(1).shape; // [seq]
+            if table.len() != 2 || idx.len() != 1 {
+                return Err(format!("gather expects table rank-2 + indices rank-1, got {table:?} / {idx:?}"));
+            }
+            Ok(InferredTensor { shape: vec![idx[0], table[1]], dtype: t(0).dtype })
+        }
+        OpKind::ReduceMean { axis, keepdims } => {
+            need(1)?;
+            let x = &t(0).shape;
+            if *axis >= x.len() {
+                return Err(format!("mean axis {axis} out of range for {x:?}"));
+            }
+            let mut shape = x.clone();
+            if *keepdims {
+                shape[*axis] = 1;
+            } else {
+                shape.remove(*axis);
+            }
+            Ok(InferredTensor { shape, dtype: t(0).dtype })
+        }
+        OpKind::Slice { begins, ends } => {
+            need(1)?;
+            let x = &t(0).shape;
+            if begins.len() != x.len() || ends.len() != x.len() {
+                return Err(format!("slice rank mismatch: {begins:?}/{ends:?} vs {x:?}"));
+            }
+            let mut shape = Vec::with_capacity(x.len());
+            for i in 0..x.len() {
+                if begins[i] >= ends[i] || ends[i] > x[i] {
+                    return Err(format!(
+                        "slice bounds [{}, {}) invalid for axis {i} of {x:?}",
+                        begins[i], ends[i]
+                    ));
+                }
+                shape.push(ends[i] - begins[i]);
+            }
+            Ok(InferredTensor { shape, dtype: t(0).dtype })
+        }
+        OpKind::Concat { axis } => {
+            if op.inputs.is_empty() {
+                return Err("concat needs at least one input".into());
+            }
+            let first = &t(0).shape;
+            if *axis >= first.len() {
+                return Err(format!("concat axis {axis} out of range for {first:?}"));
+            }
+            let mut total = 0;
+            for k in 0..op.inputs.len() {
+                let s = &t(k).shape;
+                if s.len() != first.len() {
+                    return Err(format!("concat rank mismatch: {s:?} vs {first:?}"));
+                }
+                for a in 0..s.len() {
+                    if a != *axis && s[a] != first[a] {
+                        return Err(format!("concat shape mismatch on axis {a}: {s:?} vs {first:?}"));
+                    }
+                }
+                total += s[*axis];
+            }
+            let mut shape = first.clone();
+            shape[*axis] = total;
+            Ok(InferredTensor { shape, dtype: t(0).dtype })
+        }
+        OpKind::Merge { .. } => {
+            if op.inputs.is_empty() {
+                return Err("merge needs at least one partial input".into());
+            }
+            let first = &t(0).shape;
+            for k in 1..op.inputs.len() {
+                if &t(k).shape != first {
+                    return Err(format!(
+                        "merge partial shape mismatch: {:?} vs {first:?}",
+                        t(k).shape
+                    ));
+                }
+            }
+            Ok(InferredTensor { shape: first.clone(), dtype: t(0).dtype })
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Memory layout planning (§4.2): map every RAM buffer to a concrete
+//! offset in a single linear arena so that conflicting (simultaneously
+//! live) buffers never overlap, minimizing the arena size
+//! `max_i(end_i)` — the paper's MILP objective (eqs. 1–3).
+//!
+//! [`bnb`] is the exact solver (our Gurobi substitute); [`heuristic`]
+//! reimplements TVM's best-performing approach (greedy placement order +
+//! hill climbing + simulated annealing) — the baseline the paper beats by
+//! 16.8% on the TXT model (§5.1).
+
+pub mod bnb;
+pub mod heuristic;
+
+use crate::analysis::MemModel;
+use crate::graph::fusion::GroupId;
+use crate::graph::TensorId;
+
+/// A planned memory layout for the RAM buffers of a [`MemModel`].
+#[derive(Debug, Clone)]
+pub struct Layout {
+    /// Per-buffer start offset (indexed like `MemModel::buffers`).
+    pub offsets: Vec<usize>,
+    /// Arena size = max end offset.
+    pub total: usize,
+    pub strategy: &'static str,
+    pub optimal: bool,
+}
+
+impl Layout {
+    /// End offset of buffer `b` given its size.
+    pub fn end(&self, b: usize, sizes: &[usize]) -> usize {
+        self.offsets[b] + sizes[b]
+    }
+
+    /// Check that no conflicting buffers overlap.
+    pub fn is_valid(&self, sizes: &[usize], conflicts: &[(usize, usize)]) -> bool {
+        if self.offsets.len() != sizes.len() {
+            return false;
+        }
+        for &(u, v) in conflicts {
+            let (su, eu) = (self.offsets[u], self.offsets[u] + sizes[u]);
+            let (sv, ev) = (self.offsets[v], self.offsets[v] + sizes[v]);
+            if su < ev && sv < eu {
+                return false;
+            }
+        }
+        self.total == (0..sizes.len()).map(|b| self.offsets[b] + sizes[b]).max().unwrap_or(0)
+    }
+
+    /// Buffers whose end offset equals the arena size (the "responsible"
+    /// buffers used by critical-buffer detection, §4.3).
+    pub fn peak_buffers(&self, sizes: &[usize]) -> Vec<usize> {
+        (0..sizes.len())
+            .filter(|&b| self.offsets[b] + sizes[b] == self.total)
+            .collect()
+    }
+}
+
+/// Options for [`plan`].
+#[derive(Debug, Clone, Copy)]
+pub struct LayoutOptions {
+    /// Node budget for the exact branch-and-bound placer.
+    pub bnb_node_budget: u64,
+}
+
+impl Default for LayoutOptions {
+    fn default() -> Self {
+        LayoutOptions { bnb_node_budget: 2_000_000 }
+    }
+}
+
+/// Plan the layout for `m` under `schedule`: exact B&B warm-started with
+/// first-fit. If the node budget runs out before the search completes,
+/// the hill-climb/SA heuristic gets a shot too and the better of the two
+/// is returned (on budget-limited instances SA can beat the incumbent
+/// the truncated B&B kept).
+pub fn plan(m: &MemModel, schedule: &[GroupId], opts: LayoutOptions) -> Layout {
+    let sizes = &m.sizes;
+    let conflicts = m.conflicts(schedule);
+    let warm = heuristic::first_fit_by_size(sizes, &conflicts);
+    // The schedule's peak live bytes is a clique lower bound: buffers
+    // live at the same step pairwise conflict and must coexist.
+    let clique_lb = m.profile(schedule).peak;
+    let (mut layout, complete) =
+        bnb::place_with_lb(sizes, &conflicts, opts.bnb_node_budget, Some(warm), clique_lb);
+    if !complete {
+        for seed in [7, 11, 23] {
+            let sa = heuristic::hill_climb_sa(sizes, &conflicts, 2000, seed);
+            if sa.total < layout.total {
+                layout = Layout { strategy: "bnb+sa", ..sa };
+            }
+        }
+    }
+    layout
+}
+
+/// Human-readable arena map, largest buffers first.
+pub fn render(m: &MemModel, layout: &Layout) -> String {
+    let mut rows: Vec<(usize, TensorId)> = m.buffers.iter().copied().enumerate().collect();
+    rows.sort_by_key(|&(b, _)| std::cmp::Reverse(m.sizes[b]));
+    let mut s = format!("arena: {} B\n", layout.total);
+    for (b, t) in rows {
+        s += &format!(
+            "  [{:>8} .. {:>8}) {:>8} B  {}\n",
+            layout.offsets[b],
+            layout.offsets[b] + m.sizes[b],
+            m.sizes[b],
+            m.g.tensor(t).name
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Exhaustive optimal arena size (test oracle, tiny instances only):
+    /// try every permutation with first-fit placement — optimal layouts
+    /// are always reachable by some placement order.
+    pub(crate) fn brute_force_total(sizes: &[usize], conflicts: &[(usize, usize)]) -> usize {
+        fn perms(n: usize) -> Vec<Vec<usize>> {
+            if n == 0 {
+                return vec![vec![]];
+            }
+            let mut out = Vec::new();
+            for p in perms(n - 1) {
+                for i in 0..=p.len() {
+                    let mut q = p.clone();
+                    q.insert(i, n - 1);
+                    out.push(q);
+                }
+            }
+            out
+        }
+        let mut best = usize::MAX;
+        for order in perms(sizes.len()) {
+            let l = heuristic::first_fit_in_order(sizes, conflicts, &order);
+            best = best.min(l.total);
+        }
+        best
+    }
+
+    #[test]
+    fn validity_checker_catches_overlap() {
+        let sizes = vec![10, 10];
+        let conflicts = vec![(0, 1)];
+        let bad = Layout { offsets: vec![0, 5], total: 15, strategy: "t", optimal: false };
+        assert!(!bad.is_valid(&sizes, &conflicts));
+        let good = Layout { offsets: vec![0, 10], total: 20, strategy: "t", optimal: false };
+        assert!(good.is_valid(&sizes, &conflicts));
+    }
+}

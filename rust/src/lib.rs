@@ -1,0 +1,47 @@
+//! # fdt — Fused Depthwise Tiling for TinyML memory optimization
+//!
+//! Reproduction of *"Fused Depthwise Tiling for Memory Optimization in
+//! TinyML Deep Neural Network Inference"* (Stahl et al., tinyML Research
+//! Symposium 2023).
+//!
+//! The crate implements the paper's full automated tiling exploration flow
+//! (Fig. 3) plus every substrate it depends on:
+//!
+//! * [`graph`] — a TinyML DNN graph IR with shape inference and a
+//!   TVM-style operator-fusion analysis.
+//! * [`analysis`] — MAC counting, buffer sizing, liveness, memory
+//!   profiles and series-parallel decomposition.
+//! * [`sched`] — memory-aware scheduling: exact branch-and-bound (the
+//!   paper's MILP substitute), the Liu/Kayaaslan series-parallel optimal
+//!   algorithm and the hill–valley heuristic.
+//! * [`layout`] — memory layout planning: exact branch-and-bound placer
+//!   (the paper's Gurobi MILP substitute) plus the TVM-style
+//!   hill-climbing/simulated-annealing baseline it is compared against.
+//! * [`tiling`] — block-based path discovery (§4.3) and FFMT halo math.
+//! * [`transform`] — automated graph transformation (§4.4): FDT
+//!   fan-out/fan-in + merge, FFMT spatial tiling, PART, SPLIT/CONCAT.
+//! * [`exec`] — a reference interpreter used to prove that tiled graphs
+//!   are numerically identical to the untiled originals.
+//! * [`models`] — the seven evaluated models (KWS, TXT, MW, POS, SSD,
+//!   CIF, RAD) plus a SwiftNet-like scheduling stress graph.
+//! * [`coordinator`] — the end-to-end exploration loop of Fig. 3.
+//! * [`runtime`] — PJRT loading/execution of the JAX/Pallas AOT
+//!   artifacts (`artifacts/*.hlo.txt`) from the request path.
+//! * [`report`] — regenerates every table and figure of the paper.
+
+pub mod analysis;
+pub mod bench;
+pub mod codegen;
+pub mod coordinator;
+pub mod exec;
+pub mod graph;
+pub mod layout;
+pub mod models;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod tiling;
+pub mod transform;
+
+pub use graph::{ActKind, DType, Graph, Op, OpId, OpKind, Padding, Tensor, TensorId, TensorKind};

@@ -1,0 +1,276 @@
+//! `fdt` — command-line driver for the Fused Depthwise Tiling flow.
+//!
+//! Subcommands map 1:1 to the paper's tables/figures (DESIGN.md §5):
+//!
+//! ```text
+//! fdt table1                      # Table 1 (method comparison)
+//! fdt table2 [MODEL ...]          # Table 2 (the headline result)
+//! fdt fig1                        # quantified Fig 1 overlap growth
+//! fdt discover-demo               # Fig 5 path-discovery walkthrough
+//! fdt optimize MODEL [--fdt-only|--ffmt-only] [--dot FILE]
+//! fdt layout-compare [MODEL ...]  # §5.1 optimal vs TVM heuristic
+//! fdt sched-bench                 # §5.1 SwiftNet scheduling runtime
+//! fdt flow-stats [MODEL ...]      # §5.1 configs + flow runtime
+//! fdt verify-artifacts [DIR]      # PJRT: tiled vs untiled equivalence
+//! fdt serve MODEL [N]             # synchronous PJRT serving loop demo
+//! ```
+//!
+//! Argument parsing is hand-rolled (no clap in the offline vendor set).
+
+use fdt::coordinator::FlowOptions;
+use fdt::models;
+use fdt::report;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    match cmd {
+        "table1" => print!("{}", report::table1()),
+        "table2" => table2(rest),
+        "fig1" => print!("{}", report::fig1()),
+        "discover-demo" => print!("{}", report::discover_demo()),
+        "optimize" => optimize(rest),
+        "layout-compare" => {
+            let models = select_models(rest, &["TXT", "KWS", "MW", "RAD", "CIF"]);
+            print!("{}", report::layout_compare(&models, &FlowOptions::default()));
+        }
+        "sched-bench" => print!("{}", report::sched_bench()),
+        "flow-stats" => {
+            let models = select_models(rest, &["KWS", "TXT", "MW", "CIF", "RAD"]);
+            print!("{}", report::flow_stats(&models, &FlowOptions::default()));
+        }
+        "verify-artifacts" => verify_artifacts(rest),
+        "serve" => serve(rest),
+        "codegen" => codegen(rest),
+        "dot" => {
+            let name = rest.first().expect("usage: fdt dot MODEL");
+            let g = models::by_name(name).expect("unknown model");
+            print!("{}", g.to_dot());
+        }
+        "help" | "--help" | "-h" => help(),
+        other => {
+            eprintln!("unknown command {other:?}");
+            help();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn help() {
+    println!(
+        "fdt — Fused Depthwise Tiling for TinyML memory optimization\n\
+         commands: table1 | table2 [MODEL..] | fig1 | discover-demo |\n\
+         optimize MODEL [--fdt-only|--ffmt-only] [--dot FILE] |\n\
+         layout-compare [MODEL..] | sched-bench | flow-stats [MODEL..] |\n\
+         verify-artifacts [DIR] | serve MODEL [N] | dot MODEL |\n\
+         codegen MODEL [-o FILE] [--optimize|--fdt-only|--ffmt-only]\n\
+         models: KWS TXT MW POS SSD CIF RAD SWIFTNET FIG5"
+    );
+}
+
+fn select_models(args: &[String], default: &[&str]) -> Vec<fdt::Graph> {
+    let names: Vec<String> = if args.is_empty() {
+        default.iter().map(|s| s.to_string()).collect()
+    } else {
+        args.to_vec()
+    };
+    names
+        .iter()
+        .map(|n| models::by_name(n).unwrap_or_else(|| panic!("unknown model {n}")))
+        .collect()
+}
+
+fn table2(args: &[String]) {
+    // POS/SSD are multi-minute graphs; include them explicitly or via "all".
+    let default = ["KWS", "TXT", "MW", "CIF", "RAD"];
+    let models = if args.first().map(String::as_str) == Some("all") {
+        select_models(&[], &["KWS", "TXT", "MW", "POS", "SSD", "CIF", "RAD"])
+    } else {
+        select_models(args, &default)
+    };
+    let opts = FlowOptions::default();
+    let rows: Vec<_> = models
+        .iter()
+        .map(|g| {
+            eprintln!("[table2] exploring {} ...", g.name);
+            report::table2_row(g, &opts)
+        })
+        .collect();
+    print!("{}", report::render_table2(&rows));
+    println!("\nConfigs tested / flow time:");
+    for r in &rows {
+        println!(
+            "  {:<6} FFMT {:>4} cfgs in {:>8.2?} | FDT {:>4} cfgs in {:>8.2?}",
+            r.model, r.ffmt_configs, r.ffmt_elapsed, r.fdt_configs, r.fdt_elapsed
+        );
+    }
+}
+
+fn optimize(args: &[String]) {
+    let name = args.first().expect("usage: fdt optimize MODEL");
+    let g = models::by_name(name).expect("unknown model");
+    let mut opts = FlowOptions::default();
+    if args.iter().any(|a| a == "--fdt-only") {
+        opts.discovery.enable_ffmt = false;
+    }
+    if args.iter().any(|a| a == "--ffmt-only") {
+        opts.discovery.enable_fdt = false;
+    }
+    let r = fdt::coordinator::optimize(&g, &opts);
+    println!("{}", g.summary());
+    println!(
+        "RAM {} -> {} B ({:.1}% saved), MACs {} -> {} ({:+.1}%), {} configs, {:?}",
+        r.initial.ram,
+        r.final_eval.ram,
+        r.ram_savings_pct(),
+        r.initial.macs,
+        r.final_eval.macs,
+        r.mac_overhead_pct(),
+        r.configs_tested,
+        r.elapsed
+    );
+    for it in &r.iterations {
+        println!(
+            "  tiled {} via {} : {} -> {} B",
+            it.critical_buffer, it.config, it.ram_before, it.ram_after
+        );
+    }
+    if let Some(pos) = args.iter().position(|a| a == "--dot") {
+        if let Some(path) = args.get(pos + 1) {
+            std::fs::write(path, r.graph.to_dot()).expect("writing dot");
+            println!("wrote {path}");
+        }
+    }
+}
+
+fn codegen(args: &[String]) {
+    let name = args.first().expect("usage: fdt codegen MODEL [-o FILE] [--optimize|--fdt-only|--ffmt-only]");
+    let mut g = models::by_name(name).expect("unknown model");
+    let tiling = if args.iter().any(|a| a == "--optimize") {
+        Some(FlowOptions::default())
+    } else if args.iter().any(|a| a == "--fdt-only") {
+        let mut o = FlowOptions::default();
+        o.discovery.enable_ffmt = false;
+        Some(o)
+    } else if args.iter().any(|a| a == "--ffmt-only") {
+        let mut o = FlowOptions::default();
+        o.discovery.enable_fdt = false;
+        Some(o)
+    } else {
+        None
+    };
+    if let Some(opts) = tiling {
+        let r = fdt::coordinator::optimize(&g, &opts);
+        eprintln!(
+            "[codegen] tiled {}: RAM {} -> {} B ({:.1}%)",
+            g.name,
+            r.initial.ram,
+            r.final_eval.ram,
+            r.ram_savings_pct()
+        );
+        g = r.graph;
+    }
+    let m = fdt::codegen::generate(&g).expect("codegen");
+    eprintln!(
+        "[codegen] {}: arena {} B (int8 deployment {} B), ROM {} B",
+        g.name, m.arena_bytes, m.arena_bytes_int8, m.rom_bytes
+    );
+    if let Some(pos) = args.iter().position(|a| a == "-o") {
+        let path = args.get(pos + 1).expect("-o FILE");
+        std::fs::write(path, &m.source).expect("writing C file");
+        eprintln!("[codegen] wrote {path}");
+    } else {
+        print!("{}", m.source);
+    }
+}
+
+fn verify_artifacts(args: &[String]) {
+    let dir = args
+        .first()
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(fdt::runtime::artifacts_dir);
+    match fdt::runtime::Runtime::cpu() {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            let pairs = [
+                ("kws_untiled.hlo.txt", "kws_fdt.hlo.txt", vec![49usize, 10, 8]),
+                ("txt_untiled.hlo.txt", "txt_fdt.hlo.txt", vec![256usize]),
+            ];
+            let mut failures = 0;
+            for (a, b, shape) in pairs {
+                let (pa, pb) = (dir.join(a), dir.join(b));
+                if !pa.exists() || !pb.exists() {
+                    println!("skip {a} / {b} (artifact missing — run `make artifacts`)");
+                    continue;
+                }
+                let ea = rt.load(&pa).expect("load untiled");
+                let eb = rt.load(&pb).expect("load tiled");
+                let mut rng = fdt::graph::Rng::new(99);
+                let n: usize = shape.iter().product();
+                // Rank-1 inputs are token ids (s32 in the HLO signature).
+                let inputs = vec![if shape.len() == 1 {
+                    let data: Vec<i32> = (0..n).map(|_| (rng.next_u64() % 100) as i32).collect();
+                    fdt::runtime::Buffer::new_i32(shape.clone(), data)
+                } else {
+                    let data: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+                    fdt::runtime::Buffer::new(shape.clone(), data)
+                }];
+                let d = fdt::runtime::max_artifact_diff(&ea, &eb, &inputs).expect("diff");
+                let ok = d < 1e-4;
+                println!("{a} vs {b}: max|diff| = {d:.2e} {}", if ok { "OK" } else { "FAIL" });
+                if !ok {
+                    failures += 1;
+                }
+            }
+            if failures > 0 {
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("PJRT unavailable: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn serve(args: &[String]) {
+    let name = args.first().map(String::as_str).unwrap_or("kws");
+    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(100);
+    let dir = fdt::runtime::artifacts_dir();
+    let path = dir.join(format!("{}_fdt.hlo.txt", name.to_lowercase()));
+    let rt = fdt::runtime::Runtime::cpu().expect("PJRT client");
+    let engine = rt.load(&path).unwrap_or_else(|e| panic!("loading {}: {e:#}", path.display()));
+    let shape: Vec<usize> = match name.to_uppercase().as_str() {
+        "KWS" => vec![49, 10, 8],
+        "TXT" => vec![256],
+        _ => panic!("serve supports KWS and TXT"),
+    };
+    let len: usize = shape.iter().product();
+    let mut rng = fdt::graph::Rng::new(1);
+    let mut lat = Vec::with_capacity(n);
+    let t0 = std::time::Instant::now();
+    for _ in 0..n {
+        let buf = if shape.len() == 1 {
+            let data: Vec<i32> = (0..len).map(|_| (rng.next_u64() % 100) as i32).collect();
+            fdt::runtime::Buffer::new_i32(shape.clone(), data)
+        } else {
+            let data: Vec<f32> = (0..len).map(|_| rng.next_f32()).collect();
+            fdt::runtime::Buffer::new(shape.clone(), data)
+        };
+        let t = std::time::Instant::now();
+        let out = engine.run_f32(&[buf]).expect("run");
+        lat.push(t.elapsed());
+        std::hint::black_box(out);
+    }
+    let total = t0.elapsed();
+    lat.sort();
+    println!(
+        "{} requests on {}: throughput {:.0} req/s, p50 {:?}, p99 {:?}",
+        n,
+        engine.name(),
+        n as f64 / total.as_secs_f64(),
+        lat[n / 2],
+        lat[((n * 99) / 100).min(n - 1)]
+    );
+}

@@ -1,0 +1,362 @@
+//! The evaluated model zoo (paper §5).
+//!
+//! The original paper uses pretrained TFLite models; memory optimization
+//! depends only on graph *structure and shapes*, so we rebuild each
+//! architecture with synthetic weights (DESIGN.md §Substitutions):
+//!
+//! | id  | paper model                  | ours                                  |
+//! |-----|------------------------------|---------------------------------------|
+//! | KWS | MLPerf Tiny keyword spotting | DS-CNN-style stem + depthwise blocks collapsing to 1x1 |
+//! | TXT | TF-Lite text classification  | embedding -> mean -> dense head       |
+//! | MW  | Magic Wand gesture CNN       | TFLM magic-wand conv/pool stack       |
+//! | POS | PoseNet (PersonLab)          | MobileNetV1 backbone + keypoint heads |
+//! | SSD | MobileNetV2 SSDLite          | MobileNetV2 bottlenecks + box/class heads |
+//! | CIF | CIFAR-10 CNN                 | VGG-style 3x3 conv stacks             |
+//! | RAD | radar gesture CNN            | small conv/pool net on radar frames   |
+//!
+//! `swiftnet_like` reproduces the irregularly-wired NAS cell used for the
+//! scheduling-runtime experiment (§5.1), and `fig5_example` the example
+//! graph of Fig. 5.
+//!
+//! Small models carry synthetic weight data so the interpreter can prove
+//! tiled/untiled equivalence; POS and SSD are shape-only (`without_data`)
+//! — their multi-MB buffers only feed the memory planner.
+
+use crate::graph::{ActKind, DType, Graph, GraphBuilder, OpKind, Padding};
+
+/// All seven evaluated models, in the paper's Table-2 order.
+pub fn zoo() -> Vec<Graph> {
+    vec![kws(), txt(), magic_wand(), posenet(), ssdlite(), cifar(), radar()]
+}
+
+/// Keyword spotting: DS-CNN stem, one depthwise block, then a
+/// full-kernel depthwise reduction to 1x1 and a pointwise/dense head —
+/// "the critical buffer is involved in a sequence of convolutions that
+/// reduce the feature map size down to 1x1" (§5.2), which makes FFMT
+/// inapplicable while FDT fan-out/fan-in pairs still split it.
+pub fn kws() -> Graph {
+    let mut b = GraphBuilder::new("KWS");
+    // 49 MFCC frames x 10 coefficients x 8 stacked feature channels.
+    let x = b.input("mfcc", vec![49, 10, 8], DType::I8);
+    let y = b.conv2d(x, 64, (10, 4), (2, 2), Padding::Same, ActKind::Relu); // [25,5,64]
+    let y = b.dwconv(y, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+    // Channel-expanding pointwise conv: its [25,5,96] output is the
+    // critical buffer (fan-out candidate) ...
+    let y = b.conv2d(y, 96, (1, 1), (1, 1), Padding::Valid, ActKind::Relu); // [25,5,96]
+    // ... consumed by the full-kernel depthwise reduction to 1x1 (a PART
+    // op) and the pointwise head (the fan-in):
+    let y = b.dwconv(y, (25, 5), (1, 1), Padding::Valid, ActKind::Relu); // [1,1,96]
+    let y = b.conv2d(y, 192, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+    let y = b.conv2d(y, 192, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+    let y = b.dense_act(y, 12, ActKind::Identity);
+    let y = b.op(OpKind::Softmax, vec![y]);
+    b.finish(vec![y])
+}
+
+/// Text sentiment analysis: embedding lookup -> mean over tokens ->
+/// dense head. The `[seq, emb]` gather output is the critical buffer and
+/// can *only* be tiled depthwise (embedding-axis FDT), §3.
+pub fn txt() -> Graph {
+    let mut b = GraphBuilder::new("TXT");
+    let tokens = b.input("tokens", vec![256], DType::I32);
+    let e = b.embedding(tokens, 10_000, 64); // [256, 64] = 16 kB
+    let m = b.op(OpKind::ReduceMean { axis: 0, keepdims: false }, vec![e]);
+    let h = b.dense_act(m, 16, ActKind::Relu);
+    let y = b.dense_act(h, 1, ActKind::Sigmoid);
+    b.finish(vec![y])
+}
+
+/// Magic Wand gesture recognition (TFLM reference app): accelerometer
+/// window as a [128, 3, 1] image through small convs and pools.
+pub fn magic_wand() -> Graph {
+    let mut b = GraphBuilder::new("MW");
+    let x = b.input("accel", vec![128, 3, 1], DType::I8);
+    let y = b.conv2d(x, 8, (4, 3), (1, 1), Padding::Same, ActKind::Relu); // [128,3,8]
+    let y = b.op(
+        OpKind::MaxPool2d { ksize: (3, 3), stride: (3, 3), padding: Padding::Valid },
+        vec![y],
+    ); // [42,1,8]
+    let y = b.conv2d(y, 16, (4, 1), (1, 1), Padding::Same, ActKind::Relu); // [42,1,16]
+    let y = b.op(
+        OpKind::MaxPool2d { ksize: (3, 1), stride: (3, 1), padding: Padding::Valid },
+        vec![y],
+    ); // [14,1,16]
+    let y = b.dense_act(y, 16, ActKind::Relu);
+    let y = b.dense_act(y, 4, ActKind::Identity);
+    let y = b.op(OpKind::Softmax, vec![y]);
+    b.finish(vec![y])
+}
+
+/// One MobileNetV1 depthwise-separable block.
+fn mbv1_block(b: &mut GraphBuilder, x: usize, cout: usize, stride: usize) -> usize {
+    let y = b.dwconv(x, (3, 3), (stride, stride), Padding::Same, ActKind::Relu6);
+    b.conv2d(y, cout, (1, 1), (1, 1), Padding::Valid, ActKind::Relu6)
+}
+
+/// PoseNet: MobileNetV1 backbone at 513x513 with PersonLab-style
+/// keypoint heatmap + offset heads. Long chains of fused depthwise
+/// blocks — the model where FFMT shows its 45% MAC overhead.
+pub fn posenet() -> Graph {
+    let mut b = GraphBuilder::without_data("POS");
+    let x = b.input("image", vec![513, 513, 3], DType::I8);
+    let mut y = b.conv2d(x, 32, (3, 3), (2, 2), Padding::Same, ActKind::Relu6); // [257,257,32]
+    y = mbv1_block(&mut b, y, 64, 1); // [257,257,64]
+    y = mbv1_block(&mut b, y, 128, 2); // [129,129,128]
+    y = mbv1_block(&mut b, y, 128, 1);
+    y = mbv1_block(&mut b, y, 256, 2); // [65,65,256]
+    y = mbv1_block(&mut b, y, 256, 1);
+    y = mbv1_block(&mut b, y, 512, 2); // [33,33,512]
+    for _ in 0..5 {
+        y = mbv1_block(&mut b, y, 512, 1);
+    }
+    y = mbv1_block(&mut b, y, 1024, 2); // [17,17,1024]
+    y = mbv1_block(&mut b, y, 1024, 1);
+    // PersonLab heads: 17 keypoint heatmaps + 34 short-range offsets.
+    let heat = b.conv2d(y, 17, (1, 1), (1, 1), Padding::Valid, ActKind::Sigmoid);
+    let off = b.conv2d(y, 34, (1, 1), (1, 1), Padding::Valid, ActKind::Identity);
+    b.finish(vec![heat, off])
+}
+
+/// One MobileNetV2 inverted-residual bottleneck.
+fn mbv2_block(b: &mut GraphBuilder, x: usize, cin: usize, cout: usize, expand: usize, stride: usize) -> usize {
+    let mid = cin * expand;
+    let mut y = x;
+    if expand != 1 {
+        y = b.conv2d(y, mid, (1, 1), (1, 1), Padding::Valid, ActKind::Relu6);
+    }
+    y = b.dwconv(y, (3, 3), (stride, stride), Padding::Same, ActKind::Relu6);
+    let y = b.conv2d(y, cout, (1, 1), (1, 1), Padding::Valid, ActKind::Identity);
+    if stride == 1 && cin == cout {
+        b.op(OpKind::Add, vec![x, y])
+    } else {
+        y
+    }
+}
+
+/// MobileNetV2 SSDLite at 300x300 (truncated head set): backbone
+/// bottlenecks + two SSDLite prediction branches. Residual adds act as
+/// tiling barriers, bounding path length.
+pub fn ssdlite() -> Graph {
+    let mut b = GraphBuilder::without_data("SSD");
+    let x = b.input("image", vec![300, 300, 3], DType::I8);
+    let mut y = b.conv2d(x, 32, (3, 3), (2, 2), Padding::Same, ActKind::Relu6); // [150,150,32]
+    y = mbv2_block(&mut b, y, 32, 16, 1, 1); // [150,150,16]
+    y = mbv2_block(&mut b, y, 16, 24, 6, 2); // [75,75,24]
+    y = mbv2_block(&mut b, y, 24, 24, 6, 1);
+    y = mbv2_block(&mut b, y, 24, 32, 6, 2); // [38,38,32]
+    y = mbv2_block(&mut b, y, 32, 32, 6, 1);
+    y = mbv2_block(&mut b, y, 32, 64, 6, 2); // [19,19,64]
+    y = mbv2_block(&mut b, y, 64, 64, 6, 1);
+    let c4 = mbv2_block(&mut b, y, 64, 96, 6, 1); // [19,19,96] — head tap
+    let mut z = mbv2_block(&mut b, c4, 96, 160, 6, 2); // [10,10,160]
+    z = mbv2_block(&mut b, z, 160, 160, 6, 1);
+    let c5 = mbv2_block(&mut b, z, 160, 320, 6, 1); // [10,10,320]
+    // SSDLite heads (depthwise-separable predictors) on two taps.
+    let head = |b: &mut GraphBuilder, t: usize, ch: usize| -> (usize, usize) {
+        let l = b.dwconv(t, (3, 3), (1, 1), Padding::Same, ActKind::Relu6);
+        let loc = b.conv2d(l, 4 * 3, (1, 1), (1, 1), Padding::Valid, ActKind::Identity);
+        let c = b.dwconv(t, (3, 3), (1, 1), Padding::Same, ActKind::Relu6);
+        let cls = b.conv2d(c, ch, (1, 1), (1, 1), Padding::Valid, ActKind::Identity);
+        (loc, cls)
+    };
+    let (loc4, cls4) = head(&mut b, c4, 91 * 3);
+    let (loc5, cls5) = head(&mut b, c5, 91 * 3);
+    b.finish(vec![loc4, cls4, loc5, cls5])
+}
+
+/// CIFAR-10 classifier ("own CNN", VGG-style): deep stacks of SAME 3x3
+/// convs — long fused chains where FFMT halo accumulates (9% overhead in
+/// the paper).
+pub fn cifar() -> Graph {
+    let mut b = GraphBuilder::new("CIF");
+    let x = b.input("image", vec![32, 32, 3], DType::I8);
+    let mut y = b.conv2d(x, 32, (3, 3), (1, 1), Padding::Same, ActKind::Relu); // [32,32,32] 32 kB
+    y = b.conv2d(y, 32, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+    y = b.conv2d(y, 64, (3, 3), (1, 1), Padding::Same, ActKind::Relu); // [32,32,64] 64 kB
+    y = b.op(OpKind::MaxPool2d { ksize: (2, 2), stride: (2, 2), padding: Padding::Valid }, vec![y]);
+    y = b.conv2d(y, 64, (3, 3), (1, 1), Padding::Same, ActKind::Relu); // [16,16,64]
+    y = b.conv2d(y, 64, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+    y = b.op(OpKind::MaxPool2d { ksize: (2, 2), stride: (2, 2), padding: Padding::Valid }, vec![y]);
+    y = b.conv2d(y, 128, (3, 3), (1, 1), Padding::Same, ActKind::Relu); // [8,8,128]
+    let y = b.op(OpKind::GlobalAvgPool, vec![y]);
+    let y = b.dense_act(y, 128, ActKind::Relu);
+    let y = b.dense_act(y, 10, ActKind::Identity);
+    let y = b.op(OpKind::Softmax, vec![y]);
+    b.finish(vec![y])
+}
+
+/// Radar gesture recognition: small CNN over a 2-channel range-Doppler
+/// map. Pool-terminated conv stages keep FFMT paths short (the paper
+/// reports no FFMT overhead on RAD) and the channel-expanding pointwise
+/// conv gives FDT its fan-out (paper: 18.8% FDT vs 26.3% FFMT savings).
+pub fn radar() -> Graph {
+    let mut b = GraphBuilder::new("RAD");
+    let x = b.input("rdmap", vec![32, 32, 2], DType::I8);
+    let mut y = b.conv2d(x, 16, (3, 3), (1, 1), Padding::Same, ActKind::Relu); // [32,32,16] 16 kB
+    y = b.op(OpKind::MaxPool2d { ksize: (2, 2), stride: (2, 2), padding: Padding::Valid }, vec![y]); // [16,16,16]
+    y = b.conv2d(y, 48, (1, 1), (1, 1), Padding::Valid, ActKind::Relu); // [16,16,48] 12 kB
+    y = b.dwconv(y, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+    y = b.op(OpKind::MaxPool2d { ksize: (2, 2), stride: (2, 2), padding: Padding::Valid }, vec![y]); // [8,8,48]
+    y = b.conv2d(y, 64, (3, 3), (1, 1), Padding::Same, ActKind::Relu); // [8,8,64]
+    let y = b.op(OpKind::GlobalAvgPool, vec![y]);
+    let y = b.dense_act(y, 32, ActKind::Relu);
+    let y = b.dense_act(y, 5, ActKind::Identity);
+    let y = b.op(OpKind::Softmax, vec![y]);
+    b.finish(vec![y])
+}
+
+/// Data-carrying miniature of the PoseNet graph (same MobileNetV1
+/// dwsep-block structure at 33x33 input): lets the interpreter, codegen
+/// and quantization suites exercise the POS code paths that the full
+/// 513x513 shape-only graph cannot.
+pub fn posenet_tiny() -> Graph {
+    let mut b = GraphBuilder::new("POS-tiny");
+    let x = b.input("image", vec![33, 33, 3], DType::I8);
+    let mut y = b.conv2d(x, 8, (3, 3), (2, 2), Padding::Same, ActKind::Relu6); // [17,17,8]
+    y = mbv1_block(&mut b, y, 16, 1);
+    y = mbv1_block(&mut b, y, 32, 2); // [9,9,32]
+    y = mbv1_block(&mut b, y, 32, 1);
+    let heat = b.conv2d(y, 5, (1, 1), (1, 1), Padding::Valid, ActKind::Sigmoid);
+    let off = b.conv2d(y, 10, (1, 1), (1, 1), Padding::Valid, ActKind::Identity);
+    b.finish(vec![heat, off])
+}
+
+/// Data-carrying miniature of the SSDLite graph (MobileNetV2 inverted
+/// residuals incl. the Add-skip, two head taps) at 33x33 input.
+pub fn ssdlite_tiny() -> Graph {
+    let mut b = GraphBuilder::new("SSD-tiny");
+    let x = b.input("image", vec![33, 33, 3], DType::I8);
+    let mut y = b.conv2d(x, 8, (3, 3), (2, 2), Padding::Same, ActKind::Relu6); // [17,17,8]
+    y = mbv2_block(&mut b, y, 8, 8, 1, 1); // residual Add fires (cin==cout, s=1)
+    y = mbv2_block(&mut b, y, 8, 12, 2, 2); // [9,9,12]
+    let c4 = mbv2_block(&mut b, y, 12, 12, 2, 1); // second residual Add
+    let z = mbv2_block(&mut b, c4, 12, 16, 2, 2); // [5,5,16]
+    let head = |b: &mut GraphBuilder, t: usize, ch: usize| -> (usize, usize) {
+        let l = b.dwconv(t, (3, 3), (1, 1), Padding::Same, ActKind::Relu6);
+        let loc = b.conv2d(l, 4, (1, 1), (1, 1), Padding::Valid, ActKind::Identity);
+        let c = b.dwconv(t, (3, 3), (1, 1), Padding::Same, ActKind::Relu6);
+        let cls = b.conv2d(c, ch, (1, 1), (1, 1), Padding::Valid, ActKind::Identity);
+        (loc, cls)
+    };
+    let (loc4, cls4) = head(&mut b, c4, 6);
+    let (loc5, cls5) = head(&mut b, z, 6);
+    b.finish(vec![loc4, cls4, loc5, cls5])
+}
+
+/// SwiftNet-like irregularly-wired cell (Cheng et al. 2019): the
+/// scheduling stress case of §5.1. Cross-links between stages make the
+/// group DAG non-series-parallel, forcing the exact (MILP-substitute)
+/// scheduler.
+pub fn swiftnet_like() -> Graph {
+    let mut b = GraphBuilder::without_data("SwiftNet");
+    let x = b.input("x", vec![16, 16, 8], DType::I8);
+    // Stage nodes; each is a 1x1 conv; wiring follows a fixed
+    // graph-propagation pattern with skip links that violate SP-ness.
+    let mut nodes = vec![x];
+    let widths = [8, 8, 16, 16, 8, 16, 8, 16, 8, 8, 16, 8];
+    for (i, &w) in widths.iter().enumerate() {
+        // Each node reads the previous node, plus a skip two back when
+        // widths match (creating the classic non-SP "N" crossings).
+        let prev = *nodes.last().unwrap();
+        let mut y = b.conv2d(prev, w, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+        if i >= 2 {
+            let skip = nodes[nodes.len() - 2];
+            if b.shape_of(skip) == b.shape_of(y) {
+                y = b.op(OpKind::Add, vec![skip, y]);
+            }
+        }
+        nodes.push(y);
+    }
+    let y = *nodes.last().unwrap();
+    let y = b.op(OpKind::GlobalAvgPool, vec![y]);
+    let y = b.dense_act(y, 10, ActKind::Identity);
+    b.finish(vec![y])
+}
+
+/// The example DNN of Fig. 5: a conv chain with a fat middle. The
+/// critical buffer sits between a channel-expanding convolution (the FDT
+/// Fan-Out candidate) and a depthwise conv (a PART op, "other operations
+/// interleaved with the FFMT/FDT ones", §3) feeding the Fan-In; the
+/// surrounding 3x3 convolutions give FFMT its overlapping path.
+pub fn fig5_example() -> Graph {
+    let mut b = GraphBuilder::new("fig5");
+    let x = b.input("x", vec![16, 16, 4], DType::I8);
+    let y = b.conv2d(x, 8, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+    let y = b.conv2d(y, 32, (1, 1), (1, 1), Padding::Valid, ActKind::Relu); // critical [16,16,32]
+    let y = b.dwconv(y, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+    let y = b.conv2d(y, 8, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+    let y = b.conv2d(y, 8, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+    let y = b.op(OpKind::GlobalAvgPool, vec![y]);
+    let y = b.dense_act(y, 4, ActKind::Identity);
+    b.finish(vec![y])
+}
+
+/// Look a model up by its Table-2 id.
+pub fn by_name(name: &str) -> Option<Graph> {
+    match name.to_uppercase().as_str() {
+        "KWS" => Some(kws()),
+        "TXT" => Some(txt()),
+        "MW" => Some(magic_wand()),
+        "POS" => Some(posenet()),
+        "SSD" => Some(ssdlite()),
+        "CIF" => Some(cifar()),
+        "RAD" => Some(radar()),
+        "SWIFTNET" => Some(swiftnet_like()),
+        "FIG5" => Some(fig5_example()),
+        "POS-TINY" => Some(posenet_tiny()),
+        "SSD-TINY" => Some(ssdlite_tiny()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::graph_macs;
+
+    #[test]
+    fn all_models_validate() {
+        for g in zoo() {
+            assert!(g.validate().is_ok(), "{}: {:?}", g.name, g.validate());
+        }
+        assert!(swiftnet_like().validate().is_ok());
+        assert!(fig5_example().validate().is_ok());
+    }
+
+    #[test]
+    fn mac_counts_are_plausible() {
+        // Paper Table 2 magnitudes: KWS 2.66M, MW 0.06M, POS 837M,
+        // SSD 313M, CIF 5.52M, RAD 0.09M (ours are the same order).
+        let macs: Vec<(String, u64)> =
+            zoo().iter().map(|g| (g.name.clone(), graph_macs(g))).collect();
+        let get = |n: &str| macs.iter().find(|(m, _)| m == n).unwrap().1;
+        assert!(get("KWS") > 1_000_000 && get("KWS") < 10_000_000, "KWS {}", get("KWS"));
+        assert_eq!(get("TXT") / 1_000_000, 0); // TXT: embedding only, ~0 MACs
+        assert!(get("MW") < 1_000_000);
+        assert!(get("POS") > 200_000_000, "POS {}", get("POS"));
+        assert!(get("SSD") > 100_000_000, "SSD {}", get("SSD"));
+        assert!(get("CIF") > 2_000_000 && get("CIF") < 100_000_000);
+        assert!(get("RAD") < 10_000_000);
+    }
+
+    #[test]
+    fn swiftnet_is_not_series_parallel() {
+        let g = swiftnet_like();
+        let grouping = crate::graph::fusion::fuse(&g);
+        let preds = grouping.preds(&g);
+        assert!(
+            crate::analysis::decompose_sp(grouping.len(), &preds).is_none(),
+            "SwiftNet-like cell must stress the non-SP scheduler"
+        );
+    }
+
+    #[test]
+    fn small_models_run_in_interpreter() {
+        for g in [kws(), txt(), magic_wand(), cifar(), radar(), fig5_example()] {
+            let inputs = crate::exec::random_inputs(&g, 42);
+            let out = crate::exec::run(&g, &inputs).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+            assert!(!out.is_empty());
+            assert!(out[0].data.iter().all(|v| v.is_finite()), "{} produced NaN", g.name);
+        }
+    }
+}

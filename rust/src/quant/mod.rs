@@ -1,0 +1,255 @@
+//! Int8 quantization semantics (paper §5: "All models are quantized to
+//! 8 bits").
+//!
+//! The memory model charges activation buffers at one byte per element
+//! and FDT fan-in partials at four (i32 pre-activation accumulators,
+//! DESIGN.md §6). This module grounds those numbers: it simulates
+//! TFLite-style affine int8 inference over any graph the flow produces —
+//! activations quantize to i8 through per-tensor (scale, zero-point)
+//! parameters calibrated on sample inputs; matmul-family ops accumulate
+//! in i32; **FDT fan-in partials stay in the i32 accumulator domain and
+//! are only requantized once, by the Merge op** — which is why tiling
+//! cannot change a quantized model's outputs any more than it changes
+//! the f32 ones, and why partials must be budgeted at 4 bytes.
+//!
+//! Simulation style: "fake quant" — each quantized tensor is held as the
+//! dequantized f32 value of its i8 code, so the interpreter kernels of
+//! [`crate::exec`] are reused; i32-typed tensors (partials) pass through
+//! unquantized exactly like the real accumulator would.
+
+use crate::exec::{self, Value};
+use crate::graph::{DType, Graph, TensorKind};
+use std::collections::HashMap;
+
+/// Per-tensor affine quantization parameters (int8, TFLite convention).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+impl QuantParams {
+    /// Parameters covering `[lo, hi]` with an i8 affine grid.
+    pub fn from_range(lo: f32, hi: f32) -> QuantParams {
+        let (lo, hi) = (lo.min(0.0), hi.max(0.0)); // grid must contain 0
+        let scale = ((hi - lo) / 255.0).max(1e-8);
+        let zero_point = (-128.0 - lo / scale).round().clamp(-128.0, 127.0) as i32;
+        QuantParams { scale, zero_point }
+    }
+
+    /// Quantize to the i8 grid and back (the "fake quant" projection).
+    pub fn project(&self, x: f32) -> f32 {
+        let q = (x / self.scale + self.zero_point as f32).round().clamp(-128.0, 127.0);
+        (q - self.zero_point as f32) * self.scale
+    }
+
+    pub fn quantize(&self, x: f32) -> i8 {
+        (x / self.scale + self.zero_point as f32).round().clamp(-128.0, 127.0) as i8
+    }
+
+    pub fn dequantize(&self, q: i8) -> f32 {
+        (q as i32 - self.zero_point) as f32 * self.scale
+    }
+}
+
+/// Calibrated parameters for every tensor in a graph.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    pub params: Vec<QuantParams>,
+}
+
+/// Observe per-tensor ranges over `samples` random inputs and derive
+/// affine parameters (min/max calibration, the TFLite default).
+pub fn calibrate(g: &Graph, samples: usize, seed: u64) -> Result<Calibration, String> {
+    let mut lo = vec![f32::INFINITY; g.tensors.len()];
+    let mut hi = vec![f32::NEG_INFINITY; g.tensors.len()];
+    for s in 0..samples.max(1) {
+        let inputs = exec::random_inputs(g, seed + s as u64);
+        let vals = exec::run_all(g, &inputs)?;
+        for (t, v) in vals.iter().enumerate() {
+            for &x in &v.data {
+                lo[t] = lo[t].min(x);
+                hi[t] = hi[t].max(x);
+            }
+        }
+    }
+    let params = (0..g.tensors.len())
+        .map(|t| {
+            if lo[t] > hi[t] {
+                QuantParams { scale: 1.0, zero_point: 0 }
+            } else {
+                QuantParams::from_range(lo[t], hi[t])
+            }
+        })
+        .collect();
+    Ok(Calibration { params })
+}
+
+/// Run int8-simulated inference: every i8-typed tensor is projected onto
+/// its calibrated grid after it is produced; i32 tensors (FDT partial
+/// accumulators) and index tensors pass through exactly.
+pub fn run_quantized(
+    g: &Graph,
+    cal: &Calibration,
+    inputs: &HashMap<String, Value>,
+) -> Result<Vec<Value>, String> {
+    // Project weights once (per-tensor symmetric-ish affine grid).
+    let mut projected = g.clone();
+    for t in &mut projected.tensors {
+        if t.kind == TensorKind::Weight && t.dtype == DType::I8 {
+            if let Some(data) = &mut t.data {
+                let p = cal.params[t.id];
+                for x in data.iter_mut() {
+                    *x = p.project(*x);
+                }
+            }
+        }
+    }
+    // Project model inputs.
+    let mut qin = HashMap::new();
+    for &t in &g.inputs {
+        let tensor = g.tensor(t);
+        let v = inputs
+            .get(&tensor.name)
+            .ok_or_else(|| format!("missing input {}", tensor.name))?;
+        let mut v = v.clone();
+        if tensor.dtype == DType::I8 {
+            let p = cal.params[t];
+            for x in v.data.iter_mut() {
+                *x = p.project(*x);
+            }
+        }
+        qin.insert(tensor.name.clone(), v);
+    }
+    // Op-by-op execution with post-op projection of i8 outputs.
+    let vals = exec::run_all_with(&projected, &qin, |t, v| {
+        if projected.tensor(t).dtype == DType::I8
+            && projected.tensor(t).kind == TensorKind::Intermediate
+        {
+            let p = cal.params[t];
+            let mut v = v;
+            for x in v.data.iter_mut() {
+                *x = p.project(*x);
+            }
+            v
+        } else {
+            v
+        }
+    })?;
+    Ok(g.outputs.iter().map(|&t| vals[t].clone()).collect())
+}
+
+/// Transfer calibration from an untiled graph to its tiled version: every
+/// tiled tensor inherits the parameters of the original tensor it was
+/// split from (the transform records provenance in tensor names); newly
+/// introduced partials/merges reuse the fan-in output's parameters.
+pub fn transfer(g_untiled: &Graph, cal: &Calibration, g_tiled: &Graph) -> Calibration {
+    // Name-prefix provenance: "conv2d_3_p2_out" derives from "conv2d_3".
+    let mut by_name: HashMap<&str, QuantParams> = HashMap::new();
+    for t in &g_untiled.tensors {
+        by_name.insert(t.name.as_str(), cal.params[t.id]);
+    }
+    let lookup = |name: &str| -> Option<QuantParams> {
+        if let Some(p) = by_name.get(name) {
+            return Some(*p);
+        }
+        // Strip partition / variant suffixes progressively.
+        let mut n = name.to_string();
+        loop {
+            if let Some(i) = n.rfind("_p") {
+                // `_p<digits>` partition suffix?
+                let tail = &n[i + 2..];
+                let digits: String = tail.chars().take_while(|c| c.is_ascii_digit()).collect();
+                if !digits.is_empty() {
+                    let rest = &tail[digits.len()..];
+                    n = format!("{}{}", &n[..i], rest);
+                    if let Some(p) = by_name.get(n.as_str()) {
+                        return Some(*p);
+                    }
+                    continue;
+                }
+            }
+            break;
+        }
+        None
+    };
+    let params = g_tiled
+        .tensors
+        .iter()
+        .map(|t| lookup(&t.name).unwrap_or(QuantParams { scale: 1.0, zero_point: 0 }))
+        .collect();
+    Calibration { params }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{optimize, FlowOptions};
+    use crate::models;
+
+    #[test]
+    fn params_roundtrip() {
+        let p = QuantParams::from_range(-3.0, 5.0);
+        assert!(p.scale > 0.0);
+        // 0 must be exactly representable (TFLite requirement).
+        assert_eq!(p.project(0.0), 0.0);
+        for x in [-3.0f32, -1.5, 0.0, 2.2, 5.0] {
+            let err = (p.project(x) - x).abs();
+            assert!(err <= p.scale, "{x}: err {err} > scale {}", p.scale);
+        }
+        // Saturation outside the calibrated range.
+        assert!(p.project(100.0) <= 5.0 + p.scale);
+        let q = p.quantize(1.0);
+        assert!((p.dequantize(q) - 1.0).abs() <= p.scale);
+    }
+
+    #[test]
+    fn quantized_inference_tracks_f32() {
+        for g in [models::txt(), models::radar(), models::fig5_example()] {
+            let cal = calibrate(&g, 2, 40).unwrap();
+            let inputs = exec::random_inputs(&g, 77);
+            let f = exec::run(&g, &inputs).unwrap();
+            let q = run_quantized(&g, &cal, &inputs).unwrap();
+            // int8 simulation must stay within a few LSBs on the final
+            // (softmax/sigmoid-bounded) outputs.
+            let d = exec::max_abs_diff(&f, &q);
+            assert!(d < 0.15, "{}: int8 drifted {d}", g.name);
+        }
+    }
+
+    #[test]
+    fn fdt_tiling_preserves_quantized_outputs() {
+        // The paper's core claim in the quantized domain: partials are
+        // i32 accumulators requantized once by Merge, so tiled int8
+        // inference matches untiled int8 inference to the last LSB-ish.
+        let mut opts = FlowOptions::default();
+        opts.discovery.enable_ffmt = false;
+        for g in [models::txt(), models::kws()] {
+            let r = optimize(&g, &opts);
+            assert!(!r.iterations.is_empty(), "{} must tile", g.name);
+            let cal = calibrate(&g, 2, 55).unwrap();
+            let tcal = transfer(&g, &cal, &r.graph);
+            let inputs = exec::random_inputs(&g, 99);
+            let a = run_quantized(&g, &cal, &inputs).unwrap();
+            let b = run_quantized(&r.graph, &tcal, &inputs).unwrap();
+            let d = exec::max_abs_diff(&a, &b);
+            assert!(d < 0.05, "{}: tiled int8 diverged {d}", g.name);
+        }
+    }
+
+    #[test]
+    fn transfer_maps_partition_names() {
+        let g = models::txt();
+        let r = optimize(&g, &FlowOptions::default());
+        let cal = calibrate(&g, 1, 3).unwrap();
+        let tcal = transfer(&g, &cal, &r.graph);
+        assert_eq!(tcal.params.len(), r.graph.tensors.len());
+        // Partition tensors inherit their source's parameters.
+        for t in &r.graph.tensors {
+            if t.name.contains("_p0") && t.kind == TensorKind::Intermediate {
+                let p = tcal.params[t.id];
+                assert!(p.scale != 1.0 || p.zero_point != 0, "{} got defaults", t.name);
+            }
+        }
+    }
+}

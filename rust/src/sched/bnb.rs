@@ -1,0 +1,340 @@
+//! Exact memory-aware scheduling by branch-and-bound.
+//!
+//! This is our substitute for the paper's MILP formulation (§4.1): the
+//! same objective — minimize peak live memory over topological orders —
+//! solved exactly by DFS with three prunings:
+//!
+//! 1. **incumbent**: abandon a prefix whose peak already matches/exceeds
+//!    the best complete schedule;
+//! 2. **memoization**: the live-set after scheduling a *set* of groups is
+//!    order-independent, so a set revisited with an equal-or-worse peak
+//!    cannot improve;
+//! 3. **lower bound**: every unscheduled group `g` will eventually run
+//!    with at least `out(g) + in(g)` bytes live, plus the always-live
+//!    model I/O floor.
+//!
+//! Ready groups are expanded most-promising-first (largest memory release
+//! first) so good incumbents appear early.
+
+use super::Schedule;
+use crate::analysis::MemModel;
+use crate::graph::fusion::GroupId;
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// FNV-1a over the bitset words — the memo map is on the search hot path
+/// and SipHash dominates it otherwise (§Perf).
+#[derive(Default)]
+struct Fnv(u64);
+
+impl Hasher for Fnv {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    fn write(&mut self, bytes: &[u8]) {
+        let mut h = if self.0 == 0 { 0xcbf29ce484222325 } else { self.0 };
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        self.0 = h;
+    }
+    fn write_u64(&mut self, x: u64) {
+        let mut h = if self.0 == 0 { 0xcbf29ce484222325 } else { self.0 };
+        h ^= x;
+        h = h.wrapping_mul(0x100000001b3);
+        self.0 = h;
+    }
+}
+
+/// Bitset over groups (supports arbitrary n).
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Bits(Vec<u64>);
+
+impl std::hash::Hash for Bits {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        for &w in &self.0 {
+            state.write_u64(w);
+        }
+    }
+}
+
+impl Bits {
+    fn new(n: usize) -> Self {
+        Bits(vec![0; n.div_ceil(64)])
+    }
+    #[inline]
+    fn set(&mut self, i: usize) {
+        self.0[i / 64] |= 1 << (i % 64);
+    }
+    #[inline]
+    fn clear(&mut self, i: usize) {
+        self.0[i / 64] &= !(1 << (i % 64));
+    }
+    #[inline]
+    fn get(&self, i: usize) -> bool {
+        self.0[i / 64] >> (i % 64) & 1 == 1
+    }
+}
+
+struct Ctx<'m> {
+    m: &'m MemModel<'m>,
+    preds: Vec<Vec<GroupId>>,
+    /// Per-group floor: bytes live while this group runs, ignoring carried
+    /// buffers (its own inputs + outputs).
+    group_floor: Vec<usize>,
+    budget: u64,
+    expanded: u64,
+    best_order: Vec<GroupId>,
+    best_peak: usize,
+    memo: HashMap<Bits, usize, BuildHasherDefault<Fnv>>,
+}
+
+/// Exact schedule. Returns `(schedule, completed)`; `completed = false`
+/// means the node budget ran out and the result is the best found (still
+/// a valid schedule thanks to the warm start).
+pub fn schedule(m: &MemModel, node_budget: u64, warm: Option<Schedule>) -> (Schedule, bool) {
+    let n = m.n();
+    let preds = m.grouping.preds(m.g);
+
+    let group_floor: Vec<usize> = (0..n)
+        .map(|g| {
+            let outs: usize = m.group_writes[g].iter().map(|&b| m.sizes[b]).sum();
+            let ins: usize = m.group_reads[g].iter().map(|&b| m.sizes[b]).sum();
+            outs + ins
+        })
+        .collect();
+
+    let (mut best_order, mut best_peak) = match warm {
+        Some(w) => (w.order, w.peak),
+        None => (Vec::new(), usize::MAX),
+    };
+    if best_order.is_empty() {
+        // Fallback incumbent: any topo order.
+        best_order = topo(&preds);
+        best_peak = m.peak(&best_order);
+    }
+
+    let mut ctx = Ctx {
+        m,
+        preds,
+        group_floor,
+        budget: node_budget,
+        expanded: 0,
+        best_order,
+        best_peak,
+        memo: HashMap::with_capacity_and_hasher(1 << 16, BuildHasherDefault::default()),
+    };
+
+    // DFS state.
+    let mut done = Bits::new(n);
+    let mut remaining: Vec<usize> = m.consumers.iter().map(|c| c.len()).collect();
+    let mut live = vec![false; m.buffers.len()];
+    let mut live_bytes = 0usize;
+    for (b, p) in m.producer.iter().enumerate() {
+        if p.is_none() {
+            live[b] = true;
+            live_bytes += m.sizes[b];
+        }
+    }
+    let mut order = Vec::with_capacity(n);
+    let completed = dfs(&mut ctx, &mut done, &mut remaining, &mut live, live_bytes, live_bytes.max(m.io_bytes), &mut order);
+
+    let peak = ctx.best_peak;
+    (
+        Schedule { order: ctx.best_order, peak, strategy: "bnb", optimal: completed },
+        completed,
+    )
+}
+
+fn topo(preds: &[Vec<GroupId>]) -> Vec<GroupId> {
+    let n = preds.len();
+    let mut indeg: Vec<usize> = preds.iter().map(|p| p.len()).collect();
+    let mut succs: Vec<Vec<GroupId>> = vec![Vec::new(); n];
+    for (g, ps) in preds.iter().enumerate() {
+        for &p in ps {
+            succs[p].push(g);
+        }
+    }
+    let mut ready: Vec<GroupId> = (0..n).filter(|&g| indeg[g] == 0).collect();
+    let mut out = Vec::with_capacity(n);
+    while let Some(g) = ready.pop() {
+        out.push(g);
+        for &s in &succs[g] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                ready.push(s);
+            }
+        }
+    }
+    out
+}
+
+/// Returns false when the node budget was exhausted somewhere below.
+#[allow(clippy::too_many_arguments)]
+fn dfs(
+    ctx: &mut Ctx,
+    done: &mut Bits,
+    remaining: &mut Vec<usize>,
+    live: &mut Vec<bool>,
+    live_bytes: usize,
+    peak: usize,
+    order: &mut Vec<GroupId>,
+) -> bool {
+    let m = ctx.m;
+    let n = m.n();
+    if order.len() == n {
+        if peak < ctx.best_peak {
+            ctx.best_peak = peak;
+            ctx.best_order = order.clone();
+        }
+        return true;
+    }
+    ctx.expanded += 1;
+    if ctx.expanded > ctx.budget {
+        return false;
+    }
+
+    // Memoization on the scheduled set.
+    if let Some(&seen) = ctx.memo.get(done) {
+        if seen <= peak {
+            return true; // dominated; subtree already explored at least as well
+        }
+    }
+    ctx.memo.insert(done.clone(), peak);
+
+    // Lower bound over unscheduled groups.
+    let mut lb = m.io_bytes;
+    for g in 0..n {
+        if !done.get(g) {
+            lb = lb.max(ctx.group_floor[g]);
+        }
+    }
+    if peak.max(lb) >= ctx.best_peak {
+        return true;
+    }
+
+    // Ready groups, most-memory-released first.
+    let mut ready: Vec<(isize, GroupId)> = Vec::new();
+    for g in 0..n {
+        if done.get(g) || !ctx.preds[g].iter().all(|&p| done.get(p)) {
+            continue;
+        }
+        // Net memory delta of running g now.
+        let mut delta: isize = 0;
+        for &b in &m.group_writes[g] {
+            if !live[b] {
+                delta += m.sizes[b] as isize;
+            }
+        }
+        for &b in &m.group_reads[g] {
+            if remaining[b] == 1 && !m.is_output[b] && live[b] {
+                delta -= m.sizes[b] as isize;
+            }
+        }
+        ready.push((delta, g));
+    }
+    ready.sort();
+
+    let mut all_complete = true;
+    for &(_, g) in &ready {
+        // Apply g.
+        let mut freed: Vec<usize> = Vec::new();
+        let mut added: Vec<usize> = Vec::new();
+        let mut lb2 = live_bytes;
+        for &b in &m.group_writes[g] {
+            if !live[b] {
+                live[b] = true;
+                lb2 += m.sizes[b];
+                added.push(b);
+            }
+        }
+        let during = lb2;
+        for &b in &m.group_reads[g] {
+            remaining[b] -= 1;
+            if remaining[b] == 0 && !m.is_output[b] && live[b] {
+                live[b] = false;
+                lb2 -= m.sizes[b];
+                freed.push(b);
+            }
+        }
+        for &b in &m.group_writes[g] {
+            if remaining[b] == 0 && !m.is_output[b] && live[b] {
+                live[b] = false;
+                lb2 -= m.sizes[b];
+                freed.push(b);
+            }
+        }
+        done.set(g);
+        order.push(g);
+
+        if during.max(peak) < ctx.best_peak {
+            all_complete &= dfs(ctx, done, remaining, live, lb2, peak.max(during), order);
+        }
+
+        // Undo.
+        order.pop();
+        done.clear(g);
+        for &b in &freed {
+            live[b] = true;
+        }
+        for &b in &m.group_reads[g] {
+            remaining[b] += 1;
+        }
+        for &b in &added {
+            live[b] = false;
+        }
+        if ctx.expanded > ctx.budget {
+            return false;
+        }
+    }
+    all_complete
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::fusion::fuse;
+    use crate::graph::{ActKind, DType, GraphBuilder, OpKind, Padding};
+    use crate::sched::tests::brute_force_min;
+
+    #[test]
+    fn bnb_matches_brute_force_on_branchy_graph() {
+        let mut b = GraphBuilder::new("br");
+        let x = b.input("x", vec![4, 4, 4], DType::I8);
+        let a = b.conv2d(x, 16, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+        let c = b.conv2d(x, 8, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+        let d = b.conv2d(a, 4, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+        let e = b.conv2d(c, 4, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+        let s = b.op(OpKind::Add, vec![d, e]);
+        let f = b.conv2d(s, 12, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+        let g = b.finish(vec![f]);
+        let grouping = fuse(&g);
+        let m = crate::analysis::MemModel::new(&g, &grouping);
+        let (s, complete) = schedule(&m, 1_000_000, None);
+        assert!(complete);
+        assert_eq!(s.peak, brute_force_min(&m));
+        assert!(crate::sched::is_valid_order(&m, &s.order));
+    }
+
+    #[test]
+    fn budget_exhaustion_returns_warm_start() {
+        let mut b = GraphBuilder::new("w");
+        let x = b.input("x", vec![4, 4, 2], DType::I8);
+        let mut outs = Vec::new();
+        for _ in 0..4 {
+            let y = b.conv2d(x, 4, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+            outs.push(b.conv2d(y, 2, (1, 1), (1, 1), Padding::Valid, ActKind::Relu));
+        }
+        let mut acc = outs[0];
+        for &o in &outs[1..] {
+            acc = b.op(OpKind::Add, vec![acc, o]);
+        }
+        let g = b.finish(vec![acc]);
+        let grouping = fuse(&g);
+        let m = crate::analysis::MemModel::new(&g, &grouping);
+        let (s, complete) = schedule(&m, 1, None); // starved budget
+        assert!(!complete);
+        assert!(crate::sched::is_valid_order(&m, &s.order));
+    }
+}

@@ -1,0 +1,189 @@
+//! Optimal memory-aware scheduling of series-parallel graphs
+//! (Kayaaslan et al. 2018, based on Liu's generalized tree pebbling).
+//!
+//! Each subtree's schedule is summarized by its *hill–valley segments*:
+//! maximal prefixes ending at successively lower memory minima. Parallel
+//! compositions interleave the children's segment sequences (keeping
+//! per-child order) using the classic exchange-optimal comparator: run
+//! segment `a` before `b` iff `max(Ha, Va + Hb) <= max(Hb, Vb + Ha)`.
+//! Series compositions concatenate.
+//!
+//! The task model is adjusted for DNN inference (paper §4.1): an op's
+//! output is a single buffer shared by all consumers. The final order is
+//! always re-evaluated with the exact profile evaluator; property tests
+//! cross-check against exhaustive search on random SP graphs.
+
+use super::hill_valley::relative_profile;
+use super::Schedule;
+use crate::analysis::{MemModel, SpTree};
+use crate::graph::fusion::GroupId;
+
+/// One hill–valley segment: a run of groups with peak `hill` and final
+/// residual `valley`, both relative to the segment start.
+#[derive(Debug, Clone)]
+struct Segment {
+    groups: Vec<GroupId>,
+    hill: isize,
+    valley: isize,
+}
+
+/// Schedule an SP-decomposed model optimally.
+pub fn schedule(m: &MemModel, tree: &SpTree) -> Schedule {
+    let segs = schedule_tree(m, tree);
+    let order: Vec<GroupId> = segs.into_iter().flat_map(|s| s.groups).collect();
+    debug_assert_eq!(order.len(), m.n());
+    let peak = m.peak(&order);
+    Schedule { order, peak, strategy: "sp", optimal: false }
+}
+
+fn schedule_tree(m: &MemModel, tree: &SpTree) -> Vec<Segment> {
+    match tree {
+        SpTree::Leaf(g) => segments_of(m, &[*g]),
+        SpTree::Series(children) => {
+            let seq: Vec<GroupId> = children
+                .iter()
+                .flat_map(|c| schedule_tree(m, c).into_iter().flat_map(|s| s.groups))
+                .collect();
+            segments_of(m, &seq)
+        }
+        SpTree::Parallel(children) => {
+            let child_segs: Vec<Vec<Segment>> =
+                children.iter().map(|c| schedule_tree(m, c)).collect();
+            let merged = merge_many(child_segs);
+            // Re-segment the merged sequence for the parent composition.
+            let seq: Vec<GroupId> = merged.into_iter().flat_map(|s| s.groups).collect();
+            segments_of(m, &seq)
+        }
+    }
+}
+
+/// Decompose a sequence's relative profile into hill–valley segments.
+fn segments_of(m: &MemModel, seq: &[GroupId]) -> Vec<Segment> {
+    if seq.is_empty() {
+        return Vec::new();
+    }
+    let prof = relative_profile(m, seq);
+    let mut segs = Vec::new();
+    let mut i = 0usize;
+    let mut base: isize = 0;
+    while i < prof.len() {
+        // The segment ends at the minimum `after` over the remainder
+        // (last occurrence, so valleys strictly decrease).
+        let mut min_after = isize::MAX;
+        let mut j = i;
+        for (k, &(_, after)) in prof.iter().enumerate().skip(i) {
+            if after <= min_after {
+                min_after = after;
+                j = k;
+            }
+        }
+        let hill = prof[i..=j].iter().map(|&(d, _)| d).max().unwrap() - base;
+        let valley = prof[j].1 - base;
+        segs.push(Segment { groups: seq[i..=j].to_vec(), hill, valley });
+        base = prof[j].1;
+        i = j + 1;
+    }
+    segs
+}
+
+/// Exchange-optimal comparator: should `a` run before `b`?
+fn before(a: &Segment, b: &Segment) -> bool {
+    let ab = (a.hill).max(a.valley + b.hill);
+    let ba = (b.hill).max(b.valley + a.hill);
+    (ab, a.valley) <= (ba, b.valley)
+}
+
+/// Merge k segment sequences, preserving per-sequence order.
+fn merge_many(mut lists: Vec<Vec<Segment>>) -> Vec<Segment> {
+    // Turn each list into a FIFO; repeatedly pick the best head.
+    for l in &mut lists {
+        l.reverse(); // pop from the back
+    }
+    let mut out = Vec::new();
+    loop {
+        let mut pick: Option<usize> = None;
+        for (i, l) in lists.iter().enumerate() {
+            let Some(head) = l.last() else { continue };
+            match pick {
+                None => pick = Some(i),
+                Some(p) => {
+                    if before(head, lists[p].last().unwrap()) {
+                        pick = Some(i);
+                    }
+                }
+            }
+        }
+        match pick {
+            Some(i) => out.push(lists[i].pop().unwrap()),
+            None => break,
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::decompose_sp;
+    use crate::graph::fusion::fuse;
+    use crate::graph::{ActKind, DType, Graph, GraphBuilder, OpKind, Padding};
+    use crate::sched::tests::brute_force_min;
+
+    fn parallel_branches(widths: &[(usize, usize)]) -> Graph {
+        // Each branch: conv to w0 channels (hill) then to w1 (valley),
+        // all merged by an add tree on equal final widths.
+        let mut b = GraphBuilder::new("pb");
+        let x = b.input("x", vec![4, 4, 2], DType::I8);
+        let mut outs = Vec::new();
+        for &(w0, w1) in widths {
+            let h = b.conv2d(x, w0, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+            outs.push(b.conv2d(h, w1, (1, 1), (1, 1), Padding::Valid, ActKind::Relu));
+        }
+        let mut acc = outs[0];
+        for &o in &outs[1..] {
+            acc = b.op(OpKind::Add, vec![acc, o]);
+        }
+        b.finish(vec![acc])
+    }
+
+    #[test]
+    fn sp_matches_exhaustive_on_branch_bundles() {
+        for widths in [
+            vec![(16, 2), (4, 2)],
+            vec![(16, 2), (4, 2), (8, 2)],
+            vec![(2, 2), (32, 2), (8, 2)],
+        ] {
+            let g = parallel_branches(&widths);
+            let grouping = fuse(&g);
+            let m = MemModel::new(&g, &grouping);
+            let preds = grouping.preds(&g);
+            let tree = decompose_sp(m.n(), &preds).expect("should be SP");
+            let s = schedule(&m, &tree);
+            assert!(crate::sched::is_valid_order(&m, &s.order), "{widths:?}");
+            assert_eq!(s.peak, brute_force_min(&m), "widths {widths:?}");
+        }
+    }
+
+    #[test]
+    fn nested_sp_matches_exhaustive() {
+        // Chain of two parallel diamonds.
+        let mut b = GraphBuilder::new("nest");
+        let x = b.input("x", vec![4, 4, 2], DType::I8);
+        let a = b.conv2d(x, 8, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+        let c = b.conv2d(x, 4, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+        let a2 = b.conv2d(a, 4, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+        let s1 = b.op(OpKind::Add, vec![a2, c]);
+        let d = b.conv2d(s1, 16, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+        let e = b.conv2d(s1, 2, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+        let d2 = b.conv2d(d, 2, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+        let s2 = b.op(OpKind::Add, vec![d2, e]);
+        let g = b.finish(vec![s2]);
+        let grouping = fuse(&g);
+        let m = MemModel::new(&g, &grouping);
+        let preds = grouping.preds(&g);
+        let tree = decompose_sp(m.n(), &preds).expect("should be SP");
+        let s = schedule(&m, &tree);
+        assert!(crate::sched::is_valid_order(&m, &s.order));
+        assert_eq!(s.peak, brute_force_min(&m));
+    }
+}

@@ -1,0 +1,445 @@
+//! Block-based path discovery (§4.3, Figs. 4–5).
+//!
+//! Starting from a *critical buffer* (a buffer solely responsible for the
+//! layout size), the discovery walks the graph up and down through
+//! compatible blocks and proposes tiling configurations:
+//!
+//! * one proposal per partition count `N ∈ {2 … 25}` for depth (`PD_D`)
+//!   and row (`PD_FM`) partitioning, plus quadratic FFMT grids
+//!   `{2x2 … 5x5}`;
+//! * whenever an FDT Fan-In could be used, a variant *without* it (ending
+//!   in CONCAT) is kept, because a CONCAT may need less memory than
+//!   carrying full-size partial sums;
+//! * whenever an overlapping FFMT op is encountered, a variant that stops
+//!   before it is kept, because accumulated halo may make longer paths
+//!   inferior;
+//! * for every candidate, the op before the critical buffer with the
+//!   smallest input buffer is selected as the path start, and the op
+//!   after it with the smallest output buffer as the path end;
+//! * discovery stops at any op incompatible with fused tiling (softmax,
+//!   slice, concat, residual add, …) and at buffers with multiple
+//!   consumers (the path must remain a chain).
+
+use super::{
+    activation_input, depth_role, fm_role, DepthRole, FmRole, PartitionSpec, PathConfig,
+    TerminalMode,
+};
+use crate::graph::{Graph, OpId, TensorId, TensorKind};
+
+/// Knobs for the discovery search space.
+#[derive(Debug, Clone)]
+pub struct DiscoveryOptions {
+    /// Depth partition counts (paper: 2..=25).
+    pub depth_partitions: std::ops::RangeInclusive<usize>,
+    /// FFMT row-band counts (paper: 2..=25).
+    pub row_partitions: std::ops::RangeInclusive<usize>,
+    /// FFMT quadratic grids n x n (paper: 2..=5).
+    pub grid_sizes: std::ops::RangeInclusive<usize>,
+    /// Cap on path chain length explored in each direction.
+    pub max_walk: usize,
+    pub enable_fdt: bool,
+    pub enable_ffmt: bool,
+}
+
+impl Default for DiscoveryOptions {
+    fn default() -> Self {
+        DiscoveryOptions {
+            depth_partitions: 2..=25,
+            row_partitions: 2..=25,
+            grid_sizes: 2..=5,
+            max_walk: 16,
+            enable_fdt: true,
+            enable_ffmt: true,
+        }
+    }
+}
+
+/// The chain of single-consumer ops around a tensor: `up` runs from the
+/// producer backwards, `down` from the consumer forwards.
+struct Chain {
+    /// Ops upstream of the critical buffer, nearest first (`up[0]`
+    /// produces the critical buffer).
+    up: Vec<OpId>,
+    /// Ops downstream, nearest first (`down[0]` consumes it).
+    down: Vec<OpId>,
+}
+
+/// Walk the single-consumer chain around `critical`.
+fn chain_around(g: &Graph, critical: TensorId, max_walk: usize) -> Option<Chain> {
+    let producers = g.producers();
+    let consumers = g.consumers();
+
+    let mut up = Vec::new();
+    let mut t = critical;
+    while up.len() < max_walk {
+        let Some(p) = producers[t] else { break };
+        up.push(p);
+        let op = g.op(p);
+        let Some(ai) = activation_input(op) else { break };
+        let prev = op.inputs[ai];
+        // Chain link: the feeding buffer must have this op as its only
+        // consumer and must not be a model output read externally.
+        if consumers[prev].len() != 1 || g.outputs.contains(&prev) {
+            break;
+        }
+        // Model inputs terminate the walk (they cannot be tiled but can
+        // feed the path terminal).
+        if g.tensor(prev).kind == TensorKind::Input {
+            break;
+        }
+        t = prev;
+    }
+    if up.is_empty() {
+        return None;
+    }
+
+    let mut down = Vec::new();
+    let mut t = critical;
+    while down.len() < max_walk {
+        if g.outputs.contains(&t) || consumers[t].len() != 1 {
+            break;
+        }
+        let c = consumers[t][0];
+        let op = g.op(c);
+        // Multi-activation-input ops (Add/Mul/Concat) break the chain.
+        if activation_input(op).is_none() {
+            break;
+        }
+        down.push(c);
+        t = op.output;
+    }
+    if down.is_empty() {
+        return None;
+    }
+    Some(Chain { up, down })
+}
+
+/// Buffer size (bytes) of an op's activation input.
+fn input_bytes(g: &Graph, op: OpId) -> usize {
+    let o = g.op(op);
+    let ai = activation_input(o).unwrap_or(0);
+    g.tensor(o.inputs[ai]).bytes()
+}
+
+/// Buffer size (bytes) of an op's output.
+fn output_bytes(g: &Graph, op: OpId) -> usize {
+    g.tensor(g.op(op).output).bytes()
+}
+
+/// Discover tiling configurations for `critical`.
+pub fn discover(g: &Graph, critical: TensorId, opts: &DiscoveryOptions) -> Vec<PathConfig> {
+    let Some(chain) = chain_around(g, critical, opts.max_walk) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    if opts.enable_fdt {
+        discover_depth(g, critical, &chain, opts, &mut out);
+    }
+    if opts.enable_ffmt {
+        discover_fm(g, critical, &chain, opts, &mut out);
+    }
+    out
+}
+
+/// FDT proposals (PD_D).
+fn discover_depth(
+    g: &Graph,
+    critical: TensorId,
+    chain: &Chain,
+    opts: &DiscoveryOptions,
+    out: &mut Vec<PathConfig>,
+) {
+    // Upward segment: contiguous PART ops; optionally capped by a
+    // Fan-Out-capable op.
+    let mut up_parts: Vec<OpId> = Vec::new();
+    let mut fan_out: Option<OpId> = None;
+    for &o in &chain.up {
+        match depth_role(g, g.op(o)) {
+            DepthRole::Part => up_parts.push(o),
+            DepthRole::Full { fan_out: true, .. } => {
+                fan_out = Some(o);
+                break;
+            }
+            _ => break,
+        }
+    }
+    // Downward: contiguous PART ops; optionally capped by a Fan-In.
+    let mut down_parts: Vec<OpId> = Vec::new();
+    let mut fan_in: Option<OpId> = None;
+    for &o in &chain.down {
+        match depth_role(g, g.op(o)) {
+            DepthRole::Part => down_parts.push(o),
+            DepthRole::Full { fan_in: true, .. } => {
+                fan_in = Some(o);
+                break;
+            }
+            _ => break,
+        }
+    }
+
+    // Start options. Explicit SPLIT: the PART op with the smallest input
+    // buffer (paper's terminal-selection rule). Implicit: the Fan-Out op.
+    let mut starts: Vec<(TerminalMode, Vec<OpId>)> = Vec::new();
+    if let Some(fo) = fan_out {
+        // up_parts are nearest-first; path order is topmost-first: the
+        // fan-out op, then the PART ops down to the critical buffer.
+        let mut path_up = vec![fo];
+        path_up.extend(up_parts.iter().rev().copied());
+        starts.push((TerminalMode::Implicit, path_up));
+    }
+    if !up_parts.is_empty() {
+        // Choose the start op minimizing its input buffer size; on ties
+        // prefer the topmost op (longest path — more buffers tiled).
+        let pos = (0..up_parts.len())
+            .max_by_key(|&i| (std::cmp::Reverse(input_bytes(g, up_parts[i])), i))
+            .unwrap();
+        let mut path_up: Vec<OpId> = up_parts[..=pos].to_vec();
+        path_up.reverse();
+        starts.push((TerminalMode::Explicit, path_up.clone()));
+        // Keep the full PART extension too when the trim shortened it.
+        if pos + 1 < up_parts.len() {
+            let mut full: Vec<OpId> = up_parts.clone();
+            full.reverse();
+            starts.push((TerminalMode::Explicit, full));
+        }
+    }
+
+    // End options: explicit CONCAT at the smallest-output op (ties →
+    // deepest, so intra-path buffers get tiled), the full PART extension,
+    // the Fan-In variant, and — "one version of the path without FDT
+    // Fan-In is kept" — the degenerate CONCAT *at* the critical buffer
+    // (its interior upstream buffers still get split).
+    let mut ends: Vec<(TerminalMode, Vec<OpId>)> = Vec::new();
+    if !down_parts.is_empty() {
+        let pos = (0..down_parts.len())
+            .max_by_key(|&i| (std::cmp::Reverse(output_bytes(g, down_parts[i])), i))
+            .unwrap();
+        ends.push((TerminalMode::Explicit, down_parts[..=pos].to_vec()));
+        if pos + 1 < down_parts.len() {
+            ends.push((TerminalMode::Explicit, down_parts.clone()));
+        }
+    }
+    if let Some(fi) = fan_in {
+        let mut path_down = down_parts.clone();
+        path_down.push(fi);
+        ends.push((TerminalMode::Implicit, path_down));
+    }
+    // Paper §4.3: "If no such operation could be determined before and
+    // after the critical buffer, the path is discarded." A path with no
+    // tileable op on one side cannot shrink the critical buffer.
+    if down_parts.is_empty() && fan_in.is_none() {
+        return;
+    }
+    ends.push((TerminalMode::Explicit, Vec::new())); // concat at the buffer
+
+    if starts.is_empty() {
+        return;
+    }
+
+    let c = *g.tensor(critical).shape.last().unwrap();
+    for (smode, sops) in &starts {
+        for (emode, eops) in &ends {
+            let mut ops = sops.clone();
+            ops.extend(eops.iter().copied());
+            if ops.is_empty() {
+                continue;
+            }
+            for n in opts.depth_partitions.clone() {
+                if n > c {
+                    break;
+                }
+                out.push(PathConfig {
+                    ops: ops.clone(),
+                    spec: PartitionSpec::Depth(n),
+                    start: *smode,
+                    end: *emode,
+                });
+            }
+        }
+    }
+}
+
+/// FFMT proposals (PD_FM).
+fn discover_fm(
+    g: &Graph,
+    critical: TensorId,
+    chain: &Chain,
+    opts: &DiscoveryOptions,
+    out: &mut Vec<PathConfig>,
+) {
+    if g.tensor(critical).shape.len() != 3 {
+        return;
+    }
+    // Upward/downward tileable segments, with early-stop cut points
+    // before each halo-overlapping op.
+    let mut up_ops: Vec<OpId> = Vec::new();
+    let mut up_cuts: Vec<usize> = Vec::new(); // lengths at which a variant stops
+    for &o in &chain.up {
+        match fm_role(g, g.op(o)) {
+            FmRole::Tile { overlap } => {
+                if overlap && !up_ops.is_empty() {
+                    up_cuts.push(up_ops.len());
+                }
+                up_ops.push(o);
+            }
+            FmRole::Barrier => break,
+        }
+    }
+    up_cuts.push(up_ops.len());
+    let mut down_ops: Vec<OpId> = Vec::new();
+    let mut down_cuts: Vec<usize> = Vec::new();
+    for &o in &chain.down {
+        match fm_role(g, g.op(o)) {
+            FmRole::Tile { overlap } => {
+                if overlap {
+                    down_cuts.push(down_ops.len());
+                }
+                down_ops.push(o);
+            }
+            FmRole::Barrier => break,
+        }
+    }
+    down_cuts.push(down_ops.len());
+
+    if up_ops.is_empty() || down_ops.is_empty() {
+        return;
+    }
+
+    let mut push_variant = |up_len: usize, down_len: usize| {
+        if up_len == 0 || down_len == 0 {
+            return;
+        }
+        let seg_up = &up_ops[..up_len];
+        let seg_down = &down_ops[..down_len];
+        // Terminal trim by buffer size (§4.3).
+        let sbest = seg_up.iter().copied().min_by_key(|&o| input_bytes(g, o)).unwrap();
+        let spos = seg_up.iter().position(|&o| o == sbest).unwrap();
+        let ebest = seg_down.iter().copied().min_by_key(|&o| output_bytes(g, o)).unwrap();
+        let epos = seg_down.iter().position(|&o| o == ebest).unwrap();
+        let mut ops: Vec<OpId> = seg_up[..=spos].to_vec();
+        ops.reverse();
+        ops.extend(seg_down[..=epos].iter().copied());
+        // Output spatial size of the last op bounds the partition count.
+        let last_shape = g.tensor(g.op(*ops.last().unwrap()).output).shape.clone();
+        if last_shape.len() != 3 {
+            return;
+        }
+        for n in opts.row_partitions.clone() {
+            if n > last_shape[0] {
+                break;
+            }
+            out.push(PathConfig {
+                ops: ops.clone(),
+                spec: PartitionSpec::Rows(n),
+                start: TerminalMode::Explicit,
+                end: TerminalMode::Explicit,
+            });
+        }
+        for n in opts.grid_sizes.clone() {
+            if n > last_shape[0] || n > last_shape[1] {
+                break;
+            }
+            out.push(PathConfig {
+                ops: ops.clone(),
+                spec: PartitionSpec::Grid(n, n),
+                start: TerminalMode::Explicit,
+                end: TerminalMode::Explicit,
+            });
+        }
+    };
+
+    // Longest path plus early-stop variants (deduplicated pairs).
+    let mut seen: Vec<(usize, usize)> = Vec::new();
+    for &ul in &up_cuts {
+        for &dl in &down_cuts {
+            if !seen.contains(&(ul, dl)) {
+                seen.push((ul, dl));
+                push_variant(ul, dl);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ActKind, DType, GraphBuilder, OpKind, Padding};
+
+    /// KWS-like tail: conv stack ending in a 1x1 feature map — FFMT
+    /// cannot apply, FDT must find fan-out/fan-in pairs.
+    #[test]
+    fn fdt_found_where_ffmt_impossible() {
+        let mut b = GraphBuilder::new("kwslike");
+        let x = b.input("x", vec![1, 1, 64], DType::I8);
+        let y = b.conv2d(x, 128, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+        let y = b.dwconv(y, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+        let z = b.conv2d(y, 12, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+        let g = b.finish(vec![z]);
+        // Critical buffer: the 128-channel intermediate (relu output of
+        // first conv block).
+        let critical = g.op(2).output; // conv, bias, relu -> relu output
+        let cfgs = discover(&g, critical, &DiscoveryOptions::default());
+        assert!(!cfgs.is_empty());
+        assert!(cfgs.iter().all(|c| c.spec.is_depth()), "1x1 maps: depth only");
+        // Must include a fan-out -> fan-in config.
+        assert!(cfgs
+            .iter()
+            .any(|c| c.start == TerminalMode::Implicit && c.end == TerminalMode::Implicit));
+        // And the paper's "without Fan-In" variant.
+        assert!(cfgs
+            .iter()
+            .any(|c| c.start == TerminalMode::Implicit && c.end == TerminalMode::Explicit));
+    }
+
+    /// TXT-like: gather -> mean -> dense. Only FDT applies.
+    #[test]
+    fn txt_embedding_path_found() {
+        let mut b = GraphBuilder::new("txtlike");
+        let idx = b.input("tokens", vec![64], DType::I32);
+        let e = b.embedding(idx, 1000, 32);
+        let m = b.op(OpKind::ReduceMean { axis: 0, keepdims: false }, vec![e]);
+        let d = b.dense_act(m, 2, ActKind::Sigmoid);
+        let g = b.finish(vec![d]);
+        let critical = g.op(0).output; // gather output [64, 32]
+        let cfgs = discover(&g, critical, &DiscoveryOptions::default());
+        assert!(!cfgs.is_empty());
+        assert!(cfgs.iter().all(|c| c.spec.is_depth()));
+        // gather fan-out, mean PART, dense fan-in.
+        let full = cfgs
+            .iter()
+            .find(|c| c.start == TerminalMode::Implicit && c.end == TerminalMode::Implicit)
+            .expect("gather->mean->dense fan-in path");
+        assert_eq!(full.ops.len(), 3);
+    }
+
+    /// CNN with large feature maps: both families must appear.
+    #[test]
+    fn cnn_offers_both_families() {
+        let mut b = GraphBuilder::new("cnn");
+        let x = b.input("x", vec![32, 32, 3], DType::I8);
+        let y = b.conv2d(x, 16, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+        let z = b.conv2d(y, 16, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+        let w = b.conv2d(z, 8, (3, 3), (2, 2), Padding::Same, ActKind::Relu);
+        let g = b.finish(vec![w]);
+        let critical = g.op(2).output;
+        let cfgs = discover(&g, critical, &DiscoveryOptions::default());
+        assert!(cfgs.iter().any(|c| c.spec.is_depth()));
+        assert!(cfgs.iter().any(|c| matches!(c.spec, PartitionSpec::Rows(_))));
+        assert!(cfgs.iter().any(|c| matches!(c.spec, PartitionSpec::Grid(_, _))));
+    }
+
+    /// Softmax blocks discovery entirely.
+    #[test]
+    fn barrier_stops_discovery() {
+        let mut b = GraphBuilder::new("bar");
+        let x = b.input("x", vec![16], DType::I8);
+        let s = b.op(OpKind::Softmax, vec![x]);
+        let d = b.dense_act(s, 4, ActKind::Identity);
+        let g = b.finish(vec![d]);
+        let critical = g.op(0).output; // softmax output
+        let cfgs = discover(&g, critical, &DiscoveryOptions::default());
+        // Path up ends at softmax (barrier), down at dense fan-in: the
+        // up side has no PART and no fan-out -> discarded.
+        assert!(cfgs.is_empty());
+    }
+}

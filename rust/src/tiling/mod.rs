@@ -1,0 +1,232 @@
+//! Fused tiling: configurations, operator roles and path discovery.
+//!
+//! A *path* (§3) is a chain of operations tiled together so that the
+//! intermediate buffers inside it are split into independently-computed
+//! partitions. Two tiling families exist:
+//!
+//! * **FDT** (`PD_D`) — partitions along the channel/depth dimension.
+//!   The path may start with an *FDT Fan-Out* (a conv/dense/gather whose
+//!   output channels are split implicitly) or an explicit `SPLIT`, and
+//!   may end with an *FDT Fan-In* (a conv/dense over a channel slice
+//!   producing full-size partial sums recombined by a `Merge`) or an
+//!   explicit `CONCAT`. No recomputation ⇒ zero MAC overhead.
+//! * **FFMT** (`PD_FM`) — partitions along the spatial (feature-map)
+//!   dimensions, always with explicit `SPLIT`/`CONCAT`. Kernels larger
+//!   than 1x1 create halo overlap that accumulates over the path and
+//!   shows up as MAC overhead.
+
+pub mod discovery;
+pub mod overlap;
+
+use crate::graph::{Graph, Op, OpId, OpKind};
+
+/// How the tiled region is partitioned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionSpec {
+    /// FDT: split the channel (last) axis into `n` near-equal parts.
+    Depth(usize),
+    /// FFMT: split the spatial H axis into `rows` bands.
+    Rows(usize),
+    /// FFMT: split H and W into a `h x w` grid (paper: 2x2 … 5x5).
+    Grid(usize, usize),
+}
+
+impl PartitionSpec {
+    /// Number of partitions.
+    pub fn count(&self) -> usize {
+        match *self {
+            PartitionSpec::Depth(n) | PartitionSpec::Rows(n) => n,
+            PartitionSpec::Grid(h, w) => h * w,
+        }
+    }
+
+    pub fn is_depth(&self) -> bool {
+        matches!(self, PartitionSpec::Depth(_))
+    }
+}
+
+/// How a path terminal is realized (§4.3, Fig 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TerminalMode {
+    /// Insert an explicit SPLIT (slices) / CONCAT operation.
+    Explicit,
+    /// FDT only: the terminal op itself splits (Fan-Out) or merges via
+    /// partial sums (Fan-In + Merge).
+    Implicit,
+}
+
+/// A fully-specified tiling configuration for one path.
+#[derive(Debug, Clone)]
+pub struct PathConfig {
+    /// Contiguous chain of primitive ops, in dataflow order. With
+    /// `start == Implicit` the first op is the FDT Fan-Out; with
+    /// `end == Implicit` the last op is the FDT Fan-In.
+    pub ops: Vec<OpId>,
+    pub spec: PartitionSpec,
+    pub start: TerminalMode,
+    pub end: TerminalMode,
+}
+
+impl PathConfig {
+    /// Short description for logs/reports.
+    pub fn describe(&self, g: &Graph) -> String {
+        let names: Vec<&str> = self.ops.iter().map(|&o| g.op(o).name.as_str()).collect();
+        let spec = match self.spec {
+            PartitionSpec::Depth(n) => format!("FDT x{n}"),
+            PartitionSpec::Rows(n) => format!("FFMT rows x{n}"),
+            PartitionSpec::Grid(h, w) => format!("FFMT grid {h}x{w}"),
+        };
+        format!(
+            "{spec} [{}{}{}]",
+            if self.start == TerminalMode::Implicit { "fan-out: " } else { "split: " },
+            names.join(" -> "),
+            if self.end == TerminalMode::Implicit { " :fan-in" } else { " :concat" }
+        )
+    }
+}
+
+/// Role an op can play on an FDT (depth-partitioned) path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DepthRole {
+    /// Output channels depend on all input channels: can implicitly split
+    /// its output (Fan-Out) and/or its input (Fan-In).
+    Full { fan_out: bool, fan_in: bool },
+    /// Channelwise-independent: partitions pass through (PART block).
+    Part,
+    /// Incompatible with depth tiling (softmax, slice, concat, …).
+    Barrier,
+}
+
+/// Classify `op` for FDT paths.
+pub fn depth_role(g: &Graph, op: &Op) -> DepthRole {
+    match &op.kind {
+        OpKind::Conv2d { .. } | OpKind::Dense => DepthRole::Full { fan_out: true, fan_in: true },
+        // Embedding lookup: the table's embedding axis splits like output
+        // channels; there is no channel-summed input, so never a Fan-In.
+        OpKind::Gather => DepthRole::Full { fan_out: true, fan_in: false },
+        OpKind::DepthwiseConv2d { .. }
+        | OpKind::BiasAdd
+        | OpKind::Activation(_)
+        | OpKind::MaxPool2d { .. }
+        | OpKind::AvgPool2d { .. }
+        | OpKind::GlobalAvgPool => DepthRole::Part,
+        // Mean over a non-channel axis keeps channels independent.
+        OpKind::ReduceMean { axis, .. } => {
+            let rank = g.tensor(op.inputs[0]).shape.len();
+            if *axis + 1 == rank {
+                DepthRole::Barrier
+            } else {
+                DepthRole::Part
+            }
+        }
+        // Zero-padding passes through if the channel axis is unpadded.
+        OpKind::Pad { pads } => {
+            if pads.last().map(|&(b, a)| b == 0 && a == 0).unwrap_or(false) {
+                DepthRole::Part
+            } else {
+                DepthRole::Barrier
+            }
+        }
+        OpKind::Add
+        | OpKind::Mul
+        | OpKind::Reshape { .. }
+        | OpKind::Softmax
+        | OpKind::Slice { .. }
+        | OpKind::Concat { .. }
+        | OpKind::Merge { .. } => DepthRole::Barrier,
+    }
+}
+
+/// Role an op can play on an FFMT (feature-map) path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FmRole {
+    /// Spatially local; `overlap` = true when the op's window exceeds its
+    /// stride (kernel > 1), accumulating halo.
+    Tile { overlap: bool },
+    Barrier,
+}
+
+/// Classify `op` for FFMT paths.
+pub fn fm_role(g: &Graph, op: &Op) -> FmRole {
+    // FFMT applies to rank-3 spatial tensors only.
+    let spatial = |t: crate::graph::TensorId| g.tensor(t).shape.len() == 3;
+    match &op.kind {
+        OpKind::Conv2d { .. } | OpKind::DepthwiseConv2d { .. } => {
+            let w = &g.tensor(op.inputs[1]).shape;
+            FmRole::Tile { overlap: w[0] > 1 || w[1] > 1 }
+        }
+        OpKind::MaxPool2d { ksize, stride, .. } | OpKind::AvgPool2d { ksize, stride, .. } => {
+            FmRole::Tile { overlap: ksize.0 > stride.0 || ksize.1 > stride.1 }
+        }
+        OpKind::BiasAdd | OpKind::Activation(_) => {
+            if spatial(op.inputs[0]) {
+                FmRole::Tile { overlap: false }
+            } else {
+                FmRole::Barrier
+            }
+        }
+        _ => FmRole::Barrier,
+    }
+}
+
+/// The index of the *activation* input of an op (weights excluded); the
+/// dataflow predecessor followed during path walking. `None` for
+/// multi-activation-input ops (path barriers anyway).
+pub fn activation_input(op: &Op) -> Option<usize> {
+    match &op.kind {
+        OpKind::Gather => Some(1), // [table, indices] — indices flow
+        OpKind::Add | OpKind::Mul | OpKind::Concat { .. } | OpKind::Merge { .. } => None,
+        _ => Some(0),
+    }
+}
+
+/// Split `c` channels into `n` near-equal `[begin, end)` ranges.
+pub fn depth_ranges(c: usize, n: usize) -> Vec<(usize, usize)> {
+    assert!(n >= 1 && n <= c, "cannot split {c} channels into {n} partitions");
+    let base = c / n;
+    let extra = c % n;
+    let mut out = Vec::with_capacity(n);
+    let mut at = 0;
+    for i in 0..n {
+        let len = base + usize::from(i < extra);
+        out.push((at, at + len));
+        at += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ActKind, DType, GraphBuilder, Padding};
+
+    #[test]
+    fn depth_ranges_cover_exactly() {
+        for c in [7usize, 8, 64, 100] {
+            for n in 2..=7.min(c) {
+                let r = depth_ranges(c, n);
+                assert_eq!(r.len(), n);
+                assert_eq!(r[0].0, 0);
+                assert_eq!(r.last().unwrap().1, c);
+                for w in r.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn roles_match_paper_classification() {
+        let mut b = GraphBuilder::new("r");
+        let x = b.input("x", vec![8, 8, 4], DType::I8);
+        let y = b.conv2d(x, 8, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+        let z = b.dwconv(y, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+        let s = b.op(crate::graph::OpKind::Softmax, vec![z]);
+        let g = b.finish(vec![s]);
+        // op 0 = conv, 3 = dwconv, last = softmax
+        assert_eq!(depth_role(&g, g.op(0)), DepthRole::Full { fan_out: true, fan_in: true });
+        assert_eq!(depth_role(&g, g.op(3)), DepthRole::Part);
+        assert_eq!(depth_role(&g, g.op(g.ops.len() - 1)), DepthRole::Barrier);
+        assert_eq!(fm_role(&g, g.op(0)), FmRole::Tile { overlap: true });
+    }
+}

@@ -1,0 +1,198 @@
+//! FFMT halo (overlap) math: backward range propagation through spatial
+//! operations, used both by the graph transform (to size the tiles) and
+//! by the Fig-1 quantification bench (overlap growth vs. path depth).
+
+use crate::graph::{infer_shape, Graph, Op, OpKind, Padding};
+
+/// A half-open index range along one spatial axis.
+pub type Range1 = (usize, usize);
+
+/// A 2-D spatial output region `(h, w)` of a tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Region {
+    pub h: Range1,
+    pub w: Range1,
+}
+
+impl Region {
+    pub fn full(shape: &[usize]) -> Region {
+        Region { h: (0, shape[0]), w: (0, shape[1]) }
+    }
+    pub fn area(&self) -> usize {
+        (self.h.1 - self.h.0) * (self.w.1 - self.w.0)
+    }
+}
+
+/// Per-partition explicit padding for a windowed op at tile borders
+/// (interior boundaries get zero padding; outer borders keep the
+/// original SAME padding).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TilePad {
+    pub h: (usize, usize),
+    pub w: (usize, usize),
+}
+
+/// Input region and border padding required to produce `out` rows/cols of
+/// a windowed op with kernel `k`, stride `s` and `padding` over an input
+/// of spatial size `in_size`.
+fn window_back(
+    out: Range1,
+    k: usize,
+    s: usize,
+    padding: Padding,
+    axis: usize,
+    in_size: usize,
+) -> (Range1, (usize, usize)) {
+    let pad_before = match padding {
+        Padding::Valid => 0,
+        Padding::Same => {
+            // Recompute TF SAME padding for the *full* op.
+            let out_full = in_size.div_ceil(s);
+            let total = ((out_full - 1) * s + k).saturating_sub(in_size);
+            total / 2
+        }
+        Padding::Explicit(h, w) => {
+            if axis == 0 {
+                h.0
+            } else {
+                w.0
+            }
+        }
+    };
+    // Unclipped input extent for output rows [a, b).
+    let lo = out.0 as isize * s as isize - pad_before as isize;
+    let hi = (out.1 as isize - 1) * s as isize - pad_before as isize + k as isize;
+    let clipped_lo = lo.max(0) as usize;
+    let clipped_hi = (hi.min(in_size as isize)) as usize;
+    let pad_lo = (-lo).max(0) as usize;
+    let pad_hi = (hi - in_size as isize).max(0) as usize;
+    ((clipped_lo, clipped_hi), (pad_lo, pad_hi))
+}
+
+/// Given the output region a tile must produce for `op`, compute the
+/// input region it needs and the explicit border padding. Returns `None`
+/// for ops that are not FFMT-tileable.
+pub fn input_region(g: &Graph, op: &Op, out: Region) -> Option<(Region, TilePad)> {
+    let in_shape = &g.tensor(op.inputs[0]).shape;
+    match &op.kind {
+        OpKind::Conv2d { stride, padding } | OpKind::DepthwiseConv2d { stride, padding } => {
+            let w = &g.tensor(op.inputs[1]).shape;
+            let (h, ph) = window_back(out.h, w[0], stride.0, *padding, 0, in_shape[0]);
+            let (wr, pw) = window_back(out.w, w[1], stride.1, *padding, 1, in_shape[1]);
+            Some((Region { h, w: wr }, TilePad { h: ph, w: pw }))
+        }
+        OpKind::MaxPool2d { ksize, stride, padding } | OpKind::AvgPool2d { ksize, stride, padding } => {
+            let (h, ph) = window_back(out.h, ksize.0, stride.0, *padding, 0, in_shape[0]);
+            let (wr, pw) = window_back(out.w, ksize.1, stride.1, *padding, 1, in_shape[1]);
+            Some((Region { h, w: wr }, TilePad { h: ph, w: pw }))
+        }
+        OpKind::BiasAdd | OpKind::Activation(_) => Some((out, TilePad::default())),
+        _ => None,
+    }
+}
+
+/// Split `[0, size)` into `n` near-equal bands.
+pub fn bands(size: usize, n: usize) -> Vec<Range1> {
+    crate::tiling::depth_ranges(size, n)
+}
+
+/// Statistics of halo overlap for one FFMT path and tiling (used for the
+/// quantified Fig-1 comparison).
+#[derive(Debug, Clone, Default)]
+pub struct OverlapStats {
+    /// Sum over ops of (sum of tile input areas − full input area), in
+    /// elements.
+    pub overlap_elems: usize,
+    /// Total input elements read by tiles (incl. overlap).
+    pub tiled_elems: usize,
+    /// Input elements of the untiled path ops.
+    pub full_elems: usize,
+}
+
+/// Walk a path (dataflow-ordered op ids) backward from each tile's final
+/// output region and accumulate halo overlap. The final op's output
+/// regions are the given bands/grid over its output shape.
+pub fn path_overlap(g: &Graph, path: &[crate::graph::OpId], tiles: &[Region]) -> Option<OverlapStats> {
+    let mut stats = OverlapStats::default();
+    // Per-tile current required output region of the op being visited.
+    let mut regions: Vec<Region> = tiles.to_vec();
+    for &oid in path.iter().rev() {
+        let op = g.op(oid);
+        let in_shape = &g.tensor(op.inputs[0]).shape;
+        let full: usize = in_shape[0] * in_shape[1];
+        let mut tiled = 0usize;
+        for r in regions.iter_mut() {
+            let (inr, _) = input_region(g, op, *r)?;
+            tiled += inr.area();
+            *r = inr;
+        }
+        stats.full_elems += full;
+        stats.tiled_elems += tiled;
+        stats.overlap_elems += tiled.saturating_sub(full);
+        // Sanity: the output of shape inference matches the graph.
+        debug_assert_eq!(infer_shape(g, op).map(|i| i.shape), Ok(g.tensor(op.output).shape.clone()));
+    }
+    Some(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ActKind, DType, GraphBuilder, Padding};
+
+    #[test]
+    fn window_back_valid_conv() {
+        // VALID 3x3 stride 1 over 10 rows: output rows [0,4) need input
+        // rows [0,6).
+        let ((lo, hi), (pl, ph)) = window_back((0, 4), 3, 1, Padding::Valid, 0, 10);
+        assert_eq!((lo, hi), (0, 6));
+        assert_eq!((pl, ph), (0, 0));
+    }
+
+    #[test]
+    fn window_back_same_conv_borders() {
+        // SAME 3x3 stride 1 over 8 rows: pad 1 top/bottom.
+        // Top band [0,4): input [0,5), pad (1,0). Bottom band [4,8):
+        // input [3,8), pad (0,1).
+        let ((lo, hi), (pl, ph)) = window_back((0, 4), 3, 1, Padding::Same, 0, 8);
+        assert_eq!((lo, hi), (0, 5));
+        assert_eq!((pl, ph), (1, 0));
+        let ((lo, hi), (pl, ph)) = window_back((4, 8), 3, 1, Padding::Same, 0, 8);
+        assert_eq!((lo, hi), (3, 8));
+        assert_eq!((pl, ph), (0, 1));
+    }
+
+    #[test]
+    fn overlap_accumulates_over_conv_chain() {
+        // Two SAME 3x3 convs over 16x16; 2 row-bands. Overlap grows by
+        // 2 rows (1 per boundary side) per conv.
+        let mut b = GraphBuilder::new("o");
+        let x = b.input("x", vec![16, 16, 4], DType::I8);
+        let w = b.weight("w1", vec![3, 3, 4, 4], DType::I8);
+        let _y = b.op(
+            crate::graph::OpKind::Conv2d { stride: (1, 1), padding: Padding::Same },
+            vec![x, w],
+        );
+        let g = b.graph().clone();
+        let tiles: Vec<Region> = bands(16, 2)
+            .into_iter()
+            .map(|h| Region { h, w: (0, 16) })
+            .collect();
+        let stats = path_overlap(&g, &[0], &tiles).unwrap();
+        // Band [0,8) needs input [0,9); band [8,16) needs [7,16):
+        // 9*16 + 9*16 = 288 vs 256 full -> 32 overlap elems.
+        assert_eq!(stats.overlap_elems, 32);
+        let one = stats.overlap_elems;
+
+        // Chain of 2 convs: the upstream conv's bands widen.
+        let mut b2 = GraphBuilder::new("o2");
+        let x2 = b2.input("x", vec![16, 16, 4], DType::I8);
+        let y2 = b2.conv2d(x2, 4, (3, 3), (1, 1), Padding::Same, ActKind::Identity);
+        let _z2 = b2.conv2d(y2, 4, (3, 3), (1, 1), Padding::Same, ActKind::Identity);
+        let g2 = b2.graph().clone();
+        // path = conv1(+bias op ids 0,1), conv2(+bias 2,3): conv op ids
+        // are 0 and 2.
+        let stats2 = path_overlap(&g2, &[0, 1, 2, 3], &tiles).unwrap();
+        assert!(stats2.overlap_elems > 2 * one, "halo must accumulate: {stats2:?}");
+    }
+}

@@ -1,0 +1,142 @@
+//! Lazy graph rewriter: builds a new [`Graph`] from an old one, copying
+//! tensors on demand and letting the caller substitute or insert ops.
+
+use super::slice::{fan_in_dense_rows, slice_axis};
+use crate::graph::{infer_shape, DType, Graph, Op, OpKind, Tensor, TensorId, TensorKind};
+
+/// Graph rewriter; see module docs.
+pub struct Editor<'g> {
+    old: &'g Graph,
+    new: Graph,
+    /// old tensor id -> new tensor id (lazily populated).
+    tmap: Vec<Option<TensorId>>,
+}
+
+impl<'g> Editor<'g> {
+    pub fn new(old: &'g Graph) -> Self {
+        Editor {
+            old,
+            new: Graph::new(old.name.clone()),
+            tmap: vec![None; old.tensors.len()],
+        }
+    }
+
+    /// Map an old tensor into the new graph (copying it on first use).
+    pub fn map_tensor(&mut self, old_id: TensorId) -> TensorId {
+        if let Some(id) = self.tmap[old_id] {
+            return id;
+        }
+        let t = self.old.tensor(old_id);
+        let id = self.push_tensor(t.name.clone(), t.shape.clone(), t.dtype, t.kind, t.data.clone());
+        if t.kind == TensorKind::Input {
+            self.new.inputs.push(id);
+        }
+        self.tmap[old_id] = Some(id);
+        id
+    }
+
+    /// Redirect future references of `old_id` to an existing new tensor.
+    pub fn alias(&mut self, old_id: TensorId, new_id: TensorId) {
+        self.tmap[old_id] = Some(new_id);
+    }
+
+    fn push_tensor(
+        &mut self,
+        name: String,
+        shape: Vec<usize>,
+        dtype: DType,
+        kind: TensorKind,
+        data: Option<Vec<f32>>,
+    ) -> TensorId {
+        let id = self.new.tensors.len();
+        self.new.tensors.push(Tensor { id, name, shape, dtype, kind, data });
+        id
+    }
+
+    /// Add a weight sliced `[c0, c1)` along `axis` (FDT weight splitting).
+    pub fn add_sliced_weight(&mut self, w: &Tensor, axis: usize, c0: usize, c1: usize, p: usize) -> TensorId {
+        let (shape, data) = slice_axis(&w.shape, w.data.as_deref(), axis, c0, c1);
+        self.push_tensor(format!("{}_p{p}", w.name), shape, w.dtype, TensorKind::Weight, data)
+    }
+
+    /// Add a dense fan-in weight: the rows of `w` whose flattened input
+    /// index has channel (last-axis) coordinate in `[c0, c1)`.
+    pub fn add_fan_in_dense_weight(
+        &mut self,
+        w: &Tensor,
+        in_shape: &[usize],
+        c0: usize,
+        c1: usize,
+        p: usize,
+    ) -> TensorId {
+        let (shape, data) = fan_in_dense_rows(&w.shape, w.data.as_deref(), in_shape, c0, c1);
+        self.push_tensor(format!("{}_p{p}", w.name), shape, w.dtype, TensorKind::Weight, data)
+    }
+
+    /// Shape of a tensor in the new graph.
+    pub fn shape_of(&self, id: TensorId) -> &[usize] {
+        &self.new.tensors[id].shape
+    }
+
+    /// Append a new op; inputs are *new-graph* tensor ids. Creates the
+    /// output tensor via shape inference; `dtype` overrides the inferred
+    /// element type (e.g. i32 fan-in partials).
+    pub fn emit_op(
+        &mut self,
+        name: String,
+        kind: OpKind,
+        inputs: Vec<TensorId>,
+        dtype: Option<DType>,
+        no_fuse: bool,
+    ) -> Result<TensorId, String> {
+        let id = self.new.ops.len();
+        let tmp = Op { id, name: name.clone(), kind: kind.clone(), inputs: inputs.clone(), output: 0, no_fuse };
+        let inferred = infer_shape(&self.new, &tmp).map_err(|e| format!("{name}: {e}"))?;
+        let out = self.push_tensor(
+            format!("{name}_out"),
+            inferred.shape,
+            dtype.unwrap_or(inferred.dtype),
+            TensorKind::Intermediate,
+            None,
+        );
+        self.new.ops.push(Op { id, name, kind, inputs, output: out, no_fuse });
+        Ok(out)
+    }
+
+    /// Copy an old op verbatim (inputs remapped, fresh output tensor that
+    /// keeps the old shape/dtype).
+    pub fn copy_op(&mut self, op: &Op) {
+        let inputs: Vec<TensorId> = op.inputs.iter().map(|&t| self.map_tensor(t)).collect();
+        let old_out = self.old.tensor(op.output);
+        let out = self.push_tensor(
+            old_out.name.clone(),
+            old_out.shape.clone(),
+            old_out.dtype,
+            TensorKind::Intermediate,
+            None,
+        );
+        self.tmap[op.output] = Some(out);
+        let id = self.new.ops.len();
+        self.new.ops.push(Op {
+            id,
+            name: op.name.clone(),
+            kind: op.kind.clone(),
+            inputs,
+            output: out,
+            no_fuse: op.no_fuse,
+        });
+    }
+
+    /// Finalize: wire up model outputs (mapping old output ids) and
+    /// return the new graph.
+    pub fn finish(mut self) -> Graph {
+        let outputs: Vec<TensorId> = self
+            .old
+            .outputs
+            .iter()
+            .map(|&t| self.tmap[t].expect("model output not produced by rewritten graph"))
+            .collect();
+        self.new.outputs = outputs;
+        self.new
+    }
+}

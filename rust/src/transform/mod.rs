@@ -1,0 +1,482 @@
+//! Automated graph transformation (§4.4): apply a [`PathConfig`] to a
+//! DNN graph, producing the tiled graph.
+//!
+//! * FDT Fan-Out replicates the conv/dense/gather once per partition with
+//!   its output-channel weight dimension sliced;
+//! * PART ops are replicated with per-partition parameters (depthwise
+//!   filters, biases) sliced along the channel axis;
+//! * FDT Fan-In replicates the conv/dense with its *input*-channel weight
+//!   dimension sliced, producing full-size 32-bit partial sums that a new
+//!   `Merge` op recombines (the original bias/activation ops downstream
+//!   stay in place and run once, after the merge);
+//! * FFMT slices the input into overlapping spatial tiles (halo), clips
+//!   SAME padding at interior boundaries via explicit per-tile padding,
+//!   and reassembles the output with `Concat`;
+//! * explicit `SPLIT`/`CONCAT` terminals are inserted where no implicit
+//!   fan-out/fan-in is used.
+
+mod editor;
+mod slice;
+
+pub use editor::Editor;
+
+use crate::graph::{DType, Graph, Op, OpKind, Padding, TensorId};
+use crate::tiling::overlap::{bands, input_region, Region, TilePad};
+use crate::tiling::{
+    activation_input, depth_ranges, depth_role, fm_role, DepthRole, FmRole, PartitionSpec,
+    PathConfig, TerminalMode,
+};
+
+/// Apply `cfg` to `g`, returning the transformed graph.
+pub fn apply_tiling(g: &Graph, cfg: &PathConfig) -> Result<Graph, String> {
+    validate_config(g, cfg)?;
+    let first = cfg.ops[0];
+    let path_set: Vec<bool> = {
+        let mut v = vec![false; g.ops.len()];
+        for &o in &cfg.ops {
+            v[o] = true;
+        }
+        v
+    };
+
+    let mut ed = Editor::new(g);
+    let post_old = g.op(*cfg.ops.last().unwrap()).output;
+
+    for oid in g.topo_order() {
+        if path_set[oid] {
+            if oid == first {
+                let post_new = match cfg.spec {
+                    PartitionSpec::Depth(n) => emit_depth(g, cfg, n, &mut ed)?,
+                    PartitionSpec::Rows(_) | PartitionSpec::Grid(_, _) => emit_fm(g, cfg, &mut ed)?,
+                };
+                // Future ops reading the old post buffer read the new one.
+                ed.alias(post_old, post_new);
+            }
+            continue; // other path ops are subsumed
+        }
+        ed.copy_op(g.op(oid));
+    }
+    let mut out = ed.finish();
+    out.name = g.name.clone();
+    out.validate().map_err(|e| format!("transformed graph invalid: {e}"))?;
+    Ok(out)
+}
+
+/// Structural checks before transforming.
+fn validate_config(g: &Graph, cfg: &PathConfig) -> Result<(), String> {
+    if cfg.ops.is_empty() {
+        return Err("empty path".into());
+    }
+    // Chain contiguity: each op's activation input is the previous output.
+    for w in cfg.ops.windows(2) {
+        let prev = g.op(w[0]);
+        let next = g.op(w[1]);
+        let ai = activation_input(next).ok_or_else(|| format!("{} cannot be on a path", next.name))?;
+        if next.inputs[ai] != prev.output {
+            return Err(format!("path not a chain: {} !-> {}", prev.name, next.name));
+        }
+    }
+    let n = cfg.spec.count();
+    if n < 2 {
+        return Err("need at least 2 partitions".into());
+    }
+    match cfg.spec {
+        PartitionSpec::Depth(nd) => {
+            for (i, &oid) in cfg.ops.iter().enumerate() {
+                let op = g.op(oid);
+                let role = depth_role(g, op);
+                let is_first = i == 0;
+                let is_last = i + 1 == cfg.ops.len();
+                match role {
+                    DepthRole::Full { fan_out, fan_in } => {
+                        if is_first && cfg.start == TerminalMode::Implicit {
+                            if !fan_out {
+                                return Err(format!("{} cannot fan out", op.name));
+                            }
+                        } else if is_last && cfg.end == TerminalMode::Implicit {
+                            if !fan_in {
+                                return Err(format!("{} cannot fan in", op.name));
+                            }
+                        } else {
+                            return Err(format!("{} needs all channels mid-path", op.name));
+                        }
+                    }
+                    DepthRole::Part => {
+                        if is_first && cfg.start == TerminalMode::Implicit
+                            || is_last && cfg.end == TerminalMode::Implicit
+                        {
+                            return Err(format!("{} cannot be an implicit terminal", op.name));
+                        }
+                    }
+                    DepthRole::Barrier => return Err(format!("{} blocks depth tiling", op.name)),
+                }
+            }
+            let c = tiled_channels(g, cfg);
+            if nd > c {
+                return Err(format!("{nd} partitions exceed {c} channels"));
+            }
+        }
+        PartitionSpec::Rows(nr) => {
+            fm_checks(g, cfg)?;
+            let h = g.tensor(g.op(*cfg.ops.last().unwrap()).output).shape[0];
+            if nr > h {
+                return Err(format!("{nr} row bands exceed {h} rows"));
+            }
+        }
+        PartitionSpec::Grid(nh, nw) => {
+            fm_checks(g, cfg)?;
+            let s = &g.tensor(g.op(*cfg.ops.last().unwrap()).output).shape;
+            if nh > s[0] || nw > s[1] {
+                return Err(format!("{nh}x{nw} grid exceeds {}x{}", s[0], s[1]));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn fm_checks(g: &Graph, cfg: &PathConfig) -> Result<(), String> {
+    if cfg.start == TerminalMode::Implicit || cfg.end == TerminalMode::Implicit {
+        return Err("FFMT terminals are always explicit".into());
+    }
+    for &oid in &cfg.ops {
+        let op = g.op(oid);
+        if fm_role(g, op) == FmRole::Barrier {
+            return Err(format!("{} blocks feature-map tiling", op.name));
+        }
+    }
+    Ok(())
+}
+
+/// Channel count of the tiled region (the last axis shared by the path).
+fn tiled_channels(g: &Graph, cfg: &PathConfig) -> usize {
+    let first = g.op(cfg.ops[0]);
+    if cfg.start == TerminalMode::Implicit {
+        // Fan-out: its output channels are what gets split.
+        *g.tensor(first.output).shape.last().unwrap()
+    } else {
+        let ai = activation_input(first).unwrap();
+        *g.tensor(first.inputs[ai]).shape.last().unwrap()
+    }
+}
+
+// ---------------------------------------------------------------------
+// FDT (depth) emission
+// ---------------------------------------------------------------------
+
+fn emit_depth(g: &Graph, cfg: &PathConfig, n: usize, ed: &mut Editor) -> Result<TensorId, String> {
+    let c = tiled_channels(g, cfg);
+    let ranges = depth_ranges(c, n);
+    let first_op = g.op(cfg.ops[0]);
+    let ai0 = activation_input(first_op).unwrap();
+    let pre_old = first_op.inputs[ai0];
+    let pre_new = ed.map_tensor(pre_old);
+
+    // Explicit SPLIT: one depthwise slice per partition.
+    let mut part_inputs: Vec<TensorId> = Vec::with_capacity(n);
+    if cfg.start == TerminalMode::Explicit {
+        let pre_shape = g.tensor(pre_old).shape.clone();
+        for (p, &(c0, c1)) in ranges.iter().enumerate() {
+            let mut begins = vec![0; pre_shape.len()];
+            let mut ends = pre_shape.clone();
+            *begins.last_mut().unwrap() = c0;
+            *ends.last_mut().unwrap() = c1;
+            let out = ed.emit_op(
+                format!("split_p{p}"),
+                OpKind::Slice { begins, ends },
+                vec![pre_new],
+                None,
+                false,
+            )?;
+            part_inputs.push(out);
+        }
+    } else {
+        part_inputs = vec![pre_new; n];
+    }
+
+    // Partition chains.
+    let mut part_outputs: Vec<TensorId> = Vec::with_capacity(n);
+    for (p, &(c0, c1)) in ranges.iter().enumerate() {
+        let mut cur = part_inputs[p];
+        for (i, &oid) in cfg.ops.iter().enumerate() {
+            let op = g.op(oid);
+            let is_first = i == 0;
+            let is_last = i + 1 == cfg.ops.len();
+            let fan_out = is_first && cfg.start == TerminalMode::Implicit;
+            let fan_in = is_last && cfg.end == TerminalMode::Implicit;
+            cur = emit_depth_op(g, ed, op, cur, (c0, c1), p, fan_out, fan_in)?;
+        }
+        part_outputs.push(cur);
+    }
+
+    // Terminal: merge partials or concat partitions.
+    let post_old = g.op(*cfg.ops.last().unwrap()).output;
+    let post_dtype = g.tensor(post_old).dtype;
+    let out = if cfg.end == TerminalMode::Implicit {
+        // The merge output is the in-place i32 accumulator the partials
+        // alias (see analysis::mem); requantization to the original
+        // dtype happens inside the downstream fused group.
+        let _ = post_dtype;
+        ed.emit_op(
+            "fdt_merge".to_string(),
+            OpKind::Merge { act: crate::graph::ActKind::Identity },
+            part_outputs,
+            Some(DType::I32),
+            true,
+        )?
+    } else {
+        let rank = g.tensor(post_old).shape.len();
+        ed.emit_op(
+            "fdt_concat".to_string(),
+            OpKind::Concat { axis: rank - 1 },
+            part_outputs,
+            Some(post_dtype),
+            true,
+        )?
+    };
+    let got = ed.shape_of(out).to_vec();
+    let want = g.tensor(post_old).shape.clone();
+    if got != want {
+        return Err(format!("depth tiling changed output shape: {got:?} vs {want:?}"));
+    }
+    Ok(out)
+}
+
+/// Emit one partition's copy of a path op (depth tiling).
+#[allow(clippy::too_many_arguments)]
+fn emit_depth_op(
+    g: &Graph,
+    ed: &mut Editor,
+    op: &Op,
+    cur: TensorId,
+    (c0, c1): (usize, usize),
+    p: usize,
+    fan_out: bool,
+    fan_in: bool,
+) -> Result<TensorId, String> {
+    let name = format!("{}_p{p}", op.name);
+    // The last op of a split path must not fuse with the CONCAT / Merge
+    // (§4.4) — mark it.
+    let no_fuse = fan_in;
+    match &op.kind {
+        OpKind::Conv2d { stride, padding } => {
+            let w_old = g.tensor(op.inputs[1]);
+            let w_new = if fan_out {
+                ed.add_sliced_weight(w_old, 3, c0, c1, p)
+            } else if fan_in {
+                ed.add_sliced_weight(w_old, 2, c0, c1, p)
+            } else {
+                return Err(format!("{} mid-path conv", op.name));
+            };
+            let dtype = if fan_in { Some(DType::I32) } else { None };
+            ed.emit_op(name, OpKind::Conv2d { stride: *stride, padding: *padding }, vec![cur, w_new], dtype, no_fuse)
+        }
+        OpKind::Dense => {
+            let w_old = g.tensor(op.inputs[1]);
+            if fan_out {
+                let w_new = ed.add_sliced_weight(w_old, 1, c0, c1, p);
+                ed.emit_op(name, OpKind::Dense, vec![cur, w_new], None, no_fuse)
+            } else if fan_in {
+                // Input rows of W corresponding to the channel slice. For
+                // rank-1 inputs this is a contiguous row range; for
+                // higher-rank inputs the rows are gathered (HWC
+                // flattening interleaves channels).
+                let in_shape = &g.tensor(op.inputs[0]).shape;
+                let w_new = ed.add_fan_in_dense_weight(w_old, in_shape, c0, c1, p);
+                ed.emit_op(name, OpKind::Dense, vec![cur, w_new], Some(DType::I32), no_fuse)
+            } else {
+                Err(format!("{} mid-path dense", op.name))
+            }
+        }
+        OpKind::Gather => {
+            // inputs: [table, indices]; `cur` carries the indices.
+            let t_old = g.tensor(op.inputs[0]);
+            let t_new = ed.add_sliced_weight(t_old, 1, c0, c1, p);
+            ed.emit_op(name, OpKind::Gather, vec![t_new, cur], None, no_fuse)
+        }
+        OpKind::DepthwiseConv2d { stride, padding } => {
+            let w_old = g.tensor(op.inputs[1]);
+            let w_new = ed.add_sliced_weight(w_old, 2, c0, c1, p);
+            ed.emit_op(
+                name,
+                OpKind::DepthwiseConv2d { stride: *stride, padding: *padding },
+                vec![cur, w_new],
+                None,
+                no_fuse,
+            )
+        }
+        OpKind::BiasAdd => {
+            let b_old = g.tensor(op.inputs[1]);
+            let b_new = ed.add_sliced_weight(b_old, 0, c0, c1, p);
+            ed.emit_op(name, OpKind::BiasAdd, vec![cur, b_new], None, no_fuse)
+        }
+        OpKind::Activation(_)
+        | OpKind::MaxPool2d { .. }
+        | OpKind::AvgPool2d { .. }
+        | OpKind::GlobalAvgPool
+        | OpKind::ReduceMean { .. } => ed.emit_op(name, op.kind.clone(), vec![cur], None, no_fuse),
+        OpKind::Pad { pads } => {
+            ed.emit_op(name, OpKind::Pad { pads: pads.clone() }, vec![cur], None, no_fuse)
+        }
+        other => Err(format!("unsupported op on depth path: {other:?}")),
+    }
+}
+
+// ---------------------------------------------------------------------
+// FFMT (feature-map) emission
+// ---------------------------------------------------------------------
+
+fn emit_fm(g: &Graph, cfg: &PathConfig, ed: &mut Editor) -> Result<TensorId, String> {
+    let last = g.op(*cfg.ops.last().unwrap());
+    let out_shape = g.tensor(last.output).shape.clone();
+    let tiles: Vec<Region> = match cfg.spec {
+        PartitionSpec::Rows(n) => bands(out_shape[0], n)
+            .into_iter()
+            .map(|h| Region { h, w: (0, out_shape[1]) })
+            .collect(),
+        PartitionSpec::Grid(nh, nw) => {
+            let hs = bands(out_shape[0], nh);
+            let ws = bands(out_shape[1], nw);
+            hs.iter()
+                .flat_map(|&h| ws.iter().map(move |&w| Region { h, w }))
+                .collect()
+        }
+        PartitionSpec::Depth(_) => unreachable!(),
+    };
+
+    // Backward-propagate per-tile regions: regions[i][t] is the *output*
+    // region op i must produce for tile t; pads[i][t] its border padding.
+    let k = cfg.ops.len();
+    let nt = tiles.len();
+    let mut regions = vec![vec![Region { h: (0, 0), w: (0, 0) }; nt]; k + 1];
+    let mut pads = vec![vec![TilePad::default(); nt]; k];
+    regions[k] = tiles.clone();
+    for i in (0..k).rev() {
+        let op = g.op(cfg.ops[i]);
+        for t in 0..nt {
+            let (inr, pad) =
+                input_region(g, op, regions[i + 1][t]).ok_or_else(|| format!("{} not FFMT-tileable", op.name))?;
+            regions[i][t] = inr;
+            pads[i][t] = pad;
+        }
+    }
+
+    let first_op = g.op(cfg.ops[0]);
+    let pre_old = first_op.inputs[activation_input(first_op).unwrap()];
+    let pre_new = ed.map_tensor(pre_old);
+    let pre_shape = g.tensor(pre_old).shape.clone();
+
+    let mut tile_outputs = Vec::with_capacity(nt);
+    for t in 0..nt {
+        // SPLIT: overlapping spatial slice (the FFMT halo lives here).
+        let r = regions[0][t];
+        let begins = vec![r.h.0, r.w.0, 0];
+        let ends = vec![r.h.1, r.w.1, pre_shape[2]];
+        let mut cur = ed.emit_op(
+            format!("ffmt_split_t{t}"),
+            OpKind::Slice { begins, ends },
+            vec![pre_new],
+            None,
+            false,
+        )?;
+        for (i, &oid) in cfg.ops.iter().enumerate() {
+            let op = g.op(oid);
+            let is_last = i + 1 == k;
+            cur = emit_fm_op(g, ed, op, cur, pads[i][t], t, is_last)?;
+            // Shape check: the op must produce exactly its tile region.
+            let want = regions[i + 1][t];
+            let got = ed.shape_of(cur);
+            if got.len() == 3 && (got[0] != want.h.1 - want.h.0 || got[1] != want.w.1 - want.w.0) {
+                return Err(format!(
+                    "{}[t{t}] produced {}x{}, wanted {}x{}",
+                    op.name,
+                    got[0],
+                    got[1],
+                    want.h.1 - want.h.0,
+                    want.w.1 - want.w.0
+                ));
+            }
+        }
+        tile_outputs.push(cur);
+    }
+
+    // Reassemble: concat W within each row band, then concat H.
+    let out = match cfg.spec {
+        PartitionSpec::Rows(_) => ed.emit_op(
+            "ffmt_concat".to_string(),
+            OpKind::Concat { axis: 0 },
+            tile_outputs,
+            None,
+            true,
+        )?,
+        PartitionSpec::Grid(nh, nw) => {
+            let mut rows = Vec::with_capacity(nh);
+            for r in 0..nh {
+                let row_tiles = tile_outputs[r * nw..(r + 1) * nw].to_vec();
+                rows.push(ed.emit_op(
+                    format!("ffmt_concat_row{r}"),
+                    OpKind::Concat { axis: 1 },
+                    row_tiles,
+                    None,
+                    true,
+                )?);
+            }
+            ed.emit_op("ffmt_concat".to_string(), OpKind::Concat { axis: 0 }, rows, None, true)?
+        }
+        PartitionSpec::Depth(_) => unreachable!(),
+    };
+    let got = ed.shape_of(out).to_vec();
+    if got != out_shape {
+        return Err(format!("FFMT changed output shape: {got:?} vs {out_shape:?}"));
+    }
+    Ok(out)
+}
+
+/// Emit one tile's copy of a path op (feature-map tiling).
+fn emit_fm_op(
+    _g: &Graph,
+    ed: &mut Editor,
+    op: &Op,
+    cur: TensorId,
+    pad: TilePad,
+    t: usize,
+    is_last: bool,
+) -> Result<TensorId, String> {
+    let name = format!("{}_t{t}", op.name);
+    let explicit = Padding::Explicit(pad.h, pad.w);
+    match &op.kind {
+        OpKind::Conv2d { stride, .. } => {
+            let w = ed.map_tensor(op.inputs[1]); // weights shared, not copied
+            ed.emit_op(name, OpKind::Conv2d { stride: *stride, padding: explicit }, vec![cur, w], None, is_last)
+        }
+        OpKind::DepthwiseConv2d { stride, .. } => {
+            let w = ed.map_tensor(op.inputs[1]);
+            ed.emit_op(
+                name,
+                OpKind::DepthwiseConv2d { stride: *stride, padding: explicit },
+                vec![cur, w],
+                None,
+                is_last,
+            )
+        }
+        OpKind::MaxPool2d { ksize, stride, .. } => ed.emit_op(
+            name,
+            OpKind::MaxPool2d { ksize: *ksize, stride: *stride, padding: explicit },
+            vec![cur],
+            None,
+            is_last,
+        ),
+        OpKind::AvgPool2d { ksize, stride, .. } => ed.emit_op(
+            name,
+            OpKind::AvgPool2d { ksize: *ksize, stride: *stride, padding: explicit },
+            vec![cur],
+            None,
+            is_last,
+        ),
+        OpKind::BiasAdd => {
+            let b = ed.map_tensor(op.inputs[1]);
+            ed.emit_op(name, OpKind::BiasAdd, vec![cur, b], None, is_last)
+        }
+        OpKind::Activation(a) => ed.emit_op(name, OpKind::Activation(*a), vec![cur], None, is_last),
+        other => Err(format!("unsupported op on FFMT path: {other:?}")),
+    }
+}

@@ -1,0 +1,99 @@
+//! Weight tensor slicing for FDT partitioning.
+
+/// Slice `[c0, c1)` along `axis` of a tensor with `shape` and optional
+/// data; returns the new shape and data.
+pub fn slice_axis(
+    shape: &[usize],
+    data: Option<&[f32]>,
+    axis: usize,
+    c0: usize,
+    c1: usize,
+) -> (Vec<usize>, Option<Vec<f32>>) {
+    assert!(axis < shape.len() && c0 < c1 && c1 <= shape[axis], "slice_axis({shape:?}, {axis}, {c0}, {c1})");
+    let mut out_shape = shape.to_vec();
+    out_shape[axis] = c1 - c0;
+    let out_data = data.map(|d| {
+        let inner: usize = shape[axis + 1..].iter().product();
+        let outer: usize = shape[..axis].iter().product();
+        let mut out = Vec::with_capacity(outer * (c1 - c0) * inner);
+        for o in 0..outer {
+            let base = o * shape[axis] * inner;
+            out.extend_from_slice(&d[base + c0 * inner..base + c1 * inner]);
+        }
+        out
+    });
+    (out_shape, out_data)
+}
+
+/// Rows of a dense weight `[in, out]` whose flattened input index has
+/// channel coordinate (last axis of `in_shape`) in `[c0, c1)`.
+///
+/// For rank-1 inputs this degenerates to a contiguous row slice; for
+/// higher-rank inputs (e.g. dense after `[H, W, C]`) the channel
+/// dimension is interleaved in the flattening, so rows are gathered.
+pub fn fan_in_dense_rows(
+    w_shape: &[usize],
+    data: Option<&[f32]>,
+    in_shape: &[usize],
+    c0: usize,
+    c1: usize,
+) -> (Vec<usize>, Option<Vec<f32>>) {
+    assert_eq!(w_shape.len(), 2);
+    let c = *in_shape.last().unwrap();
+    let lead: usize = in_shape[..in_shape.len() - 1].iter().product();
+    assert_eq!(lead * c, w_shape[0], "dense weight rows must match input numel");
+    assert!(c0 < c1 && c1 <= c);
+    let rows = lead * (c1 - c0);
+    let out_shape = vec![rows, w_shape[1]];
+    let out_data = data.map(|d| {
+        let cols = w_shape[1];
+        let mut out = Vec::with_capacity(rows * cols);
+        for l in 0..lead {
+            for ch in c0..c1 {
+                let row = l * c + ch;
+                out.extend_from_slice(&d[row * cols..(row + 1) * cols]);
+            }
+        }
+        out
+    });
+    (out_shape, out_data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_axis_middle() {
+        // shape [2, 4, 3], slice axis 1 range [1, 3).
+        let shape = [2, 4, 3];
+        let data: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        let (s, d) = slice_axis(&shape, Some(&data), 1, 1, 3);
+        assert_eq!(s, vec![2, 2, 3]);
+        let d = d.unwrap();
+        assert_eq!(d.len(), 12);
+        // First outer block: rows 1..3 of the 4 -> elems 3..9.
+        assert_eq!(&d[..6], &[3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        // Second outer block starts at 12: elems 15..21.
+        assert_eq!(&d[6..], &[15.0, 16.0, 17.0, 18.0, 19.0, 20.0]);
+    }
+
+    #[test]
+    fn fan_in_rows_rank1_is_contiguous() {
+        let w_shape = [6, 2];
+        let data: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let (s, d) = fan_in_dense_rows(&w_shape, Some(&data), &[6], 2, 4);
+        assert_eq!(s, vec![2, 2]);
+        assert_eq!(d.unwrap(), vec![4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn fan_in_rows_interleaved() {
+        // input [2, 3] (lead=2, c=3), rows for channels [1, 2): rows 1, 4.
+        let w_shape = [6, 1];
+        let data: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let (s, d) = fan_in_dense_rows(&w_shape, Some(&data), &[2, 3], 1, 2);
+        assert_eq!(s, vec![2, 1]);
+        assert_eq!(d.unwrap(), vec![1.0, 4.0]);
+    }
+}

@@ -1,0 +1,167 @@
+//! End-to-end codegen validation: generate C, compile with the host `cc`,
+//! run, and compare against the reference interpreter — for untiled AND
+//! flow-optimized (tiled) graphs. This is the "compiled binary" leg of
+//! the paper's methodology (§5: RAM/ROM from section sizes of static
+//! AoT code).
+
+use fdt::codegen::generate;
+use fdt::coordinator::{optimize, FlowOptions};
+use fdt::exec::{random_inputs, run};
+use fdt::graph::Graph;
+use fdt::models;
+use std::io::Write;
+use std::process::Command;
+
+/// Compile `module.source` + a test main with baked inputs; run; compare.
+fn check_c_matches_interpreter(g: &Graph, tag: &str) {
+    let module = generate(g).unwrap_or_else(|e| panic!("{} {tag}: {e}", g.name));
+    let inputs = random_inputs(g, 99);
+    let expected = run(g, &inputs).expect("interpreter");
+
+    // Test main: baked inputs, tolerance compare, exit code = #mismatches.
+    let mut main_c = String::from("#include <stdio.h>\n#include <math.h>\n");
+    let mut decls = String::new();
+    let mut in_args = Vec::new();
+    for (i, &t) in g.inputs.iter().enumerate() {
+        let v = &inputs[&g.tensor(t).name];
+        decls += &format!("static const float tin{i}[{}] = {{", v.data.len());
+        for x in &v.data {
+            decls += &format!("{x:?}f,");
+        }
+        decls += "};\n";
+        in_args.push(format!("tin{i}"));
+    }
+    let mut out_args = Vec::new();
+    for (k, e) in expected.iter().enumerate() {
+        decls += &format!("static const float texp{k}[{}] = {{", e.data.len());
+        for x in &e.data {
+            decls += &format!("{x:?}f,");
+        }
+        decls += "};\n";
+        decls += &format!("static float tout{k}[{}];\n", e.data.len());
+        out_args.push(format!("tout{k}"));
+    }
+    main_c += &decls;
+    main_c += &format!(
+        "extern int fdt_model_run({}, {});\n",
+        (0..g.inputs.len()).map(|i| format!("const float* i{i}")).collect::<Vec<_>>().join(", "),
+        (0..expected.len()).map(|k| format!("float* o{k}")).collect::<Vec<_>>().join(", ")
+    );
+    main_c += "int main(void) {\n  int bad = 0;\n";
+    main_c += &format!(
+        "  fdt_model_run({}, {});\n",
+        in_args.join(", "),
+        out_args.join(", ")
+    );
+    for (k, e) in expected.iter().enumerate() {
+        main_c += &format!(
+            "  for (int i = 0; i < {n}; i++) if (fabsf(tout{k}[i] - texp{k}[i]) > 2e-4f) {{ if (bad < 5) fprintf(stderr, \"out{k}[%d] = %g != %g\\n\", i, tout{k}[i], texp{k}[i]); bad++; }}\n",
+            n = e.data.len()
+        );
+    }
+    main_c += "  return bad > 250 ? 250 : bad;\n}\n";
+
+    let dir = std::env::temp_dir().join(format!("fdt_cg_{}_{}", g.name, tag));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::File::create(dir.join("model.c"))
+        .unwrap()
+        .write_all(module.source.as_bytes())
+        .unwrap();
+    std::fs::File::create(dir.join("main.c")).unwrap().write_all(main_c.as_bytes()).unwrap();
+    let exe = dir.join("test");
+    let cc = Command::new("cc")
+        .args(["-O1", "-o"])
+        .arg(&exe)
+        .arg(dir.join("model.c"))
+        .arg(dir.join("main.c"))
+        .arg("-lm")
+        .output()
+        .expect("cc not available");
+    assert!(
+        cc.status.success(),
+        "{} {tag}: cc failed:\n{}",
+        g.name,
+        String::from_utf8_lossy(&cc.stderr)
+    );
+    let run_out = Command::new(&exe).output().expect("running generated binary");
+    assert!(
+        run_out.status.code() == Some(0),
+        "{} {tag}: {} output mismatches:\n{}",
+        g.name,
+        run_out.status.code().unwrap_or(-1),
+        String::from_utf8_lossy(&run_out.stderr)
+    );
+}
+
+#[test]
+fn untiled_models_compile_and_match() {
+    for g in [models::txt(), models::magic_wand(), models::radar(), models::fig5_example()] {
+        check_c_matches_interpreter(&g, "untiled");
+    }
+}
+
+#[test]
+fn untiled_kws_compiles_and_matches() {
+    check_c_matches_interpreter(&models::kws(), "untiled");
+}
+
+#[test]
+fn untiled_cifar_compiles_and_matches() {
+    check_c_matches_interpreter(&models::cifar(), "untiled");
+}
+
+#[test]
+fn fdt_tiled_models_compile_and_match() {
+    let mut opts = FlowOptions::default();
+    opts.discovery.enable_ffmt = false;
+    for g in [models::txt(), models::kws(), models::radar()] {
+        let r = optimize(&g, &opts);
+        assert!(!r.iterations.is_empty(), "{}: FDT should have tiled", g.name);
+        check_c_matches_interpreter(&r.graph, "fdt");
+    }
+}
+
+#[test]
+fn ffmt_tiled_models_compile_and_match() {
+    let mut opts = FlowOptions::default();
+    opts.discovery.enable_fdt = false;
+    for g in [models::magic_wand(), models::radar(), models::fig5_example()] {
+        let r = optimize(&g, &opts);
+        assert!(!r.iterations.is_empty(), "{}: FFMT should have tiled", g.name);
+        check_c_matches_interpreter(&r.graph, "ffmt");
+    }
+}
+
+#[test]
+fn fully_optimized_models_compile_and_match() {
+    for g in [models::txt(), models::radar()] {
+        let r = optimize(&g, &FlowOptions::default());
+        check_c_matches_interpreter(&r.graph, "full");
+    }
+}
+
+#[test]
+fn arena_macro_matches_report() {
+    let g = models::txt();
+    let m = generate(&g).unwrap();
+    assert!(m.source.contains(&format!("#define FDT_ARENA_BYTES {}", m.arena_bytes)));
+    assert!(m.source.contains(&format!("#define FDT_ARENA_BYTES_INT8 {}", m.arena_bytes_int8)));
+}
+
+#[test]
+fn mobilenet_tiny_variants_compile_and_match() {
+    // POS-tiny / SSD-tiny carry the structures the big shape-only graphs
+    // cannot exercise with data: multi-output heads, depthwise-separable
+    // chains and (SSD) residual Add skips through the codegen alias rules.
+    for g in [models::posenet_tiny(), models::ssdlite_tiny()] {
+        check_c_matches_interpreter(&g, "untiled");
+    }
+}
+
+#[test]
+fn optimized_mobilenet_tiny_compiles_and_matches() {
+    for g in [models::posenet_tiny(), models::ssdlite_tiny()] {
+        let r = optimize(&g, &FlowOptions::default());
+        check_c_matches_interpreter(&r.graph, "full");
+    }
+}

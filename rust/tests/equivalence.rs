@@ -1,0 +1,239 @@
+//! The paper's central invariant: fused tiling reduces memory "without
+//! changing any DNN behavior". Every transform the flow can produce must
+//! compute exactly the same function as the untiled graph.
+
+use fdt::exec::{max_abs_diff, random_inputs, run};
+use fdt::graph::{ActKind, DType, Graph, GraphBuilder, OpKind, Padding};
+use fdt::tiling::discovery::{discover, DiscoveryOptions};
+use fdt::tiling::{PartitionSpec, PathConfig, TerminalMode};
+use fdt::transform::apply_tiling;
+
+const TOL: f32 = 2e-4;
+
+/// Apply `cfg` and check outputs match on random inputs.
+fn assert_equivalent(g: &Graph, cfg: &PathConfig, seed: u64) {
+    let tiled = apply_tiling(g, cfg).unwrap_or_else(|e| panic!("{}: {e}", cfg.describe(g)));
+    assert!(tiled.validate().is_ok());
+    let inputs = random_inputs(g, seed);
+    let a = run(g, &inputs).expect("untiled run");
+    let b = run(&tiled, &inputs).unwrap_or_else(|e| panic!("{}: {e}", cfg.describe(g)));
+    let d = max_abs_diff(&a, &b);
+    assert!(
+        d < TOL,
+        "{}: max diff {d} (seed {seed})",
+        cfg.describe(g)
+    );
+}
+
+/// Exhaustively check every discovered config on a model (all N).
+fn check_all_discovered(g: &Graph, critical: usize, opts: &DiscoveryOptions) -> usize {
+    let configs = discover(g, critical, opts);
+    assert!(!configs.is_empty(), "no configs for {}", g.name);
+    for (i, cfg) in configs.iter().enumerate() {
+        // Transform may legitimately reject some (e.g. FFMT bands not
+        // aligned with strides produce validation errors) — but when it
+        // succeeds, numerics must match.
+        if let Ok(tiled) = apply_tiling(g, cfg) {
+            let inputs = random_inputs(g, 1000 + i as u64);
+            let a = run(g, &inputs).expect("untiled");
+            let b = run(&tiled, &inputs).unwrap_or_else(|e| panic!("{}: {e}", cfg.describe(g)));
+            let d = max_abs_diff(&a, &b);
+            assert!(d < TOL, "{}: diff {d}", cfg.describe(g));
+        }
+    }
+    configs.len()
+}
+
+#[test]
+fn fdt_dense_pair_fan_out_fan_in() {
+    // Fig 2: two dense layers split into partitions with partial sums.
+    let mut b = GraphBuilder::new("dense_pair");
+    let x = b.input("x", vec![20], DType::F32);
+    let h = b.dense_act(x, 24, ActKind::Relu);
+    let y = b.dense_act(h, 8, ActKind::Sigmoid);
+    let g = b.finish(vec![y]);
+    // ops: dense0, bias1, relu2, dense3, bias4, sigmoid5.
+    for n in [2, 3, 4, 8, 24] {
+        let cfg = PathConfig {
+            ops: vec![0, 1, 2, 3],
+            spec: PartitionSpec::Depth(n),
+            start: TerminalMode::Implicit,
+            end: TerminalMode::Implicit,
+        };
+        assert_equivalent(&g, &cfg, n as u64);
+    }
+}
+
+#[test]
+fn fdt_explicit_split_concat() {
+    // SPLIT -> dwconv/bias/relu -> CONCAT (no implicit terminal at all).
+    let mut b = GraphBuilder::new("part_only");
+    let x = b.input("x", vec![8, 8, 12], DType::F32);
+    let y = b.dwconv(x, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+    let g = b.finish(vec![y]);
+    for n in [2, 3, 4, 6, 12] {
+        let cfg = PathConfig {
+            ops: vec![0, 1, 2],
+            spec: PartitionSpec::Depth(n),
+            start: TerminalMode::Explicit,
+            end: TerminalMode::Explicit,
+        };
+        assert_equivalent(&g, &cfg, 7 + n as u64);
+    }
+}
+
+#[test]
+fn fdt_conv_fan_out_dw_chain_conv_fan_in() {
+    // The KWS-style path: conv (fan-out) -> dw/bias/relu (PART) ->
+    // conv (fan-in) with pools in between.
+    let mut b = GraphBuilder::new("conv_chain");
+    let x = b.input("x", vec![10, 6, 3], DType::F32);
+    let y = b.conv2d(x, 16, (3, 3), (1, 1), Padding::Same, ActKind::Relu); // ops 0..2
+    let y = b.dwconv(y, (3, 3), (1, 1), Padding::Same, ActKind::Relu); // ops 3..5
+    let y = b.op(
+        OpKind::MaxPool2d { ksize: (2, 2), stride: (2, 2), padding: Padding::Valid },
+        vec![y],
+    ); // op 6
+    let y = b.conv2d(y, 4, (1, 1), (1, 1), Padding::Valid, ActKind::Relu); // ops 7..9
+    let g = b.finish(vec![y]);
+    for n in [2, 4, 16] {
+        let cfg = PathConfig {
+            ops: vec![0, 1, 2, 3, 4, 5, 6, 7],
+            spec: PartitionSpec::Depth(n),
+            start: TerminalMode::Implicit,
+            end: TerminalMode::Implicit,
+        };
+        assert_equivalent(&g, &cfg, 31 + n as u64);
+    }
+}
+
+#[test]
+fn fdt_gather_mean_dense_txt_path() {
+    // TXT: embedding fan-out -> mean PART -> dense fan-in.
+    let mut b = GraphBuilder::new("txt_path");
+    let idx = b.input("tokens", vec![40], DType::I32);
+    let e = b.embedding(idx, 500, 24); // op 0
+    let m = b.op(OpKind::ReduceMean { axis: 0, keepdims: false }, vec![e]); // op 1
+    let h = b.dense_act(m, 6, ActKind::Relu); // ops 2..4
+    let g = b.finish(vec![h]);
+    for n in [2, 3, 8, 24] {
+        let cfg = PathConfig {
+            ops: vec![0, 1, 2],
+            spec: PartitionSpec::Depth(n),
+            start: TerminalMode::Implicit,
+            end: TerminalMode::Implicit,
+        };
+        assert_equivalent(&g, &cfg, 100 + n as u64);
+    }
+}
+
+#[test]
+fn fdt_dense_fan_in_after_spatial_input_gathers_rows() {
+    // Dense fan-in whose input is rank-3: weight rows are interleaved.
+    let mut b = GraphBuilder::new("spatial_dense");
+    let x = b.input("x", vec![4, 4, 6], DType::F32);
+    let y = b.dwconv(x, (3, 3), (1, 1), Padding::Same, ActKind::Relu); // ops 0..2
+    let y = b.dense_act(y, 5, ActKind::Identity); // ops 3..5
+    let g = b.finish(vec![y]);
+    for n in [2, 3, 6] {
+        let cfg = PathConfig {
+            ops: vec![0, 1, 2, 3],
+            spec: PartitionSpec::Depth(n),
+            start: TerminalMode::Explicit,
+            end: TerminalMode::Implicit,
+        };
+        assert_equivalent(&g, &cfg, 200 + n as u64);
+    }
+}
+
+#[test]
+fn ffmt_rows_same_padding_conv_chain() {
+    let mut b = GraphBuilder::new("ffmt_chain");
+    let x = b.input("x", vec![16, 16, 3], DType::F32);
+    let y = b.conv2d(x, 8, (3, 3), (1, 1), Padding::Same, ActKind::Relu); // 0..2
+    let y = b.conv2d(y, 4, (3, 3), (1, 1), Padding::Same, ActKind::Relu); // 3..5
+    let g = b.finish(vec![y]);
+    for n in [2, 3, 4, 8] {
+        let cfg = PathConfig {
+            ops: vec![0, 1, 2, 3, 4, 5],
+            spec: PartitionSpec::Rows(n),
+            start: TerminalMode::Explicit,
+            end: TerminalMode::Explicit,
+        };
+        assert_equivalent(&g, &cfg, 300 + n as u64);
+    }
+}
+
+#[test]
+fn ffmt_grid_with_stride_and_pool() {
+    let mut b = GraphBuilder::new("ffmt_grid");
+    let x = b.input("x", vec![17, 13, 3], DType::F32);
+    let y = b.conv2d(x, 6, (3, 3), (2, 2), Padding::Same, ActKind::Relu); // 0..2 -> [9,7,6]
+    let y = b.op(
+        OpKind::MaxPool2d { ksize: (2, 2), stride: (1, 1), padding: Padding::Valid },
+        vec![y],
+    ); // 3 -> [8,6,6]
+    let g = b.finish(vec![y]);
+    for n in [2, 3] {
+        let cfg = PathConfig {
+            ops: vec![0, 1, 2, 3],
+            spec: PartitionSpec::Grid(n, n),
+            start: TerminalMode::Explicit,
+            end: TerminalMode::Explicit,
+        };
+        assert_equivalent(&g, &cfg, 400 + n as u64);
+    }
+}
+
+#[test]
+fn ffmt_depthwise_valid_padding() {
+    let mut b = GraphBuilder::new("ffmt_dw");
+    let x = b.input("x", vec![12, 12, 4], DType::F32);
+    let y = b.dwconv(x, (3, 3), (1, 1), Padding::Valid, ActKind::Relu); // 0..2 -> [10,10,4]
+    let g = b.finish(vec![y]);
+    for n in [2, 5] {
+        let cfg = PathConfig {
+            ops: vec![0, 1, 2],
+            spec: PartitionSpec::Rows(n),
+            start: TerminalMode::Explicit,
+            end: TerminalMode::Explicit,
+        };
+        assert_equivalent(&g, &cfg, 500 + n as u64);
+    }
+}
+
+#[test]
+fn all_discovered_configs_on_small_models_are_equivalent() {
+    // fig5 example: every config discovery proposes must preserve
+    // numerics when it transforms successfully.
+    let g = fdt::models::fig5_example();
+    // critical buffer = the 32-channel relu output (ops 3..5 are the fat
+    // conv block; find its activation output).
+    let crit = g
+        .tensors
+        .iter()
+        .find(|t| t.shape == vec![16, 16, 32] && t.name.contains("act"))
+        .expect("fat buffer")
+        .id;
+    let mut opts = DiscoveryOptions::default();
+    opts.depth_partitions = 2..=8;
+    opts.row_partitions = 2..=8;
+    let n = check_all_discovered(&g, crit, &opts);
+    assert!(n > 10, "expected a real search space, got {n}");
+}
+
+#[test]
+fn zoo_small_models_full_flow_preserves_numerics() {
+    use fdt::coordinator::{optimize, FlowOptions};
+    for g in [fdt::models::txt(), fdt::models::magic_wand(), fdt::models::radar()] {
+        let mut opts = FlowOptions::default();
+        opts.discovery.depth_partitions = 2..=12;
+        opts.discovery.row_partitions = 2..=12;
+        let r = optimize(&g, &opts);
+        let inputs = random_inputs(&g, 9);
+        let a = run(&g, &inputs).expect("untiled");
+        let b = run(&r.graph, &inputs).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        let d = max_abs_diff(&a, &b);
+        assert!(d < TOL, "{}: flow broke numerics, diff {d}", g.name);
+    }
+}

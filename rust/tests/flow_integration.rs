@@ -1,0 +1,183 @@
+//! Integration tests: the full Fig-3 exploration on the evaluated models,
+//! asserting the *shape* of the paper's Table 2 and §5 claims.
+
+use fdt::coordinator::{optimize, FlowOptions};
+use fdt::exec::{max_abs_diff, random_inputs, run};
+use fdt::models;
+use fdt::report;
+
+fn fdt_only() -> FlowOptions {
+    let mut o = FlowOptions::default();
+    o.discovery.enable_ffmt = false;
+    o
+}
+
+fn ffmt_only() -> FlowOptions {
+    let mut o = FlowOptions::default();
+    o.discovery.enable_fdt = false;
+    o
+}
+
+#[test]
+fn kws_is_fdt_only() {
+    // Paper §5.2: "the critical buffer is involved in a sequence of
+    // convolutions that reduce the feature map size down to 1x1, which
+    // can not be split by FFMT".
+    let g = models::kws();
+    let ffmt = optimize(&g, &ffmt_only());
+    assert_eq!(ffmt.final_eval.ram, ffmt.initial.ram, "FFMT must find nothing on KWS");
+    let fdt = optimize(&g, &fdt_only());
+    assert!(fdt.ram_savings_pct() > 10.0, "FDT saves (paper: 18.1%): {:.1}%", fdt.ram_savings_pct());
+    assert_eq!(fdt.final_eval.macs, fdt.initial.macs, "FDT adds no MACs");
+}
+
+#[test]
+fn txt_is_fdt_only_with_large_savings() {
+    // Paper: 76.2% — the embedding/mean pair is untouchable by FFMT.
+    let g = models::txt();
+    let ffmt = optimize(&g, &ffmt_only());
+    assert_eq!(ffmt.final_eval.ram, ffmt.initial.ram);
+    assert_eq!(ffmt.configs_tested, 0, "no FFMT configs should even exist");
+    let fdt = optimize(&g, &fdt_only());
+    assert!(fdt.ram_savings_pct() > 50.0, "paper: 76.2%, got {:.1}%", fdt.ram_savings_pct());
+    assert_eq!(fdt.final_eval.macs, fdt.initial.macs);
+}
+
+#[test]
+fn cnn_models_favor_ffmt_for_savings() {
+    // Paper: MW/POS/SSD/CIF/RAD all save more with FFMT than FDT.
+    for g in [models::magic_wand(), models::cifar(), models::radar()] {
+        let ffmt = optimize(&g, &ffmt_only());
+        let fdt = optimize(&g, &fdt_only());
+        assert!(
+            ffmt.ram_savings_pct() >= fdt.ram_savings_pct(),
+            "{}: FFMT {:.1}% < FDT {:.1}%",
+            g.name,
+            ffmt.ram_savings_pct(),
+            fdt.ram_savings_pct()
+        );
+        assert!(ffmt.ram_savings_pct() > 10.0, "{}: FFMT should apply", g.name);
+        assert!(fdt.ram_savings_pct() > 10.0, "{}: FDT should also apply", g.name);
+        assert_eq!(fdt.final_eval.macs, fdt.initial.macs, "{}: FDT MACs", g.name);
+    }
+}
+
+#[test]
+fn cif_ffmt_has_significant_mac_overhead_fdt_has_none() {
+    // Paper Table 2: CIF FFMT overhead 9.0%, FDT 0.0% — the alternative
+    // design point motivation.
+    let g = models::cifar();
+    let ffmt = optimize(&g, &ffmt_only());
+    assert!(
+        ffmt.mac_overhead_pct() > 5.0,
+        "CIF FFMT should pay recompute: {:.1}%",
+        ffmt.mac_overhead_pct()
+    );
+    let fdt = optimize(&g, &fdt_only());
+    assert!(fdt.mac_overhead_pct().abs() < 1e-9);
+}
+
+#[test]
+fn mac_capped_flow_respects_budget() {
+    // §5.2 performance-optimized design: cap the tolerated overhead.
+    let g = models::cifar();
+    let mut o = FlowOptions::default();
+    o.max_mac_overhead_pct = Some(2.0);
+    let r = optimize(&g, &o);
+    assert!(
+        r.mac_overhead_pct() <= 2.0 + 1e-9,
+        "cap violated: {:.2}%",
+        r.mac_overhead_pct()
+    );
+    // Still saves memory (FDT configs remain admissible).
+    assert!(r.ram_savings_pct() > 0.0);
+}
+
+#[test]
+fn flow_is_deterministic() {
+    let g = models::radar();
+    let a = optimize(&g, &FlowOptions::default());
+    let b = optimize(&g, &FlowOptions::default());
+    assert_eq!(a.final_eval.ram, b.final_eval.ram);
+    assert_eq!(a.configs_tested, b.configs_tested);
+    assert_eq!(a.iterations.len(), b.iterations.len());
+}
+
+#[test]
+fn optimized_graphs_stay_equivalent() {
+    for g in [models::kws(), models::txt(), models::magic_wand(), models::radar()] {
+        let r = optimize(&g, &FlowOptions::default());
+        let inputs = random_inputs(&g, 5);
+        let a = run(&g, &inputs).expect("untiled");
+        let b = run(&r.graph, &inputs).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        let d = max_abs_diff(&a, &b);
+        assert!(d < 2e-4, "{}: {d}", g.name);
+    }
+}
+
+#[test]
+fn single_thread_equals_parallel() {
+    let g = models::magic_wand();
+    let mut o1 = FlowOptions::default();
+    o1.threads = 1;
+    let a = optimize(&g, &o1);
+    let b = optimize(&g, &FlowOptions::default());
+    assert_eq!(a.final_eval.ram, b.final_eval.ram, "thread count must not change results");
+}
+
+#[test]
+fn table2_row_is_consistent() {
+    let g = models::radar();
+    let row = report::table2_row(&g, &FlowOptions::default());
+    assert_eq!(row.model, "RAD");
+    assert!(row.ffmt_ram <= row.untiled_ram);
+    assert!(row.fdt_ram <= row.untiled_ram);
+    assert_eq!(row.fdt_macs, row.untiled_macs);
+    assert!(row.ffmt_macs >= row.untiled_macs || row.ffmt_overhead() > -2.0);
+}
+
+#[test]
+fn fig5_example_matches_paper_walkthrough() {
+    // Fig. 5: both families must produce paths around the fat middle
+    // buffer; the FDT path is fan-out -> fan-in, the FFMT path spans the
+    // 3x3 convs.
+    let g = models::fig5_example();
+    let ffmt = optimize(&g, &ffmt_only());
+    let fdt = optimize(&g, &fdt_only());
+    assert!(ffmt.ram_savings_pct() > 0.0, "FFMT applies to Fig 5");
+    assert!(fdt.ram_savings_pct() > 0.0, "FDT applies to Fig 5");
+    assert_eq!(fdt.final_eval.macs, fdt.initial.macs);
+    assert!(ffmt.final_eval.macs >= ffmt.initial.macs);
+}
+
+#[test]
+fn pos_and_ssd_explore_without_flow_errors() {
+    // The two big graphs (shape-only, multi-MB buffers): one screening
+    // iteration each to keep CI time bounded, validating the flow
+    // handles residual barriers (SSD) and deep dwsep chains (POS).
+    let mut o = FlowOptions::default();
+    o.max_iterations = 1;
+    o.max_candidates = 2;
+    for g in [models::posenet(), models::ssdlite()] {
+        let r = optimize(&g, &o);
+        assert!(r.final_eval.ram <= r.initial.ram, "{}", g.name);
+        assert!(r.graph.validate().is_ok(), "{}", g.name);
+    }
+}
+
+#[test]
+fn tiny_mobilenet_variants_explore_and_stay_equivalent() {
+    // Residual adds act as tiling barriers (§4.3: discovery stops at
+    // multi-consumer/multi-input ops) — the flow must still terminate,
+    // never corrupt numerics, and never add MACs with FDT.
+    let mut fdt_only = FlowOptions::default();
+    fdt_only.discovery.enable_ffmt = false;
+    for g in [models::posenet_tiny(), models::ssdlite_tiny()] {
+        let r = optimize(&g, &fdt_only);
+        assert_eq!(r.final_eval.macs, r.initial.macs, "{}", g.name);
+        let inputs = random_inputs(&g, 13);
+        let a = run(&g, &inputs).unwrap();
+        let b = run(&r.graph, &inputs).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        assert!(max_abs_diff(&a, &b) < 2e-4, "{}", g.name);
+    }
+}

@@ -1,0 +1,201 @@
+//! Property-based tests over randomly generated graphs (an in-crate
+//! substitute for `proptest`, which is not in the offline vendor set).
+//!
+//! Invariants checked across hundreds of random cases:
+//!
+//! * every scheduler produces a valid topological order;
+//! * the exact (B&B) scheduler never loses to the hill-valley heuristic;
+//! * the SP scheduler matches B&B exactly on series-parallel graphs;
+//! * every layout is conflict-free, >= max buffer, <= sum of buffers;
+//! * the exact placer never loses to first-fit or SA;
+//! * random discovered+applied tiling configs preserve interpreter
+//!   numerics and never add MACs when they are FDT.
+
+use fdt::analysis::{graph_macs, MemModel};
+use fdt::graph::fusion::fuse;
+use fdt::graph::{ActKind, DType, Graph, GraphBuilder, OpKind, Padding, Rng};
+use fdt::layout::{self, heuristic, LayoutOptions};
+use fdt::sched::{self, is_valid_order, SchedOptions};
+
+/// Random small CNN-ish DAG: chains with occasional parallel branches
+/// merged by Add, pools, dense tail. Always valid and interpretable.
+fn random_graph(seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new(format!("rand{seed}"));
+    let side = 8 + (rng.next_u64() % 3) as usize * 4; // 8/12/16
+    let c0 = 1 << (rng.next_u64() % 3); // 1/2/4
+    let mut x = b.input("x", vec![side, side, c0], DType::I8);
+    let depth = 2 + (rng.next_u64() % 5) as usize;
+    for _ in 0..depth {
+        match rng.next_u64() % 5 {
+            0 => {
+                let c = 4 << (rng.next_u64() % 3);
+                x = b.conv2d(x, c, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+            }
+            1 => {
+                let c = 4 << (rng.next_u64() % 3);
+                x = b.conv2d(x, c, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+            }
+            2 => {
+                x = b.dwconv(x, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+            }
+            3 => {
+                // Parallel branch -> Add (same shape 1x1 convs).
+                let shape = b.shape_of(x).to_vec();
+                let c = shape[2];
+                let l = b.conv2d(x, c, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+                let r = b.conv2d(x, c, (1, 1), (1, 1), Padding::Valid, ActKind::Relu6);
+                x = b.op(OpKind::Add, vec![l, r]);
+            }
+            _ => {
+                let shape = b.shape_of(x).to_vec();
+                if shape[0] >= 4 && shape[1] >= 4 {
+                    x = b.op(
+                        OpKind::MaxPool2d {
+                            ksize: (2, 2),
+                            stride: (2, 2),
+                            padding: Padding::Valid,
+                        },
+                        vec![x],
+                    );
+                }
+            }
+        }
+    }
+    x = b.op(OpKind::GlobalAvgPool, vec![x]);
+    x = b.dense_act(x, 4, ActKind::Identity);
+    b.finish(vec![x])
+}
+
+const CASES: u64 = 120;
+
+#[test]
+fn schedules_are_valid_topo_orders() {
+    for seed in 0..CASES {
+        let g = random_graph(seed);
+        let grouping = fuse(&g);
+        let m = MemModel::new(&g, &grouping);
+        for opts in [
+            SchedOptions::default(),
+            SchedOptions { bnb_node_budget: 0, use_sp: true },
+            SchedOptions { bnb_node_budget: 0, use_sp: false },
+        ] {
+            let s = sched::schedule(&m, opts);
+            assert!(is_valid_order(&m, &s.order), "seed {seed}, {:?}", opts);
+            assert_eq!(s.peak, m.peak(&s.order), "peak must match profile");
+        }
+    }
+}
+
+#[test]
+fn exact_scheduler_never_loses_to_heuristic() {
+    for seed in 0..CASES {
+        let g = random_graph(seed);
+        let grouping = fuse(&g);
+        let m = MemModel::new(&g, &grouping);
+        let exact = sched::schedule(&m, SchedOptions::default());
+        let heur = sched::schedule(&m, SchedOptions { bnb_node_budget: 0, use_sp: false });
+        assert!(
+            exact.peak <= heur.peak,
+            "seed {seed}: exact {} > heuristic {}",
+            exact.peak,
+            heur.peak
+        );
+    }
+}
+
+#[test]
+fn sp_matches_bnb_on_sp_graphs() {
+    let mut sp_cases = 0;
+    for seed in 0..CASES {
+        let g = random_graph(seed);
+        let grouping = fuse(&g);
+        let m = MemModel::new(&g, &grouping);
+        let preds = grouping.preds(&g);
+        if fdt::analysis::decompose_sp(grouping.len(), &preds).is_none() {
+            continue; // only SP graphs here
+        }
+        sp_cases += 1;
+        let sp = sched::schedule(&m, SchedOptions { bnb_node_budget: 0, use_sp: true });
+        let bnb = sched::schedule(&m, SchedOptions { bnb_node_budget: 10_000_000, use_sp: false });
+        assert!(bnb.optimal, "seed {seed}: B&B must finish on these sizes");
+        assert_eq!(sp.peak, bnb.peak, "seed {seed}: SP-optimal != B&B-optimal");
+    }
+    assert!(sp_cases > CASES as usize / 2, "generator should mostly make SP graphs");
+}
+
+#[test]
+fn layouts_are_feasible_and_bounded() {
+    for seed in 0..CASES {
+        let g = random_graph(seed);
+        let grouping = fuse(&g);
+        let m = MemModel::new(&g, &grouping);
+        let s = sched::schedule(&m, SchedOptions::default());
+        let conflicts = m.conflicts(&s.order);
+        let sum: usize = m.sizes.iter().sum();
+        let max = m.sizes.iter().copied().max().unwrap_or(0);
+        for (name, l) in [
+            ("first_fit", heuristic::first_fit_by_size(&m.sizes, &conflicts)),
+            ("sa", heuristic::hill_climb_sa(&m.sizes, &conflicts, 300, seed)),
+            ("exact", layout::plan(&m, &s.order, LayoutOptions::default())),
+        ] {
+            assert!(l.is_valid(&m.sizes, &conflicts), "seed {seed}: {name} overlaps");
+            assert!(l.total <= sum, "seed {seed}: {name} exceeds sum of sizes");
+            assert!(l.total >= max, "seed {seed}: {name} below max buffer");
+            assert!(l.total >= s.peak.min(sum), "layout cannot beat the schedule peak");
+        }
+    }
+}
+
+#[test]
+fn exact_placer_never_loses() {
+    for seed in 0..CASES {
+        let g = random_graph(seed);
+        let grouping = fuse(&g);
+        let m = MemModel::new(&g, &grouping);
+        let s = sched::schedule(&m, SchedOptions::default());
+        let conflicts = m.conflicts(&s.order);
+        let exact = layout::plan(&m, &s.order, LayoutOptions::default());
+        let ff = heuristic::first_fit_by_size(&m.sizes, &conflicts);
+        let sa = heuristic::hill_climb_sa(&m.sizes, &conflicts, 300, seed ^ 7);
+        assert!(exact.total <= ff.total, "seed {seed}");
+        assert!(exact.total <= sa.total, "seed {seed}");
+    }
+}
+
+#[test]
+fn random_tilings_preserve_numerics_and_fdt_macs() {
+    use fdt::exec::{max_abs_diff, random_inputs, run};
+    use fdt::tiling::discovery::{discover, DiscoveryOptions};
+
+    let mut checked = 0usize;
+    for seed in 0..60u64 {
+        let g = random_graph(seed);
+        let grouping = fuse(&g);
+        let m = MemModel::new(&g, &grouping);
+        let s = sched::schedule(&m, SchedOptions::default());
+        let l = layout::plan(&m, &s.order, LayoutOptions::default());
+        let crit = fdt::coordinator::critical_buffers(&m, &s.order, &l);
+        let Some(&t) = crit.first() else { continue };
+        let cfgs = discover(&g, t, &DiscoveryOptions::default());
+        let base_macs = graph_macs(&g);
+        // Spot-check a deterministic sample of configs per graph.
+        for (i, cfg) in cfgs.iter().enumerate().step_by(7.max(cfgs.len() / 5)) {
+            let Ok(tiled) = fdt::transform::apply_tiling(&g, cfg) else { continue };
+            assert!(tiled.validate().is_ok(), "seed {seed} cfg {i}");
+            let inputs = random_inputs(&g, seed * 31 + i as u64);
+            let a = run(&g, &inputs).expect("untiled");
+            let b = run(&tiled, &inputs).expect("tiled");
+            assert!(
+                max_abs_diff(&a, &b) < 2e-4,
+                "seed {seed} cfg {}: numerics diverged",
+                cfg.describe(&g)
+            );
+            if cfg.spec.is_depth() {
+                assert_eq!(graph_macs(&tiled), base_macs, "FDT must not add MACs");
+            }
+            checked += 1;
+        }
+    }
+    assert!(checked >= 30, "property test exercised too few configs: {checked}");
+}

@@ -1,0 +1,276 @@
+//! PJRT runtime integration: load the JAX/Pallas AOT artifacts and prove
+//! the L1/L2 lowering equivalences from Rust — the production loader.
+//!
+//! These tests skip (with a message) when `artifacts/` has not been
+//! built; run `make artifacts` first for full coverage.
+
+use fdt::runtime::{artifacts_dir, max_artifact_diff, Buffer, Runtime};
+
+fn artifacts_ready() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+#[test]
+fn pjrt_client_starts() {
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    assert_eq!(rt.platform(), "cpu");
+}
+
+#[test]
+fn all_manifest_artifacts_load_and_run() {
+    require_artifacts!();
+    let dir = artifacts_dir();
+    let manifest: serde_lite::Value =
+        serde_lite::parse(&std::fs::read_to_string(dir.join("manifest.json")).unwrap());
+    let rt = Runtime::cpu().unwrap();
+    let mut checked = 0;
+    for (name, meta) in manifest.as_object().expect("manifest object") {
+        let file = meta.get("file").and_then(|v| v.as_str()).unwrap();
+        let engine = rt.load(dir.join(file)).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        // Build zero inputs per the manifest signature.
+        let inputs: Vec<Buffer> = meta
+            .get("inputs")
+            .and_then(|v| v.as_array())
+            .unwrap()
+            .iter()
+            .map(|inp| {
+                let shape: Vec<usize> = inp
+                    .get("shape")
+                    .and_then(|v| v.as_array())
+                    .unwrap()
+                    .iter()
+                    .map(|d| d.as_usize().unwrap())
+                    .collect();
+                let n: usize = shape.iter().product();
+                match inp.get("dtype").and_then(|v| v.as_str()).unwrap() {
+                    "int32" => Buffer::new_i32(shape, vec![1; n]),
+                    _ => Buffer::new(shape, vec![0.5; n]),
+                }
+            })
+            .collect();
+        let out = engine.run_f32(&inputs).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        let outs = meta.get("outputs").and_then(|v| v.as_array()).unwrap();
+        assert_eq!(out.len(), outs.len(), "{name}: output arity");
+        for (o, spec) in out.iter().zip(outs) {
+            let n: usize = spec
+                .get("shape")
+                .and_then(|v| v.as_array())
+                .unwrap()
+                .iter()
+                .map(|d| d.as_usize().unwrap())
+                .product();
+            assert_eq!(o.len(), n, "{name}: output numel");
+            assert!(o.iter().all(|x| x.is_finite()), "{name}: non-finite output");
+        }
+        checked += 1;
+    }
+    assert!(checked >= 6, "expected >= 6 artifacts, saw {checked}");
+}
+
+#[test]
+fn kws_untiled_equals_fdt_lowering() {
+    require_artifacts!();
+    let dir = artifacts_dir();
+    let rt = Runtime::cpu().unwrap();
+    let a = rt.load(dir.join("kws_untiled.hlo.txt")).unwrap();
+    let b = rt.load(dir.join("kws_fdt.hlo.txt")).unwrap();
+    let mut rng = fdt::graph::Rng::new(7);
+    for trial in 0..4 {
+        let data: Vec<f32> = (0..49 * 10 * 8).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
+        let inp = [Buffer::new(vec![49, 10, 8], data)];
+        let d = max_artifact_diff(&a, &b, &inp).unwrap();
+        assert!(d < 1e-4, "trial {trial}: {d}");
+    }
+}
+
+#[test]
+fn txt_untiled_equals_fdt_lowering() {
+    require_artifacts!();
+    let dir = artifacts_dir();
+    let rt = Runtime::cpu().unwrap();
+    let a = rt.load(dir.join("txt_untiled.hlo.txt")).unwrap();
+    let b = rt.load(dir.join("txt_fdt.hlo.txt")).unwrap();
+    let mut rng = fdt::graph::Rng::new(8);
+    for trial in 0..4 {
+        let toks: Vec<i32> = (0..256).map(|_| (rng.next_u64() % 10_000) as i32).collect();
+        let inp = [Buffer::new_i32(vec![256], toks)];
+        let d = max_artifact_diff(&a, &b, &inp).unwrap();
+        assert!(d < 1e-4, "trial {trial}: {d}");
+    }
+}
+
+#[test]
+fn kws_probabilities_are_normalized() {
+    require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let e = rt.load(artifacts_dir().join("kws_fdt.hlo.txt")).unwrap();
+    let mut rng = fdt::graph::Rng::new(9);
+    let data: Vec<f32> = (0..49 * 10 * 8).map(|_| rng.next_f32()).collect();
+    let out = e.run_f32(&[Buffer::new(vec![49, 10, 8], data)]).unwrap();
+    assert_eq!(out[0].len(), 12);
+    let sum: f32 = out[0].iter().sum();
+    assert!((sum - 1.0).abs() < 1e-4, "softmax sum {sum}");
+    assert!(out[0].iter().all(|&p| (0.0..=1.0).contains(&p)));
+}
+
+#[test]
+fn dense_pair_artifacts_agree() {
+    require_artifacts!();
+    let dir = artifacts_dir();
+    let rt = Runtime::cpu().unwrap();
+    let a = rt.load(dir.join("dense_pair_untiled.hlo.txt")).unwrap();
+    let b = rt.load(dir.join("dense_pair_fdt.hlo.txt")).unwrap();
+    let mut rng = fdt::graph::Rng::new(10);
+    let data: Vec<f32> = (0..4 * 64).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    let inp = [Buffer::new(vec![4, 64], data)];
+    let d = max_artifact_diff(&a, &b, &inp).unwrap();
+    assert!(d < 1e-4, "{d}");
+}
+
+/// Micro JSON reader sufficient for our own manifest (no serde in the
+/// offline vendor set).
+mod serde_lite {
+    #[derive(Debug, Clone)]
+    pub enum Value {
+        Object(Vec<(String, Value)>),
+        Array(Vec<Value>),
+        Str(String),
+        Num(f64),
+        Bool(bool),
+        Null,
+    }
+
+    impl Value {
+        pub fn as_object(&self) -> Option<&Vec<(String, Value)>> {
+            match self {
+                Value::Object(o) => Some(o),
+                _ => None,
+            }
+        }
+        pub fn as_array(&self) -> Option<&Vec<Value>> {
+            match self {
+                Value::Array(a) => Some(a),
+                _ => None,
+            }
+        }
+        pub fn as_str(&self) -> Option<&str> {
+            match self {
+                Value::Str(s) => Some(s),
+                _ => None,
+            }
+        }
+        pub fn as_usize(&self) -> Option<usize> {
+            match self {
+                Value::Num(n) => Some(*n as usize),
+                _ => None,
+            }
+        }
+        pub fn get(&self, key: &str) -> Option<&Value> {
+            self.as_object()?.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+        }
+    }
+
+    pub fn parse(s: &str) -> Value {
+        let mut chars: Vec<char> = s.chars().collect();
+        chars.push('\0');
+        let mut pos = 0usize;
+        let v = parse_value(&chars, &mut pos);
+        v
+    }
+
+    fn skip_ws(c: &[char], p: &mut usize) {
+        while c[*p].is_whitespace() {
+            *p += 1;
+        }
+    }
+
+    fn parse_value(c: &[char], p: &mut usize) -> Value {
+        skip_ws(c, p);
+        match c[*p] {
+            '{' => {
+                *p += 1;
+                let mut obj = Vec::new();
+                loop {
+                    skip_ws(c, p);
+                    if c[*p] == '}' {
+                        *p += 1;
+                        break;
+                    }
+                    let k = match parse_value(c, p) {
+                        Value::Str(s) => s,
+                        _ => panic!("object key must be string"),
+                    };
+                    skip_ws(c, p);
+                    assert_eq!(c[*p], ':');
+                    *p += 1;
+                    let v = parse_value(c, p);
+                    obj.push((k, v));
+                    skip_ws(c, p);
+                    if c[*p] == ',' {
+                        *p += 1;
+                    }
+                }
+                Value::Object(obj)
+            }
+            '[' => {
+                *p += 1;
+                let mut arr = Vec::new();
+                loop {
+                    skip_ws(c, p);
+                    if c[*p] == ']' {
+                        *p += 1;
+                        break;
+                    }
+                    arr.push(parse_value(c, p));
+                    skip_ws(c, p);
+                    if c[*p] == ',' {
+                        *p += 1;
+                    }
+                }
+                Value::Array(arr)
+            }
+            '"' => {
+                *p += 1;
+                let mut s = String::new();
+                while c[*p] != '"' {
+                    if c[*p] == '\\' {
+                        *p += 1;
+                    }
+                    s.push(c[*p]);
+                    *p += 1;
+                }
+                *p += 1;
+                Value::Str(s)
+            }
+            't' => {
+                *p += 4;
+                Value::Bool(true)
+            }
+            'f' => {
+                *p += 5;
+                Value::Bool(false)
+            }
+            'n' => {
+                *p += 4;
+                Value::Null
+            }
+            _ => {
+                let start = *p;
+                while matches!(c[*p], '0'..='9' | '-' | '+' | '.' | 'e' | 'E') {
+                    *p += 1;
+                }
+                let s: String = c[start..*p].iter().collect();
+                Value::Num(s.parse().expect("number"))
+            }
+        }
+    }
+}
