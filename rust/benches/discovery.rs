@@ -1,0 +1,74 @@
+//! Bench: **path discovery** — proposal counts and runtime with and
+//! without the canonical dedup / dominance pruning introduced by the
+//! flow performance overhaul (§4.3 search space).
+//!
+//! The pruning skips partition counts whose tiled-buffer sizes round to
+//! the same slice shapes as an already-proposed configuration, so the
+//! "pruned" column divided by "exhaustive" is the share of the screening
+//! work the flow no longer pays per candidate.
+//!
+//! ```bash
+//! cargo bench --bench discovery
+//! ```
+
+use fdt::analysis::MemModel;
+use fdt::bench::{bench, header, write_json, JsonRecord};
+use fdt::coordinator::critical_buffers;
+use fdt::graph::fusion::fuse;
+use fdt::layout::{self, LayoutOptions};
+use fdt::models;
+use fdt::sched::{self, SchedOptions};
+use fdt::tiling::discovery::{discover, DiscoveryOptions};
+use std::time::Duration;
+
+fn main() {
+    header(
+        "discovery",
+        "config proposals per critical buffer: exhaustive vs dedup+dominance-pruned",
+    );
+    println!(
+        "{:<6} {:>12} {:>10} {:>8} {:>12} {:>12}",
+        "Model", "exhaustive", "pruned", "kept %", "t(exh)", "t(pruned)"
+    );
+    let mut records: Vec<(String, JsonRecord)> = Vec::new();
+    for name in ["KWS", "TXT", "MW", "CIF", "RAD"] {
+        let g = models::by_name(name).unwrap();
+        let grouping = fuse(&g);
+        let m = MemModel::new(&g, &grouping);
+        let s = sched::schedule(&m, SchedOptions::default());
+        let l = layout::plan(&m, &s.order, LayoutOptions::default());
+        let crit = critical_buffers(&m, &s.order, &l);
+        let Some(&t) = crit.first() else {
+            println!("{name:<6} (no critical buffer)");
+            continue;
+        };
+        let exhaustive = DiscoveryOptions { dedup: false, ..DiscoveryOptions::default() };
+        let pruned = DiscoveryOptions::default();
+        let n_ex = discover(&g, t, &exhaustive).len();
+        let n_pr = discover(&g, t, &pruned).len();
+        assert!(n_pr <= n_ex, "{name}: pruning must never add configs");
+        let t_ex = bench(1, 5, Duration::from_millis(200), || discover(&g, t, &exhaustive).len());
+        let t_pr = bench(1, 5, Duration::from_millis(200), || discover(&g, t, &pruned).len());
+        let kept = 100.0 * n_pr as f64 / n_ex.max(1) as f64;
+        println!(
+            "{:<6} {:>12} {:>10} {:>8.1} {:>12.3?} {:>12.3?}",
+            name, n_ex, n_pr, kept, t_ex.median, t_pr.median
+        );
+        records.push((
+            name.to_string(),
+            JsonRecord::new()
+                .int("configs_exhaustive", n_ex as u64)
+                .int("configs_pruned", n_pr as u64)
+                .num("kept_pct", kept)
+                .num("discover_exhaustive_s", t_ex.median.as_secs_f64())
+                .num("discover_pruned_s", t_pr.median.as_secs_f64()),
+        ));
+    }
+    // The screening cost scales with the proposal count, so the kept
+    // fraction is the direct discovery-side contribution to the flow
+    // speedup measured in `benches/flow.rs`.
+    match write_json("BENCH_discovery.json", &records) {
+        Ok(()) => println!("\nwrote BENCH_discovery.json"),
+        Err(e) => eprintln!("could not write BENCH_discovery.json: {e}"),
+    }
+}

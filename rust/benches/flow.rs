@@ -1,17 +1,24 @@
-//! Bench: **§5.1 flow statistics** — configurations explored and
-//! end-to-end exploration runtime per model, plus thread-scaling of the
-//! candidate screening (the flow's hot loop).
+//! Bench: **§5.1 flow statistics** — end-to-end exploration runtime per
+//! model, measured both with the pre-overhaul code path
+//! (`FlowOptions::legacy()`: exhaustive discovery, no memoization, no
+//! incumbent bounding) and the optimized default, asserting identical
+//! final arena sizes and reporting the wall-clock speedup.
 //!
 //! Paper reference points: 38 configs / 3 min (RAD) to 172 configs / 1 h
 //! (POS) on a Ryzen 9 3900X with Gurobi. Our Rust implementation should
-//! be orders of magnitude faster on the same class of graphs.
+//! be orders of magnitude faster on the same class of graphs, and this
+//! PR's overhaul is expected to deliver >= 3x on top for at least one
+//! model.
+//!
+//! Emits `BENCH_flow.json` (machine-readable per-model timings) so the
+//! speedup is tracked across future PRs.
 //!
 //! ```bash
 //! cargo bench --bench flow            # small models
 //! cargo bench --bench flow -- all     # + POS & SSD
 //! ```
 
-use fdt::bench::{header, time_once};
+use fdt::bench::{header, time_once, write_json, JsonRecord};
 use fdt::coordinator::{optimize, FlowOptions};
 use fdt::models;
 
@@ -19,7 +26,7 @@ fn main() {
     let all = std::env::args().any(|a| a == "all");
     header(
         "flow",
-        "end-to-end exploration: configs tested + runtime (paper: 3 min ... 1 h)",
+        "end-to-end exploration: legacy vs optimized candidate evaluation (paper: 3 min ... 1 h)",
     );
     let names: Vec<&str> = if all {
         vec!["KWS", "TXT", "MW", "POS", "SSD", "CIF", "RAD"]
@@ -27,37 +34,64 @@ fn main() {
         vec!["KWS", "TXT", "MW", "CIF", "RAD"]
     };
     println!(
-        "{:<6} {:>9} {:>12} {:>12} {:>9} {:>12}",
-        "Model", "configs", "RAM before", "RAM after", "sav %", "runtime"
+        "{:<6} {:>12} {:>12} {:>9} {:>12} {:>12} {:>9} {:>9}",
+        "Model", "RAM before", "RAM after", "sav %", "t(legacy)", "t(optim)", "speedup", "configs"
     );
-    let opts = FlowOptions::default();
+    let optimized = FlowOptions::default();
+    let legacy = FlowOptions::legacy();
+    let mut records: Vec<(String, JsonRecord)> = Vec::new();
+    let mut best_speedup = 0.0f64;
     let mut total = std::time::Duration::ZERO;
     for n in &names {
         let g = models::by_name(n).unwrap();
-        let (r, dt) = time_once(|| optimize(&g, &opts));
-        total += dt;
-        println!(
-            "{:<6} {:>9} {:>12} {:>12} {:>9.1} {:>12.2?}",
-            n,
-            r.configs_tested,
-            r.initial.ram,
-            r.final_eval.ram,
-            r.ram_savings_pct(),
-            dt
+        let (rl, tl) = time_once(|| optimize(&g, &legacy));
+        let (ro, to) = time_once(|| optimize(&g, &optimized));
+        total += tl + to;
+        assert_eq!(
+            rl.final_eval.ram, ro.final_eval.ram,
+            "{n}: the overhaul must be result-preserving"
         );
+        assert_eq!(rl.final_eval.macs, ro.final_eval.macs, "{n}: MACs must match");
+        let speedup = tl.as_secs_f64() / to.as_secs_f64().max(1e-9);
+        best_speedup = best_speedup.max(speedup);
+        println!(
+            "{:<6} {:>12} {:>12} {:>9.1} {:>12.2?} {:>12.2?} {:>8.2}x {:>9}",
+            n,
+            ro.initial.ram,
+            ro.final_eval.ram,
+            ro.ram_savings_pct(),
+            tl,
+            to,
+            speedup,
+            ro.configs_tested
+        );
+        records.push((
+            n.to_string(),
+            JsonRecord::new()
+                .int("ram_before", ro.initial.ram as u64)
+                .int("ram_after", ro.final_eval.ram as u64)
+                .num("legacy_s", tl.as_secs_f64())
+                .num("optimized_s", to.as_secs_f64())
+                .num("speedup", speedup)
+                .int("configs_legacy", rl.configs_tested as u64)
+                .int("configs_optimized", ro.configs_tested as u64),
+        ));
     }
-    println!("total: {total:.2?} (paper: minutes-to-an-hour per model)\n");
+    println!(
+        "\ntotal: {total:.2?}; best speedup {best_speedup:.2}x (acceptance target: >= 3x on at least one model)"
+    );
+    match write_json("BENCH_flow.json", &records) {
+        Ok(()) => println!("wrote BENCH_flow.json"),
+        Err(e) => eprintln!("could not write BENCH_flow.json: {e}"),
+    }
 
     // Thread-scaling ablation on the heaviest small model.
-    println!("screening thread-scaling (KWS):");
+    println!("\nscreening thread-scaling (KWS):");
     let g = models::kws();
     for threads in [1usize, 2, 4, 8] {
         let mut o = FlowOptions::default();
         o.threads = threads;
         let (r, dt) = time_once(|| optimize(&g, &o));
-        println!(
-            "  threads={threads:<2} {:>12.2?} ({} configs)",
-            dt, r.configs_tested
-        );
+        println!("  threads={threads:<2} {:>12.2?} ({} configs)", dt, r.configs_tested);
     }
 }

@@ -11,7 +11,7 @@
 //! ```
 
 use fdt::analysis::MemModel;
-use fdt::bench::{bench, header};
+use fdt::bench::{bench, header, write_json, JsonRecord};
 use fdt::graph::fusion::fuse;
 use fdt::models;
 use fdt::sched::{self, SchedOptions};
@@ -26,6 +26,7 @@ fn main() {
         "{:<10} {:>7} {:>12} {:>12} {:>10} {:>14} {:>14}",
         "Graph", "groups", "strategy", "peak (B)", "optimal", "t(median)", "heuristic peak"
     );
+    let mut records: Vec<(String, JsonRecord)> = Vec::new();
     for name in ["SWIFTNET", "KWS", "TXT", "MW", "CIF", "RAD", "FIG5"] {
         let g = models::by_name(name).unwrap();
         let grouping = fuse(&g);
@@ -50,6 +51,19 @@ fn main() {
             heur.peak
         );
         assert!(s.peak <= heur.peak, "exact/SP must not lose to the heuristic");
+        records.push((
+            name.to_string(),
+            JsonRecord::new()
+                .int("groups", m.n() as u64)
+                .str("strategy", s.strategy)
+                .int("peak", s.peak as u64)
+                .int("heuristic_peak", heur.peak as u64)
+                .num("median_s", t.median.as_secs_f64()),
+        ));
+    }
+    match write_json("BENCH_sched.json", &records) {
+        Ok(()) => println!("wrote BENCH_sched.json"),
+        Err(e) => eprintln!("could not write BENCH_sched.json: {e}"),
     }
 
     // Scaling: random SP graphs of growing size through the SP scheduler.

@@ -331,16 +331,28 @@ impl<'a> MemModel<'a> {
     }
 
     /// Pairs of buffers whose lifetimes overlap (conflicts for layout).
+    ///
+    /// Birth-ordered sweep with an active set: `O(B log B + K)` for `K`
+    /// conflicts instead of the all-pairs scan — this runs once per
+    /// screened candidate, so it is on the flow's hot path. Pairs are
+    /// returned sorted `(i, j)` with `i < j`, matching the order the
+    /// previous all-pairs implementation produced.
     pub fn conflicts(&self, schedule: &[GroupId]) -> Vec<(usize, usize)> {
         let lt = self.lifetimes(schedule);
+        let mut by_birth: Vec<usize> = (0..lt.len()).collect();
+        by_birth.sort_unstable_by_key(|&b| lt[b].0);
+        let mut active: Vec<usize> = Vec::new();
         let mut c = Vec::new();
-        for i in 0..lt.len() {
-            for j in (i + 1)..lt.len() {
-                if lt[i].0 <= lt[j].1 && lt[j].0 <= lt[i].1 {
-                    c.push((i, j));
-                }
+        for &b in &by_birth {
+            let birth = lt[b].0;
+            // Buffers dead before `b` is born can never conflict again.
+            active.retain(|&a| lt[a].1 >= birth);
+            for &a in &active {
+                c.push(if a < b { (a, b) } else { (b, a) });
             }
+            active.push(b);
         }
+        c.sort_unstable();
         c
     }
 }

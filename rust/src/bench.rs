@@ -68,3 +68,45 @@ pub fn header(name: &str, what: &str) {
     println!("=== bench: {name} ===");
     println!("{what}\n");
 }
+
+/// One machine-readable record: ordered key/value pairs rendered as a
+/// JSON object (hand-rolled — serde is not in the offline vendor set).
+#[derive(Debug, Clone, Default)]
+pub struct JsonRecord {
+    fields: Vec<(String, String)>,
+}
+
+impl JsonRecord {
+    pub fn new() -> JsonRecord {
+        JsonRecord::default()
+    }
+    pub fn str(mut self, key: &str, v: &str) -> JsonRecord {
+        self.fields.push((key.to_string(), format!("\"{}\"", v.replace('"', "\\\""))));
+        self
+    }
+    pub fn int(mut self, key: &str, v: u64) -> JsonRecord {
+        self.fields.push((key.to_string(), v.to_string()));
+        self
+    }
+    pub fn num(mut self, key: &str, v: f64) -> JsonRecord {
+        // JSON has no NaN/Inf; clamp to null for robustness.
+        let rendered = if v.is_finite() { format!("{v:.6}") } else { "null".to_string() };
+        self.fields.push((key.to_string(), rendered));
+        self
+    }
+    fn render(&self, indent: &str) -> String {
+        let body: Vec<String> =
+            self.fields.iter().map(|(k, v)| format!("{indent}  \"{k}\": {v}")).collect();
+        format!("{{\n{}\n{indent}}}", body.join(",\n"))
+    }
+}
+
+/// Write `{"<name>": {...}, ...}` to `path` (used by the bench binaries
+/// to emit `BENCH_*.json` artifacts tracked across PRs).
+pub fn write_json(path: &str, records: &[(String, JsonRecord)]) -> std::io::Result<()> {
+    let body: Vec<String> = records
+        .iter()
+        .map(|(name, r)| format!("  \"{}\": {}", name.replace('"', "\\\""), r.render("  ")))
+        .collect();
+    std::fs::write(path, format!("{{\n{}\n}}\n", body.join(",\n")))
+}

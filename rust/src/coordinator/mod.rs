@@ -7,17 +7,43 @@
 //!      -> if L_min < L: G_opt = argmin, repeat; else next B_i; stop.
 //! ```
 //!
-//! Candidate configurations are evaluated concurrently on OS threads
-//! (each evaluation is an independent transform + schedule + layout).
+//! Candidate evaluation is built for speed without changing any result:
+//!
+//! * **Fingerprint memo** — schedule/layout screening results are keyed
+//!   by the post-transform graph's structural fingerprint
+//!   ([`Graph::fingerprint`]), so structurally identical candidates are
+//!   solved once per flow run.
+//! * **Incumbent cutoff** — the best RAM found so far bounds every
+//!   screening: a candidate is abandoned before any search the moment
+//!   [`sched::peak_lower_bound`] reaches the incumbent, and the layout
+//!   pass is skipped outright when the computed schedule peak already
+//!   loses (the arena can never undercut the peak). Both shortcuts are
+//!   provable rejections; when a candidate has no config below the
+//!   incumbent at all, an exact re-screen reproduces the legacy argmin
+//!   (the cutoff-bounded B&B variant, [`sched::schedule_with_cutoff`],
+//!   is deliberately *not* used here: its returned order is not stable
+//!   under budget truncation, which would break result-identity).
+//! * **Plan reuse** — the winner's full-fidelity schedule + layout are
+//!   carried into the next Fig-3 iteration instead of re-solved, and
+//!   full-fidelity layouts are memoized by instance ([`layout::Memo`]).
+//! * **Persistent screening pool** — one set of worker threads serves
+//!   the whole run through a shared work queue (no per-candidate
+//!   `thread::scope` spawn/join churn).
+//!
+//! All four optimizations are result-preserving; [`FlowOptions::legacy`]
+//! disables them so benches can measure the speedup and tests can assert
+//! byte-identical [`Evaluation`]s.
 
 use crate::analysis::{graph_macs, MemModel};
-use crate::graph::fusion::fuse;
+use crate::graph::fusion::{fuse, Grouping};
 use crate::graph::{Graph, TensorId, TensorKind};
 use crate::layout::{self, heuristic, Layout, LayoutOptions};
 use crate::sched::{self, SchedOptions, Schedule};
 use crate::tiling::discovery::{discover, DiscoveryOptions};
 use crate::tiling::PathConfig;
 use crate::transform::apply_tiling;
+use crate::util::FnvHashMap;
+use std::sync::{mpsc, Arc, Mutex};
 
 /// Measured cost of a graph under the full deployment flow.
 #[derive(Debug, Clone)]
@@ -54,6 +80,12 @@ pub struct FlowOptions {
     /// whose cumulative MAC overhead (vs. the *original* graph) exceeds
     /// this percentage. `None` = memory-optimized design (paper default).
     pub max_mac_overhead_pct: Option<f64>,
+    /// Memoize screening by post-transform fingerprint and reuse
+    /// full-fidelity plans across iterations.
+    pub memoize: bool,
+    /// Bound screening by the incumbent best RAM (early B&B abandon +
+    /// layout skip).
+    pub incumbent_cutoff: bool,
 }
 
 impl Default for FlowOptions {
@@ -67,6 +99,24 @@ impl Default for FlowOptions {
             max_candidates: 6,
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             max_mac_overhead_pct: None,
+            memoize: true,
+            incumbent_cutoff: true,
+        }
+    }
+}
+
+impl FlowOptions {
+    /// Pre-overhaul behaviour: exhaustive discovery (no dedup/dominance
+    /// pruning), no fingerprint memo, no incumbent-bounded screening, no
+    /// plan reuse. The optimizations are result-preserving, so this
+    /// produces identical [`Evaluation`]s — it exists so benches can
+    /// measure the speedup and tests can assert the equivalence.
+    pub fn legacy() -> FlowOptions {
+        FlowOptions {
+            discovery: DiscoveryOptions { dedup: false, ..DiscoveryOptions::default() },
+            memoize: false,
+            incumbent_cutoff: false,
+            ..FlowOptions::default()
         }
     }
 }
@@ -126,7 +176,7 @@ pub fn evaluate(g: &Graph, sched_opts: SchedOptions, layout_opts: LayoutOptions)
 /// Schedule + layout, returning all three artifacts (for reports).
 pub fn plan_graph<'a>(
     g: &'a Graph,
-    grouping: &'a crate::graph::fusion::Grouping,
+    grouping: &'a Grouping,
     opts: &FlowOptions,
 ) -> (MemModel<'a>, Schedule, Layout) {
     let m = MemModel::new(g, grouping);
@@ -159,97 +209,312 @@ pub fn critical_buffers(m: &MemModel, schedule: &[usize], l: &Layout) -> Vec<Ten
     cands.into_iter().map(|(_, t)| t).collect()
 }
 
-/// Screen a batch of configs in parallel; returns `(best_ram, index)`.
-/// `mac_cap` is the absolute MAC budget (original MACs scaled by the
-/// overhead threshold); configurations exceeding it are rejected.
-fn screen_configs(
-    g: &Graph,
-    configs: &[PathConfig],
-    opts: &FlowOptions,
+/// Outcome of screening one configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Screen {
+    /// Transform invalid for this graph, or MAC budget exceeded.
+    Invalid,
+    /// Provably unable to beat the incumbent: the schedule peak lower
+    /// bound — or the computed screening peak — already reaches it, and
+    /// the screened first-fit total can only be larger. The exact value
+    /// was not computed.
+    AboveIncumbent,
+    /// Legacy-exact screened arena upper bound (first-fit total).
+    Ram(usize),
+}
+
+/// Screening results memo: post-transform fingerprint -> [`Screen`].
+/// `Invalid` and `Ram` are structure-determined and always reusable;
+/// `AboveIncumbent` stays valid because the incumbent only decreases
+/// over a run (an exact re-screen upgrades such entries to `Ram`).
+type ScreenMemo = FnvHashMap<u64, Screen>;
+
+/// Shared, immutable screening context.
+#[derive(Clone)]
+struct ScreenCtx {
+    opts: Arc<FlowOptions>,
+    /// Absolute MAC budget (original MACs scaled by the overhead
+    /// threshold); configurations exceeding it are rejected (§5.2).
     mac_cap: Option<u64>,
-) -> (Option<(usize, usize)>, usize) {
-    let screen_one = |g: &Graph, c: &PathConfig, opts: &FlowOptions| {
-        screen_one(g, c, opts, mac_cap)
+    memo: Arc<Mutex<ScreenMemo>>,
+}
+
+/// Evaluate one candidate cheaply. `cutoff` is the incumbent best RAM
+/// (`usize::MAX` disables bounding). With `exact` set, the incumbent
+/// shortcuts are bypassed and the result is always `Invalid` or a
+/// legacy-exact `Ram` — used by the ambiguous-candidate fallback in
+/// [`screen_configs`], which needs the same values the pre-overhaul flow
+/// would have ranked by.
+fn screen_one(g: &Graph, cfg: &PathConfig, ctx: &ScreenCtx, cutoff: usize, exact: bool) -> Screen {
+    let Ok(tiled) = apply_tiling(g, cfg) else {
+        return Screen::Invalid;
     };
-    let results: Vec<Option<usize>> = if opts.threads <= 1 || configs.len() <= 1 {
-        configs.iter().map(|c| screen_one(g, c, opts)).collect()
-    } else {
-        let mut results: Vec<Option<usize>> = vec![None; configs.len()];
-        let next = std::sync::atomic::AtomicUsize::new(0);
-        let slots: Vec<std::sync::Mutex<Option<usize>>> =
-            (0..configs.len()).map(|_| std::sync::Mutex::new(None)).collect();
-        std::thread::scope(|scope| {
-            for _ in 0..opts.threads.min(configs.len()) {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    if i >= configs.len() {
-                        break;
-                    }
-                    let r = screen_one(g, &configs[i], opts);
-                    *slots[i].lock().unwrap() = r;
-                });
-            }
-        });
-        for (i, s) in slots.into_iter().enumerate() {
-            results[i] = s.into_inner().unwrap();
+    if let Some(cap) = ctx.mac_cap {
+        if graph_macs(&tiled) > cap {
+            return Screen::Invalid;
         }
-        results
+    }
+    let fp = if ctx.opts.memoize {
+        let fp = tiled.fingerprint();
+        match ctx.memo.lock().unwrap().get(&fp).copied() {
+            Some(hit @ (Screen::Invalid | Screen::Ram(_))) => return hit,
+            Some(Screen::AboveIncumbent) if !exact => return Screen::AboveIncumbent,
+            _ => {}
+        }
+        Some(fp)
+    } else {
+        None
     };
-    let tested = results.len();
-    let best = results
-        .into_iter()
+    let grouping = fuse(&tiled);
+    let m = MemModel::new(&tiled, &grouping);
+    // Abandon before any search: a provable peak lower bound at/above
+    // the incumbent means even the exact planner cannot beat it.
+    if !exact && sched::peak_lower_bound(&m) >= cutoff {
+        if let Some(fp) = fp {
+            ctx.memo.lock().unwrap().insert(fp, Screen::AboveIncumbent);
+        }
+        return Screen::AboveIncumbent;
+    }
+    let s = sched::schedule(&m, ctx.opts.screening_sched);
+    // The screened first-fit total can never undercut the schedule peak,
+    // so a peak at/above the incumbent loses outright — skip the layout.
+    let result = if !exact && s.peak >= cutoff {
+        Screen::AboveIncumbent
+    } else {
+        // Screening uses the first-fit layout (fast); the exact planner
+        // runs on the winner only. First-fit is an upper bound, so a
+        // winning candidate never gets worse after exact planning.
+        let conflicts = m.conflicts(&s.order);
+        Screen::Ram(heuristic::first_fit_by_size(&m.sizes, &conflicts).total)
+    };
+    if let Some(fp) = fp {
+        ctx.memo.lock().unwrap().insert(fp, result);
+    }
+    result
+}
+
+/// A unit of screening work handed to the persistent pool.
+struct Job {
+    batch: u64,
+    idx: usize,
+    graph: Arc<Graph>,
+    configs: Arc<Vec<PathConfig>>,
+    ctx: ScreenCtx,
+    cutoff: usize,
+    exact: bool,
+}
+
+/// Persistent screening workers: spawned once per [`optimize`] run and
+/// fed through a shared queue, so successive candidate batches neither
+/// respawn threads nor pay a scope join beyond their own results.
+struct ScreenPool {
+    tx: Option<mpsc::Sender<Job>>,
+    results: mpsc::Receiver<(u64, usize, Result<Screen, String>)>,
+    batch: u64,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ScreenPool {
+    fn new(threads: usize) -> ScreenPool {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (rtx, results) = mpsc::channel();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::new();
+        for _ in 0..threads.max(1) {
+            let rx = Arc::clone(&rx);
+            let rtx = rtx.clone();
+            handles.push(std::thread::spawn(move || loop {
+                // Holding the lock across `recv` is fine: blocked workers
+                // queue on the mutex instead of the channel, with the
+                // same one-job-per-wakeup distribution.
+                let job = rx.lock().unwrap().recv();
+                let Ok(j) = job else { break };
+                // A panicking config must still produce a result, or the
+                // collector would wait forever. The payload is forwarded
+                // so the collector re-raises it loudly on the main thread
+                // (the pre-overhaul `thread::scope` propagated panics at
+                // its join; masking them as Invalid would hide bugs).
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    screen_one(&j.graph, &j.configs[j.idx], &j.ctx, j.cutoff, j.exact)
+                }))
+                .map_err(|p| {
+                    p.downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| p.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "non-string panic payload".to_string())
+                });
+                if rtx.send((j.batch, j.idx, r)).is_err() {
+                    break;
+                }
+            }));
+        }
+        ScreenPool { tx: Some(tx), results, batch: 0, handles }
+    }
+
+    /// Screen every config of one candidate; returns results by index.
+    fn run_batch(
+        &mut self,
+        graph: &Arc<Graph>,
+        configs: &Arc<Vec<PathConfig>>,
+        ctx: &ScreenCtx,
+        cutoff: usize,
+        exact: bool,
+    ) -> Vec<Screen> {
+        self.batch += 1;
+        let n = configs.len();
+        let tx = self.tx.as_ref().expect("pool already shut down");
+        for idx in 0..n {
+            tx.send(Job {
+                batch: self.batch,
+                idx,
+                graph: Arc::clone(graph),
+                configs: Arc::clone(configs),
+                ctx: ctx.clone(),
+                cutoff,
+                exact,
+            })
+            .expect("screen worker hung up");
+        }
+        let mut out = vec![Screen::Invalid; n];
+        for _ in 0..n {
+            let (batch, idx, r) = self.results.recv().expect("screen worker died");
+            debug_assert_eq!(batch, self.batch, "stale screening result");
+            out[idx] = r.unwrap_or_else(|msg| panic!("screening worker panicked: {msg}"));
+        }
+        out
+    }
+}
+
+impl Drop for ScreenPool {
+    fn drop(&mut self) {
+        self.tx.take(); // closing the queue stops the workers
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Best screened `(ram, index)` over a result set.
+fn best_ram(results: &[Screen]) -> Option<(usize, usize)> {
+    results
+        .iter()
         .enumerate()
-        .filter_map(|(i, r)| r.map(|ram| (ram, i)))
-        .min();
+        .filter_map(|(i, r)| match r {
+            Screen::Ram(ram) => Some((*ram, i)),
+            _ => None,
+        })
+        .min()
+}
+
+/// Screen a batch of configs; returns `(best_ram_and_index, tested)`.
+///
+/// Result-identical to the pre-overhaul flow: `AboveIncumbent` configs
+/// have a legacy screened value `>= cutoff`, so they can only influence
+/// the argmin when *no* config screens below the incumbent. In that
+/// ambiguous case every config is re-screened exactly (memo hits make
+/// the already-valued ones free) so the winner the legacy flow would
+/// have full-evaluated is reproduced bit-for-bit.
+fn screen_configs(
+    g: &Arc<Graph>,
+    configs: &Arc<Vec<PathConfig>>,
+    ctx: &ScreenCtx,
+    cutoff: usize,
+    pool: &mut Option<ScreenPool>,
+) -> (Option<(usize, usize)>, usize) {
+    let mut run = |exact: bool| -> Vec<Screen> {
+        if ctx.opts.threads <= 1 || configs.len() <= 1 {
+            configs.iter().map(|c| screen_one(g, c, ctx, cutoff, exact)).collect()
+        } else {
+            let p = pool.get_or_insert_with(|| ScreenPool::new(ctx.opts.threads));
+            p.run_batch(g, configs, ctx, cutoff, exact)
+        }
+    };
+    let results = run(false);
+    let tested = results.len();
+    let mut best = best_ram(&results);
+    let ambiguous = !best.is_some_and(|(ram, _)| ram < cutoff)
+        && results.iter().any(|r| matches!(r, Screen::AboveIncumbent));
+    if ambiguous {
+        best = best_ram(&run(true));
+    }
     (best, tested)
 }
 
-/// Evaluate one candidate cheaply. `None` when the transform is invalid
-/// for this graph (e.g. partition count exceeding channels) or the MAC
-/// budget is exceeded (§5.2 performance-optimized design).
-fn screen_one(g: &Graph, cfg: &PathConfig, opts: &FlowOptions, mac_cap: Option<u64>) -> Option<usize> {
-    let tiled = apply_tiling(g, cfg).ok()?;
-    if let Some(cap) = mac_cap {
-        if graph_macs(&tiled) > cap {
-            return None;
-        }
-    }
-    let grouping = fuse(&tiled);
-    let m = MemModel::new(&tiled, &grouping);
-    let s = sched::schedule(&m, opts.screening_sched);
-    // Screening uses the first-fit layout (fast); the exact planner runs
-    // on the winner only. First-fit is an upper bound, so a winning
-    // candidate never gets worse after exact planning.
-    let conflicts = m.conflicts(&s.order);
-    let l = heuristic::first_fit_by_size(&m.sizes, &conflicts);
-    Some(l.total)
+/// Full-fidelity evaluation that also returns the plan, so the Fig-3
+/// loop-back can reuse it instead of re-solving the accepted graph.
+fn evaluate_planned(
+    g: &Graph,
+    opts: &FlowOptions,
+    layout_memo: &mut layout::Memo,
+) -> (Evaluation, Grouping, Schedule, Layout) {
+    let grouping = fuse(g);
+    let (eval, s, l) = {
+        let m = MemModel::new(g, &grouping);
+        let s = sched::schedule(&m, opts.sched);
+        let l = if opts.memoize {
+            layout::plan_memoized(&m, &s.order, opts.layout, layout_memo)
+        } else {
+            layout::plan(&m, &s.order, opts.layout)
+        };
+        let eval = Evaluation {
+            ram: l.total,
+            macs: graph_macs(g),
+            rom: g.rom_bytes(),
+            sched_peak: s.peak,
+            sched_strategy: s.strategy,
+            layout_optimal: l.optimal,
+        };
+        (eval, s, l)
+    };
+    (eval, grouping, s, l)
 }
 
 /// Run the full Fig-3 exploration on `g`.
 pub fn optimize(g: &Graph, opts: &FlowOptions) -> FlowResult {
     let t0 = std::time::Instant::now();
-    let initial = evaluate(g, opts.sched, opts.layout);
+    let mut layout_memo = layout::Memo::default();
+    let (initial, grouping0, s0, l0) = evaluate_planned(g, opts, &mut layout_memo);
     // MAC budget relative to the *original* graph, so overhead cannot
     // accumulate past the threshold over iterations.
     let mac_cap = opts
         .max_mac_overhead_pct
         .map(|pct| (initial.macs as f64 * (1.0 + pct / 100.0)).floor() as u64);
-    let mut current = g.clone();
+    let ctx = ScreenCtx {
+        opts: Arc::new(opts.clone()),
+        mac_cap,
+        memo: Arc::new(Mutex::new(ScreenMemo::default())),
+    };
+    let mut pool: Option<ScreenPool> = None;
+    let mut current: Arc<Graph> = Arc::new(g.clone());
     let mut current_eval = initial.clone();
     let mut iterations = Vec::new();
     let mut configs_tested = 0usize;
+    // Plan of `current`, seeded from the initial evaluation and replaced
+    // by the winner's full-fidelity plan on every acceptance (legacy mode
+    // re-solves at the loop head like the pre-overhaul flow did).
+    let mut planned: Option<(Grouping, Schedule, Layout)> =
+        opts.memoize.then_some((grouping0, s0, l0));
 
     'outer: for _ in 0..opts.max_iterations {
-        let grouping = fuse(&current);
-        let (m, s, l) = plan_graph(&current, &grouping, opts);
-        let candidates = critical_buffers(&m, &s.order, &l);
+        let (grouping, s, l) = match planned.take() {
+            Some(p) => p,
+            None => {
+                let (_, gr, s, l) = evaluate_planned(&current, opts, &mut layout_memo);
+                (gr, s, l)
+            }
+        };
+        let candidates = {
+            let m = MemModel::new(&current, &grouping);
+            critical_buffers(&m, &s.order, &l)
+        };
+        let cutoff = if opts.incumbent_cutoff { current_eval.ram } else { usize::MAX };
 
         for t in candidates.into_iter().take(opts.max_candidates) {
-            let configs = discover(&current, t, &opts.discovery);
+            let configs = Arc::new(discover(&current, t, &opts.discovery));
             if configs.is_empty() {
                 continue;
             }
-            let (best, tested) = screen_configs(&current, &configs, opts, mac_cap);
+            let (best, tested) = screen_configs(&current, &configs, &ctx, cutoff, &mut pool);
             configs_tested += tested;
             let Some((_, idx)) = best else { continue };
             // Re-evaluate the winner at full fidelity.
@@ -257,7 +522,7 @@ pub fn optimize(g: &Graph, opts: &FlowOptions) -> FlowResult {
                 Ok(t) => t,
                 Err(_) => continue,
             };
-            let eval = evaluate(&tiled, opts.sched, opts.layout);
+            let (eval, gr2, s2, l2) = evaluate_planned(&tiled, opts, &mut layout_memo);
             if eval.ram < current_eval.ram {
                 iterations.push(IterationLog {
                     critical_buffer: current.tensor(t).name.clone(),
@@ -266,8 +531,9 @@ pub fn optimize(g: &Graph, opts: &FlowOptions) -> FlowResult {
                     ram_after: eval.ram,
                     configs_tested: tested,
                 });
-                current = tiled;
+                current = Arc::new(tiled);
                 current_eval = eval;
+                planned = opts.memoize.then_some((gr2, s2, l2));
                 continue 'outer; // re-plan the new graph (Fig 3 loop-back)
             }
         }
@@ -275,7 +541,7 @@ pub fn optimize(g: &Graph, opts: &FlowOptions) -> FlowResult {
     }
 
     FlowResult {
-        graph: current,
+        graph: Arc::try_unwrap(current).unwrap_or_else(|a| (*a).clone()),
         initial,
         final_eval: current_eval,
         iterations,
@@ -315,5 +581,11 @@ mod tests {
             let r = optimize(&g, &opts);
             assert_eq!(r.final_eval.macs, r.initial.macs, "{}", g.name);
         }
+    }
+
+    #[test]
+    fn legacy_options_disable_every_speedup() {
+        let o = FlowOptions::legacy();
+        assert!(!o.memoize && !o.incumbent_cutoff && !o.discovery.dedup);
     }
 }

@@ -3,9 +3,23 @@
 //! Used to prove the central invariant of the paper's transform: a tiled
 //! graph computes *exactly* the same function as the untiled original
 //! ("memory optimization without changing any DNN behavior"). Not a fast
-//! path — the serving hot path goes through [`crate::runtime`] (PJRT).
+//! path in the serving sense — requests go through [`crate::runtime`] —
+//! but the equivalence and property suites execute thousands of graphs,
+//! so the interpreter is built to avoid allocation churn:
+//!
+//! * weights and model inputs are *borrowed*, never copied into the
+//!   value table;
+//! * op outputs draw their buffers from a size-keyed pool refilled by a
+//!   last-use analysis (a buffer returns to the pool the moment its final
+//!   consumer has run), so a long chain recycles a handful of buffers;
+//! * the conv / dwconv / dense inner loops are stride-hoisted row-major
+//!   kernels: bounds checks hoisted out of the channel loops, innermost
+//!   loops over contiguous slices. Accumulation order per output element
+//!   is unchanged (`dy, dx, ci` ascending), so results are bit-identical
+//!   to the naive loops they replace.
 
-use crate::graph::{ActKind, Graph, Op, OpKind, Padding, TensorKind};
+use crate::graph::{ActKind, Graph, Op, OpKind, Padding, Tensor, TensorId, TensorKind};
+use crate::util::FnvHashMap;
 use std::collections::HashMap;
 
 /// A dense f32 tensor value.
@@ -16,9 +30,23 @@ pub struct Value {
 }
 
 impl Value {
+    /// Construct, validating that `shape` covers `data` exactly. The
+    /// check runs in every build profile: a pooled buffer bound to a
+    /// wrong-shaped slot would silently alias someone else's data
+    /// otherwise.
+    pub fn try_new(shape: Vec<usize>, data: Vec<f32>) -> Result<Value, String> {
+        let want: usize = shape.iter().product();
+        if want != data.len() {
+            return Err(format!(
+                "shape {shape:?} wants {want} elements, buffer holds {}",
+                data.len()
+            ));
+        }
+        Ok(Value { shape, data })
+    }
+    /// [`Value::try_new`], panicking on mismatch (also in release builds).
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
-        assert_eq!(shape.iter().product::<usize>(), data.len());
-        Value { shape, data }
+        Value::try_new(shape, data).unwrap_or_else(|e| panic!("Value::new: {e}"))
     }
     pub fn zeros(shape: Vec<usize>) -> Self {
         let n = shape.iter().product();
@@ -26,6 +54,86 @@ impl Value {
     }
     pub fn numel(&self) -> usize {
         self.data.len()
+    }
+}
+
+/// Size-keyed free-list of output buffers. `put` is a no-op unless
+/// recycling is on (callers that keep every tensor value alive cannot
+/// recycle anything).
+struct Pool {
+    recycle: bool,
+    free: FnvHashMap<usize, Vec<Vec<f32>>>,
+}
+
+impl Pool {
+    fn new(recycle: bool) -> Pool {
+        Pool { recycle, free: FnvHashMap::default() }
+    }
+    fn grab(&mut self, n: usize) -> Option<Vec<f32>> {
+        self.free.get_mut(&n).and_then(|v| v.pop())
+    }
+    /// A zero-filled value of `shape`, reusing a pooled buffer if one of
+    /// the exact size is free.
+    fn zeroed(&mut self, shape: Vec<usize>) -> Value {
+        let n = shape.iter().product();
+        let data = match self.grab(n) {
+            Some(mut d) => {
+                d.fill(0.0);
+                d
+            }
+            None => vec![0.0; n],
+        };
+        Value::try_new(shape, data).expect("pooled buffer does not fit slot shape")
+    }
+    /// A copy of `src` under `shape`, reusing a pooled buffer if free.
+    fn copy(&mut self, shape: Vec<usize>, src: &[f32]) -> Value {
+        let data = match self.grab(src.len()) {
+            Some(mut d) => {
+                d.copy_from_slice(src);
+                d
+            }
+            None => src.to_vec(),
+        };
+        Value::try_new(shape, data).expect("pooled buffer does not fit slot shape")
+    }
+    fn put(&mut self, data: Vec<f32>) {
+        if self.recycle && !data.is_empty() {
+            self.free.entry(data.len()).or_default().push(data);
+        }
+    }
+}
+
+/// One entry of the value table. Weights and model inputs are borrowed;
+/// only op outputs are owned (and recyclable).
+enum Slot<'a> {
+    Empty,
+    Owned(Value),
+    Borrowed(&'a Value),
+    Weight(&'a Tensor),
+}
+
+/// Shape + data view of a slot. Panics on `Empty` (topo order violated).
+fn view<'s>(slots: &'s [Slot<'_>], t: TensorId) -> (&'s [usize], &'s [f32]) {
+    match &slots[t] {
+        Slot::Owned(v) => (&v.shape, &v.data),
+        Slot::Borrowed(v) => (&v.shape, &v.data),
+        Slot::Weight(w) => {
+            (&w.shape, w.data.as_deref().expect("weight data validated at setup"))
+        }
+        Slot::Empty => panic!("tensor {t} read before being computed"),
+    }
+}
+
+/// Clone a slot out into an owned [`Value`].
+fn slot_value(slots: &[Slot<'_>], t: TensorId) -> Result<Value, String> {
+    match &slots[t] {
+        Slot::Owned(v) => Ok(v.clone()),
+        Slot::Borrowed(v) => Ok((*v).clone()),
+        Slot::Weight(w) => Ok(Value {
+            shape: w.shape.clone(),
+            data: w.data.clone().expect("weight data validated at setup"),
+        }),
+        Slot::Empty => Err(format!("tensor {t} not computed")),
     }
 }
 
@@ -57,8 +165,8 @@ fn pad_before(padding: Padding, in_h: usize, in_w: usize, k: (usize, usize), s: 
 /// Execute the graph. `inputs` maps model-input tensor names to values.
 /// Returns the model outputs in declaration order.
 pub fn run(g: &Graph, inputs: &HashMap<String, Value>) -> Result<Vec<Value>, String> {
-    let vals = run_all_with(g, inputs, |_, v| v)?;
-    Ok(g.outputs.iter().map(|&t| vals[t].clone()).collect())
+    let slots = execute(g, inputs, false, |_, v| v)?;
+    g.outputs.iter().map(|&t| slot_value(&slots, t)).collect()
 }
 
 /// Execute and return the value of *every* tensor (calibration etc.).
@@ -73,11 +181,23 @@ pub fn run_all(g: &Graph, inputs: &HashMap<String, Value>) -> Result<Vec<Value>,
 pub fn run_all_with(
     g: &Graph,
     inputs: &HashMap<String, Value>,
-    mut post: impl FnMut(crate::graph::TensorId, Value) -> Value,
+    post: impl FnMut(crate::graph::TensorId, Value) -> Value,
 ) -> Result<Vec<Value>, String> {
-    let mut vals: Vec<Option<Value>> = vec![None; g.tensors.len()];
+    let slots = execute(g, inputs, true, post)?;
+    (0..g.tensors.len()).map(|t| slot_value(&slots, t)).collect()
+}
+
+/// Interpreter core. With `keep_all` false, intermediate buffers return
+/// to the pool after their last consumer runs (model outputs survive).
+fn execute<'a>(
+    g: &'a Graph,
+    inputs: &'a HashMap<String, Value>,
+    keep_all: bool,
+    mut post: impl FnMut(crate::graph::TensorId, Value) -> Value,
+) -> Result<Vec<Slot<'a>>, String> {
+    let mut slots: Vec<Slot<'a>> = Vec::with_capacity(g.tensors.len());
     for t in &g.tensors {
-        match t.kind {
+        let s = match t.kind {
             TensorKind::Input => {
                 let v = inputs
                     .get(&t.name)
@@ -85,126 +205,161 @@ pub fn run_all_with(
                 if v.shape != t.shape {
                     return Err(format!("input {} shape {:?} != {:?}", t.name, v.shape, t.shape));
                 }
-                vals[t.id] = Some(v.clone());
+                Slot::Borrowed(v)
             }
             TensorKind::Weight => {
-                let data = t
-                    .data
-                    .clone()
-                    .ok_or_else(|| format!("weight {} has no data (model built without_data)", t.name))?;
-                vals[t.id] = Some(Value::new(t.shape.clone(), data));
+                if t.data.is_none() {
+                    return Err(format!(
+                        "weight {} has no data (model built without_data)",
+                        t.name
+                    ));
+                }
+                Slot::Weight(t)
             }
-            TensorKind::Intermediate => {}
-        }
+            TensorKind::Intermediate => Slot::Empty,
+        };
+        slots.push(s);
     }
+
+    // Last-use analysis for buffer recycling.
+    let consumers = g.consumers();
+    let mut remaining: Vec<usize> = consumers.iter().map(|c| c.len()).collect();
+    let is_output: Vec<bool> = {
+        let mut v = vec![false; g.tensors.len()];
+        for &o in &g.outputs {
+            v[o] = true;
+        }
+        v
+    };
+    let mut pool = Pool::new(!keep_all);
+
     for oid in g.topo_order() {
         let op = g.op(oid);
-        let out = eval(g, op, &vals)?;
-        vals[op.output] = Some(post(op.output, out));
+        let out = eval(g, op, &slots, &mut pool)?;
+        slots[op.output] = Slot::Owned(post(op.output, out));
+        if !keep_all {
+            for &i in &op.inputs {
+                remaining[i] -= 1;
+                if remaining[i] == 0 && !is_output[i] {
+                    if let Slot::Owned(v) = std::mem::replace(&mut slots[i], Slot::Empty) {
+                        pool.put(v.data);
+                    }
+                }
+            }
+        }
     }
-    vals.into_iter()
-        .enumerate()
-        .map(|(t, v)| v.ok_or_else(|| format!("tensor {t} not computed")))
-        .collect()
+    Ok(slots)
 }
 
-fn eval(g: &Graph, op: &Op, vals: &[Option<Value>]) -> Result<Value, String> {
-    let v = |i: usize| -> &Value { vals[op.inputs[i]].as_ref().expect("topo order violated") };
+fn eval(g: &Graph, op: &Op, slots: &[Slot<'_>], pool: &mut Pool) -> Result<Value, String> {
+    let v = |i: usize| view(slots, op.inputs[i]);
     let out_shape = g.tensor(op.output).shape.clone();
     let r = match &op.kind {
         OpKind::Conv2d { stride, padding } => {
-            let x = v(0);
-            let w = v(1);
-            let (kh, kw, cin, cout) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
-            let (ih, iw) = (x.shape[0], x.shape[1]);
+            let (xs, xd) = v(0);
+            let (ws, wd) = v(1);
+            let (kh, kw, cin, cout) = (ws[0], ws[1], ws[2], ws[3]);
+            let (ih, iw) = (xs[0], xs[1]);
             let (oh, ow) = (out_shape[0], out_shape[1]);
             let (pt, pl) = pad_before(*padding, ih, iw, (kh, kw), *stride);
-            let mut out = Value::zeros(out_shape.clone());
+            let mut out = pool.zeroed(out_shape.clone());
+            let od = &mut out.data;
             for y in 0..oh {
-                for xx in 0..ow {
-                    for co in 0..cout {
-                        let mut acc = 0.0f32;
-                        for dy in 0..kh {
-                            let sy = y as isize * stride.0 as isize + dy as isize - pt;
-                            if sy < 0 || sy >= ih as isize {
+                let ybase = y * ow;
+                for dy in 0..kh {
+                    let sy = y as isize * stride.0 as isize + dy as isize - pt;
+                    if sy < 0 || sy >= ih as isize {
+                        continue;
+                    }
+                    let xrow = sy as usize * iw;
+                    let wdy = dy * kw;
+                    for xx in 0..ow {
+                        let obase = (ybase + xx) * cout;
+                        for dx in 0..kw {
+                            let sx = xx as isize * stride.1 as isize + dx as isize - pl;
+                            if sx < 0 || sx >= iw as isize {
                                 continue;
                             }
-                            for dx in 0..kw {
-                                let sx = xx as isize * stride.1 as isize + dx as isize - pl;
-                                if sx < 0 || sx >= iw as isize {
-                                    continue;
-                                }
-                                let xi = (sy as usize * iw + sx as usize) * cin;
-                                let wi = ((dy * kw + dx) * cin) * cout;
-                                for ci in 0..cin {
-                                    acc += x.data[xi + ci] * w.data[wi + ci * cout + co];
+                            let xbase = (xrow + sx as usize) * cin;
+                            let wbase = (wdy + dx) * cin * cout;
+                            for ci in 0..cin {
+                                let xv = xd[xbase + ci];
+                                let wrow = &wd[wbase + ci * cout..wbase + (ci + 1) * cout];
+                                let orow = &mut od[obase..obase + cout];
+                                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                                    *o += xv * wv;
                                 }
                             }
                         }
-                        out.data[(y * ow + xx) * cout + co] = acc;
                     }
                 }
             }
             out
         }
         OpKind::DepthwiseConv2d { stride, padding } => {
-            let x = v(0);
-            let w = v(1);
-            let (kh, kw, c) = (w.shape[0], w.shape[1], w.shape[2]);
-            let (ih, iw) = (x.shape[0], x.shape[1]);
+            let (xs, xd) = v(0);
+            let (ws, wd) = v(1);
+            let (kh, kw, c) = (ws[0], ws[1], ws[2]);
+            let (ih, iw) = (xs[0], xs[1]);
             let (oh, ow) = (out_shape[0], out_shape[1]);
             let (pt, pl) = pad_before(*padding, ih, iw, (kh, kw), *stride);
-            let mut out = Value::zeros(out_shape.clone());
+            let mut out = pool.zeroed(out_shape.clone());
+            let od = &mut out.data;
             for y in 0..oh {
-                for xx in 0..ow {
-                    for ch in 0..c {
-                        let mut acc = 0.0f32;
-                        for dy in 0..kh {
-                            let sy = y as isize * stride.0 as isize + dy as isize - pt;
-                            if sy < 0 || sy >= ih as isize {
+                let ybase = y * ow;
+                for dy in 0..kh {
+                    let sy = y as isize * stride.0 as isize + dy as isize - pt;
+                    if sy < 0 || sy >= ih as isize {
+                        continue;
+                    }
+                    let xrow = sy as usize * iw;
+                    for xx in 0..ow {
+                        let obase = (ybase + xx) * c;
+                        for dx in 0..kw {
+                            let sx = xx as isize * stride.1 as isize + dx as isize - pl;
+                            if sx < 0 || sx >= iw as isize {
                                 continue;
                             }
-                            for dx in 0..kw {
-                                let sx = xx as isize * stride.1 as isize + dx as isize - pl;
-                                if sx < 0 || sx >= iw as isize {
-                                    continue;
-                                }
-                                acc += x.data[(sy as usize * iw + sx as usize) * c + ch]
-                                    * w.data[(dy * kw + dx) * c + ch];
+                            let xbase = (xrow + sx as usize) * c;
+                            let wbase = (dy * kw + dx) * c;
+                            let xrow_s = &xd[xbase..xbase + c];
+                            let wrow_s = &wd[wbase..wbase + c];
+                            let orow = &mut od[obase..obase + c];
+                            for ((o, &xv), &wv) in orow.iter_mut().zip(xrow_s).zip(wrow_s) {
+                                *o += xv * wv;
                             }
                         }
-                        out.data[(y * ow + xx) * c + ch] = acc;
                     }
                 }
             }
             out
         }
         OpKind::Dense => {
-            let x = v(0);
-            let w = v(1);
-            let (fin, fout) = (w.shape[0], w.shape[1]);
-            let mut out = Value::zeros(vec![fout]);
-            for o in 0..fout {
-                let mut acc = 0.0;
-                for i in 0..fin {
-                    acc += x.data[i] * w.data[i * fout + o];
+            let (_, xd) = v(0);
+            let (ws, wd) = v(1);
+            let fout = ws[1];
+            let mut out = pool.zeroed(vec![fout]);
+            // Row-major: stream W row-by-row instead of striding columns.
+            for (&xv, wrow) in xd.iter().zip(wd.chunks_exact(fout)) {
+                for (o, &wv) in out.data.iter_mut().zip(wrow) {
+                    *o += xv * wv;
                 }
-                out.data[o] = acc;
             }
             out
         }
         OpKind::BiasAdd => {
-            let x = v(0);
-            let b = v(1);
-            let c = b.shape[0];
-            let mut out = x.clone();
+            let (xs, xd) = v(0);
+            let (bs, bd) = v(1);
+            let c = bs[0];
+            let mut out = pool.copy(xs.to_vec(), xd);
             for (i, d) in out.data.iter_mut().enumerate() {
-                *d += b.data[i % c];
+                *d += bd[i % c];
             }
             out
         }
         OpKind::Activation(a) => {
-            let mut out = v(0).clone();
+            let (xs, xd) = v(0);
+            let mut out = pool.copy(xs.to_vec(), xd);
             for d in out.data.iter_mut() {
                 *d = act(*a, *d);
             }
@@ -212,11 +367,11 @@ fn eval(g: &Graph, op: &Op, vals: &[Option<Value>]) -> Result<Value, String> {
         }
         OpKind::MaxPool2d { ksize, stride, padding } | OpKind::AvgPool2d { ksize, stride, padding } => {
             let is_max = matches!(op.kind, OpKind::MaxPool2d { .. });
-            let x = v(0);
-            let (ih, iw, c) = (x.shape[0], x.shape[1], x.shape[2]);
+            let (xs, xd) = v(0);
+            let (ih, iw, c) = (xs[0], xs[1], xs[2]);
             let (oh, ow) = (out_shape[0], out_shape[1]);
             let (pt, pl) = pad_before(*padding, ih, iw, *ksize, *stride);
-            let mut out = Value::zeros(out_shape.clone());
+            let mut out = pool.zeroed(out_shape.clone());
             for y in 0..oh {
                 for xx in 0..ow {
                     for ch in 0..c {
@@ -233,7 +388,7 @@ fn eval(g: &Graph, op: &Op, vals: &[Option<Value>]) -> Result<Value, String> {
                                 if sx < 0 || sx >= iw as isize {
                                     continue;
                                 }
-                                let val = x.data[(sy as usize * iw + sx as usize) * c + ch];
+                                let val = xd[(sy as usize * iw + sx as usize) * c + ch];
                                 best = best.max(val);
                                 sum += val;
                                 cnt += 1;
@@ -247,12 +402,13 @@ fn eval(g: &Graph, op: &Op, vals: &[Option<Value>]) -> Result<Value, String> {
             out
         }
         OpKind::GlobalAvgPool => {
-            let x = v(0);
-            let (h, w, c) = (x.shape[0], x.shape[1], x.shape[2]);
-            let mut out = Value::zeros(vec![c]);
+            let (xs, xd) = v(0);
+            let (h, w, c) = (xs[0], xs[1], xs[2]);
+            let mut out = pool.zeroed(vec![c]);
             for i in 0..h * w {
-                for ch in 0..c {
-                    out.data[ch] += x.data[i * c + ch];
+                let xrow = &xd[i * c..(i + 1) * c];
+                for (o, &xv) in out.data.iter_mut().zip(xrow) {
+                    *o += xv;
                 }
             }
             for d in out.data.iter_mut() {
@@ -261,26 +417,28 @@ fn eval(g: &Graph, op: &Op, vals: &[Option<Value>]) -> Result<Value, String> {
             out
         }
         OpKind::Add | OpKind::Mul => {
-            let a = v(0);
-            let b = v(1);
-            let mut out = a.clone();
-            for (i, d) in out.data.iter_mut().enumerate() {
-                if matches!(op.kind, OpKind::Add) {
-                    *d += b.data[i];
-                } else {
-                    *d *= b.data[i];
+            let (as_, ad) = v(0);
+            let (_, bd) = v(1);
+            let mut out = pool.copy(as_.to_vec(), ad);
+            if matches!(op.kind, OpKind::Add) {
+                for (d, &b) in out.data.iter_mut().zip(bd) {
+                    *d += b;
+                }
+            } else {
+                for (d, &b) in out.data.iter_mut().zip(bd) {
+                    *d *= b;
                 }
             }
             out
         }
         OpKind::Pad { pads } => {
-            let x = v(0);
-            let mut out = Value::zeros(out_shape.clone());
+            let (xs, xd) = v(0);
+            let mut out = pool.zeroed(out_shape.clone());
             // Generic n-d zero pad via index arithmetic.
-            let in_strides = strides(&x.shape);
+            let in_strides = strides(xs);
             let out_strides = strides(&out_shape);
-            let mut idx = vec![0usize; x.shape.len()];
-            for flat in 0..x.numel() {
+            let mut idx = vec![0usize; xs.len()];
+            for (flat, &xv) in xd.iter().enumerate() {
                 let mut rem = flat;
                 for (d, &s) in in_strides.iter().enumerate() {
                     idx[d] = rem / s;
@@ -290,14 +448,17 @@ fn eval(g: &Graph, op: &Op, vals: &[Option<Value>]) -> Result<Value, String> {
                 for d in 0..idx.len() {
                     oflat += (idx[d] + pads[d].0) * out_strides[d];
                 }
-                out.data[oflat] = x.data[flat];
+                out.data[oflat] = xv;
             }
             out
         }
-        OpKind::Reshape { .. } => Value::new(out_shape.clone(), v(0).data.clone()),
+        OpKind::Reshape { .. } => {
+            let (_, xd) = v(0);
+            pool.copy(out_shape.clone(), xd)
+        }
         OpKind::Softmax => {
-            let x = v(0);
-            let mut out = x.clone();
+            let (xs, xd) = v(0);
+            let mut out = pool.copy(xs.to_vec(), xd);
             let m = out.data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
             let mut sum = 0.0;
             for d in out.data.iter_mut() {
@@ -310,33 +471,33 @@ fn eval(g: &Graph, op: &Op, vals: &[Option<Value>]) -> Result<Value, String> {
             out
         }
         OpKind::Gather => {
-            let table = v(0);
-            let idx = v(1);
-            let emb = table.shape[1];
-            let mut out = Value::zeros(out_shape.clone());
-            for (i, &ix) in idx.data.iter().enumerate() {
+            let (ts, td) = v(0);
+            let (_, id) = v(1);
+            let emb = ts[1];
+            let mut out = pool.zeroed(out_shape.clone());
+            for (i, &ix) in id.iter().enumerate() {
                 let row = ix as usize;
-                if row >= table.shape[0] {
+                if row >= ts[0] {
                     return Err(format!("{}: index {row} out of range", op.name));
                 }
                 out.data[i * emb..(i + 1) * emb]
-                    .copy_from_slice(&table.data[row * emb..(row + 1) * emb]);
+                    .copy_from_slice(&td[row * emb..(row + 1) * emb]);
             }
             out
         }
         OpKind::ReduceMean { axis, .. } => {
-            let x = v(0);
-            let n = x.shape[*axis];
-            let mut out = Value::zeros(out_shape.clone());
+            let (xs, xd) = v(0);
+            let n = xs[*axis];
+            let mut out = pool.zeroed(out_shape.clone());
             // Accumulate into the output index with `axis` removed
             // (keepdims produces the same flat layout).
-            let outer: usize = x.shape[..*axis].iter().product();
-            let inner: usize = x.shape[*axis + 1..].iter().product();
+            let outer: usize = xs[..*axis].iter().product();
+            let inner: usize = xs[*axis + 1..].iter().product();
             for o in 0..outer {
                 for i in 0..inner {
                     let mut acc = 0.0;
                     for a in 0..n {
-                        acc += x.data[(o * n + a) * inner + i];
+                        acc += xd[(o * n + a) * inner + i];
                     }
                     out.data[o * inner + i] = acc / n as f32;
                 }
@@ -344,12 +505,12 @@ fn eval(g: &Graph, op: &Op, vals: &[Option<Value>]) -> Result<Value, String> {
             out
         }
         OpKind::Slice { begins, ends } => {
-            let x = v(0);
-            let in_strides = strides(&x.shape);
+            let (xs, xd) = v(0);
+            let in_strides = strides(xs);
             let out_strides = strides(&out_shape);
-            let mut out = Value::zeros(out_shape.clone());
+            let mut out = pool.zeroed(out_shape.clone());
             let mut idx = vec![0usize; out_shape.len()];
-            for oflat in 0..out.numel() {
+            for oflat in 0..out.data.len() {
                 let mut rem = oflat;
                 for (d, &s) in out_strides.iter().enumerate() {
                     idx[d] = rem / s;
@@ -359,20 +520,20 @@ fn eval(g: &Graph, op: &Op, vals: &[Option<Value>]) -> Result<Value, String> {
                 for d in 0..idx.len() {
                     iflat += (idx[d] + begins[d]) * in_strides[d];
                 }
-                out.data[oflat] = x.data[iflat];
+                out.data[oflat] = xd[iflat];
             }
             debug_assert!(begins.iter().zip(ends).all(|(b, e)| b < e));
             out
         }
         OpKind::Concat { axis } => {
-            let mut out = Value::zeros(out_shape.clone());
+            let mut out = pool.zeroed(out_shape.clone());
             let out_strides = strides(&out_shape);
             let mut offset = 0usize;
             for k in 0..op.inputs.len() {
-                let x = v(k);
-                let in_strides = strides(&x.shape);
-                let mut idx = vec![0usize; x.shape.len()];
-                for flat in 0..x.numel() {
+                let (ks, kd) = v(k);
+                let in_strides = strides(ks);
+                let mut idx = vec![0usize; ks.len()];
+                for (flat, &xv) in kd.iter().enumerate() {
                     let mut rem = flat;
                     for (d, &s) in in_strides.iter().enumerate() {
                         idx[d] = rem / s;
@@ -383,18 +544,19 @@ fn eval(g: &Graph, op: &Op, vals: &[Option<Value>]) -> Result<Value, String> {
                         let coord = if d == *axis { idx[d] + offset } else { idx[d] };
                         oflat += coord * out_strides[d];
                     }
-                    out.data[oflat] = x.data[flat];
+                    out.data[oflat] = xv;
                 }
-                offset += x.shape[*axis];
+                offset += ks[*axis];
             }
             out
         }
         OpKind::Merge { act: a } => {
-            let mut out = v(0).clone();
+            let (fs, fd) = v(0);
+            let mut out = pool.copy(fs.to_vec(), fd);
             for k in 1..op.inputs.len() {
-                let x = v(k);
-                for (i, d) in out.data.iter_mut().enumerate() {
-                    *d += x.data[i];
+                let (_, kd) = v(k);
+                for (d, &x) in out.data.iter_mut().zip(kd) {
+                    *d += x;
                 }
             }
             for d in out.data.iter_mut() {
@@ -513,5 +675,29 @@ mod tests {
         let inputs = random_inputs(&g, 7);
         let out = run(&g, &inputs).unwrap();
         assert_eq!(out[0].shape, vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn try_new_rejects_shape_data_mismatch() {
+        assert!(Value::try_new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Value::try_new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn run_and_run_all_agree_on_outputs() {
+        // `run` recycles dead buffers through the pool; `run_all` keeps
+        // everything. Both must produce identical outputs.
+        let mut b = GraphBuilder::new("chain");
+        let x = b.input("x", vec![6, 6, 2], DType::F32);
+        let y = b.conv2d(x, 4, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+        let y = b.dwconv(y, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+        let y = b.conv2d(y, 2, (1, 1), (1, 1), Padding::Valid, ActKind::Identity);
+        let g = b.finish(vec![y]);
+        let inputs = random_inputs(&g, 11);
+        let pooled = run(&g, &inputs).unwrap();
+        let kept = run_all(&g, &inputs).unwrap();
+        for (o, &t) in g.outputs.iter().enumerate() {
+            assert_eq!(pooled[o], kept[t]);
+        }
     }
 }

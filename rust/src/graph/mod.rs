@@ -46,7 +46,7 @@ impl DType {
 }
 
 /// Role of a tensor in the graph.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TensorKind {
     /// Model input — written as a whole by the application; untileable.
     Input,
@@ -57,7 +57,7 @@ pub enum TensorKind {
 }
 
 /// Activation function fused into [`OpKind::Activation`] / [`OpKind::Merge`].
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ActKind {
     Identity,
     Relu,
@@ -67,7 +67,7 @@ pub enum ActKind {
 }
 
 /// Spatial padding mode for convolution / pooling ops.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Padding {
     /// TensorFlow SAME: output spatial size = ceil(in / stride).
     Same,
@@ -79,7 +79,7 @@ pub enum Padding {
 
 /// Operation kinds. Activation inputs come first in [`Op::inputs`],
 /// followed by weights/bias constants.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum OpKind {
     /// 2-D convolution, NHWC activations, HWIO weights `[kh, kw, cin, cout]`.
     /// Inputs: `[x, w]`.
@@ -298,6 +298,33 @@ impl Graph {
         // Acyclicity.
         self.topo_order();
         Ok(())
+    }
+
+    /// Structural fingerprint of the graph: a 64-bit hash over op kinds
+    /// and parameters, tensor shapes/dtypes/roles, wiring and fusion
+    /// barriers — everything the scheduler, layout planner and MAC
+    /// counter depend on. Names and weight *values* are excluded, so two
+    /// tiling transforms producing structurally identical graphs share a
+    /// fingerprint and the coordinator solves them once.
+    pub fn fingerprint(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = crate::util::Fnv::default();
+        self.tensors.len().hash(&mut h);
+        self.ops.len().hash(&mut h);
+        for t in &self.tensors {
+            t.shape.hash(&mut h);
+            t.dtype.hash(&mut h);
+            t.kind.hash(&mut h);
+        }
+        for o in &self.ops {
+            o.kind.hash(&mut h);
+            o.inputs.hash(&mut h);
+            o.output.hash(&mut h);
+            o.no_fuse.hash(&mut h);
+        }
+        self.inputs.hash(&mut h);
+        self.outputs.hash(&mut h);
+        h.finish()
     }
 
     /// Total weight bytes (ROM).

@@ -182,22 +182,20 @@ fn dfs(
     let mut complete = true;
     // Duplicate elimination: two unplaced buffers with identical size,
     // landing offset *and* conflict neighbourhood are interchangeable —
-    // try only the first.
-    let mut seen: Vec<(usize, usize, usize)> = Vec::new();
+    // try only the first. Bucketing on (offset, size) keeps the costly
+    // neighbourhood comparison to genuinely colliding candidates.
+    let mut seen: crate::util::FnvHashMap<(usize, usize), Vec<usize>> = Default::default();
     for pi in 0..pref.len() {
         let b = pref[pi];
         if offsets[b] != usize::MAX {
             continue;
         }
         let land = at[b];
-        let key = (land, ctx.sizes[b], b);
-        if seen
-            .iter()
-            .any(|&(a, s, o)| a == land && s == ctx.sizes[b] && same_neighbourhood(&ctx.adj, o, b))
-        {
+        let bucket = seen.entry((land, ctx.sizes[b])).or_default();
+        if bucket.iter().any(|&o| same_neighbourhood(&ctx.adj, o, b)) {
             continue;
         }
-        seen.push(key);
+        bucket.push(b);
         offsets[b] = land;
         // Update the cached offsets of b's unplaced neighbours (only they
         // can be affected), saving the old values in this depth's slot.

@@ -75,17 +75,59 @@ impl Default for LayoutOptions {
 /// is returned (on budget-limited instances SA can beat the incumbent
 /// the truncated B&B kept).
 pub fn plan(m: &MemModel, schedule: &[GroupId], opts: LayoutOptions) -> Layout {
-    let sizes = &m.sizes;
     let conflicts = m.conflicts(schedule);
-    let warm = heuristic::first_fit_by_size(sizes, &conflicts);
     // The schedule's peak live bytes is a clique lower bound: buffers
     // live at the same step pairwise conflict and must coexist.
     let clique_lb = m.profile(schedule).peak;
+    plan_instance(&m.sizes, &conflicts, clique_lb, opts)
+}
+
+/// Memo of planned layouts keyed by the `(sizes, conflicts, clique-bound,
+/// options)` instance fingerprint. Structurally identical graphs recur
+/// constantly in the exploration flow (the winner is re-planned on
+/// loop-back, screening revisits equivalent transforms); planning is
+/// deterministic, so a memo hit returns a byte-identical layout.
+pub type Memo = crate::util::FnvHashMap<u64, Layout>;
+
+/// [`plan`] with instance memoization (see [`Memo`]).
+pub fn plan_memoized(
+    m: &MemModel,
+    schedule: &[GroupId],
+    opts: LayoutOptions,
+    memo: &mut Memo,
+) -> Layout {
+    let conflicts = m.conflicts(schedule);
+    let clique_lb = m.profile(schedule).peak;
+    let key = {
+        use std::hash::{Hash, Hasher};
+        let mut h = crate::util::Fnv::default();
+        m.sizes.hash(&mut h);
+        conflicts.hash(&mut h);
+        clique_lb.hash(&mut h);
+        opts.bnb_node_budget.hash(&mut h);
+        h.finish()
+    };
+    if let Some(l) = memo.get(&key) {
+        return l.clone();
+    }
+    let l = plan_instance(&m.sizes, &conflicts, clique_lb, opts);
+    memo.insert(key, l.clone());
+    l
+}
+
+/// Shared instance solver behind [`plan`] / [`plan_memoized`].
+fn plan_instance(
+    sizes: &[usize],
+    conflicts: &[(usize, usize)],
+    clique_lb: usize,
+    opts: LayoutOptions,
+) -> Layout {
+    let warm = heuristic::first_fit_by_size(sizes, conflicts);
     let (mut layout, complete) =
-        bnb::place_with_lb(sizes, &conflicts, opts.bnb_node_budget, Some(warm), clique_lb);
+        bnb::place_with_lb(sizes, conflicts, opts.bnb_node_budget, Some(warm), clique_lb);
     if !complete {
         for seed in [7, 11, 23] {
-            let sa = heuristic::hill_climb_sa(sizes, &conflicts, 2000, seed);
+            let sa = heuristic::hill_climb_sa(sizes, conflicts, 2000, seed);
             if sa.total < layout.total {
                 layout = Layout { strategy: "bnb+sa", ..sa };
             }

@@ -43,5 +43,6 @@ pub mod runtime;
 pub mod sched;
 pub mod tiling;
 pub mod transform;
+pub mod util;
 
 pub use graph::{ActKind, DType, Graph, Op, OpId, OpKind, Padding, Tensor, TensorId, TensorKind};

@@ -1,0 +1,128 @@
+//! The real PJRT runtime (feature `pjrt`): loads the JAX/Pallas AOT
+//! artifacts (`artifacts/*.hlo.txt`) and executes them from Rust — the
+//! request path never touches Python.
+//!
+//! Interchange format is HLO *text* (not serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while
+//! the text parser reassigns ids (see `/opt/xla-example/README.md` and
+//! `python/compile/aot.py`).
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// A compiled model executable on the PJRT CPU client.
+pub struct Engine {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+/// Shared PJRT client (one per process).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the PJRT CPU client.
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO-text artifact.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Engine> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("compiling HLO")?;
+        Ok(Engine {
+            exe,
+            name: path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+        })
+    }
+}
+
+/// A typed input buffer (the artifact signatures use f32 activations and
+/// i32 token ids — see `artifacts/manifest.json`).
+#[derive(Debug, Clone)]
+pub enum Buffer {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Buffer {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Buffer::F32 { shape, data }
+    }
+
+    pub fn new_i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Buffer::I32 { shape, data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Buffer::F32 { shape, .. } | Buffer::I32 { shape, .. } => shape,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        match self {
+            Buffer::F32 { data, .. } => {
+                xla::Literal::vec1(data).reshape(&dims).context("reshaping f32 literal")
+            }
+            Buffer::I32 { data, .. } => {
+                xla::Literal::vec1(data).reshape(&dims).context("reshaping i32 literal")
+            }
+        }
+    }
+}
+
+impl Engine {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute; the artifact returns a tuple (lowered with
+    /// `return_tuple=True`), flattened here to a list of f32 arrays.
+    pub fn run_f32(&self, inputs: &[Buffer]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(Buffer::to_literal).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let tuple = result.to_tuple().context("untupling result")?;
+        tuple
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+}
+
+/// Compare two artifacts (e.g. untiled vs FDT-tiled lowering of the same
+/// model) on the same inputs; returns the max absolute difference.
+pub fn max_artifact_diff(a: &Engine, b: &Engine, inputs: &[Buffer]) -> Result<f32> {
+    let ra = a.run_f32(inputs)?;
+    let rb = b.run_f32(inputs)?;
+    if ra.len() != rb.len() {
+        return Err(anyhow!("output arity differs: {} vs {}", ra.len(), rb.len()));
+    }
+    let mut m = 0.0f32;
+    for (x, y) in ra.iter().zip(&rb) {
+        if x.len() != y.len() {
+            return Err(anyhow!("output length differs: {} vs {}", x.len(), y.len()));
+        }
+        for (u, v) in x.iter().zip(y) {
+            m = m.max((u - v).abs());
+        }
+    }
+    Ok(m)
+}
+

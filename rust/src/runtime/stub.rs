@@ -1,0 +1,99 @@
+//! API-compatible stand-in for the PJRT runtime, compiled when the
+//! `pjrt` feature is off. Everything that would touch XLA returns
+//! [`RuntimeUnavailable`]; [`Buffer`] is fully functional so callers can
+//! build request payloads unconditionally.
+
+use std::path::Path;
+
+/// Error: the crate was built without the `pjrt` feature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RuntimeUnavailable;
+
+impl std::fmt::Display for RuntimeUnavailable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "PJRT runtime unavailable: built without the `pjrt` cargo feature \
+             (vendor the XLA toolchain crates and rebuild with --features pjrt)"
+        )
+    }
+}
+
+impl std::error::Error for RuntimeUnavailable {}
+
+/// A compiled model executable. Uninhabited in the stub: [`Runtime::load`]
+/// can never succeed, so no `Engine` value can exist.
+pub enum Engine {}
+
+impl Engine {
+    pub fn name(&self) -> &str {
+        match *self {}
+    }
+
+    pub fn run_f32(&self, _inputs: &[Buffer]) -> Result<Vec<Vec<f32>>, RuntimeUnavailable> {
+        match *self {}
+    }
+}
+
+/// Shared PJRT client (one per process) — never constructible here.
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    /// Always fails in the stub.
+    pub fn cpu() -> Result<Runtime, RuntimeUnavailable> {
+        Err(RuntimeUnavailable)
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn load(&self, _path: impl AsRef<Path>) -> Result<Engine, RuntimeUnavailable> {
+        Err(RuntimeUnavailable)
+    }
+}
+
+/// A typed input buffer (mirrors the real runtime's signatures).
+#[derive(Debug, Clone)]
+pub enum Buffer {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Buffer {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Buffer::F32 { shape, data }
+    }
+
+    pub fn new_i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Buffer::I32 { shape, data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Buffer::F32 { shape, .. } | Buffer::I32 { shape, .. } => shape,
+        }
+    }
+}
+
+/// Compare two artifacts on the same inputs (unreachable in the stub —
+/// no [`Engine`] can exist to call it with).
+pub fn max_artifact_diff(a: &Engine, _b: &Engine, _inputs: &[Buffer]) -> Result<f32, RuntimeUnavailable> {
+    match *a {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(Runtime::cpu().is_err());
+        let b = Buffer::new(vec![2, 2], vec![0.0; 4]);
+        assert_eq!(b.shape(), &[2, 2]);
+    }
+}

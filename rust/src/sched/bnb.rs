@@ -19,33 +19,9 @@
 use super::Schedule;
 use crate::analysis::MemModel;
 use crate::graph::fusion::GroupId;
+use crate::util::FnvBuildHasher;
 use std::collections::HashMap;
-use std::hash::{BuildHasherDefault, Hasher};
-
-/// FNV-1a over the bitset words — the memo map is on the search hot path
-/// and SipHash dominates it otherwise (§Perf).
-#[derive(Default)]
-struct Fnv(u64);
-
-impl Hasher for Fnv {
-    fn finish(&self) -> u64 {
-        self.0
-    }
-    fn write(&mut self, bytes: &[u8]) {
-        let mut h = if self.0 == 0 { 0xcbf29ce484222325 } else { self.0 };
-        for &b in bytes {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
-        self.0 = h;
-    }
-    fn write_u64(&mut self, x: u64) {
-        let mut h = if self.0 == 0 { 0xcbf29ce484222325 } else { self.0 };
-        h ^= x;
-        h = h.wrapping_mul(0x100000001b3);
-        self.0 = h;
-    }
-}
+use std::hash::Hasher;
 
 /// Bitset over groups (supports arbitrary n).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -87,13 +63,40 @@ struct Ctx<'m> {
     expanded: u64,
     best_order: Vec<GroupId>,
     best_peak: usize,
-    memo: HashMap<Bits, usize, BuildHasherDefault<Fnv>>,
+    /// Abandon any prefix whose peak reaches this bound: schedules at or
+    /// above it cannot help the caller (candidate screening passes the
+    /// incumbent best RAM here). `usize::MAX` = plain exact search.
+    cutoff: usize,
+    memo: HashMap<Bits, usize, FnvBuildHasher>,
+}
+
+impl Ctx<'_> {
+    /// Current pruning bound: nothing at/above it is worth exploring.
+    #[inline]
+    fn bound(&self) -> usize {
+        self.best_peak.min(self.cutoff)
+    }
 }
 
 /// Exact schedule. Returns `(schedule, completed)`; `completed = false`
 /// means the node budget ran out and the result is the best found (still
 /// a valid schedule thanks to the warm start).
 pub fn schedule(m: &MemModel, node_budget: u64, warm: Option<Schedule>) -> (Schedule, bool) {
+    schedule_bounded(m, node_budget, warm, usize::MAX)
+}
+
+/// [`schedule`] with an incumbent cutoff: subtrees whose peak already
+/// reaches `cutoff` are pruned, so the search either finds the true
+/// optimum (when it lies below the cutoff) or proves no schedule below
+/// the cutoff exists — exactly what candidate screening needs to abandon
+/// a losing tiling configuration early. The returned schedule is marked
+/// `optimal` only when that is actually proved.
+pub fn schedule_bounded(
+    m: &MemModel,
+    node_budget: u64,
+    warm: Option<Schedule>,
+    cutoff: usize,
+) -> (Schedule, bool) {
     let n = m.n();
     let preds = m.grouping.preds(m.g);
 
@@ -123,7 +126,8 @@ pub fn schedule(m: &MemModel, node_budget: u64, warm: Option<Schedule>) -> (Sche
         expanded: 0,
         best_order,
         best_peak,
-        memo: HashMap::with_capacity_and_hasher(1 << 16, BuildHasherDefault::default()),
+        cutoff,
+        memo: HashMap::with_capacity_and_hasher(1 << 16, FnvBuildHasher::default()),
     };
 
     // DFS state.
@@ -141,8 +145,11 @@ pub fn schedule(m: &MemModel, node_budget: u64, warm: Option<Schedule>) -> (Sche
     let completed = dfs(&mut ctx, &mut done, &mut remaining, &mut live, live_bytes, live_bytes.max(m.io_bytes), &mut order);
 
     let peak = ctx.best_peak;
+    // With a finite cutoff, optimality is only proved when the best found
+    // actually lies below it (pruned subtrees were all >= cutoff).
+    let optimal = completed && (cutoff == usize::MAX || peak < cutoff);
     (
-        Schedule { order: ctx.best_order, peak, strategy: "bnb", optimal: completed },
+        Schedule { order: ctx.best_order, peak, strategy: "bnb", optimal },
         completed,
     )
 }
@@ -210,7 +217,7 @@ fn dfs(
             lb = lb.max(ctx.group_floor[g]);
         }
     }
-    if peak.max(lb) >= ctx.best_peak {
+    if peak.max(lb) >= ctx.bound() {
         return true;
     }
 
@@ -268,7 +275,7 @@ fn dfs(
         done.set(g);
         order.push(g);
 
-        if during.max(peak) < ctx.best_peak {
+        if during.max(peak) < ctx.bound() {
             all_complete &= dfs(ctx, done, remaining, live, lb2, peak.max(during), order);
         }
 
@@ -315,6 +322,32 @@ mod tests {
         assert!(complete);
         assert_eq!(s.peak, brute_force_min(&m));
         assert!(crate::sched::is_valid_order(&m, &s.order));
+    }
+
+    #[test]
+    fn cutoff_proves_no_schedule_below_it() {
+        let mut b = GraphBuilder::new("cut");
+        let x = b.input("x", vec![4, 4, 4], DType::I8);
+        let a = b.conv2d(x, 16, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+        let c = b.conv2d(x, 8, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+        let s = b.op(OpKind::Add, vec![a, c]);
+        let g = b.finish(vec![s]);
+        let grouping = fuse(&g);
+        let m = crate::analysis::MemModel::new(&g, &grouping);
+        let (opt, complete) = schedule(&m, 1_000_000, None);
+        assert!(complete);
+        // Cutoff above the optimum: the bounded search still finds it.
+        let (s1, c1) = schedule_bounded(&m, 1_000_000, None, opt.peak + 1);
+        assert!(c1);
+        assert_eq!(s1.peak, opt.peak);
+        assert!(s1.optimal);
+        // Cutoff at the optimum: proves nothing below exists; result not
+        // claimed optimal and its peak is >= the cutoff.
+        let (s2, c2) = schedule_bounded(&m, 1_000_000, None, opt.peak);
+        assert!(c2);
+        assert!(s2.peak >= opt.peak);
+        assert!(!s2.optimal);
+        assert!(crate::sched::is_valid_order(&m, &s2.order));
     }
 
     #[test]

@@ -67,6 +67,53 @@ pub fn is_valid_order(m: &MemModel, order: &[GroupId]) -> bool {
 
 /// Auto-tiered scheduling entry point (see module docs).
 pub fn schedule(m: &MemModel, opts: SchedOptions) -> Schedule {
+    schedule_with_cutoff(m, opts, usize::MAX)
+}
+
+/// Cheap schedule-independent lower bound on the peak of *any* valid
+/// order: every group holds its own reads + writes live while it runs;
+/// all model inputs are live before the first group and all outputs
+/// after the last. Inputs and outputs are not necessarily live at the
+/// *same* time, so the I/O floor is the max of the two sums — not
+/// `io_bytes` (their total), which can exceed the true peak on
+/// I/O-dominated graphs. Candidate screening uses this to abandon a
+/// tiling configuration before any search the moment the bound meets the
+/// incumbent best RAM (the final arena can never undercut the optimal
+/// schedule peak, which this genuinely bounds from below).
+pub fn peak_lower_bound(m: &MemModel) -> usize {
+    let mut in_sum = 0usize;
+    let mut out_sum = 0usize;
+    for (b, &t) in m.buffers.iter().enumerate() {
+        if m.g.tensor(t).kind == crate::graph::TensorKind::Input {
+            in_sum += m.sizes[b];
+        }
+        if m.is_output[b] {
+            out_sum += m.sizes[b];
+        }
+    }
+    let mut lb = in_sum.max(out_sum);
+    for g in 0..m.n() {
+        let outs: usize = m.group_writes[g].iter().map(|&b| m.sizes[b]).sum();
+        let ins: usize = m.group_reads[g].iter().map(|&b| m.sizes[b]).sum();
+        lb = lb.max(outs + ins);
+    }
+    lb
+}
+
+/// [`schedule`] with an incumbent cutoff: the moment [`peak_lower_bound`]
+/// proves no schedule below `cutoff` exists, the search is abandoned and
+/// the heuristic order is returned (its peak is `>= cutoff`, so the
+/// caller rejects the candidate). Otherwise the cutoff bounds the
+/// branch-and-bound tier, which either finds the true optimum (below the
+/// cutoff) or gives up early.
+///
+/// Note for exact-reproducibility callers: when the node budget truncates
+/// the bounded search, the returned *order* may differ from what plain
+/// [`schedule`] returns (the cutoff prunes subtrees the unbounded search
+/// would have used to improve its incumbent). The flow's screening
+/// therefore uses [`peak_lower_bound`] + plain [`schedule`] and keeps
+/// this entry point for callers that prefer speed over order stability.
+pub fn schedule_with_cutoff(m: &MemModel, opts: SchedOptions, cutoff: usize) -> Schedule {
     let n = m.n();
     if n == 0 {
         return Schedule { order: vec![], peak: m.io_bytes, strategy: "empty", optimal: true };
@@ -78,6 +125,11 @@ pub fn schedule(m: &MemModel, opts: SchedOptions) -> Schedule {
         let order: Vec<GroupId> = (0..n).collect();
         let peak = m.peak(&order);
         return Schedule { order, peak, strategy: "chain", optimal: true };
+    }
+
+    // Incumbent floor: no order can win — skip SP and B&B entirely.
+    if cutoff != usize::MAX && peak_lower_bound(m) >= cutoff {
+        return hill_valley::schedule(m);
     }
 
     // Tier 2: series-parallel optimal.
@@ -102,7 +154,7 @@ pub fn schedule(m: &MemModel, opts: SchedOptions) -> Schedule {
     } else {
         opts.bnb_node_budget
     };
-    let (bnb_sched, complete) = bnb::schedule(m, budget, Some(warm.clone()));
+    let (bnb_sched, complete) = bnb::schedule_bounded(m, budget, Some(warm.clone()), cutoff);
 
     // Pick the best of all tiers (they are all valid orders).
     let mut best = warm;

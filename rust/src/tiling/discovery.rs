@@ -39,6 +39,14 @@ pub struct DiscoveryOptions {
     pub max_walk: usize,
     pub enable_fdt: bool,
     pub enable_ffmt: bool,
+    /// Canonicalize the proposal list: collapse exact duplicates and
+    /// dominance-prune partition counts whose tiled-buffer sizes round to
+    /// the same slice shapes as an already-proposed count (near-equal
+    /// partitioning makes every tiled buffer's largest slice
+    /// `ceil(size/n)`; an equal ceiling at larger `n` yields equal RAM
+    /// with equal-or-more halo overhead, so the earlier count dominates).
+    /// Disable to reproduce the pre-overhaul exhaustive search space.
+    pub dedup: bool,
 }
 
 impl Default for DiscoveryOptions {
@@ -50,6 +58,7 @@ impl Default for DiscoveryOptions {
             max_walk: 16,
             enable_fdt: true,
             enable_ffmt: true,
+            dedup: true,
         }
     }
 }
@@ -138,7 +147,19 @@ pub fn discover(g: &Graph, critical: TensorId, opts: &DiscoveryOptions) -> Vec<P
     if opts.enable_ffmt {
         discover_fm(g, critical, &chain, opts, &mut out);
     }
+    if opts.dedup {
+        dedup_configs(&mut out);
+    }
     out
+}
+
+/// Collapse exact duplicate proposals, keeping first-seen order. The
+/// screening tie-break (`min` over `(ram, index)`) always prefers the
+/// earliest of equal-RAM configs, so dropping later duplicates cannot
+/// change the flow's argmin.
+pub fn dedup_configs(configs: &mut Vec<PathConfig>) {
+    let mut seen: crate::util::FnvHashSet<PathConfig> = Default::default();
+    configs.retain(|c| seen.insert(c.clone()));
 }
 
 /// FDT proposals (PD_D).
@@ -244,10 +265,21 @@ fn discover_depth(
             if ops.is_empty() {
                 continue;
             }
+            // Dominance pruning: near-equal partitioning gives every
+            // tiled buffer a largest slice of `ceil(c/n)` channels; a
+            // count rounding to the same slice width as the previously
+            // kept one yields identical peak memory (FDT has no halo) and
+            // would lose the screening tie-break anyway — skip it.
+            let mut last_width = usize::MAX;
             for n in opts.depth_partitions.clone() {
                 if n > c {
                     break;
                 }
+                let width = c.div_ceil(n);
+                if opts.dedup && width == last_width {
+                    continue;
+                }
+                last_width = width;
                 out.push(PathConfig {
                     ops: ops.clone(),
                     spec: PartitionSpec::Depth(n),
@@ -324,10 +356,20 @@ fn discover_fm(
         if last_shape.len() != 3 {
             return;
         }
+        // Dominance pruning (see `discover_depth`): equal ceil band
+        // heights mean equal tiled slice shapes; the larger count only
+        // adds halo cut lines (more MACs, never less RAM), so the
+        // previously kept count dominates it.
+        let mut last_band = usize::MAX;
         for n in opts.row_partitions.clone() {
             if n > last_shape[0] {
                 break;
             }
+            let band = last_shape[0].div_ceil(n);
+            if opts.dedup && band == last_band {
+                continue;
+            }
+            last_band = band;
             out.push(PathConfig {
                 ops: ops.clone(),
                 spec: PartitionSpec::Rows(n),
@@ -335,10 +377,16 @@ fn discover_fm(
                 end: TerminalMode::Explicit,
             });
         }
+        let mut last_tile = (usize::MAX, usize::MAX);
         for n in opts.grid_sizes.clone() {
             if n > last_shape[0] || n > last_shape[1] {
                 break;
             }
+            let tile = (last_shape[0].div_ceil(n), last_shape[1].div_ceil(n));
+            if opts.dedup && tile == last_tile {
+                continue;
+            }
+            last_tile = tile;
             out.push(PathConfig {
                 ops: ops.clone(),
                 spec: PartitionSpec::Grid(n, n),

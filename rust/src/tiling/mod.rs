@@ -21,7 +21,7 @@ pub mod overlap;
 use crate::graph::{Graph, Op, OpId, OpKind};
 
 /// How the tiled region is partitioned.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PartitionSpec {
     /// FDT: split the channel (last) axis into `n` near-equal parts.
     Depth(usize),
@@ -46,7 +46,7 @@ impl PartitionSpec {
 }
 
 /// How a path terminal is realized (§4.3, Fig 4).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TerminalMode {
     /// Insert an explicit SPLIT (slices) / CONCAT operation.
     Explicit,
@@ -55,8 +55,10 @@ pub enum TerminalMode {
     Implicit,
 }
 
-/// A fully-specified tiling configuration for one path.
-#[derive(Debug, Clone)]
+/// A fully-specified tiling configuration for one path. `Eq`/`Hash`
+/// follow the full structural identity, so discovery can collapse
+/// duplicate proposals before they reach (expensive) evaluation.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct PathConfig {
     /// Contiguous chain of primitive ops, in dataflow order. With
     /// `start == Implicit` the first op is the FDT Fan-Out; with

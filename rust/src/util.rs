@@ -1,0 +1,77 @@
+//! Shared utilities: the FNV-1a hasher used by every hot-path hash map
+//! in the crate.
+//!
+//! The branch-and-bound schedulers, the coordinator's fingerprint memo
+//! and the layout memo all hash small fixed-width keys (bitset words,
+//! 64-bit fingerprints, `(usize, usize)` buckets) at very high rates;
+//! SipHash dominates their profiles otherwise. FNV-1a is not DoS-hardened
+//! — only use it for in-process search state, never for external input.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// FNV-1a accumulator. The offset basis is applied lazily on the first
+/// write so that `Default` stays a plain zero.
+#[derive(Default)]
+pub struct Fnv(u64);
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+impl Hasher for Fnv {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    fn write(&mut self, bytes: &[u8]) {
+        let mut h = if self.0 == 0 { FNV_OFFSET } else { self.0 };
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        self.0 = h;
+    }
+    fn write_u64(&mut self, x: u64) {
+        let mut h = if self.0 == 0 { FNV_OFFSET } else { self.0 };
+        h ^= x;
+        h = h.wrapping_mul(FNV_PRIME);
+        self.0 = h;
+    }
+    fn write_usize(&mut self, x: usize) {
+        self.write_u64(x as u64);
+    }
+}
+
+/// `BuildHasher` for [`Fnv`], for `HashMap::with_hasher` call sites.
+pub type FnvBuildHasher = BuildHasherDefault<Fnv>;
+
+/// `HashMap` keyed through FNV-1a.
+pub type FnvHashMap<K, V> = std::collections::HashMap<K, V, FnvBuildHasher>;
+
+/// `HashSet` keyed through FNV-1a.
+pub type FnvHashSet<K> = std::collections::HashSet<K, FnvBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distinct_inputs_hash_distinctly() {
+        let mut a = Fnv::default();
+        a.write_u64(1);
+        let mut b = Fnv::default();
+        b.write_u64(2);
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn hashing_is_deterministic() {
+        let h = |xs: &[u64]| {
+            let mut f = Fnv::default();
+            for &x in xs {
+                f.write_u64(x);
+            }
+            f.finish()
+        };
+        assert_eq!(h(&[7, 11, 13]), h(&[7, 11, 13]));
+        assert_ne!(h(&[7, 11, 13]), h(&[7, 13, 11]));
+    }
+}

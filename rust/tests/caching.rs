@@ -1,0 +1,106 @@
+//! Tests for the flow performance overhaul: discovery dedup / dominance
+//! pruning and the memoized, incumbent-bounded coordinator must be
+//! *result-preserving* — same configs chosen, byte-identical
+//! [`fdt::coordinator::Evaluation`]s — while doing far less work.
+
+use fdt::coordinator::{optimize, FlowOptions};
+use fdt::graph::{ActKind, DType, GraphBuilder, Padding};
+use fdt::models;
+use fdt::tiling::discovery::{dedup_configs, discover, DiscoveryOptions};
+use fdt::tiling::{PartitionSpec, PathConfig, TerminalMode};
+
+#[test]
+fn duplicate_configs_collapse_before_evaluation() {
+    let cfg = |n: usize| PathConfig {
+        ops: vec![0, 1, 2],
+        spec: PartitionSpec::Depth(n),
+        start: TerminalMode::Explicit,
+        end: TerminalMode::Explicit,
+    };
+    // Duplicates interleaved with distinct configs.
+    let mut configs = vec![cfg(2), cfg(3), cfg(2), cfg(4), cfg(3), cfg(2)];
+    dedup_configs(&mut configs);
+    assert_eq!(configs, vec![cfg(2), cfg(3), cfg(4)], "first-seen order kept");
+}
+
+#[test]
+fn dominance_pruning_keeps_a_subset_with_identical_slice_shapes() {
+    // 12-channel critical buffer: ceil(12/n) for n=2..=12 collapses the
+    // counts {5,6} (ceil 2... see below) etc. The pruned list must be a
+    // strict subset of the exhaustive one, contain no duplicates, and
+    // keep the smallest count of every ceiling class.
+    let mut b = GraphBuilder::new("dw12");
+    let x = b.input("x", vec![8, 8, 12], DType::I8);
+    let y = b.conv2d(x, 12, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+    let y = b.dwconv(y, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+    let z = b.conv2d(y, 4, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+    let g = b.finish(vec![z]);
+    let critical = g.op(2).output; // first conv block's activation output
+
+    let exhaustive = DiscoveryOptions { dedup: false, ..DiscoveryOptions::default() };
+    let pruned = DiscoveryOptions::default();
+    let all = discover(&g, critical, &exhaustive);
+    let kept = discover(&g, critical, &pruned);
+    assert!(!all.is_empty());
+    assert!(kept.len() < all.len(), "pruning must actually drop configs");
+    for c in &kept {
+        assert!(all.contains(c), "pruned output must be a subset");
+    }
+    let mut seen = std::collections::HashSet::new();
+    for c in &kept {
+        assert!(seen.insert(c.clone()), "no duplicates after dedup");
+    }
+    // Every depth config dropped must share its ceil slice width with a
+    // kept config on the same path (the dominance criterion).
+    for c in &all {
+        if kept.contains(c) {
+            continue;
+        }
+        if let PartitionSpec::Depth(n) = c.spec {
+            let width = 12usize.div_ceil(n);
+            assert!(
+                kept.iter().any(|k| match k.spec {
+                    PartitionSpec::Depth(m) =>
+                        k.ops == c.ops
+                            && k.start == c.start
+                            && k.end == c.end
+                            && 12usize.div_ceil(m) == width
+                            && m < n,
+                    _ => false,
+                }),
+                "dropped Depth({n}) must be dominated by a smaller kept count"
+            );
+        }
+    }
+}
+
+#[test]
+fn memoized_flow_matches_unmemoized_on_kws() {
+    let g = models::kws();
+    let fast = optimize(&g, &FlowOptions::default());
+    let slow = optimize(&g, &FlowOptions::legacy());
+    // Byte-identical evaluations: the memo/cutoff/pruning machinery may
+    // only skip provably losing work.
+    assert_eq!(fast.final_eval.ram, slow.final_eval.ram);
+    assert_eq!(fast.final_eval.rom, slow.final_eval.rom);
+    assert_eq!(fast.final_eval.macs, slow.final_eval.macs);
+    assert_eq!(fast.final_eval.sched_peak, slow.final_eval.sched_peak);
+    assert_eq!(fast.initial.ram, slow.initial.ram);
+    assert_eq!(fast.initial.sched_peak, slow.initial.sched_peak);
+    assert_eq!(fast.iterations.len(), slow.iterations.len());
+    for (a, b) in fast.iterations.iter().zip(&slow.iterations) {
+        assert_eq!(a.config, b.config, "same winning config every iteration");
+        assert_eq!(a.ram_after, b.ram_after);
+    }
+}
+
+#[test]
+fn memoized_flow_matches_unmemoized_on_txt_and_radar() {
+    for g in [models::txt(), models::radar()] {
+        let fast = optimize(&g, &FlowOptions::default());
+        let slow = optimize(&g, &FlowOptions::legacy());
+        assert_eq!(fast.final_eval.ram, slow.final_eval.ram, "{}", g.name);
+        assert_eq!(fast.final_eval.macs, slow.final_eval.macs, "{}", g.name);
+        assert_eq!(fast.final_eval.sched_peak, slow.final_eval.sched_peak, "{}", g.name);
+    }
+}

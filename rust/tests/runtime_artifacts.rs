@@ -2,7 +2,10 @@
 //! the L1/L2 lowering equivalences from Rust — the production loader.
 //!
 //! These tests skip (with a message) when `artifacts/` has not been
-//! built; run `make artifacts` first for full coverage.
+//! built; run `make artifacts` first for full coverage. The whole file
+//! requires the `pjrt` feature (the hermetic build compiles the stub
+//! runtime, which can never start a client).
+#![cfg(feature = "pjrt")]
 
 use fdt::runtime::{artifacts_dir, max_artifact_diff, Buffer, Runtime};
 
