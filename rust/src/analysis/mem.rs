@@ -337,9 +337,15 @@ impl<'a> MemModel<'a> {
     /// screened candidate, so it is on the flow's hot path. Pairs are
     /// returned sorted `(i, j)` with `i < j`, matching the order the
     /// previous all-pairs implementation produced.
+    ///
+    /// Zero-sized buffers (empty slices from extreme partition counts)
+    /// never constrain placement and are excluded from the sweep — they
+    /// used to inflate the conflict adjacency the placers branch over and
+    /// trip the overlap checker with phantom intervals.
     pub fn conflicts(&self, schedule: &[GroupId]) -> Vec<(usize, usize)> {
         let lt = self.lifetimes(schedule);
-        let mut by_birth: Vec<usize> = (0..lt.len()).collect();
+        let mut by_birth: Vec<usize> =
+            (0..lt.len()).filter(|&b| self.sizes[b] > 0).collect();
         by_birth.sort_unstable_by_key(|&b| lt[b].0);
         let mut active: Vec<usize> = Vec::new();
         let mut c = Vec::new();
@@ -401,6 +407,25 @@ mod tests {
         // The add step holds both branch outputs plus its own output:
         // 3 x 2048; the branches' step peak is x + a + b2 = 4352.
         assert_eq!(p.peak, 3 * 2048);
+    }
+
+    #[test]
+    fn conflicts_skip_zero_sized_buffers() {
+        // Regression: a 0-byte buffer must not appear in the conflict
+        // sweep — the placers would branch over it and the validity
+        // checker would see phantom intervals.
+        let g = chain();
+        let grouping = fuse(&g);
+        let mut m = MemModel::new(&g, &grouping);
+        let baseline = m.conflicts(&[0, 1]);
+        assert_eq!(baseline.len(), 2);
+        let by = m.sizes.iter().position(|&s| s == 1024).unwrap(); // the mid buffer
+        m.sizes[by] = 0;
+        let filtered = m.conflicts(&[0, 1]);
+        assert!(
+            filtered.iter().all(|&(u, v)| u != by && v != by),
+            "zero-sized buffer {by} still conflicts: {filtered:?}"
+        );
     }
 
     #[test]

@@ -1,0 +1,220 @@
+//! `bench-trend` — diff the current `BENCH_*.json` emissions against a
+//! baseline directory (the previous CI run's artifacts) and warn on
+//! performance regressions.
+//!
+//! ```bash
+//! bench-trend --baseline .bench-baseline [FILES...]
+//! ```
+//!
+//! Keys ending in `_s` are wall-clock timings (lower is better): a
+//! >10% increase prints a `REGRESSION` warning. Other numeric keys
+//! (config counts, arena bytes, peaks) are reported when they change.
+//! The tool always exits 0 — trend tracking warns, it does not gate —
+//! unless `--strict` is passed, in which case timing regressions fail.
+//!
+//! The JSON is the restricted format `fdt::bench::write_json` emits
+//! (objects of objects of string/number/null); the parser below covers
+//! exactly that, keeping the binary dependency-free.
+
+use std::path::Path;
+
+/// One parsed record: `(record name, [(key, numeric value if any)])`.
+type Records = Vec<(String, Vec<(String, Option<f64>)>)>;
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(s: &'a str) -> Parser<'a> {
+        Parser { s: s.as_bytes(), i: 0 }
+    }
+    fn ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+    fn peek(&mut self) -> Option<u8> {
+        self.ws();
+        self.s.get(self.i).copied()
+    }
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at byte {}", c as char, self.i))
+        }
+    }
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        while let Some(&c) = self.s.get(self.i) {
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    if let Some(&e) = self.s.get(self.i) {
+                        self.i += 1;
+                        out.push(e as char);
+                    }
+                }
+                _ => out.push(c as char),
+            }
+        }
+        Err("unterminated string".to_string())
+    }
+    /// A scalar value: number -> Some(f64); string/null -> None.
+    fn scalar(&mut self) -> Result<Option<f64>, String> {
+        match self.peek() {
+            Some(b'"') => {
+                self.string()?;
+                Ok(None)
+            }
+            Some(b'n') => {
+                self.i += 4; // null
+                Ok(None)
+            }
+            Some(_) => {
+                let start = self.i;
+                while let Some(&c) = self.s.get(self.i) {
+                    if c == b',' || c == b'}' || c.is_ascii_whitespace() {
+                        break;
+                    }
+                    self.i += 1;
+                }
+                let tok = std::str::from_utf8(&self.s[start..self.i])
+                    .map_err(|e| e.to_string())?;
+                tok.parse::<f64>().map(Some).map_err(|e| format!("bad number {tok:?}: {e}"))
+            }
+            None => Err("unexpected end of input".to_string()),
+        }
+    }
+    fn fields(&mut self) -> Result<Vec<(String, Option<f64>)>, String> {
+        self.expect(b'{')?;
+        let mut out = Vec::new();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(out);
+        }
+        loop {
+            let key = self.string()?;
+            self.expect(b':')?;
+            out.push((key, self.scalar()?));
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                other => return Err(format!("expected , or }} got {other:?}")),
+            }
+        }
+    }
+    fn records(&mut self) -> Result<Records, String> {
+        self.expect(b'{')?;
+        let mut out = Vec::new();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(out);
+        }
+        loop {
+            let name = self.string()?;
+            self.expect(b':')?;
+            out.push((name, self.fields()?));
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                other => return Err(format!("expected , or }} got {other:?}")),
+            }
+        }
+    }
+}
+
+fn load(path: &Path) -> Result<Records, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    Parser::new(&text).records().map_err(|e| format!("{}: {e}", path.display()))
+}
+
+fn lookup(recs: &Records, name: &str, key: &str) -> Option<f64> {
+    recs.iter()
+        .find(|(n, _)| n == name)
+        .and_then(|(_, kv)| kv.iter().find(|(k, _)| k == key))
+        .and_then(|(_, v)| *v)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let strict = args.iter().any(|a| a == "--strict");
+    let baseline_dir = args
+        .iter()
+        .position(|a| a == "--baseline")
+        .and_then(|p| args.get(p + 1))
+        .cloned()
+        .unwrap_or_else(|| ".bench-baseline".to_string());
+    let mut files: Vec<String> = args
+        .iter()
+        .filter(|a| a.ends_with(".json"))
+        .cloned()
+        .collect();
+    if files.is_empty() {
+        files = ["BENCH_flow.json", "BENCH_sched.json", "BENCH_discovery.json"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+    }
+
+    let mut regressions = 0usize;
+    let mut compared = 0usize;
+    for f in &files {
+        let cur_path = Path::new(f);
+        if !cur_path.is_file() {
+            println!("bench-trend: {f} not present, skipping");
+            continue;
+        }
+        let base_path = Path::new(&baseline_dir).join(f);
+        if !base_path.is_file() {
+            println!("bench-trend: no baseline for {f} (first run?), skipping");
+            continue;
+        }
+        let (cur, base) = match (load(cur_path), load(&base_path)) {
+            (Ok(c), Ok(b)) => (c, b),
+            (Err(e), _) | (_, Err(e)) => {
+                println!("bench-trend: {e}");
+                continue;
+            }
+        };
+        println!("== {f} vs {} ==", base_path.display());
+        for (name, kv) in &cur {
+            for (key, val) in kv {
+                let (Some(now), Some(then)) = (*val, lookup(&base, name, key)) else {
+                    continue;
+                };
+                if then == 0.0 {
+                    continue;
+                }
+                compared += 1;
+                let pct = 100.0 * (now - then) / then;
+                let timing = key.ends_with("_s");
+                if timing && pct > 10.0 {
+                    regressions += 1;
+                    println!(
+                        "  REGRESSION {name}.{key}: {then:.6} -> {now:.6} ({pct:+.1}%)"
+                    );
+                } else if pct.abs() > 10.0 {
+                    println!("  changed {name}.{key}: {then:.6} -> {now:.6} ({pct:+.1}%)");
+                }
+            }
+        }
+    }
+    println!(
+        "bench-trend: {compared} metrics compared, {regressions} timing regression(s) > 10%"
+    );
+    if strict && regressions > 0 {
+        std::process::exit(1);
+    }
+}

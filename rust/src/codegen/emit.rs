@@ -33,22 +33,15 @@ fn act_expr(a: ActKind, x: &str) -> String {
     }
 }
 
+/// Shared split-pad convention (see [`crate::graph::pad_before`]); the
+/// emitter works in `i64` for C expression building.
 fn pad_before(padding: Padding, in_h: usize, in_w: usize, k: (usize, usize), s: (usize, usize)) -> (i64, i64) {
-    match padding {
-        Padding::Valid => (0, 0),
-        Padding::Same => {
-            let oh = in_h.div_ceil(s.0);
-            let ow = in_w.div_ceil(s.1);
-            let th = ((oh - 1) * s.0 + k.0).saturating_sub(in_h);
-            let tw = ((ow - 1) * s.1 + k.1).saturating_sub(in_w);
-            ((th / 2) as i64, (tw / 2) as i64)
-        }
-        Padding::Explicit(h, w) => (h.0 as i64, w.0 as i64),
-    }
+    let (pt, pl) = crate::graph::pad_before(padding, in_h, in_w, k, s);
+    (pt as i64, pl as i64)
 }
 
 /// Sanitize a tensor name into a C identifier.
-fn cname(s: &str) -> String {
+pub(crate) fn cname(s: &str) -> String {
     let mut out: String = s
         .chars()
         .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })

@@ -1,0 +1,812 @@
+//! Int8 flavor of the AoT C backend: emits the *deployment* build the
+//! paper measures — an `int8_t`/`int32_t` arena of exactly
+//! `FDT_ARENA_BYTES` (the flow's planned layout — the whole RAM story),
+//! i8 weight codes and folded i32 biases in `.rodata`, and integer
+//! kernels that reproduce the native interpreter
+//! ([`crate::exec::int8`]) op for op.
+//!
+//! The emitter walks the same compiled [`Int8Executable`] the
+//! interpreter runs: identical views (slice elision, concat write-in,
+//! in-place merge accumulation), identical TFLite fixed-point
+//! requantization constants (computed here at emission time), and the
+//! same per-op grids. Integer kernels are bit-identical by construction;
+//! the few f64-assisted kernels (softmax, pooling means, sigmoid/tanh)
+//! may differ from Rust by libm rounding in the last code, which the
+//! cross-check test covers with a one-LSB tolerance.
+
+use super::emit::cname;
+use super::CModule;
+use crate::exec::int8::{act_code_range, Elem, Int8Executable, Step, TView};
+use crate::graph::{ActKind, Graph, Op, OpKind, TensorKind};
+use crate::quant::int8::{quantize_multiplier, Repr};
+use crate::quant::{Calibration, QuantParams};
+use crate::tiling::activation_input;
+
+/// Emit a float literal that parses back to the exact f32 value.
+fn flit(x: f32) -> String {
+    format!("{x:?}f")
+}
+
+fn is_dense(v: &TView) -> bool {
+    v.strides == super::dense_strides(&v.shape)
+}
+
+/// Element-offset C expression of flat index `i` within view `v`.
+fn elem_expr(v: &TView, i: &str) -> String {
+    if is_dense(v) {
+        return format!("({} + ({i}))", v.off);
+    }
+    let dense = super::dense_strides(&v.shape);
+    let mut terms = vec![v.off.to_string()];
+    for (d, &dim) in v.shape.iter().enumerate() {
+        if v.strides[d] == 0 {
+            continue;
+        }
+        let coord = if d == 0 {
+            format!("(({i}) / {})", dense[0])
+        } else {
+            format!("((({i}) / {}) % {})", dense[d], dim)
+        };
+        terms.push(format!("{coord}*{}", v.strides[d]));
+    }
+    terms.join(" + ")
+}
+
+/// C expression loading element `i` of `v` as `int32_t`.
+fn ld(v: &TView, i: &str) -> String {
+    match v.elem {
+        Elem::I8 => format!("((int32_t)(int8_t)fdt_arena[{} + {}])", v.base, elem_expr(v, i)),
+        Elem::I32 => format!("fdt_ld32({} + 4*({}))", v.base, elem_expr(v, i)),
+    }
+}
+
+/// C statement storing `val` (an int32 in i8 range for I8 views) at
+/// element `i` of `v`.
+fn st(v: &TView, i: &str, val: &str) -> String {
+    match v.elem {
+        Elem::I8 => format!("fdt_arena[{} + {}] = (uint8_t)({val});", v.base, elem_expr(v, i)),
+        Elem::I32 => format!("fdt_st32({} + 4*({}), {val});", v.base, elem_expr(v, i)),
+    }
+}
+
+struct CEmitter<'a> {
+    exe: &'a Int8Executable,
+    body: String,
+}
+
+impl<'a> CEmitter<'a> {
+    fn line(&mut self, indent: usize, s: impl AsRef<str>) {
+        for _ in 0..indent {
+            self.body.push_str("  ");
+        }
+        self.body.push_str(s.as_ref());
+        self.body.push('\n');
+    }
+
+    fn weight_name(&self, t: usize) -> String {
+        format!("w_{}", cname(&self.exe.g.tensor(t).name))
+    }
+
+    fn params(&self, t: usize) -> QuantParams {
+        self.exe.qm.params[t]
+    }
+
+    fn view(&self, t: usize) -> Result<TView, String> {
+        self.exe.views[t]
+            .clone()
+            .ok_or_else(|| format!("tensor {} has no storage", self.exe.g.tensor(t).name))
+    }
+
+    /// Requantization call with constants folded at emission time.
+    fn requant(&self, acc: &str, s_in: f64, p_out: QuantParams, lo: i32, hi: i32) -> String {
+        let (m, sh) = quantize_multiplier(s_in / p_out.scale as f64);
+        format!("fdt_requant({acc}, {m}, {sh}, {}, {lo}, {hi})", p_out.zero_point)
+    }
+
+    /// Code re-grid expression (pass-through when the grids coincide).
+    fn remap(&self, q: &str, from: QuantParams, to: QuantParams) -> String {
+        if from == to {
+            q.to_string()
+        } else {
+            format!(
+                "fdt_remap({q}, {}, {}, {}, {})",
+                flit(from.scale),
+                from.zero_point,
+                flit(to.scale),
+                to.zero_point
+            )
+        }
+    }
+
+    fn emit_group(&mut self, step: &Step) -> Result<(), String> {
+        let exe = self.exe;
+        let g = &exe.g;
+        if let Some((base, len)) = step.zero {
+            self.line(1, format!("memset(fdt_arena + {base}, 0, {len}); /* merge acc init */"));
+        }
+        let last = g.op(*step.members.last().expect("empty group"));
+        let Some(out) = exe.views[last.output].clone() else {
+            return Ok(()); // dead group: nothing observable
+        };
+        let mut src: Option<TView> = None;
+        for &oid in &step.members {
+            let op = g.op(oid);
+            self.line(1, format!("/* {} : {} */", op.name, op.kind.mnemonic()));
+            match &op.kind {
+                OpKind::Slice { .. } => {
+                    src = Some(self.view(op.output)?);
+                }
+                OpKind::Concat { axis } => {
+                    self.emit_concat(op, *axis)?;
+                    src = Some(self.view(op.output)?);
+                }
+                OpKind::Merge { act } => {
+                    self.emit_merge(op, *act)?;
+                    src = Some(self.view(op.output)?);
+                }
+                OpKind::Pad { .. } => {
+                    return Err(format!("{}: Pad is not supported by the int8 C backend", op.name));
+                }
+                _ => {
+                    let x = match &src {
+                        Some(v) => v.clone(),
+                        // Head of the chain (Add/Mul have no designated
+                        // activation input; their kernel reads operand 1
+                        // itself).
+                        None => {
+                            let ai = activation_input(op).unwrap_or(0);
+                            self.view(op.inputs[ai])?
+                        }
+                    };
+                    self.emit_compute(op, &x, &out)?;
+                    src = Some(out.clone());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Store expression for a matmul-family accumulator `acc` into `out`
+    /// at flat element `of` (requantized codes, raw partial, or in-place
+    /// accumulation for merge-aliased partials).
+    fn matmul_store(&self, op: &Op, out: &TView, of: &str, s_acc: f64) -> String {
+        match self.exe.qm.repr[op.output] {
+            Repr::Acc(_) if out.accumulate => {
+                // Unsigned addition: defined wrap-around, matching the
+                // interpreter's wrapping in-place accumulation.
+                let e = elem_expr(out, of);
+                format!(
+                    "{{ size_t a_ = {} + 4*({e}); fdt_st32(a_, (int32_t)((uint32_t)fdt_ld32(a_) + (uint32_t)acc)); }}",
+                    out.base
+                )
+            }
+            Repr::Acc(_) => st(out, of, "acc"),
+            _ => {
+                let p = self.params(op.output);
+                st(out, of, &self.requant("acc", s_acc, p, -128, 127))
+            }
+        }
+    }
+
+    fn emit_compute(&mut self, op: &Op, x: &TView, out: &TView) -> Result<(), String> {
+        let g = &self.exe.g;
+        let out_shape = g.tensor(op.output).shape.clone();
+        match &op.kind {
+            OpKind::Conv2d { stride, padding } | OpKind::DepthwiseConv2d { stride, padding } => {
+                let depthwise = matches!(op.kind, OpKind::DepthwiseConv2d { .. });
+                let px = self.params(op.inputs[0]);
+                let pw = self.params(op.inputs[1]);
+                let w = self.weight_name(op.inputs[1]);
+                let ws = g.tensor(op.inputs[1]).shape.clone();
+                let (kh, kw) = (ws[0], ws[1]);
+                let cin = x.shape[2];
+                let (ih, iw) = (x.shape[0], x.shape[1]);
+                let (oh, ow, oc) = (out_shape[0], out_shape[1], out_shape[2]);
+                let (pt, pl) =
+                    crate::graph::pad_before(*padding, ih, iw, (kh, kw), *stride);
+                let (zx, zw) = (px.zero_point, pw.zero_point);
+                self.line(
+                    1,
+                    format!(
+                        "for (int y = 0; y < {oh}; y++) for (int xx = 0; xx < {ow}; xx++) for (int co = 0; co < {oc}; co++) {{"
+                    ),
+                );
+                self.line(2, "int32_t acc = 0;");
+                self.line(2, format!("for (int dy = 0; dy < {kh}; dy++) {{"));
+                self.line(
+                    3,
+                    format!("int sy = y*{} + dy - {pt}; if (sy < 0 || sy >= {ih}) continue;", stride.0),
+                );
+                self.line(3, format!("for (int dx = 0; dx < {kw}; dx++) {{"));
+                self.line(
+                    4,
+                    format!("int sx = xx*{} + dx - {pl}; if (sx < 0 || sx >= {iw}) continue;", stride.1),
+                );
+                if depthwise {
+                    let xi = ld(x, &format!("(sy*{iw} + sx)*{cin} + co"));
+                    self.line(
+                        4,
+                        format!("acc += ({xi} - {zx}) * ((int32_t){w}[(dy*{kw} + dx)*{cin} + co] - {zw});"),
+                    );
+                } else {
+                    let xi = ld(x, &format!("(sy*{iw} + sx)*{cin} + ci"));
+                    self.line(
+                        4,
+                        format!(
+                            "for (int ci = 0; ci < {cin}; ci++) acc += ({xi} - {zx}) * ((int32_t){w}[((dy*{kw} + dx)*{cin} + ci)*{oc} + co] - {zw});"
+                        ),
+                    );
+                }
+                self.line(3, "}");
+                self.line(2, "}");
+                let store = self.matmul_store(
+                    op,
+                    out,
+                    &format!("(y*{ow} + xx)*{oc} + co"),
+                    px.scale as f64 * pw.scale as f64,
+                );
+                self.line(2, store);
+                self.line(1, "}");
+                Ok(())
+            }
+            OpKind::Dense => {
+                let px = self.params(op.inputs[0]);
+                let pw = self.params(op.inputs[1]);
+                let w = self.weight_name(op.inputs[1]);
+                let ws = g.tensor(op.inputs[1]).shape.clone();
+                let (fin, fout) = (ws[0], ws[1]);
+                let (zx, zw) = (px.zero_point, pw.zero_point);
+                let xi = ld(x, "i");
+                self.line(1, format!("for (int oo = 0; oo < {fout}; oo++) {{"));
+                self.line(2, "int32_t acc = 0;");
+                self.line(
+                    2,
+                    format!(
+                        "for (int i = 0; i < {fin}; i++) acc += ({xi} - {zx}) * ((int32_t){w}[i*{fout} + oo] - {zw});"
+                    ),
+                );
+                let store =
+                    self.matmul_store(op, out, "oo", px.scale as f64 * pw.scale as f64);
+                self.line(2, store);
+                self.line(1, "}");
+                Ok(())
+            }
+            OpKind::Gather => {
+                let table_t = op.inputs[0];
+                let pt_ = self.params(table_t);
+                let p = self.params(op.output);
+                let tname = self.weight_name(table_t);
+                let ts = g.tensor(table_t).shape.clone();
+                let emb = ts[1];
+                let seq = out_shape[0];
+                let vocab = ts[0];
+                let ix = ld(x, "i");
+                let remapped = self.remap(&format!("((int32_t){tname}[row*{emb} + e])"), pt_, p);
+                self.line(1, format!("for (int i = 0; i < {seq}; i++) {{"));
+                // The interpreter rejects out-of-range indices with an
+                // error; deployed C has no error channel, so clamp
+                // instead of reading past the table.
+                self.line(
+                    2,
+                    format!("int row = (int){ix}; if (row < 0) row = 0; if (row >= {vocab}) row = {};", vocab - 1),
+                );
+                self.line(
+                    2,
+                    format!("for (int e = 0; e < {emb}; e++) {}", st(out, &format!("i*{emb} + e"), &remapped)),
+                );
+                self.line(1, "}");
+                Ok(())
+            }
+            OpKind::BiasAdd => {
+                let px = self.params(op.inputs[0]);
+                let p = self.params(op.output);
+                let b = format!("b_{}", op.id);
+                let c = g.tensor(op.inputs[1]).shape[0];
+                let nel: usize = out_shape.iter().product();
+                let xi = ld(x, "i");
+                let rq = self.requant("acc", px.scale as f64, p, -128, 127);
+                self.line(1, format!("for (int i = 0; i < {nel}; i++) {{"));
+                // i64 accumulate + saturate, mirroring the interpreter
+                // (folded bias codes can sit near the i32 limits).
+                self.line(
+                    2,
+                    format!(
+                        "int64_t a64 = (int64_t)({xi} - {}) + (int64_t){b}[i % {c}];",
+                        px.zero_point
+                    ),
+                );
+                self.line(
+                    2,
+                    "if (a64 > INT32_MAX) a64 = INT32_MAX; if (a64 < INT32_MIN) a64 = INT32_MIN;",
+                );
+                self.line(2, "int32_t acc = (int32_t)a64;");
+                self.line(2, st(out, "i", &rq));
+                self.line(1, "}");
+                Ok(())
+            }
+            OpKind::Activation(a) => {
+                let px = self.params(op.inputs[0]);
+                let p = self.params(op.output);
+                let nel: usize = out_shape.iter().product();
+                let xi = ld(x, "i");
+                match a {
+                    ActKind::Identity | ActKind::Relu | ActKind::Relu6 => {
+                        let (lo, hi) = act_code_range(*a, p);
+                        let rq = self.requant(
+                            &format!("({xi} - {})", px.zero_point),
+                            px.scale as f64,
+                            p,
+                            lo,
+                            hi,
+                        );
+                        self.line(1, format!("for (int i = 0; i < {nel}; i++) {}", st(out, "i", &rq)));
+                    }
+                    ActKind::Sigmoid | ActKind::Tanh => {
+                        let f = if matches!(a, ActKind::Sigmoid) {
+                            "1.0 / (1.0 + exp(-real))".to_string()
+                        } else {
+                            "tanh(real)".to_string()
+                        };
+                        self.line(1, format!("for (int i = 0; i < {nel}; i++) {{"));
+                        self.line(
+                            2,
+                            format!(
+                                "double real = ((double)({xi} - {})) * (double){};",
+                                px.zero_point,
+                                flit(px.scale)
+                            ),
+                        );
+                        let q = format!("fdt_quantf({f}, {}, {})", flit(p.scale), p.zero_point);
+                        self.line(2, st(out, "i", &q));
+                        self.line(1, "}");
+                    }
+                }
+                Ok(())
+            }
+            OpKind::MaxPool2d { ksize, stride, padding }
+            | OpKind::AvgPool2d { ksize, stride, padding } => {
+                let is_max = matches!(op.kind, OpKind::MaxPool2d { .. });
+                let px = self.params(op.inputs[0]);
+                let p = self.params(op.output);
+                let (ih, iw, c) = (x.shape[0], x.shape[1], x.shape[2]);
+                let (oh, ow) = (out_shape[0], out_shape[1]);
+                let (pt, pl) = crate::graph::pad_before(*padding, ih, iw, *ksize, *stride);
+                let zx = px.zero_point;
+                self.line(
+                    1,
+                    format!(
+                        "for (int y = 0; y < {oh}; y++) for (int xx = 0; xx < {ow}; xx++) for (int ch = 0; ch < {c}; ch++) {{"
+                    ),
+                );
+                self.line(2, "int32_t best = INT32_MIN; int64_t sum = 0; int cnt = 0;");
+                self.line(2, format!("for (int dy = 0; dy < {}; dy++) {{", ksize.0));
+                self.line(
+                    3,
+                    format!("int sy = y*{} + dy - {pt}; if (sy < 0 || sy >= {ih}) continue;", stride.0),
+                );
+                self.line(3, format!("for (int dx = 0; dx < {}; dx++) {{", ksize.1));
+                self.line(
+                    4,
+                    format!("int sx = xx*{} + dx - {pl}; if (sx < 0 || sx >= {iw}) continue;", stride.1),
+                );
+                let xi = ld(x, &format!("(sy*{iw} + sx)*{c} + ch"));
+                self.line(
+                    4,
+                    format!("int32_t q = {xi}; if (q > best) best = q; sum += (int64_t)(q - {zx}); cnt++;"),
+                );
+                self.line(3, "}");
+                self.line(2, "}");
+                let of = format!("(y*{ow} + xx)*{c} + ch");
+                if is_max {
+                    let remapped = self.remap("q2", px, p);
+                    self.line(2, format!("{{ int32_t q2 = cnt == 0 ? {zx} : best; {} }}", st(out, &of, &remapped)));
+                } else {
+                    let q = format!(
+                        "fdt_quantf(((double)sum) * (double){} / (double)(cnt > 0 ? cnt : 1), {}, {})",
+                        flit(px.scale),
+                        flit(p.scale),
+                        p.zero_point
+                    );
+                    self.line(2, st(out, &of, &q));
+                }
+                self.line(1, "}");
+                Ok(())
+            }
+            OpKind::GlobalAvgPool => {
+                let px = self.params(op.inputs[0]);
+                let p = self.params(op.output);
+                let (h, w, c) = (x.shape[0], x.shape[1], x.shape[2]);
+                let xi = ld(x, &format!("i*{c} + ch"));
+                self.line(1, format!("for (int ch = 0; ch < {c}; ch++) {{"));
+                self.line(2, "int64_t sum = 0;");
+                self.line(
+                    2,
+                    format!(
+                        "for (int i = 0; i < {}; i++) sum += (int64_t)({xi} - {});",
+                        h * w,
+                        px.zero_point
+                    ),
+                );
+                let q = format!(
+                    "fdt_quantf(((double)sum) * (double){} / (double){}.0, {}, {})",
+                    flit(px.scale),
+                    h * w,
+                    flit(p.scale),
+                    p.zero_point
+                );
+                self.line(2, st(out, "ch", &q));
+                self.line(1, "}");
+                Ok(())
+            }
+            OpKind::ReduceMean { axis, .. } => {
+                let px = self.params(op.inputs[0]);
+                let p = self.params(op.output);
+                let nax = x.shape[*axis];
+                let outer: usize = x.shape[..*axis].iter().product();
+                let inner: usize = x.shape[*axis + 1..].iter().product();
+                let xi = ld(x, &format!("(oo*{nax} + a)*{inner} + ii"));
+                self.line(
+                    1,
+                    format!("for (int oo = 0; oo < {outer}; oo++) for (int ii = 0; ii < {inner}; ii++) {{"),
+                );
+                self.line(2, "int64_t sum = 0;");
+                self.line(
+                    2,
+                    format!("for (int a = 0; a < {nax}; a++) sum += (int64_t)({xi} - {});", px.zero_point),
+                );
+                let q = format!(
+                    "fdt_quantf(((double)sum) * (double){} / (double){nax}.0, {}, {})",
+                    flit(px.scale),
+                    flit(p.scale),
+                    p.zero_point
+                );
+                self.line(2, st(out, &format!("oo*{inner} + ii"), &q));
+                self.line(1, "}");
+                Ok(())
+            }
+            OpKind::Softmax => {
+                let px = self.params(op.inputs[0]);
+                let p = self.params(op.output);
+                let nel: usize = out_shape.iter().product();
+                let xi = ld(x, "i");
+                self.line(1, "{");
+                self.line(2, format!("double ex[{nel}]; double mx = -INFINITY; double sum = 0.0;"));
+                self.line(
+                    2,
+                    format!(
+                        "for (int i = 0; i < {nel}; i++) {{ ex[i] = ((double)({xi} - {})) * (double){}; if (ex[i] > mx) mx = ex[i]; }}",
+                        px.zero_point,
+                        flit(px.scale)
+                    ),
+                );
+                self.line(
+                    2,
+                    format!("for (int i = 0; i < {nel}; i++) {{ ex[i] = exp(ex[i] - mx); sum += ex[i]; }}"),
+                );
+                let q = format!("fdt_quantf(ex[i] / sum, {}, {})", flit(p.scale), p.zero_point);
+                self.line(2, format!("for (int i = 0; i < {nel}; i++) {}", st(out, "i", &q)));
+                self.line(1, "}");
+                Ok(())
+            }
+            OpKind::Add | OpKind::Mul => {
+                let pa = self.params(op.inputs[0]);
+                let pb = self.params(op.inputs[1]);
+                let p = self.params(op.output);
+                let y = self.view(op.inputs[1])?;
+                let nel: usize = out_shape.iter().product();
+                let xi = ld(x, "i");
+                let yi = ld(&y, "i");
+                let sym = if matches!(op.kind, OpKind::Add) { "+" } else { "*" };
+                self.line(1, format!("for (int i = 0; i < {nel}; i++) {{"));
+                self.line(
+                    2,
+                    format!(
+                        "double a = ((double)({xi} - {})) * (double){};",
+                        pa.zero_point,
+                        flit(pa.scale)
+                    ),
+                );
+                self.line(
+                    2,
+                    format!(
+                        "double b2 = ((double)({yi} - {})) * (double){};",
+                        pb.zero_point,
+                        flit(pb.scale)
+                    ),
+                );
+                let q = format!("fdt_quantf(a {sym} b2, {}, {})", flit(p.scale), p.zero_point);
+                self.line(2, st(out, "i", &q));
+                self.line(1, "}");
+                Ok(())
+            }
+            OpKind::Reshape { .. } => {
+                // Same flat order; copy only when the value is not
+                // already in the destination buffer.
+                if x.base == out.base && x.off == out.off && is_dense(x) && is_dense(out) {
+                    return Ok(());
+                }
+                let p_in = self.params(op.inputs[0]);
+                let p = self.params(op.output);
+                let nel: usize = out_shape.iter().product();
+                let xi = self.remap(&ld(x, "i"), p_in, p);
+                self.line(1, format!("for (int i = 0; i < {nel}; i++) {}", st(out, "i", &xi)));
+                Ok(())
+            }
+            _ => Err(format!("{}: unsupported op in int8 C backend", op.name)),
+        }
+    }
+
+    fn emit_concat(&mut self, op: &Op, axis: usize) -> Result<(), String> {
+        let g = &self.exe.g;
+        let out = self.view(op.output)?;
+        let p_out = self.params(op.output);
+        let mut pos = 0usize;
+        for &t in &op.inputs {
+            let shape = g.tensor(t).shape.clone();
+            let sub = TView {
+                base: out.base,
+                off: out.off + pos * out.strides[axis],
+                strides: out.strides.clone(),
+                shape: shape.clone(),
+                elem: out.elem,
+                accumulate: false,
+                buffer: out.buffer,
+                root_bytes: out.root_bytes,
+            };
+            let aliased = self.exe.views[t]
+                .as_ref()
+                .is_some_and(|v| v.base == sub.base && v.off == sub.off && v.strides == sub.strides);
+            if !aliased {
+                let inv = self.view(t)?;
+                let p_in = self.params(t);
+                let nel: usize = shape.iter().product();
+                let src = self.remap(&ld(&inv, "i"), p_in, p_out);
+                self.line(1, format!("for (int i = 0; i < {nel}; i++) {}", st(&sub, "i", &src)));
+            }
+            pos += shape[axis];
+        }
+        Ok(())
+    }
+
+    fn emit_merge(&mut self, op: &Op, act: ActKind) -> Result<(), String> {
+        let exe = self.exe;
+        let out = self.view(op.output)?;
+        let p = self.params(op.output);
+        let nel = out.numel();
+        let any_aliased = op
+            .inputs
+            .iter()
+            .any(|&t| exe.views[t].as_ref().is_some_and(|v| v.accumulate));
+        let Repr::Acc(s_acc) = exe.qm.repr[op.inputs[0]] else {
+            return Err(format!("{}: merge input is not an i32 partial", op.name));
+        };
+        self.line(1, format!("for (int i = 0; i < {nel}; i++) {{"));
+        if any_aliased {
+            self.line(2, format!("int64_t acc = (int64_t){};", ld(&out, "i")));
+        } else {
+            self.line(2, "int64_t acc = 0;");
+        }
+        for &t in &op.inputs {
+            let aliased = exe.views[t].as_ref().is_some_and(|v| v.accumulate);
+            if !aliased {
+                let inv = self.view(t)?;
+                self.line(2, format!("acc += (int64_t){};", ld(&inv, "i")));
+            }
+        }
+        match act {
+            ActKind::Sigmoid | ActKind::Tanh => {
+                let f = if matches!(act, ActKind::Sigmoid) {
+                    "1.0 / (1.0 + exp(-real))"
+                } else {
+                    "tanh(real)"
+                };
+                self.line(2, format!("double real = ((double)acc) * {s_acc:?};"));
+                let q = format!("fdt_quantf({f}, {}, {})", flit(p.scale), p.zero_point);
+                self.line(2, st(&out, "i", &q));
+            }
+            _ => {
+                self.line(
+                    2,
+                    "if (acc > INT32_MAX) acc = INT32_MAX; if (acc < INT32_MIN) acc = INT32_MIN;",
+                );
+                let (lo, hi) = act_code_range(act, p);
+                let rq = self.requant("(int32_t)acc", s_acc, p, lo, hi);
+                self.line(2, st(&out, "i", &rq));
+            }
+        }
+        self.line(1, "}");
+        Ok(())
+    }
+}
+
+/// Generate the int8 deployment C module for `g` (calibration required).
+/// `FDT_ARENA_BYTES` is the planned int8 arena — the binary's whole RAM —
+/// planned with the *default* scheduler/layout options (the same plan
+/// [`crate::codegen::generate`] reports as `arena_bytes_int8`, and the
+/// flow's RAM number under default `FlowOptions`). For execution against
+/// a non-default flow plan use [`crate::coordinator::int8_executable`].
+/// Weights land in `.rodata` as i8 codes plus folded i32 biases.
+pub fn generate_int8(g: &Graph, cal: &Calibration) -> Result<CModule, String> {
+    g.validate()?;
+    let qm = crate::quant::int8::compile(g, cal)?;
+    let exe = Int8Executable::plan(g, &qm)?;
+
+    let mut em = CEmitter { exe: &exe, body: String::new() };
+    let steps = exe.steps.clone();
+    for step in &steps {
+        em.emit_group(step)?;
+    }
+
+    // ---- assemble the unit ----
+    let mut s = String::new();
+    s += &format!(
+        "/* generated by fdt codegen — model {} (int8 deployment build) */\n",
+        g.name
+    );
+    s += "#include <math.h>\n#include <stdint.h>\n#include <string.h>\n\n";
+    s += &format!("#define FDT_ARENA_BYTES {}\n", exe.arena_bytes());
+    s += &format!(
+        "static uint8_t fdt_arena[{}]; /* .bss — the planned int8 RAM arena */\n\n",
+        exe.arena_bytes().max(1)
+    );
+
+    // Weights: i8 codes + folded i32 biases.
+    let mut rom = 0usize;
+    for t in &g.tensors {
+        if t.kind != TensorKind::Weight {
+            continue;
+        }
+        if let Some(codes) = &qm.weights[t.id] {
+            rom += codes.len();
+            s += &format!(
+                "static const int8_t w_{}[{}] = {{",
+                cname(&t.name),
+                codes.len().max(1)
+            );
+            for (i, c) in codes.iter().enumerate() {
+                if i % 16 == 0 {
+                    s += "\n  ";
+                }
+                s += &format!("{c}, ");
+            }
+            s += "\n};\n";
+        }
+    }
+    for op in &g.ops {
+        if let Some(b) = &qm.bias[op.id] {
+            rom += b.len() * 4;
+            s += &format!("static const int32_t b_{}[{}] = {{", op.id, b.len().max(1));
+            for (i, v) in b.iter().enumerate() {
+                if i % 8 == 0 {
+                    s += "\n  ";
+                }
+                s += &format!("{v}, ");
+            }
+            s += "\n};\n";
+        }
+    }
+    s += &format!("\n#define FDT_ROM_BYTES {rom}\n\n");
+
+    // Shared integer helpers (TFLite fixed-point requantization).
+    s += "static int32_t fdt_ld32(size_t at) { int32_t v; memcpy(&v, fdt_arena + at, 4); return v; }\n";
+    s += "static void fdt_st32(size_t at, int32_t v) { memcpy(fdt_arena + at, &v, 4); }\n";
+    s += "static int32_t fdt_srdhm(int32_t a, int32_t b) {\n";
+    s += "  int64_t ab, nudge;\n";
+    s += "  if (a == INT32_MIN && b == INT32_MIN) return INT32_MAX;\n";
+    s += "  ab = (int64_t)a * (int64_t)b;\n";
+    s += "  nudge = ab >= 0 ? (1LL << 30) : (1LL - (1LL << 30));\n";
+    s += "  return (int32_t)((ab + nudge) / (1LL << 31));\n}\n";
+    s += "static int32_t fdt_rdbp(int32_t x, int ex) {\n";
+    s += "  int64_t mask, rem, thr;\n";
+    s += "  if (ex <= 0) return x;\n  if (ex > 31) return 0;\n";
+    s += "  mask = (1LL << ex) - 1; rem = (int64_t)x & mask; thr = (mask >> 1) + (x < 0 ? 1 : 0);\n";
+    s += "  return (x >> ex) + (rem > thr ? 1 : 0);\n}\n";
+    s += "static int32_t fdt_mbqm(int32_t x, int32_t mult, int shift) {\n";
+    s += "  int left = shift > 0 ? (shift > 32 ? 32 : shift) : 0;\n";
+    s += "  int right = shift < 0 ? -shift : 0;\n";
+    s += "  int64_t sh = ((int64_t)x) << left;\n";
+    s += "  if (sh > INT32_MAX) sh = INT32_MAX;\n  if (sh < INT32_MIN) sh = INT32_MIN;\n";
+    s += "  return fdt_rdbp(fdt_srdhm((int32_t)sh, mult), right);\n}\n";
+    s += "static int32_t fdt_requant(int32_t acc, int32_t mult, int shift, int32_t zp, int32_t lo, int32_t hi) {\n";
+    s += "  int64_t v = (int64_t)zp + (int64_t)fdt_mbqm(acc, mult, shift);\n";
+    s += "  if (v < lo) v = lo;\n  if (v > hi) v = hi;\n  return (int32_t)v;\n}\n";
+    s += "static int32_t fdt_quantf(double x, float scale, int32_t zp) {\n";
+    s += "  double q = round(x / (double)scale + (double)zp);\n";
+    s += "  if (q < -128.0) q = -128.0;\n  if (q > 127.0) q = 127.0;\n  return (int32_t)q;\n}\n";
+    s += "static int32_t fdt_remap(int32_t q, float si, int32_t zi, float so, int32_t zo) {\n";
+    s += "  return fdt_quantf(((double)(q - zi)) * (double)si, so, zo);\n}\n";
+    s += "static int32_t fdt_quant8(float x, float scale, int32_t zp) {\n";
+    s += "  float q = roundf(x / scale + (float)zp);\n";
+    s += "  if (q < -128.0f) q = -128.0f;\n  if (q > 127.0f) q = 127.0f;\n  return (int32_t)q;\n}\n\n";
+
+    // Entry point (same signature as the f32 build).
+    let ins: Vec<String> =
+        (0..g.inputs.len()).map(|i| format!("const float* in{i}")).collect();
+    let outs: Vec<String> = (0..g.outputs.len()).map(|k| format!("float* out{k}")).collect();
+    s += &format!("int fdt_model_run({}, {}) {{\n", ins.join(", "), outs.join(", "));
+
+    // Quantize inputs into the arena.
+    for (k, &t) in g.inputs.iter().enumerate() {
+        let tensor = g.tensor(t);
+        let view = exe.views[t].clone().ok_or("input without storage")?;
+        let nel = tensor.numel();
+        match qm.repr[t] {
+            Repr::Index => {
+                let stv = st(&view, "i", &format!("(int32_t)roundf(in{k}[i])"));
+                s += &format!("  for (int i = 0; i < {nel}; i++) {stv}\n");
+            }
+            _ => {
+                let p = qm.params[t];
+                let stv = st(
+                    &view,
+                    "i",
+                    &format!("fdt_quant8(in{k}[i], {}, {})", flit(p.scale), p.zero_point),
+                );
+                s += &format!("  for (int i = 0; i < {nel}; i++) {stv}\n");
+            }
+        }
+    }
+    s += &em.body;
+
+    // Dequantize outputs.
+    for (k, &t) in g.outputs.iter().enumerate() {
+        let view = exe.views[t].clone().ok_or("output without storage")?;
+        let nel = view.numel();
+        let (scale, zp) = match qm.repr[t] {
+            Repr::Index => (1.0f32, 0i32),
+            Repr::Acc(a) => (a as f32, 0),
+            _ => (qm.params[t].scale, qm.params[t].zero_point),
+        };
+        let q = ld(&view, "i");
+        s += &format!(
+            "  for (int i = 0; i < {nel}; i++) out{k}[i] = ((float)({q} - {zp})) * {};\n",
+            flit(scale)
+        );
+    }
+    s += "  return 0;\n}\n";
+
+    let rom_bytes = rom;
+    Ok(CModule {
+        source: s,
+        arena_bytes: exe.arena_bytes(),
+        arena_bytes_int8: exe.arena_bytes(),
+        rom_bytes,
+        inputs: g
+            .inputs
+            .iter()
+            .map(|&t| (g.tensor(t).name.clone(), g.tensor(t).numel()))
+            .collect(),
+        outputs: g.outputs.iter().map(|&t| g.tensor(t).numel()).collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::quant::calibrate;
+
+    #[test]
+    fn int8_module_emits_for_zoo() {
+        for g in [models::kws(), models::txt(), models::magic_wand()] {
+            let cal = calibrate(&g, 1, 13).unwrap();
+            let m = generate_int8(&g, &cal).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+            assert!(m.source.contains("fdt_model_run"));
+            assert!(m.source.contains("FDT_ARENA_BYTES"));
+            assert!(m.arena_bytes > 0);
+            // Int8 ROM is ~4x smaller than the f32 build's.
+            let f32_mod = crate::codegen::generate(&g).unwrap();
+            assert!(m.rom_bytes < f32_mod.rom_bytes / 2, "{}: rom {} vs f32 {}", g.name, m.rom_bytes, f32_mod.rom_bytes);
+        }
+    }
+
+    #[test]
+    fn int8_module_emits_for_tiled_graph() {
+        let g = models::txt();
+        let r = crate::coordinator::optimize(&g, &crate::coordinator::FlowOptions::default());
+        let cal = calibrate(&g, 1, 3).unwrap();
+        let tcal = crate::quant::transfer(&g, &cal, &r.graph);
+        let m = generate_int8(&r.graph, &tcal).expect("tiled TXT int8 codegen");
+        assert!(m.source.contains("fdt_model_run"));
+    }
+}

@@ -28,6 +28,7 @@
 //! `cc` and diffing outputs).
 
 mod emit;
+mod int8;
 
 use crate::graph::fusion::fuse;
 use crate::graph::{Graph, OpKind, TensorId, TensorKind};
@@ -35,6 +36,7 @@ use crate::layout::{bnb, heuristic};
 use crate::sched::{self, SchedOptions};
 
 pub use emit::Emitter;
+pub use int8::generate_int8;
 
 /// Result of code generation.
 #[derive(Debug, Clone)]

@@ -185,6 +185,21 @@ pub fn plan_graph<'a>(
     (m, s, l)
 }
 
+/// Plan → executable handoff: compile `g` for the native int8 arena
+/// executor against the *same* full-fidelity schedule + layout the flow's
+/// evaluation reports, so the executor's arena is exactly the flow's RAM
+/// number (`FDT_ARENA_BYTES`).
+pub fn int8_executable(
+    g: &Graph,
+    opts: &FlowOptions,
+    cal: &crate::quant::Calibration,
+) -> Result<crate::exec::int8::Int8Executable, String> {
+    let qm = crate::quant::int8::compile(g, cal)?;
+    let grouping = fuse(g);
+    let (m, s, l) = plan_graph(g, &grouping, opts);
+    crate::exec::int8::Int8Executable::compile(g, &qm, &grouping, &s.order, &l, &m)
+}
+
 /// Critical-buffer detection (§4.3): intermediate buffers that are
 /// "solely responsible" for the layout size — removing one shrinks a
 /// quick re-layout. Returned largest-first.

@@ -1,0 +1,1160 @@
+//! Native int8 interpreter over the *planned* arena — the execution
+//! grounding of the paper's memory model.
+//!
+//! Where [`crate::quant`] only simulates int8 by projecting f32 values
+//! onto their grids, this executor runs the real thing: every buffer
+//! lives in one `Vec<u8>` arena at exactly the byte offset the layout
+//! planner chose ([`crate::layout::Layout`]), i8 activations occupy one
+//! byte per element, FDT fan-in partials occupy four (i32 accumulators),
+//! matmul-family ops accumulate in i32, and the single requantization of
+//! a fan-in happens at the `Merge` op — so tiling provably cannot change
+//! a quantized model's output codes, and the equivalence tests assert
+//! byte-identity instead of an f32 tolerance.
+//!
+//! Faithfulness rules (mirroring [`crate::analysis::MemModel`] and the C
+//! emitter's storage roots):
+//!
+//! * a `Slice` output is a strided **view** of its source — no bytes
+//!   move;
+//! * a tensor sole-consumed by a `Concat` writes straight into its
+//!   region of the concat destination;
+//! * FDT partials accumulate **in place** in the merge buffer (`+=`),
+//!   which is zeroed once by the schedule-first partial; the merge then
+//!   requantizes the accumulator in place;
+//! * tensors interior to a fusion group never touch the arena (they are
+//!   the values a fused kernel would keep in registers);
+//! * i32 values are read/written via byte copies, so planner offsets
+//!   need no alignment.
+//!
+//! Numerics are per-op, matching the documented fake-quant semantics:
+//! each op output is requantized onto its own calibrated grid
+//! (integer-only TFLite fixed-point for matmuls / bias / relu-family;
+//! deterministic f64 for the saturating ops like softmax and the
+//! pooling means). Because partition tensors inherit their original
+//! tensor's grid (see [`crate::quant::transfer`]), a tiled graph
+//! performs bit-for-bit the same integer arithmetic as the untiled one.
+
+use super::Value;
+use crate::analysis::MemModel;
+use crate::codegen::dense_strides;
+use crate::graph::fusion::{fuse, Grouping};
+use crate::graph::{
+    pad_before, ActKind, DType, Graph, Op, OpId, OpKind, TensorId, TensorKind,
+};
+use crate::layout::{self, Layout, LayoutOptions};
+use crate::quant::int8::{quantize_multiplier, requantize, QuantizedModel, Repr};
+use crate::quant::QuantParams;
+use crate::sched::{self, SchedOptions};
+use crate::tiling::activation_input;
+use std::collections::HashMap;
+
+/// Element width of a stored tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Elem {
+    I8,
+    I32,
+}
+
+impl Elem {
+    pub(crate) fn size(self) -> usize {
+        match self {
+            Elem::I8 => 1,
+            Elem::I32 => 4,
+        }
+    }
+}
+
+/// A (possibly strided) view of a tensor over the arena.
+#[derive(Debug, Clone)]
+pub(crate) struct TView {
+    /// Byte offset of the root buffer in the arena.
+    pub(crate) base: usize,
+    /// Element offset within the root buffer.
+    pub(crate) off: usize,
+    /// Per-axis element strides.
+    pub(crate) strides: Vec<usize>,
+    pub(crate) shape: Vec<usize>,
+    pub(crate) elem: Elem,
+    /// FDT partial aliased into its Merge accumulator: stores must `+=`.
+    pub(crate) accumulate: bool,
+    /// Root buffer index in the planning [`MemModel`].
+    pub(crate) buffer: usize,
+    /// Root buffer size in bytes (for zero-initialization).
+    pub(crate) root_bytes: usize,
+}
+
+impl TView {
+    pub(crate) fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One scheduled execution step (a fusion group).
+#[derive(Debug, Clone)]
+pub(crate) struct Step {
+    /// Member ops in execution order (a linear chain).
+    pub(crate) members: Vec<OpId>,
+    /// Arena bytes `[base, base+len)` to zero before running (set on the
+    /// schedule-first writer of an accumulated merge buffer).
+    pub(crate) zero: Option<(usize, usize)>,
+}
+
+/// A quantized tensor value returned by [`Int8Executable::run`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum QData {
+    I8(Vec<i8>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct QValue {
+    pub shape: Vec<usize>,
+    pub params: QuantParams,
+    pub data: QData,
+}
+
+impl QValue {
+    /// Dequantize onto f32 (for comparisons against the f32 interpreter).
+    pub fn to_f32(&self) -> Value {
+        let p = self.params;
+        let data: Vec<f32> = match &self.data {
+            QData::I8(v) => {
+                v.iter().map(|&q| (q as i32 - p.zero_point) as f32 * p.scale).collect()
+            }
+            QData::I32(v) => {
+                v.iter().map(|&q| (q - p.zero_point) as f32 * p.scale).collect()
+            }
+        };
+        Value { shape: self.shape.clone(), data }
+    }
+}
+
+/// Chain value passed between the ops of one fusion group.
+struct ChainVal {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+    q: ValQ,
+}
+
+#[derive(Clone, Copy)]
+enum ValQ {
+    /// Quantized codes on this grid (widened to i32).
+    Codes(QuantParams),
+    /// i32 accumulator at this scale (zero point 0).
+    Acc(f64),
+    /// Raw i32 values (indices).
+    Raw,
+}
+
+impl ChainVal {
+    fn codes(&self) -> Result<QuantParams, String> {
+        match self.q {
+            ValQ::Codes(p) => Ok(p),
+            _ => Err("expected quantized codes".to_string()),
+        }
+    }
+}
+
+/// Deterministic f64 quantization onto an i8 grid.
+fn quantize_f64(x: f64, p: QuantParams) -> i32 {
+    (x / p.scale as f64 + p.zero_point as f64).round().clamp(-128.0, 127.0) as i32
+}
+
+/// Re-grid a code from one affine grid to another (exact pass-through
+/// when the grids coincide, which the compile-time parameter propagation
+/// guarantees for views).
+fn remap_code(q: i32, from: QuantParams, to: QuantParams) -> i32 {
+    if from == to {
+        return q;
+    }
+    quantize_f64((q - from.zero_point) as f64 * from.scale as f64, to)
+}
+
+/// Clamp range (in output codes) of a fused activation.
+pub(crate) fn act_code_range(a: ActKind, p: QuantParams) -> (i32, i32) {
+    match a {
+        ActKind::Relu => (p.zero_point.max(-128), 127),
+        ActKind::Relu6 => {
+            let hi = (p.zero_point as f64 + (6.0 / p.scale as f64).round()).min(127.0);
+            (p.zero_point.max(-128), hi as i32)
+        }
+        _ => (-128, 127),
+    }
+}
+
+fn read_view(arena: &[u8], v: &TView) -> Vec<i32> {
+    let n = v.numel();
+    let mut out = Vec::with_capacity(n);
+    let mut idx = vec![0usize; v.shape.len()];
+    for _ in 0..n {
+        let e = v.off + idx.iter().zip(&v.strides).map(|(i, s)| i * s).sum::<usize>();
+        out.push(match v.elem {
+            Elem::I8 => arena[v.base + e] as i8 as i32,
+            Elem::I32 => {
+                let at = v.base + e * 4;
+                i32::from_le_bytes([arena[at], arena[at + 1], arena[at + 2], arena[at + 3]])
+            }
+        });
+        for d in (0..idx.len()).rev() {
+            idx[d] += 1;
+            if idx[d] < v.shape[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    out
+}
+
+fn write_view(arena: &mut [u8], v: &TView, data: &[i32], accumulate: bool) {
+    debug_assert_eq!(data.len(), v.numel());
+    let mut idx = vec![0usize; v.shape.len()];
+    for &val in data {
+        let e = v.off + idx.iter().zip(&v.strides).map(|(i, s)| i * s).sum::<usize>();
+        match v.elem {
+            Elem::I8 => {
+                debug_assert!(!accumulate, "i8 stores never accumulate");
+                arena[v.base + e] = val as i8 as u8;
+            }
+            Elem::I32 => {
+                let at = v.base + e * 4;
+                let cur = if accumulate {
+                    i32::from_le_bytes([arena[at], arena[at + 1], arena[at + 2], arena[at + 3]])
+                } else {
+                    0
+                };
+                let bytes = cur.wrapping_add(val).to_le_bytes();
+                arena[at..at + 4].copy_from_slice(&bytes);
+            }
+        }
+        for d in (0..idx.len()).rev() {
+            idx[d] += 1;
+            if idx[d] < v.shape[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+}
+
+/// Resolve the storage view of every tensor, mirroring the storage-root
+/// rules of [`MemModel`] (slice = view of source; sole-consumer concat =
+/// view into the destination; sole-consumer equal-size merge = in-place
+/// accumulator alias). Interior tensors get `None`.
+#[allow(clippy::too_many_arguments)]
+fn resolve_view(
+    t: TensorId,
+    g: &Graph,
+    m: &MemModel,
+    layout: &Layout,
+    producers: &[Option<OpId>],
+    consumers: &[Vec<OpId>],
+    memo: &mut Vec<Option<Option<TView>>>,
+) -> Option<TView> {
+    if let Some(v) = &memo[t] {
+        return v.clone();
+    }
+    memo[t] = Some(None); // cycle guard (graphs are DAGs; defensive)
+    let tensor = g.tensor(t);
+    let elem = match tensor.dtype {
+        DType::I8 => Elem::I8,
+        _ => Elem::I32,
+    };
+    let v: Option<TView> = 'resolve: {
+        // Rule 1: a slice output is a view of its source.
+        if let Some(p) = producers[t] {
+            if let OpKind::Slice { begins, .. } = &g.op(p).kind {
+                let src =
+                    resolve_view(g.op(p).inputs[0], g, m, layout, producers, consumers, memo)?;
+                let off = src.off
+                    + begins.iter().zip(&src.strides).map(|(b, s)| b * s).sum::<usize>();
+                break 'resolve Some(TView {
+                    base: src.base,
+                    off,
+                    strides: src.strides.clone(),
+                    shape: tensor.shape.clone(),
+                    elem,
+                    accumulate: false,
+                    buffer: src.buffer,
+                    root_bytes: src.root_bytes,
+                });
+            }
+        }
+        // Rule 2: sole-consumer concat / merge aliasing (never for model
+        // inputs or outputs).
+        let is_io = g.outputs.contains(&t) || tensor.kind == TensorKind::Input;
+        if !is_io && consumers[t].len() == 1 {
+            let cop = g.op(consumers[t][0]);
+            match &cop.kind {
+                OpKind::Concat { axis } => {
+                    let axis = *axis;
+                    let dst =
+                        resolve_view(cop.output, g, m, layout, producers, consumers, memo)?;
+                    let mut pos = 0usize;
+                    for &i in &cop.inputs {
+                        if i == t {
+                            break;
+                        }
+                        pos += g.tensor(i).shape[axis];
+                    }
+                    break 'resolve Some(TView {
+                        base: dst.base,
+                        off: dst.off + pos * dst.strides[axis],
+                        strides: dst.strides.clone(),
+                        shape: tensor.shape.clone(),
+                        elem,
+                        accumulate: dst.accumulate,
+                        buffer: dst.buffer,
+                        root_bytes: dst.root_bytes,
+                    });
+                }
+                OpKind::Merge { .. }
+                    if g.tensor(cop.output).bytes() == tensor.bytes() =>
+                {
+                    let dst =
+                        resolve_view(cop.output, g, m, layout, producers, consumers, memo)?;
+                    break 'resolve Some(TView {
+                        base: dst.base,
+                        off: dst.off,
+                        strides: dense_strides(&tensor.shape),
+                        shape: tensor.shape.clone(),
+                        elem,
+                        accumulate: true,
+                        buffer: dst.buffer,
+                        root_bytes: dst.root_bytes,
+                    });
+                }
+                _ => {}
+            }
+        }
+        // Root: an arena buffer if the memory model materializes it.
+        let b = m.buffer_index[t];
+        if b == usize::MAX {
+            break 'resolve None; // interior to a fusion group
+        }
+        Some(TView {
+            base: layout.offsets[b],
+            off: 0,
+            strides: dense_strides(&tensor.shape),
+            shape: tensor.shape.clone(),
+            elem,
+            accumulate: false,
+            buffer: b,
+            root_bytes: m.sizes[b],
+        })
+    };
+    memo[t] = Some(v.clone());
+    v
+}
+
+/// A graph compiled against a concrete schedule + arena layout, ready to
+/// execute int8 inference.
+pub struct Int8Executable {
+    pub(crate) g: Graph,
+    pub(crate) qm: QuantizedModel,
+    pub(crate) steps: Vec<Step>,
+    pub(crate) views: Vec<Option<TView>>,
+    pub(crate) arena_bytes: usize,
+}
+
+impl Int8Executable {
+    /// Compile `g` against the given plan. The layout must belong to the
+    /// `(grouping, order)` pair (same memory model).
+    pub fn compile(
+        g: &Graph,
+        qm: &QuantizedModel,
+        grouping: &Grouping,
+        order: &[usize],
+        layout: &Layout,
+        m: &MemModel,
+    ) -> Result<Int8Executable, String> {
+        if qm.params.len() != g.tensors.len() {
+            return Err("quantized model does not match graph".to_string());
+        }
+        let producers = g.producers();
+        let consumers = g.consumers();
+        let mut memo: Vec<Option<Option<TView>>> = vec![None; g.tensors.len()];
+        let mut views: Vec<Option<TView>> = Vec::with_capacity(g.tensors.len());
+        for t in 0..g.tensors.len() {
+            views.push(resolve_view(t, g, m, layout, &producers, &consumers, &mut memo));
+        }
+
+        // Every view must fit its root buffer and the planned arena.
+        for (t, v) in views.iter().enumerate() {
+            let Some(v) = v else { continue };
+            if v.numel() == 0 {
+                continue;
+            }
+            let span = v.off
+                + v.shape
+                    .iter()
+                    .zip(&v.strides)
+                    .map(|(&d, &s)| (d - 1) * s)
+                    .sum::<usize>()
+                + 1;
+            if span * v.elem.size() > v.root_bytes {
+                // E.g. an i32 tensor aliased into an i8-sized root (a
+                // pathological nested-tiling structure): bail instead of
+                // corrupting neighbouring buffers.
+                return Err(format!(
+                    "tensor {} view ({} B) exceeds its root buffer ({} B)",
+                    g.tensor(t).name,
+                    span * v.elem.size(),
+                    v.root_bytes
+                ));
+            }
+            if v.base + span * v.elem.size() > layout.total {
+                return Err(format!(
+                    "tensor {} spans past the planned arena ({} B)",
+                    g.tensor(t).name,
+                    layout.total
+                ));
+            }
+        }
+
+        // Model I/O must be addressable.
+        for &t in g.inputs.iter().chain(&g.outputs) {
+            if views[t].is_none() {
+                return Err(format!("model i/o tensor {} has no storage", g.tensor(t).name));
+            }
+        }
+
+        // Groups must be linear chains (anchor + fused epilogues).
+        for members in &grouping.groups {
+            for w in members.windows(2) {
+                let prev = g.op(w[0]);
+                let next = g.op(w[1]);
+                let chained = activation_input(next)
+                    .and_then(|ai| next.inputs.get(ai))
+                    .is_some_and(|&x| x == prev.output);
+                if !chained {
+                    return Err(format!("fusion group is not a chain at {}", next.name));
+                }
+            }
+        }
+
+        // Steps + zero-initialization of accumulated merge buffers.
+        let mut steps = Vec::with_capacity(order.len());
+        let mut zeroed: Vec<bool> = vec![false; m.buffers.len()];
+        for &gid in order {
+            let members = grouping.groups[gid].clone();
+            let last_out = g.op(*members.last().expect("empty fusion group")).output;
+            let zero = match &views[last_out] {
+                Some(v) if v.accumulate && !zeroed[v.buffer] => {
+                    // Zeroing covers the whole root; an accumulator that
+                    // does not own its full root (nested aliasing) would
+                    // wipe a neighbour's live region.
+                    if v.off != 0 || v.numel() * v.elem.size() != v.root_bytes {
+                        return Err(format!(
+                            "partial {} does not span its merge buffer",
+                            g.tensor(last_out).name
+                        ));
+                    }
+                    zeroed[v.buffer] = true;
+                    Some((v.base, v.root_bytes))
+                }
+                _ => None,
+            };
+            steps.push(Step { members, zero });
+        }
+
+        // The executor only ever reads the folded integer constants in
+        // `qm`; drop the f32 master weight data from the stored graph so
+        // a long-lived executable does not pin ~5x the int8 ROM.
+        let mut g_shapes = g.clone();
+        for t in &mut g_shapes.tensors {
+            t.data = None;
+        }
+        Ok(Int8Executable {
+            g: g_shapes,
+            qm: qm.clone(),
+            steps,
+            views,
+            arena_bytes: layout.total,
+        })
+    }
+
+    /// Convenience: fuse, schedule and plan `g` with default options,
+    /// then compile (the coordinator offers a flow-fidelity variant).
+    pub fn plan(g: &Graph, qm: &QuantizedModel) -> Result<Int8Executable, String> {
+        let grouping = fuse(g);
+        let m = MemModel::new(g, &grouping);
+        let s = sched::schedule(&m, SchedOptions::default());
+        let l = layout::plan(&m, &s.order, LayoutOptions::default());
+        Int8Executable::compile(g, qm, &grouping, &s.order, &l, &m)
+    }
+
+    /// Arena size in bytes — the whole RAM story of this executable.
+    pub fn arena_bytes(&self) -> usize {
+        self.arena_bytes
+    }
+
+    /// Quantization parameters of a tensor.
+    pub fn params(&self, t: TensorId) -> QuantParams {
+        self.qm.params[t]
+    }
+
+    /// Execute: f32 inputs are quantized onto their calibrated grids (i32
+    /// index inputs pass through); returns the output code tensors.
+    pub fn run(&self, inputs: &HashMap<String, Value>) -> Result<Vec<QValue>, String> {
+        let mut arena = vec![0u8; self.arena_bytes];
+        for &t in &self.g.inputs {
+            let tensor = self.g.tensor(t);
+            let v = inputs
+                .get(&tensor.name)
+                .ok_or_else(|| format!("missing input {}", tensor.name))?;
+            if v.shape != tensor.shape {
+                return Err(format!(
+                    "input {} shape {:?} != {:?}",
+                    tensor.name, v.shape, tensor.shape
+                ));
+            }
+            let view = self.views[t].as_ref().expect("checked at compile");
+            let data: Vec<i32> = match self.qm.repr[t] {
+                Repr::Index => v.data.iter().map(|&x| x.round() as i32).collect(),
+                _ => {
+                    let p = self.qm.params[t];
+                    v.data.iter().map(|&x| p.quantize(x) as i32).collect()
+                }
+            };
+            write_view(&mut arena, view, &data, false);
+        }
+        for step in &self.steps {
+            if let Some((base, len)) = step.zero {
+                arena[base..base + len].fill(0);
+            }
+            self.run_group(&mut arena, step)?;
+        }
+        self.g
+            .outputs
+            .iter()
+            .map(|&t| {
+                let view = self.views[t].as_ref().expect("checked at compile");
+                let raw = read_view(&arena, view);
+                let params = match self.qm.repr[t] {
+                    Repr::Index => QuantParams { scale: 1.0, zero_point: 0 },
+                    Repr::Acc(s) => QuantParams { scale: s as f32, zero_point: 0 },
+                    _ => self.qm.params[t],
+                };
+                let data = match view.elem {
+                    Elem::I8 => QData::I8(raw.iter().map(|&q| q as i8).collect()),
+                    Elem::I32 => QData::I32(raw),
+                };
+                Ok(QValue { shape: view.shape.clone(), params, data })
+            })
+            .collect()
+    }
+
+    /// Execute and dequantize the outputs to f32.
+    pub fn run_f32(&self, inputs: &HashMap<String, Value>) -> Result<Vec<Value>, String> {
+        Ok(self.run(inputs)?.iter().map(QValue::to_f32).collect())
+    }
+
+    fn run_group(&self, arena: &mut [u8], step: &Step) -> Result<(), String> {
+        let mut state: Option<ChainVal> = None;
+        let n = step.members.len();
+        for (i, &oid) in step.members.iter().enumerate() {
+            let op = self.g.op(oid);
+            match &op.kind {
+                OpKind::Concat { axis } => {
+                    self.exec_concat(arena, op, *axis)?;
+                    state = None;
+                }
+                OpKind::Merge { act } => {
+                    self.exec_merge(arena, op, *act)?;
+                    state = None;
+                }
+                OpKind::Slice { .. } => {
+                    state = None; // the output is a view — nothing moves
+                }
+                _ => {
+                    let x = match state.take() {
+                        Some(v) => v,
+                        // Head of the chain: load the dataflow input
+                        // (Add/Mul have no designated activation input —
+                        // their kernel loads the second operand itself).
+                        None => {
+                            let ai = activation_input(op).unwrap_or(0);
+                            self.load(arena, op.inputs[ai])?
+                        }
+                    };
+                    let out = self.eval_op(arena, op, x)?;
+                    if i + 1 == n {
+                        self.store(arena, op.output, &out)?;
+                    } else {
+                        state = Some(out);
+                    }
+                }
+            }
+            // An epilogue following an in-place head (concat/merge/slice)
+            // re-loads the just-stored value.
+            if state.is_none() && i + 1 < n {
+                state = Some(self.load(arena, op.output)?);
+            }
+        }
+        Ok(())
+    }
+
+    /// Load a stored tensor (or a folded weight) as a chain value.
+    fn load(&self, arena: &[u8], t: TensorId) -> Result<ChainVal, String> {
+        let tensor = self.g.tensor(t);
+        if tensor.kind == TensorKind::Weight {
+            let codes = self.qm.weights[t]
+                .as_ref()
+                .ok_or_else(|| format!("weight {} not folded to i8", tensor.name))?;
+            return Ok(ChainVal {
+                shape: tensor.shape.clone(),
+                data: codes.iter().map(|&c| c as i32).collect(),
+                q: ValQ::Codes(self.qm.params[t]),
+            });
+        }
+        let view = self.views[t]
+            .as_ref()
+            .ok_or_else(|| format!("tensor {} has no storage", tensor.name))?;
+        let data = read_view(arena, view);
+        let q = match self.qm.repr[t] {
+            Repr::I8 | Repr::CodesI32 => ValQ::Codes(self.qm.params[t]),
+            Repr::Acc(s) => ValQ::Acc(s),
+            Repr::Index => ValQ::Raw,
+        };
+        Ok(ChainVal { shape: view.shape.clone(), data, q })
+    }
+
+    /// Store the final chain value into the output tensor's view.
+    fn store(&self, arena: &mut [u8], t: TensorId, val: &ChainVal) -> Result<(), String> {
+        let Some(view) = self.views[t].as_ref() else {
+            return Ok(()); // dead output (no consumer, not a model output)
+        };
+        match (&val.q, self.qm.repr[t]) {
+            (ValQ::Acc(_), Repr::Acc(_)) => {
+                write_view(arena, view, &val.data, view.accumulate);
+                Ok(())
+            }
+            (ValQ::Codes(p), Repr::I8 | Repr::CodesI32) => {
+                if view.accumulate {
+                    return Err(format!(
+                        "{}: quantized codes cannot accumulate in place",
+                        self.g.tensor(t).name
+                    ));
+                }
+                let pt = self.qm.params[t];
+                if *p == pt {
+                    write_view(arena, view, &val.data, false);
+                } else {
+                    let data: Vec<i32> =
+                        val.data.iter().map(|&q| remap_code(q, *p, pt)).collect();
+                    write_view(arena, view, &data, false);
+                }
+                Ok(())
+            }
+            (ValQ::Raw, Repr::Index) => {
+                write_view(arena, view, &val.data, false);
+                Ok(())
+            }
+            _ => Err(format!(
+                "{}: chain value does not match stored representation",
+                self.g.tensor(t).name
+            )),
+        }
+    }
+
+    /// Requantize a freshly computed i32 accumulator onto the op output's
+    /// grid — or keep it as an accumulator when the output is an FDT
+    /// partial.
+    fn finish_matmul(
+        &self,
+        op: &Op,
+        acc: Vec<i32>,
+        shape: Vec<usize>,
+        s_acc: f64,
+    ) -> Result<ChainVal, String> {
+        match self.qm.repr[op.output] {
+            Repr::Acc(s) => {
+                debug_assert!((s - s_acc).abs() <= s.abs() * 1e-9 + f64::MIN_POSITIVE);
+                Ok(ChainVal { shape, data: acc, q: ValQ::Acc(s) })
+            }
+            _ => {
+                let p = self.qm.params[op.output];
+                let (m, sh) = quantize_multiplier(s_acc / p.scale as f64);
+                let data =
+                    acc.iter().map(|&a| requantize(a, m, sh, p.zero_point, -128, 127)).collect();
+                Ok(ChainVal { shape, data, q: ValQ::Codes(p) })
+            }
+        }
+    }
+
+    fn eval_op(&self, arena: &[u8], op: &Op, x: ChainVal) -> Result<ChainVal, String> {
+        let out_shape = self.g.tensor(op.output).shape.clone();
+        match &op.kind {
+            OpKind::Conv2d { stride, padding } => {
+                let px = x.codes()?;
+                let w_t = op.inputs[1];
+                let wd = self.qm.weights[w_t]
+                    .as_ref()
+                    .ok_or_else(|| format!("{}: weight not folded", op.name))?;
+                let pw = self.qm.params[w_t];
+                let ws = &self.g.tensor(w_t).shape;
+                let (kh, kw, cin, cout) = (ws[0], ws[1], ws[2], ws[3]);
+                let (ih, iw) = (x.shape[0], x.shape[1]);
+                let (oh, ow) = (out_shape[0], out_shape[1]);
+                let (pt, pl) = pad_before(*padding, ih, iw, (kh, kw), *stride);
+                let (zx, zw) = (px.zero_point, pw.zero_point);
+                let mut acc = vec![0i32; oh * ow * cout];
+                for y in 0..oh {
+                    for dy in 0..kh {
+                        let sy = y as isize * stride.0 as isize + dy as isize - pt;
+                        if sy < 0 || sy >= ih as isize {
+                            continue;
+                        }
+                        let xrow = sy as usize * iw;
+                        let wdy = dy * kw;
+                        for xx in 0..ow {
+                            let obase = (y * ow + xx) * cout;
+                            for dx in 0..kw {
+                                let sx = xx as isize * stride.1 as isize + dx as isize - pl;
+                                if sx < 0 || sx >= iw as isize {
+                                    continue;
+                                }
+                                let xbase = (xrow + sx as usize) * cin;
+                                let wbase = (wdy + dx) * cin * cout;
+                                for ci in 0..cin {
+                                    let xv = x.data[xbase + ci] - zx;
+                                    let wrow = &wd[wbase + ci * cout..wbase + (ci + 1) * cout];
+                                    let arow = &mut acc[obase..obase + cout];
+                                    for (a, &wq) in arow.iter_mut().zip(wrow) {
+                                        *a += xv * (wq as i32 - zw);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                self.finish_matmul(op, acc, out_shape, px.scale as f64 * pw.scale as f64)
+            }
+            OpKind::DepthwiseConv2d { stride, padding } => {
+                let px = x.codes()?;
+                let w_t = op.inputs[1];
+                let wd = self.qm.weights[w_t]
+                    .as_ref()
+                    .ok_or_else(|| format!("{}: weight not folded", op.name))?;
+                let pw = self.qm.params[w_t];
+                let ws = &self.g.tensor(w_t).shape;
+                let (kh, kw, c) = (ws[0], ws[1], ws[2]);
+                let (ih, iw) = (x.shape[0], x.shape[1]);
+                let (oh, ow) = (out_shape[0], out_shape[1]);
+                let (pt, pl) = pad_before(*padding, ih, iw, (kh, kw), *stride);
+                let (zx, zw) = (px.zero_point, pw.zero_point);
+                let mut acc = vec![0i32; oh * ow * c];
+                for y in 0..oh {
+                    for dy in 0..kh {
+                        let sy = y as isize * stride.0 as isize + dy as isize - pt;
+                        if sy < 0 || sy >= ih as isize {
+                            continue;
+                        }
+                        let xrow = sy as usize * iw;
+                        for xx in 0..ow {
+                            let obase = (y * ow + xx) * c;
+                            for dx in 0..kw {
+                                let sx = xx as isize * stride.1 as isize + dx as isize - pl;
+                                if sx < 0 || sx >= iw as isize {
+                                    continue;
+                                }
+                                let xbase = (xrow + sx as usize) * c;
+                                let wbase = (dy * kw + dx) * c;
+                                for ch in 0..c {
+                                    acc[obase + ch] += (x.data[xbase + ch] - zx)
+                                        * (wd[wbase + ch] as i32 - zw);
+                                }
+                            }
+                        }
+                    }
+                }
+                self.finish_matmul(op, acc, out_shape, px.scale as f64 * pw.scale as f64)
+            }
+            OpKind::Dense => {
+                let px = x.codes()?;
+                let w_t = op.inputs[1];
+                let wd = self.qm.weights[w_t]
+                    .as_ref()
+                    .ok_or_else(|| format!("{}: weight not folded", op.name))?;
+                let pw = self.qm.params[w_t];
+                let fout = self.g.tensor(w_t).shape[1];
+                let (zx, zw) = (px.zero_point, pw.zero_point);
+                let mut acc = vec![0i32; fout];
+                for (i, &xq) in x.data.iter().enumerate() {
+                    let xv = xq - zx;
+                    let wrow = &wd[i * fout..(i + 1) * fout];
+                    for (a, &wq) in acc.iter_mut().zip(wrow) {
+                        *a += xv * (wq as i32 - zw);
+                    }
+                }
+                self.finish_matmul(op, acc, out_shape, px.scale as f64 * pw.scale as f64)
+            }
+            OpKind::Gather => {
+                let ValQ::Raw = x.q else {
+                    return Err(format!("{}: gather indices must be raw i32", op.name));
+                };
+                let table_t = op.inputs[0];
+                let td = self.qm.weights[table_t]
+                    .as_ref()
+                    .ok_or_else(|| format!("{}: table not folded", op.name))?;
+                let pt_ = self.qm.params[table_t];
+                let p = self.qm.params[op.output];
+                let ts = &self.g.tensor(table_t).shape;
+                let (vocab, emb) = (ts[0], ts[1]);
+                let mut data = Vec::with_capacity(x.data.len() * emb);
+                for &ix in &x.data {
+                    if ix < 0 || ix as usize >= vocab {
+                        return Err(format!("{}: index {ix} out of range", op.name));
+                    }
+                    let row = ix as usize;
+                    for e in 0..emb {
+                        data.push(remap_code(td[row * emb + e] as i32, pt_, p));
+                    }
+                }
+                Ok(ChainVal { shape: out_shape, data, q: ValQ::Codes(p) })
+            }
+            OpKind::BiasAdd => {
+                let px = x.codes()?;
+                let b = self.qm.bias[op.id]
+                    .as_ref()
+                    .ok_or_else(|| format!("{}: bias not folded", op.name))?;
+                let c = b.len();
+                let p = self.qm.params[op.output];
+                let (m, sh) = quantize_multiplier(px.scale as f64 / p.scale as f64);
+                let data = x
+                    .data
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &q)| {
+                        let acc = ((q - px.zero_point) as i64 + b[i % c] as i64)
+                            .clamp(i32::MIN as i64, i32::MAX as i64)
+                            as i32;
+                        requantize(acc, m, sh, p.zero_point, -128, 127)
+                    })
+                    .collect();
+                Ok(ChainVal { shape: out_shape, data, q: ValQ::Codes(p) })
+            }
+            OpKind::Activation(a) => {
+                let px = x.codes()?;
+                let p = self.qm.params[op.output];
+                let data: Vec<i32> = match a {
+                    ActKind::Identity | ActKind::Relu | ActKind::Relu6 => {
+                        let (m, sh) = quantize_multiplier(px.scale as f64 / p.scale as f64);
+                        let (lo, hi) = act_code_range(*a, p);
+                        x.data
+                            .iter()
+                            .map(|&q| requantize(q - px.zero_point, m, sh, p.zero_point, lo, hi))
+                            .collect()
+                    }
+                    ActKind::Sigmoid | ActKind::Tanh => x
+                        .data
+                        .iter()
+                        .map(|&q| {
+                            let real = (q - px.zero_point) as f64 * px.scale as f64;
+                            let y = match a {
+                                ActKind::Sigmoid => 1.0 / (1.0 + (-real).exp()),
+                                _ => real.tanh(),
+                            };
+                            quantize_f64(y, p)
+                        })
+                        .collect(),
+                };
+                Ok(ChainVal { shape: out_shape, data, q: ValQ::Codes(p) })
+            }
+            OpKind::MaxPool2d { ksize, stride, padding }
+            | OpKind::AvgPool2d { ksize, stride, padding } => {
+                let is_max = matches!(op.kind, OpKind::MaxPool2d { .. });
+                let px = x.codes()?;
+                let (ih, iw, c) = (x.shape[0], x.shape[1], x.shape[2]);
+                let (oh, ow) = (out_shape[0], out_shape[1]);
+                let (pt, pl) = pad_before(*padding, ih, iw, *ksize, *stride);
+                let p = self.qm.params[op.output];
+                let mut data = Vec::with_capacity(oh * ow * c);
+                for y in 0..oh {
+                    for xx in 0..ow {
+                        for ch in 0..c {
+                            let mut best = i32::MIN;
+                            let mut sum = 0i64;
+                            let mut cnt = 0usize;
+                            for dy in 0..ksize.0 {
+                                let sy = y as isize * stride.0 as isize + dy as isize - pt;
+                                if sy < 0 || sy >= ih as isize {
+                                    continue;
+                                }
+                                for dx in 0..ksize.1 {
+                                    let sx = xx as isize * stride.1 as isize + dx as isize - pl;
+                                    if sx < 0 || sx >= iw as isize {
+                                        continue;
+                                    }
+                                    let q = x.data[(sy as usize * iw + sx as usize) * c + ch];
+                                    best = best.max(q);
+                                    sum += (q - px.zero_point) as i64;
+                                    cnt += 1;
+                                }
+                            }
+                            if is_max {
+                                let q = if cnt == 0 { px.zero_point } else { best };
+                                data.push(remap_code(q, px, p));
+                            } else {
+                                let real =
+                                    sum as f64 * px.scale as f64 / cnt.max(1) as f64;
+                                data.push(quantize_f64(real, p));
+                            }
+                        }
+                    }
+                }
+                Ok(ChainVal { shape: out_shape, data, q: ValQ::Codes(p) })
+            }
+            OpKind::GlobalAvgPool => {
+                let px = x.codes()?;
+                let (h, w, c) = (x.shape[0], x.shape[1], x.shape[2]);
+                let p = self.qm.params[op.output];
+                let mut sums = vec![0i64; c];
+                for i in 0..h * w {
+                    for (s, &q) in sums.iter_mut().zip(&x.data[i * c..(i + 1) * c]) {
+                        *s += (q - px.zero_point) as i64;
+                    }
+                }
+                let data = sums
+                    .iter()
+                    .map(|&s| quantize_f64(s as f64 * px.scale as f64 / (h * w) as f64, p))
+                    .collect();
+                Ok(ChainVal { shape: out_shape, data, q: ValQ::Codes(p) })
+            }
+            OpKind::ReduceMean { axis, .. } => {
+                let px = x.codes()?;
+                let n = x.shape[*axis];
+                let outer: usize = x.shape[..*axis].iter().product();
+                let inner: usize = x.shape[*axis + 1..].iter().product();
+                let p = self.qm.params[op.output];
+                let mut data = Vec::with_capacity(outer * inner);
+                for o in 0..outer {
+                    for i in 0..inner {
+                        let mut sum = 0i64;
+                        for a in 0..n {
+                            sum += (x.data[(o * n + a) * inner + i] - px.zero_point) as i64;
+                        }
+                        data.push(quantize_f64(sum as f64 * px.scale as f64 / n as f64, p));
+                    }
+                }
+                Ok(ChainVal { shape: out_shape, data, q: ValQ::Codes(p) })
+            }
+            OpKind::Softmax => {
+                let px = x.codes()?;
+                let p = self.qm.params[op.output];
+                let reals: Vec<f64> = x
+                    .data
+                    .iter()
+                    .map(|&q| (q - px.zero_point) as f64 * px.scale as f64)
+                    .collect();
+                let m = reals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let exps: Vec<f64> = reals.iter().map(|&r| (r - m).exp()).collect();
+                let sum: f64 = exps.iter().sum();
+                let data = exps.iter().map(|&e| quantize_f64(e / sum, p)).collect();
+                Ok(ChainVal { shape: out_shape, data, q: ValQ::Codes(p) })
+            }
+            OpKind::Add | OpKind::Mul => {
+                let pa = x.codes()?;
+                let other = self.load(arena, op.inputs[1])?;
+                let pb = other.codes()?;
+                let p = self.qm.params[op.output];
+                let mul = matches!(op.kind, OpKind::Mul);
+                let data = x
+                    .data
+                    .iter()
+                    .zip(&other.data)
+                    .map(|(&qa, &qb)| {
+                        let a = (qa - pa.zero_point) as f64 * pa.scale as f64;
+                        let b = (qb - pb.zero_point) as f64 * pb.scale as f64;
+                        quantize_f64(if mul { a * b } else { a + b }, p)
+                    })
+                    .collect();
+                Ok(ChainVal { shape: out_shape, data, q: ValQ::Codes(p) })
+            }
+            OpKind::Pad { pads } => {
+                let px = x.codes()?;
+                let n: usize = out_shape.iter().product();
+                let mut data = vec![px.zero_point; n];
+                let out_strides = dense_strides(&out_shape);
+                let mut idx = vec![0usize; x.shape.len()];
+                for &xq in &x.data {
+                    let mut oflat = 0usize;
+                    for d in 0..idx.len() {
+                        oflat += (idx[d] + pads[d].0) * out_strides[d];
+                    }
+                    data[oflat] = xq;
+                    for d in (0..idx.len()).rev() {
+                        idx[d] += 1;
+                        if idx[d] < x.shape[d] {
+                            break;
+                        }
+                        idx[d] = 0;
+                    }
+                }
+                // Output keeps the input grid (compile propagates it), so
+                // zero-fill (= the input zero point) stays exact.
+                Ok(ChainVal { shape: out_shape, data, q: ValQ::Codes(px) })
+            }
+            OpKind::Reshape { .. } => Ok(ChainVal { shape: out_shape, data: x.data, q: x.q }),
+            OpKind::Slice { .. } | OpKind::Concat { .. } | OpKind::Merge { .. } => {
+                Err(format!("{}: handled outside the chain evaluator", op.name))
+            }
+        }
+    }
+
+    /// Concat: aliased inputs already live in the destination; copy (and
+    /// re-grid if needed) the rest.
+    fn exec_concat(&self, arena: &mut [u8], op: &Op, axis: usize) -> Result<(), String> {
+        let out = self.views[op.output]
+            .as_ref()
+            .ok_or_else(|| format!("{}: concat output has no storage", op.name))?
+            .clone();
+        let p_out = self.qm.params[op.output];
+        let mut pos = 0usize;
+        for &t in &op.inputs {
+            let shape = self.g.tensor(t).shape.clone();
+            let sub = TView {
+                base: out.base,
+                off: out.off + pos * out.strides[axis],
+                strides: out.strides.clone(),
+                shape: shape.clone(),
+                elem: out.elem,
+                accumulate: false,
+                buffer: out.buffer,
+                root_bytes: out.root_bytes,
+            };
+            let aliased = self.views[t]
+                .as_ref()
+                .is_some_and(|v| v.base == sub.base && v.off == sub.off && v.strides == sub.strides);
+            if !aliased {
+                let v = self.load(arena, t)?;
+                let p_in = v.codes()?;
+                let data: Vec<i32> =
+                    v.data.iter().map(|&q| remap_code(q, p_in, p_out)).collect();
+                write_view(arena, &sub, &data, false);
+            }
+            pos += shape[axis];
+        }
+        Ok(())
+    }
+
+    /// Merge: sum the i32 partials (aliased ones already accumulated in
+    /// place) and requantize once onto the output grid, in place.
+    fn exec_merge(&self, arena: &mut [u8], op: &Op, act: ActKind) -> Result<(), String> {
+        let out = self.views[op.output]
+            .as_ref()
+            .ok_or_else(|| format!("{}: merge output has no storage", op.name))?
+            .clone();
+        let any_aliased = op
+            .inputs
+            .iter()
+            .any(|&t| self.views[t].as_ref().is_some_and(|v| v.accumulate));
+        let mut acc: Vec<i64> = if any_aliased {
+            read_view(arena, &out).iter().map(|&v| v as i64).collect()
+        } else {
+            vec![0i64; out.numel()]
+        };
+        let mut s_acc: Option<f64> = None;
+        for &t in &op.inputs {
+            let Repr::Acc(s) = self.qm.repr[t] else {
+                return Err(format!(
+                    "{}: merge input {} is not an i32 partial",
+                    op.name,
+                    self.g.tensor(t).name
+                ));
+            };
+            match s_acc {
+                None => s_acc = Some(s),
+                Some(s0) if (s0 - s).abs() > s0.abs() * 1e-9 => {
+                    return Err(format!("{}: merge partials disagree on scale", op.name));
+                }
+                _ => {}
+            }
+            let aliased = self.views[t].as_ref().is_some_and(|v| v.accumulate);
+            if !aliased {
+                let v = self.load(arena, t)?;
+                for (a, &x) in acc.iter_mut().zip(&v.data) {
+                    *a += x as i64;
+                }
+            }
+        }
+        let s_acc = s_acc.ok_or_else(|| format!("{}: merge has no inputs", op.name))?;
+        let p = self.qm.params[op.output];
+        let codes: Vec<i32> = match act {
+            ActKind::Sigmoid | ActKind::Tanh => acc
+                .iter()
+                .map(|&a| {
+                    let real = a as f64 * s_acc;
+                    let y = match act {
+                        ActKind::Sigmoid => 1.0 / (1.0 + (-real).exp()),
+                        _ => real.tanh(),
+                    };
+                    quantize_f64(y, p)
+                })
+                .collect(),
+            _ => {
+                let (m, sh) = quantize_multiplier(s_acc / p.scale as f64);
+                let (lo, hi) = act_code_range(act, p);
+                acc.iter()
+                    .map(|&a| {
+                        let a = a.clamp(i32::MIN as i64, i32::MAX as i64) as i32;
+                        requantize(a, m, sh, p.zero_point, lo, hi)
+                    })
+                    .collect()
+            }
+        };
+        write_view(arena, &out, &codes, false);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{self, max_abs_diff};
+    use crate::models;
+    use crate::quant::{calibrate, int8::compile};
+
+    fn native(g: &Graph, seed: u64) -> (Int8Executable, HashMap<String, Value>) {
+        let cal = calibrate(g, 2, seed).unwrap();
+        let qm = compile(g, &cal).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        let exe = Int8Executable::plan(g, &qm).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        let inputs = exec::random_inputs(g, seed ^ 0x9e37);
+        (exe, inputs)
+    }
+
+    #[test]
+    fn native_int8_tracks_f32_on_zoo_models() {
+        for g in [models::kws(), models::txt(), models::magic_wand(), models::radar()] {
+            let (exe, inputs) = native(&g, 21);
+            let f = exec::run(&g, &inputs).unwrap();
+            let q = exe.run_f32(&inputs).unwrap();
+            let d = max_abs_diff(&f, &q);
+            assert!(d < 0.2, "{}: native int8 drifted {d}", g.name);
+        }
+    }
+
+    #[test]
+    fn arena_matches_planner_and_all_views_fit() {
+        let g = models::kws();
+        let (exe, inputs) = native(&g, 5);
+        // The arena is exactly the planner's reported layout size.
+        let grouping = fuse(&g);
+        let m = MemModel::new(&g, &grouping);
+        let s = sched::schedule(&m, SchedOptions::default());
+        let l = layout::plan(&m, &s.order, LayoutOptions::default());
+        assert_eq!(exe.arena_bytes(), l.total);
+        // Running works (compile already bound-checked every view).
+        exe.run(&inputs).unwrap();
+    }
+
+    #[test]
+    fn deterministic_codes_across_runs() {
+        let g = models::txt();
+        let (exe, inputs) = native(&g, 9);
+        let a = exe.run(&inputs).unwrap();
+        let b = exe.run(&inputs).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -18,9 +18,11 @@
 //!   is unchanged (`dy, dx, ci` ascending), so results are bit-identical
 //!   to the naive loops they replace.
 
-use crate::graph::{ActKind, Graph, Op, OpKind, Padding, Tensor, TensorId, TensorKind};
+use crate::graph::{pad_before, ActKind, Graph, Op, OpKind, Tensor, TensorId, TensorKind};
 use crate::util::FnvHashMap;
 use std::collections::HashMap;
+
+pub mod int8;
 
 /// A dense f32 tensor value.
 #[derive(Debug, Clone, PartialEq)]
@@ -144,21 +146,6 @@ fn act(a: ActKind, x: f32) -> f32 {
         ActKind::Relu6 => x.clamp(0.0, 6.0),
         ActKind::Sigmoid => 1.0 / (1.0 + (-x).exp()),
         ActKind::Tanh => x.tanh(),
-    }
-}
-
-/// Resolved (pad_top, pad_left) for a windowed op.
-fn pad_before(padding: Padding, in_h: usize, in_w: usize, k: (usize, usize), s: (usize, usize)) -> (isize, isize) {
-    match padding {
-        Padding::Valid => (0, 0),
-        Padding::Same => {
-            let oh = in_h.div_ceil(s.0);
-            let ow = in_w.div_ceil(s.1);
-            let th = ((oh - 1) * s.0 + k.0).saturating_sub(in_h);
-            let tw = ((ow - 1) * s.1 + k.1).saturating_sub(in_w);
-            ((th / 2) as isize, (tw / 2) as isize)
-        }
-        Padding::Explicit(h, w) => (h.0 as isize, w.0 as isize),
     }
 }
 

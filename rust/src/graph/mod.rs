@@ -402,4 +402,4 @@ impl fmt::Display for Graph {
     }
 }
 
-pub use shape::{infer as infer_shape, InferredTensor};
+pub use shape::{infer as infer_shape, pad_before, window_out, InferredTensor};

@@ -38,6 +38,32 @@ pub fn window_out(input: usize, k: usize, stride: usize, padding: Padding, axis:
     }
 }
 
+/// Resolved `(pad_top, pad_left)` of a windowed op — the single source of
+/// truth shared by the f32 interpreter, the int8 interpreter and the C
+/// emitter, so the split-pad convention cannot drift between execution
+/// paths (TF SAME: `total/2` before, remainder after — the extra pad
+/// lands at the bottom/right, which matters for even kernels and
+/// stride > 1).
+pub fn pad_before(
+    padding: Padding,
+    in_h: usize,
+    in_w: usize,
+    k: (usize, usize),
+    s: (usize, usize),
+) -> (isize, isize) {
+    match padding {
+        Padding::Valid => (0, 0),
+        Padding::Same => {
+            let oh = in_h.div_ceil(s.0);
+            let ow = in_w.div_ceil(s.1);
+            let th = ((oh - 1) * s.0 + k.0).saturating_sub(in_h);
+            let tw = ((ow - 1) * s.1 + k.1).saturating_sub(in_w);
+            ((th / 2) as isize, (tw / 2) as isize)
+        }
+        Padding::Explicit(h, w) => (h.0 as isize, w.0 as isize),
+    }
+}
+
 fn spatial(
     x: &[usize],
     k: (usize, usize),
@@ -246,6 +272,39 @@ pub fn infer(g: &Graph, op: &Op) -> Result<InferredTensor, String> {
                 }
             }
             Ok(InferredTensor { shape: first.clone(), dtype: t(0).dtype })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_before_matches_window_out_over_kernel_stride_grid() {
+        // The split-pad convention must agree with shape inference for
+        // every (kernel, stride, size) combination — including the even
+        // kernels and stride > 1 cases where the floor/ceil split is easy
+        // to get wrong.
+        for size in 1..=12usize {
+            for k in 1..=5usize {
+                for s in 1..=3usize {
+                    let (_, before, _) = window_out(size, k, s, Padding::Same, 0).unwrap();
+                    let (pt, pl) = pad_before(Padding::Same, size, size, (k, k), (s, s));
+                    assert_eq!(pt, before as isize, "size {size} k {k} s {s}");
+                    assert_eq!(pl, before as isize, "size {size} k {k} s {s}");
+                    if size >= k {
+                        assert_eq!(
+                            pad_before(Padding::Valid, size, size, (k, k), (s, s)),
+                            (0, 0)
+                        );
+                    }
+                    let ex = Padding::Explicit((1, 2), (0, 1));
+                    let (_, b, _) = window_out(size + 3, k, s, ex, 0).unwrap();
+                    assert_eq!(b, 1, "explicit pad-before must pass through");
+                    assert_eq!(pad_before(ex, size, size, (k, k), (s, s)), (1, 0));
+                }
+            }
         }
     }
 }

@@ -30,6 +30,10 @@ struct Ctx<'a> {
 
 /// Lowest feasible offset for buffer `b` given placed conflicting buffers.
 fn first_fit_offset(b: usize, size: usize, ctx: &mut Ctx, offsets: &[usize]) -> usize {
+    // Zero-sized buffers occupy no bytes and always fit at offset 0.
+    if size == 0 {
+        return 0;
+    }
     // Collect occupied intervals of conflicting placed buffers into the
     // reused scratch (no allocation).
     let mut ivs = std::mem::take(&mut ctx.ivs);

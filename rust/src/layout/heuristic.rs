@@ -20,6 +20,13 @@ pub fn first_fit_in_order(sizes: &[usize], conflicts: &[(usize, usize)], order: 
     let mut offsets = vec![usize::MAX; n];
     let mut total = 0usize;
     for &b in order {
+        // Zero-sized buffers occupy no bytes: pin them at offset 0 so
+        // they can neither inherit an out-of-arena offset from the
+        // interval walk nor perturb placement of real buffers.
+        if sizes[b] == 0 {
+            offsets[b] = 0;
+            continue;
+        }
         let mut ivs: Vec<(usize, usize)> = adj[b]
             .iter()
             .filter(|&&o| offsets[o] != usize::MAX)

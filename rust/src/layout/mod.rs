@@ -33,11 +33,20 @@ impl Layout {
     }
 
     /// Check that no conflicting buffers overlap.
+    ///
+    /// Zero-sized buffers (empty slices from extreme partition counts)
+    /// occupy no bytes: the half-open interval `[off, off)` can never
+    /// overlap anything, so such pairs are skipped — the naive
+    /// `su < ev && sv < eu` test would report a phantom overlap whenever
+    /// an empty buffer sits strictly inside a live interval.
     pub fn is_valid(&self, sizes: &[usize], conflicts: &[(usize, usize)]) -> bool {
         if self.offsets.len() != sizes.len() {
             return false;
         }
         for &(u, v) in conflicts {
+            if sizes[u] == 0 || sizes[v] == 0 {
+                continue;
+            }
             let (su, eu) = (self.offsets[u], self.offsets[u] + sizes[u]);
             let (sv, ev) = (self.offsets[v], self.offsets[v] + sizes[v]);
             if su < ev && sv < eu {
@@ -48,10 +57,13 @@ impl Layout {
     }
 
     /// Buffers whose end offset equals the arena size (the "responsible"
-    /// buffers used by critical-buffer detection, §4.3).
+    /// buffers used by critical-buffer detection, §4.3). Zero-sized
+    /// buffers never contribute to the arena size and are excluded —
+    /// counting one as "responsible" would propose a phantom critical
+    /// buffer that no tiling can shrink.
     pub fn peak_buffers(&self, sizes: &[usize]) -> Vec<usize> {
         (0..sizes.len())
-            .filter(|&b| self.offsets[b] + sizes[b] == self.total)
+            .filter(|&b| sizes[b] > 0 && self.offsets[b] + sizes[b] == self.total)
             .collect()
     }
 }
@@ -191,5 +203,45 @@ mod tests {
         assert!(!bad.is_valid(&sizes, &conflicts));
         let good = Layout { offsets: vec![0, 10], total: 20, strategy: "t", optimal: false };
         assert!(good.is_valid(&sizes, &conflicts));
+    }
+
+    #[test]
+    fn zero_sized_buffers_do_not_overlap_or_peak() {
+        // Regression: a 0-byte buffer placed inside a conflicting
+        // buffer's interval occupies no bytes — `is_valid` used to report
+        // a phantom overlap, and `peak_buffers` used to report a phantom
+        // "responsible" buffer when the empty buffer's offset coincided
+        // with the arena end.
+        let sizes = vec![10, 0];
+        let conflicts = vec![(0, 1)];
+        let inside = Layout { offsets: vec![0, 5], total: 10, strategy: "t", optimal: false };
+        assert!(inside.is_valid(&sizes, &conflicts), "empty buffer cannot overlap");
+        let at_end = Layout { offsets: vec![0, 10], total: 10, strategy: "t", optimal: false };
+        assert_eq!(at_end.peak_buffers(&sizes), vec![0], "empty buffer is never peak");
+    }
+
+    #[test]
+    fn planners_tolerate_zero_size_slots() {
+        // End-to-end: every planner must produce a valid, offset-bounded
+        // layout when some slots are empty.
+        let sizes = vec![64, 0, 32, 0, 48];
+        let conflicts: Vec<(usize, usize)> =
+            (0..sizes.len()).flat_map(|i| (i + 1..sizes.len()).map(move |j| (i, j))).collect();
+        for l in [
+            heuristic::first_fit_by_size(&sizes, &conflicts),
+            heuristic::hill_climb_sa(&sizes, &conflicts, 200, 5),
+            plan_instance(&sizes, &conflicts, 0, LayoutOptions::default()),
+        ] {
+            assert!(l.is_valid(&sizes, &conflicts), "{}", l.strategy);
+            assert_eq!(l.total, 64 + 32 + 48, "{}", l.strategy);
+            for (b, &off) in l.offsets.iter().enumerate() {
+                assert!(
+                    off + sizes[b] <= l.total,
+                    "{}: buffer {b} at {off} exceeds arena {}",
+                    l.strategy,
+                    l.total
+                );
+            }
+        }
     }
 }

@@ -43,6 +43,7 @@ fn main() {
         "verify-artifacts" => verify_artifacts(rest),
         "serve" => serve(rest),
         "codegen" => codegen(rest),
+        "int8" => int8_demo(rest),
         "dot" => {
             let name = rest.first().expect("usage: fdt dot MODEL");
             let g = models::by_name(name).expect("unknown model");
@@ -64,9 +65,43 @@ fn help() {
          optimize MODEL [--fdt-only|--ffmt-only] [--dot FILE] |\n\
          layout-compare [MODEL..] | sched-bench | flow-stats [MODEL..] |\n\
          verify-artifacts [DIR] | serve MODEL [N] | dot MODEL |\n\
-         codegen MODEL [-o FILE] [--optimize|--fdt-only|--ffmt-only]\n\
+         codegen MODEL [-o FILE] [--optimize|--fdt-only|--ffmt-only] |\n\
+         int8 MODEL   (native int8: tiled-vs-untiled code equality + arena)\n\
          models: KWS TXT MW POS SSD CIF RAD SWIFTNET FIG5"
     );
+}
+
+/// Native int8 demo: optimize, calibrate, run both the untiled and the
+/// tiled graph through the int8 arena executor, and report arena sizes
+/// plus output-code equality (the quantized-domain equivalence claim).
+fn int8_demo(args: &[String]) {
+    let name = args.first().expect("usage: fdt int8 MODEL");
+    let g = models::by_name(name).expect("unknown model");
+    let opts = FlowOptions::default();
+    let r = fdt::coordinator::optimize(&g, &opts);
+    let cal = fdt::quant::calibrate(&g, 2, 7).expect("calibration needs weight data");
+    let qm = fdt::quant::int8::compile(&g, &cal).expect("int8 compile");
+    let exe_u = fdt::exec::int8::Int8Executable::plan(&g, &qm).expect("untiled plan");
+    let tcal = fdt::quant::transfer(&g, &cal, &r.graph);
+    let exe_t =
+        fdt::coordinator::int8_executable(&r.graph, &opts, &tcal).expect("tiled plan");
+    println!("{}", g.summary());
+    println!(
+        "int8 arena: untiled {} B, tiled {} B (flow RAM {} B)",
+        exe_u.arena_bytes(),
+        exe_t.arena_bytes(),
+        r.final_eval.ram
+    );
+    let inputs = fdt::exec::random_inputs(&g, 42);
+    let a = exe_u.run(&inputs).expect("untiled run");
+    let b = exe_t.run(&inputs).expect("tiled run");
+    println!(
+        "output codes byte-identical across tiling: {}",
+        if a == b { "yes" } else { "NO — bug" }
+    );
+    let f = fdt::exec::run(&g, &inputs).expect("f32 run");
+    let q: Vec<fdt::exec::Value> = a.iter().map(|v| v.to_f32()).collect();
+    println!("max |int8 - f32| on outputs: {:.4}", fdt::exec::max_abs_diff(&f, &q));
 }
 
 fn select_models(args: &[String], default: &[&str]) -> Vec<fdt::Graph> {

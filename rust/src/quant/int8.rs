@@ -1,0 +1,322 @@
+//! Native int8 model compilation: calibrated per-tensor parameters are
+//! folded into integer constants an interpreter or C backend can execute
+//! without touching the f32 master weights.
+//!
+//! [`compile`] produces a [`QuantizedModel`]:
+//!
+//! * i8 **weight codes** on each weight tensor's calibrated affine grid
+//!   (full affine — a nonzero weight zero-point is handled by the
+//!   kernels, so sliced partition weights share the original's grid and
+//!   therefore the original's codes bit-for-bit);
+//! * i32 **bias codes** folded per `BiasAdd` op at the scale of the
+//!   tensor the bias is added to;
+//! * a per-tensor [`Repr`] describing how the tensor's bytes are
+//!   interpreted at run time: i8 codes, i32-stored codes (a Merge
+//!   output), i32 **accumulators** at scale `s_x * s_w` (FDT fan-in
+//!   partials — the 4-byte buffers of the paper's memory model), or raw
+//!   i32 index values;
+//! * alias-consistent parameters: `Slice` / `Reshape` / `Pad` outputs
+//!   share their source grid (they are views or value-preserving), and a
+//!   `Concat` output adopts its first input's grid (all FDT/FFMT
+//!   partitions inherit the same original tensor, so the parts agree).
+//!
+//! Requantization uses TFLite-style fixed-point multipliers
+//! ([`quantize_multiplier`] / [`multiply_by_quantized_multiplier`]): a
+//! real multiplier `s_acc / s_out` becomes a Q31 integer multiplier plus
+//! a power-of-two shift, evaluated with saturating rounding-doubling
+//! high multiplication — integer-only and bit-reproducible across the
+//! interpreter and the generated C.
+
+use super::{Calibration, QuantParams};
+use crate::graph::{DType, Graph, OpKind, TensorKind};
+
+// (The executor consuming this model lives in `crate::exec::int8`; the C
+// flavor in `crate::codegen` shares the same folded constants.)
+
+/// How a tensor's stored bytes are interpreted by the int8 executor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Repr {
+    /// i8 codes on the tensor's affine grid (1 byte per element).
+    I8,
+    /// Codes on the tensor's affine grid, stored in i32 (a Merge output:
+    /// the accumulator buffer holds the requantized result in place).
+    CodesI32,
+    /// i32 accumulator at this scale, zero point 0 (an FDT fan-in
+    /// partial; only a `Merge` may consume it).
+    Acc(f64),
+    /// Raw i32 values (index tensors fed to `Gather`).
+    Index,
+}
+
+/// A graph folded to integer constants, ready for the int8 executor.
+#[derive(Debug, Clone)]
+pub struct QuantizedModel {
+    /// Per-tensor affine parameters (alias-consistent, see module docs).
+    pub params: Vec<QuantParams>,
+    /// Per-tensor interpretation of the stored bytes.
+    pub repr: Vec<Repr>,
+    /// Per-tensor i8 weight codes (i8-typed weights with data only).
+    pub weights: Vec<Option<Vec<i8>>>,
+    /// Per-op folded i32 bias codes (`BiasAdd` ops only), at the scale of
+    /// the op's activation input.
+    pub bias: Vec<Option<Vec<i32>>>,
+}
+
+/// Fold `g`'s constants onto the calibrated grids. Fails for graphs
+/// without weight data (`without_data` zoo models) and for structures the
+/// int8 executor does not support (f32 tensors, i32 intermediates that
+/// are neither fan-in partials nor merge results).
+pub fn compile(g: &Graph, cal: &Calibration) -> Result<QuantizedModel, String> {
+    if cal.params.len() != g.tensors.len() {
+        return Err(format!(
+            "calibration covers {} tensors, graph has {}",
+            cal.params.len(),
+            g.tensors.len()
+        ));
+    }
+    let mut params = cal.params.clone();
+
+    // View/value-preserving ops share their source grid; concat outputs
+    // adopt their first input's grid. Topo order settles sources first.
+    let order = g.topo_order();
+    for &oid in &order {
+        let op = g.op(oid);
+        match &op.kind {
+            OpKind::Slice { .. } | OpKind::Reshape { .. } | OpKind::Pad { .. } => {
+                params[op.output] = params[op.inputs[0]];
+            }
+            OpKind::Concat { .. } => {
+                params[op.output] = params[op.inputs[0]];
+            }
+            _ => {}
+        }
+    }
+
+    // Per-tensor representation.
+    let mut repr = vec![Repr::I8; g.tensors.len()];
+    for t in &g.tensors {
+        match t.dtype {
+            DType::I8 => {}
+            DType::F32 => {
+                return Err(format!("tensor {}: f32 has no int8 representation", t.name));
+            }
+            DType::I32 => repr[t.id] = Repr::Index,
+        }
+    }
+    for &oid in &order {
+        let op = g.op(oid);
+        let out = op.output;
+        let tensor = g.tensor(out);
+        if tensor.dtype != DType::I32 {
+            continue;
+        }
+        repr[out] = match &op.kind {
+            OpKind::Conv2d { .. } | OpKind::DepthwiseConv2d { .. } | OpKind::Dense => {
+                let sx = params[op.inputs[0]].scale as f64;
+                let sw = params[op.inputs[1]].scale as f64;
+                Repr::Acc(sx * sw)
+            }
+            OpKind::Merge { .. } => Repr::CodesI32,
+            OpKind::Slice { .. } | OpKind::Reshape { .. } => repr[op.inputs[0]],
+            OpKind::Concat { .. } => {
+                for &i in &op.inputs {
+                    if matches!(repr[i], Repr::Acc(_)) {
+                        return Err(format!(
+                            "{}: cannot concat i32 partial accumulators",
+                            op.name
+                        ));
+                    }
+                }
+                repr[op.inputs[0]]
+            }
+            other => {
+                return Err(format!(
+                    "{}: unsupported producer `{}` for an i32 intermediate",
+                    op.name,
+                    other.mnemonic()
+                ));
+            }
+        };
+    }
+    // Accumulators may only feed a Merge (one requantization, at the
+    // merge — the invariant the 4-byte partial accounting relies on).
+    let consumers = g.consumers();
+    for (t, r) in repr.iter().enumerate() {
+        if matches!(r, Repr::Acc(_)) {
+            for &c in &consumers[t] {
+                if !matches!(g.op(c).kind, OpKind::Merge { .. }) {
+                    return Err(format!(
+                        "partial {} consumed by non-merge op {}",
+                        g.tensor(t).name,
+                        g.op(c).name
+                    ));
+                }
+            }
+        }
+    }
+
+    // Fold weights to i8 codes.
+    let mut weights: Vec<Option<Vec<i8>>> = vec![None; g.tensors.len()];
+    for t in &g.tensors {
+        if t.kind != TensorKind::Weight {
+            continue;
+        }
+        let Some(data) = &t.data else {
+            return Err(format!("weight {} has no data (model built without_data)", t.name));
+        };
+        if t.dtype == DType::I8 {
+            let p = params[t.id];
+            weights[t.id] = Some(data.iter().map(|&x| p.quantize(x)).collect());
+        }
+    }
+
+    // Fold biases to i32 at the scale of the tensor they are added to.
+    let mut bias: Vec<Option<Vec<i32>>> = vec![None; g.ops.len()];
+    for op in &g.ops {
+        if matches!(op.kind, OpKind::BiasAdd) {
+            let b = g.tensor(op.inputs[1]);
+            let Some(data) = &b.data else {
+                return Err(format!("bias {} has no data", b.name));
+            };
+            let s_in = params[op.inputs[0]].scale as f64;
+            bias[op.id] = Some(
+                data.iter()
+                    .map(|&x| {
+                        (x as f64 / s_in).round().clamp(i32::MIN as f64, i32::MAX as f64) as i32
+                    })
+                    .collect(),
+            );
+        }
+    }
+
+    Ok(QuantizedModel { params, repr, weights, bias })
+}
+
+// ---------------------------------------------------------------------
+// TFLite-style fixed-point requantization
+// ---------------------------------------------------------------------
+
+/// Decompose a positive real multiplier into `(multiplier, shift)` with
+/// `real ≈ multiplier * 2^(shift - 31)` and `multiplier` in
+/// `[2^30, 2^31)` (TFLite's `QuantizeMultiplier`).
+pub fn quantize_multiplier(real: f64) -> (i32, i32) {
+    assert!(real > 0.0 && real.is_finite(), "multiplier must be positive, got {real}");
+    let mut shift = 0i32;
+    let mut q = real;
+    while q < 0.5 {
+        q *= 2.0;
+        shift -= 1;
+    }
+    while q >= 1.0 {
+        q /= 2.0;
+        shift += 1;
+    }
+    let mut q31 = (q * (1i64 << 31) as f64).round() as i64;
+    if q31 == 1i64 << 31 {
+        q31 /= 2;
+        shift += 1;
+    }
+    (q31 as i32, shift)
+}
+
+/// `round(a * b / 2^31)` with the single saturating case `a == b ==
+/// i32::MIN` (ARM SQRDMULH semantics, TFLite reference). Note the
+/// *truncating* division: an arithmetic shift would floor and round
+/// negative half-cases the wrong way.
+pub fn saturating_rounding_doubling_high_mul(a: i32, b: i32) -> i32 {
+    if a == i32::MIN && b == i32::MIN {
+        return i32::MAX;
+    }
+    let ab = a as i64 * b as i64;
+    let nudge = if ab >= 0 { 1i64 << 30 } else { 1 - (1i64 << 30) };
+    ((ab + nudge) / (1i64 << 31)) as i32
+}
+
+/// Rounding arithmetic right shift (TFLite's `RoundingDivideByPOT`).
+pub fn rounding_divide_by_pot(x: i32, exp: i32) -> i32 {
+    if exp <= 0 {
+        return x;
+    }
+    if exp > 31 {
+        return 0;
+    }
+    let mask = (1i64 << exp) - 1;
+    let remainder = (x as i64) & mask;
+    let threshold = (mask >> 1) + i64::from(x < 0);
+    (x >> exp) + i32::from(remainder > threshold)
+}
+
+/// `x * multiplier * 2^(shift - 31)` in integer arithmetic (TFLite's
+/// `MultiplyByQuantizedMultiplier`).
+pub fn multiply_by_quantized_multiplier(x: i32, multiplier: i32, shift: i32) -> i32 {
+    let left = shift.clamp(0, 32);
+    let right = (-shift).max(0);
+    let shifted =
+        ((x as i64) << left).clamp(i32::MIN as i64, i32::MAX as i64) as i32;
+    rounding_divide_by_pot(saturating_rounding_doubling_high_mul(shifted, multiplier), right)
+}
+
+/// Requantize an i32 accumulator onto an i8-style grid:
+/// `clamp(zero_point + x * multiplier * 2^(shift-31), lo, hi)`.
+pub fn requantize(acc: i32, multiplier: i32, shift: i32, zero_point: i32, lo: i32, hi: i32) -> i32 {
+    let v = zero_point as i64 + multiply_by_quantized_multiplier(acc, multiplier, shift) as i64;
+    v.clamp(lo as i64, hi as i64) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::quant::calibrate;
+
+    #[test]
+    fn fixed_point_multiplier_tracks_real_product() {
+        for real in [0.5f64, 1.0, 0.001234, 7.5, 0.75, 1e-4, 123.456] {
+            let (m, s) = quantize_multiplier(real);
+            assert!(m >= 1 << 30, "{real}: multiplier {m} not normalized");
+            for x in [-100_000i32, -257, -1, 0, 1, 3, 255, 9999, 1_000_000] {
+                let got = multiply_by_quantized_multiplier(x, m, s) as f64;
+                let want = x as f64 * real;
+                let err = (got - want).abs();
+                assert!(err <= want.abs() * 1e-6 + 1.0, "{real} * {x}: got {got}, want {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn rounding_divide_matches_reference() {
+        // gemmlowp/TFLite RoundingDivideByPOT: round half away from zero
+        // (verified against the compiled C helper text).
+        assert_eq!(rounding_divide_by_pot(8, 2), 2);
+        assert_eq!(rounding_divide_by_pot(9, 2), 2); // 2.25 -> 2
+        assert_eq!(rounding_divide_by_pot(10, 2), 3); // 2.5 -> 3
+        assert_eq!(rounding_divide_by_pot(-9, 2), -2); // -2.25 -> -2
+        assert_eq!(rounding_divide_by_pot(-10, 2), -3); // -2.5 -> -3
+        assert_eq!(rounding_divide_by_pot(-11, 2), -3);
+        assert_eq!(rounding_divide_by_pot(7, 0), 7);
+    }
+
+    #[test]
+    fn compile_folds_zoo_models() {
+        for g in [models::kws(), models::txt(), models::radar()] {
+            let cal = calibrate(&g, 1, 7).unwrap();
+            let qm = compile(&g, &cal).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+            // Every i8 weight folded; every bias folded.
+            for t in &g.tensors {
+                if t.kind == crate::graph::TensorKind::Weight && t.dtype == DType::I8 {
+                    let codes = qm.weights[t.id].as_ref().unwrap();
+                    assert_eq!(codes.len(), t.numel());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compile_rejects_models_without_data() {
+        let g = models::posenet();
+        let cal = Calibration {
+            params: vec![QuantParams { scale: 1.0, zero_point: 0 }; g.tensors.len()],
+        };
+        assert!(compile(&g, &cal).is_err());
+    }
+}

@@ -17,6 +17,8 @@
 //! [`crate::exec`] are reused; i32-typed tensors (partials) pass through
 //! unquantized exactly like the real accumulator would.
 
+pub mod int8;
+
 use crate::exec::{self, Value};
 use crate::graph::{DType, Graph, TensorKind};
 use std::collections::HashMap;
@@ -32,6 +34,14 @@ impl QuantParams {
     /// Parameters covering `[lo, hi]` with an i8 affine grid.
     pub fn from_range(lo: f32, hi: f32) -> QuantParams {
         let (lo, hi) = (lo.min(0.0), hi.max(0.0)); // grid must contain 0
+        // Degenerate range: an all-zero (or constant-zero) calibration
+        // tensor anchors to `lo == hi == 0`. The old `1e-8` fallback
+        // scale paired with a clamped zero-point silently saturated every
+        // later nonzero value to ~1e-6; pick the canonical unit grid
+        // instead (0 exactly representable, moderate values survive).
+        if hi == lo {
+            return QuantParams { scale: 1.0, zero_point: 0 };
+        }
         let scale = ((hi - lo) / 255.0).max(1e-8);
         let zero_point = (-128.0 - lo / scale).round().clamp(-128.0, 127.0) as i32;
         QuantParams { scale, zero_point }
@@ -139,12 +149,31 @@ pub fn run_quantized(
     Ok(g.outputs.iter().map(|&t| vals[t].clone()).collect())
 }
 
+/// Strip one trailing `_p<digits>` / `_t<digits>` partition or tile
+/// suffix (anywhere in the name), returning the shortened name.
+fn strip_partition_suffix(name: &str) -> Option<String> {
+    for marker in ["_p", "_t"] {
+        if let Some(i) = name.rfind(marker) {
+            let tail = &name[i + 2..];
+            let digits: String = tail.chars().take_while(|c| c.is_ascii_digit()).collect();
+            if !digits.is_empty() {
+                let rest = &tail[digits.len()..];
+                return Some(format!("{}{}", &name[..i], rest));
+            }
+        }
+    }
+    None
+}
+
 /// Transfer calibration from an untiled graph to its tiled version: every
 /// tiled tensor inherits the parameters of the original tensor it was
 /// split from (the transform records provenance in tensor names); newly
-/// introduced partials/merges reuse the fan-in output's parameters.
+/// introduced partials/merges reuse the fan-in output's parameters, and
+/// split/concat terminals inherit the tensor they view (structurally,
+/// via their first dataflow input).
 pub fn transfer(g_untiled: &Graph, cal: &Calibration, g_tiled: &Graph) -> Calibration {
-    // Name-prefix provenance: "conv2d_3_p2_out" derives from "conv2d_3".
+    // Name-prefix provenance: "conv2d_3_p2_out" derives from "conv2d_3",
+    // "conv2d_3_t1_out" (FFMT tile) likewise.
     let mut by_name: HashMap<&str, QuantParams> = HashMap::new();
     for t in &g_untiled.tensors {
         by_name.insert(t.name.as_str(), cal.params[t.id]);
@@ -153,30 +182,32 @@ pub fn transfer(g_untiled: &Graph, cal: &Calibration, g_tiled: &Graph) -> Calibr
         if let Some(p) = by_name.get(name) {
             return Some(*p);
         }
-        // Strip partition / variant suffixes progressively.
+        // Strip partition / tile suffixes progressively.
         let mut n = name.to_string();
-        loop {
-            if let Some(i) = n.rfind("_p") {
-                // `_p<digits>` partition suffix?
-                let tail = &n[i + 2..];
-                let digits: String = tail.chars().take_while(|c| c.is_ascii_digit()).collect();
-                if !digits.is_empty() {
-                    let rest = &tail[digits.len()..];
-                    n = format!("{}{}", &n[..i], rest);
-                    if let Some(p) = by_name.get(n.as_str()) {
-                        return Some(*p);
-                    }
-                    continue;
-                }
+        while let Some(stripped) = strip_partition_suffix(&n) {
+            n = stripped;
+            if let Some(p) = by_name.get(n.as_str()) {
+                return Some(*p);
             }
-            break;
         }
         None
     };
-    let params = g_tiled
-        .tensors
-        .iter()
-        .map(|t| lookup(&t.name).unwrap_or(QuantParams { scale: 1.0, zero_point: 0 }))
+    let mut params: Vec<Option<QuantParams>> =
+        g_tiled.tensors.iter().map(|t| lookup(&t.name)).collect();
+    // Structural fallback for tensors the transform introduces without
+    // name provenance (fdt_merge_out, fdt_concat_out, ffmt_split/concat):
+    // inherit the first resolved dataflow input. For an FDT merge every
+    // partial derives from the original fan-in op's output, so the merge
+    // reuses exactly the fan-in output's parameters.
+    for oid in g_tiled.topo_order() {
+        let op = g_tiled.op(oid);
+        if params[op.output].is_none() {
+            params[op.output] = op.inputs.iter().find_map(|&t| params[t]);
+        }
+    }
+    let params = params
+        .into_iter()
+        .map(|p| p.unwrap_or(QuantParams { scale: 1.0, zero_point: 0 }))
         .collect();
     Calibration { params }
 }
@@ -201,6 +232,62 @@ mod tests {
         assert!(p.project(100.0) <= 5.0 + p.scale);
         let q = p.quantize(1.0);
         assert!((p.dequantize(q) - 1.0).abs() <= p.scale);
+    }
+
+    #[test]
+    fn from_range_degenerate_zero_range_keeps_values_representable() {
+        // Regression: an all-zero calibration tensor used to produce
+        // `scale = 1e-8` with a clamped zero-point, saturating every
+        // later nonzero value to ~2.5e-6.
+        let p = QuantParams::from_range(0.0, 0.0);
+        assert!(p.scale >= 1e-3, "degenerate range must pick a usable grid, got {}", p.scale);
+        assert_eq!(p.project(0.0), 0.0, "0 must stay exactly representable");
+        let x = 0.7f32;
+        let err = (p.dequantize(p.quantize(x)) - x).abs();
+        assert!(err <= 0.5 * p.scale + 1e-6, "degenerate grid saturates {x} (err {err})");
+    }
+
+    #[test]
+    fn from_range_constant_and_one_sided_ranges() {
+        // lo == hi (nonzero constant): the grid is anchored at 0 and must
+        // cover the constant to within one step.
+        for c in [5.0f32, -5.0, 0.25] {
+            let p = QuantParams::from_range(c, c);
+            assert_eq!(p.project(0.0), 0.0, "c = {c}");
+            let err = (p.dequantize(p.quantize(c)) - c).abs();
+            assert!(err <= p.scale, "constant {c} not representable: err {err}");
+        }
+        // All-negative and all-positive ranges anchor to include 0.
+        let n = QuantParams::from_range(-5.0, -1.0);
+        assert_eq!(n.project(0.0), 0.0);
+        assert!((n.dequantize(n.quantize(-3.0)) - -3.0).abs() <= n.scale);
+        let q = QuantParams::from_range(2.0, 5.0);
+        assert_eq!(q.project(0.0), 0.0);
+        assert!((q.dequantize(q.quantize(4.0)) - 4.0).abs() <= q.scale);
+    }
+
+    #[test]
+    fn transfer_resolves_merge_and_concat_params() {
+        // The tiled graph's fdt_merge / fdt_concat outputs carry no name
+        // provenance; they must inherit their inputs' (hence the original
+        // fan-in output's) parameters instead of the (1.0, 0) default.
+        let g = models::kws();
+        let mut opts = FlowOptions::default();
+        opts.discovery.enable_ffmt = false;
+        let r = optimize(&g, &opts);
+        assert!(!r.iterations.is_empty(), "KWS must tile");
+        let cal = calibrate(&g, 1, 9).unwrap();
+        let tcal = transfer(&g, &cal, &r.graph);
+        for t in &r.graph.tensors {
+            if t.name.starts_with("fdt_merge") || t.name.starts_with("fdt_concat") {
+                let p = tcal.params[t.id];
+                assert!(
+                    p.scale != 1.0 || p.zero_point != 0,
+                    "{} got default params",
+                    t.name
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,103 @@
+//! CPU fallback backend: the native int8 arena executor behind a
+//! runtime-shaped API.
+//!
+//! When the crate is built without the `pjrt` feature (the hermetic
+//! tier-1 build), [`super::Runtime`] can never produce an engine; this
+//! module provides the serving fallback — calibrate once, fold to int8,
+//! plan the arena with the same scheduler/layout planner the deployment
+//! flow uses, and answer `run_f32` requests from the interpreter. The
+//! same type is also available with `pjrt` enabled, as a reference
+//! backend to cross-check artifacts against.
+
+use super::Buffer;
+use crate::exec::int8::Int8Executable;
+use crate::exec::Value;
+use crate::graph::Graph;
+use crate::quant;
+use std::collections::HashMap;
+
+/// A model prepared for native int8 CPU execution.
+pub struct CpuEngine {
+    name: String,
+    /// Model-input names + shapes, in declaration order (the executable
+    /// owns the folded graph; keeping the full f32 graph here would
+    /// double the weight memory of a long-lived engine).
+    inputs: Vec<(String, Vec<usize>)>,
+    exe: Int8Executable,
+}
+
+impl CpuEngine {
+    /// Calibrate `g` on `samples` random inputs, fold to int8 and plan
+    /// the arena executor (default flow fidelity).
+    pub fn prepare(g: &Graph, samples: usize, seed: u64) -> Result<CpuEngine, String> {
+        let cal = quant::calibrate(g, samples, seed)?;
+        let qm = quant::int8::compile(g, &cal)?;
+        let exe = Int8Executable::plan(g, &qm)?;
+        let inputs = g
+            .inputs
+            .iter()
+            .map(|&t| (g.tensor(t).name.clone(), g.tensor(t).shape.clone()))
+            .collect();
+        Ok(CpuEngine { name: g.name.clone(), inputs, exe })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Arena bytes of the planned executable (the backend's whole RAM).
+    pub fn arena_bytes(&self) -> usize {
+        self.exe.arena_bytes()
+    }
+
+    /// Execute one request. Buffers are positional, in the model's input
+    /// declaration order (mirroring the PJRT engine signature); outputs
+    /// are dequantized to f32.
+    pub fn run_f32(&self, inputs: &[Buffer]) -> Result<Vec<Vec<f32>>, String> {
+        if inputs.len() != self.inputs.len() {
+            return Err(format!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut by_name = HashMap::new();
+        for ((name, shape), buf) in self.inputs.iter().zip(inputs) {
+            let data: Vec<f32> = match buf {
+                Buffer::F32 { data, .. } => data.clone(),
+                Buffer::I32 { data, .. } => data.iter().map(|&x| x as f32).collect(),
+            };
+            by_name.insert(name.clone(), Value::try_new(shape.clone(), data)?);
+        }
+        let out = self.exe.run_f32(&by_name)?;
+        Ok(out.into_iter().map(|v| v.data).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn cpu_engine_serves_kws() {
+        let g = models::kws();
+        let engine = CpuEngine::prepare(&g, 1, 3).unwrap();
+        assert!(engine.arena_bytes() > 0);
+        let inputs: Vec<Buffer> = g
+            .inputs
+            .iter()
+            .map(|&t| {
+                let tensor = g.tensor(t);
+                Buffer::new(tensor.shape.clone(), vec![0.25; tensor.numel()])
+            })
+            .collect();
+        let out = engine.run_f32(&inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), 12);
+        // Softmax head: outputs form a (coarsely quantized) distribution.
+        let sum: f32 = out[0].iter().sum();
+        assert!((sum - 1.0).abs() < 0.1, "softmax sum {sum}");
+    }
+}

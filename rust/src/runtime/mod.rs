@@ -7,6 +7,10 @@
 //! the same API surface: buffers construct normally, but creating the
 //! PJRT client reports `RuntimeUnavailable`, so binaries/tests that probe
 //! the runtime degrade gracefully instead of failing to compile.
+//!
+//! [`cpu::CpuEngine`] is the always-available CPU fallback: the native
+//! int8 arena executor ([`crate::exec::int8`]) behind the same
+//! positional-buffer `run_f32` surface, used when PJRT is absent.
 
 #[cfg(feature = "pjrt")]
 mod pjrt;
@@ -17,6 +21,9 @@ pub use pjrt::{max_artifact_diff, Buffer, Engine, Runtime};
 mod stub;
 #[cfg(not(feature = "pjrt"))]
 pub use stub::{max_artifact_diff, Buffer, Engine, Runtime, RuntimeUnavailable};
+
+pub mod cpu;
+pub use cpu::CpuEngine;
 
 /// Locate the artifacts directory: `FDT_ARTIFACTS` env override, else
 /// the nearest `artifacts/` walking up from the current directory (cargo

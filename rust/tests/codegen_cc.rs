@@ -165,3 +165,174 @@ fn optimized_mobilenet_tiny_compiles_and_matches() {
         check_c_matches_interpreter(&r.graph, "full");
     }
 }
+
+// ---------------------------------------------------------------------
+// int8 deployment build + padding-convention sweep
+// ---------------------------------------------------------------------
+
+use fdt::graph::{ActKind, DType, GraphBuilder, Padding};
+
+/// Compile the int8 C module with baked inputs and compare its f32
+/// outputs against the native int8 interpreter, element-wise, within
+/// `lsb` output codes (integer kernels are bit-identical by
+/// construction; softmax/sigmoid may differ by libm rounding).
+fn check_int8_c_matches_interpreter(g: &Graph, tag: &str, lsb: f32) {
+    let cal = fdt::quant::calibrate(g, 1, 31).unwrap();
+    check_int8_c_with_cal(g, &cal, tag, lsb);
+}
+
+/// As above, with an explicit calibration (tiled graphs use the
+/// calibration transferred from their untiled original).
+fn check_int8_c_with_cal(g: &Graph, cal: &fdt::quant::Calibration, tag: &str, lsb: f32) {
+    use fdt::exec::int8::Int8Executable;
+    use fdt::quant::int8::compile as qcompile;
+
+    let module = fdt::codegen::generate_int8(g, cal)
+        .unwrap_or_else(|e| panic!("{} {tag}: {e}", g.name));
+    let qm = qcompile(g, cal).unwrap();
+    let exe = Int8Executable::plan(g, &qm).unwrap();
+    let inputs = random_inputs(g, 99);
+    let expected: Vec<(Vec<f32>, f32)> = exe
+        .run(&inputs)
+        .expect("int8 interpreter")
+        .iter()
+        .map(|q| (q.to_f32().data, lsb * q.params.scale + 1e-6))
+        .collect();
+
+    let mut main_c = String::from("#include <stdio.h>\n#include <math.h>\n");
+    let mut decls = String::new();
+    let mut in_args = Vec::new();
+    for (i, &t) in g.inputs.iter().enumerate() {
+        let v = &inputs[&g.tensor(t).name];
+        decls += &format!("static const float tin{i}[{}] = {{", v.data.len());
+        for x in &v.data {
+            decls += &format!("{x:?}f,");
+        }
+        decls += "};\n";
+        in_args.push(format!("tin{i}"));
+    }
+    let mut out_args = Vec::new();
+    for (k, (e, _)) in expected.iter().enumerate() {
+        decls += &format!("static const float texp{k}[{}] = {{", e.len());
+        for x in e {
+            decls += &format!("{x:?}f,");
+        }
+        decls += "};\n";
+        decls += &format!("static float tout{k}[{}];\n", e.len());
+        out_args.push(format!("tout{k}"));
+    }
+    main_c += &decls;
+    main_c += &format!(
+        "extern int fdt_model_run({}, {});\n",
+        (0..g.inputs.len()).map(|i| format!("const float* i{i}")).collect::<Vec<_>>().join(", "),
+        (0..expected.len()).map(|k| format!("float* o{k}")).collect::<Vec<_>>().join(", ")
+    );
+    main_c += "int main(void) {\n  int bad = 0;\n";
+    main_c += &format!("  fdt_model_run({}, {});\n", in_args.join(", "), out_args.join(", "));
+    for (k, (e, tol)) in expected.iter().enumerate() {
+        main_c += &format!(
+            "  for (int i = 0; i < {n}; i++) if (fabsf(tout{k}[i] - texp{k}[i]) > {tol:?}f) {{ if (bad < 5) fprintf(stderr, \"out{k}[%d] = %g != %g\\n\", i, tout{k}[i], texp{k}[i]); bad++; }}\n",
+            n = e.len()
+        );
+    }
+    main_c += "  return bad > 250 ? 250 : bad;\n}\n";
+
+    let dir = std::env::temp_dir().join(format!("fdt_cg8_{}_{}", g.name, tag));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::File::create(dir.join("model.c"))
+        .unwrap()
+        .write_all(module.source.as_bytes())
+        .unwrap();
+    std::fs::File::create(dir.join("main.c")).unwrap().write_all(main_c.as_bytes()).unwrap();
+    let exe_path = dir.join("test");
+    let cc = Command::new("cc")
+        .args(["-O1", "-o"])
+        .arg(&exe_path)
+        .arg(dir.join("model.c"))
+        .arg(dir.join("main.c"))
+        .arg("-lm")
+        .output()
+        .expect("cc not available");
+    assert!(
+        cc.status.success(),
+        "{} {tag}: cc failed:\n{}",
+        g.name,
+        String::from_utf8_lossy(&cc.stderr)
+    );
+    let run_out = Command::new(&exe_path).output().expect("running generated binary");
+    assert!(
+        run_out.status.code() == Some(0),
+        "{} {tag}: {} int8 output mismatches:\n{}",
+        g.name,
+        run_out.status.code().unwrap_or(-1),
+        String::from_utf8_lossy(&run_out.stderr)
+    );
+}
+
+#[test]
+fn int8_c_bit_exact_on_integer_kernels() {
+    // No softmax/sigmoid: the whole chain is fixed-point — any
+    // discrepancy >= 0.5 codes fails, so this asserts bit-exactness of
+    // the emitted integer kernels (incl. even-kernel SAME conv at
+    // stride 2/3).
+    let mut b = GraphBuilder::new("int8grid");
+    let x = b.input("x", vec![9, 9, 4], DType::I8);
+    let y = b.conv2d(x, 8, (2, 2), (2, 2), Padding::Same, ActKind::Relu);
+    let y = b.dwconv(y, (3, 3), (1, 1), Padding::Same, ActKind::Relu6);
+    let y = b.conv2d(y, 4, (4, 4), (3, 3), Padding::Same, ActKind::Relu);
+    let y = b.dense_act(y, 6, ActKind::Identity);
+    let g = b.finish(vec![y]);
+    check_int8_c_matches_interpreter(&g, "bitexact", 0.4);
+}
+
+#[test]
+fn int8_c_matches_interpreter_on_zoo() {
+    check_int8_c_matches_interpreter(&models::kws(), "untiled", 2.5);
+    check_int8_c_matches_interpreter(&models::txt(), "untiled", 2.5);
+}
+
+#[test]
+fn int8_c_matches_interpreter_on_tiled_kws() {
+    // FDT-tiled KWS: exercises the C emitter's in-place merge
+    // accumulation and the partial `+=` stores at run time, compiled and
+    // diffed against the int8 interpreter on the same tiled graph.
+    let mut opts = FlowOptions::default();
+    opts.discovery.enable_ffmt = false;
+    let g = models::kws();
+    let r = optimize(&g, &opts);
+    assert!(!r.iterations.is_empty());
+    let cal = fdt::quant::calibrate(&g, 1, 31).unwrap();
+    let tcal = fdt::quant::transfer(&g, &cal, &r.graph);
+    check_int8_c_with_cal(&r.graph, &tcal, "fdt", 2.5);
+}
+
+#[test]
+fn int8_c_matches_interpreter_on_tiled_txt() {
+    // Tiled TXT: gather partitions writing through strided concat views
+    // (or dense fan-in + merge, whichever the flow picks) — run-time
+    // coverage for the non-dense elem_expr addressing in the C emitter.
+    let g = models::txt();
+    let r = optimize(&g, &FlowOptions::default());
+    assert!(!r.iterations.is_empty());
+    let cal = fdt::quant::calibrate(&g, 1, 31).unwrap();
+    let tcal = fdt::quant::transfer(&g, &cal, &r.graph);
+    check_int8_c_with_cal(&r.graph, &tcal, "tiled", 2.5);
+}
+
+#[test]
+fn same_padding_convention_c_matches_interpreter_over_grid() {
+    // Padding-satellite cross-check: run the C emitter and the
+    // interpreter over a (kernel, stride, size) grid — even kernels and
+    // stride > 1 are where div_ceil-based output sizing and TF's
+    // split-pad convention classically go off by one — and compare
+    // element-wise. Both paths share `graph::pad_before`; this test pins
+    // the convention end to end.
+    for &(k, s, size) in &[(2, 1, 5), (2, 2, 5), (2, 3, 7), (4, 1, 7), (4, 2, 8), (4, 3, 9), (3, 2, 6)] {
+        let mut b = GraphBuilder::new(format!("padk{k}s{s}n{size}"));
+        let x = b.input("x", vec![size, size, 2], DType::I8);
+        let y = b.conv2d(x, 3, (k, k), (s, s), Padding::Same, ActKind::Relu);
+        let y = b.dwconv(y, (k, k), (s, s), Padding::Same, ActKind::Identity);
+        let g = b.finish(vec![y]);
+        check_c_matches_interpreter(&g, "padgrid");
+    }
+}

@@ -1,0 +1,126 @@
+//! End-to-end int8 acceptance: full flow-planned models run through the
+//! native int8 arena executor, asserting
+//!
+//! (a) **byte-identical** i8 output codes between the untiled and the
+//!     FDT/FFMT-tiled schedules (the paper's "tiling cannot change the
+//!     model" claim, in the quantized domain, with no f32 tolerance),
+//! (b) the executor's arena never exceeds the planner-reported
+//!     `FDT_ARENA_BYTES` (it *is* the planned layout).
+
+use fdt::coordinator::{int8_executable, optimize, FlowOptions};
+use fdt::exec::{self, int8::Int8Executable};
+use fdt::models;
+use fdt::quant::{self, int8::compile};
+
+/// Calibrate + fold + plan both the untiled graph and the flow's tiled
+/// result; return both executables.
+fn pair(
+    g: &fdt::Graph,
+    r: &fdt::coordinator::FlowResult,
+    opts: &FlowOptions,
+) -> (Int8Executable, Int8Executable) {
+    let cal = quant::calibrate(g, 2, 11).unwrap();
+    let qm = compile(g, &cal).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+    let exe_u = Int8Executable::plan(g, &qm).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+    let tcal = quant::transfer(g, &cal, &r.graph);
+    let exe_t = int8_executable(&r.graph, opts, &tcal)
+        .unwrap_or_else(|e| panic!("{} tiled: {e}", g.name));
+    (exe_u, exe_t)
+}
+
+#[test]
+fn kws_fdt_flow_int8_byte_identical_and_fits_planned_arena() {
+    let g = models::kws();
+    let mut opts = FlowOptions::default();
+    opts.discovery.enable_ffmt = false;
+    let r = optimize(&g, &opts);
+    assert!(!r.iterations.is_empty(), "KWS must tile");
+    assert!(r.final_eval.ram < r.initial.ram, "flow must save RAM");
+    let (exe_u, exe_t) = pair(&g, &r, &opts);
+
+    // (b) The tiled executor's arena is exactly the flow-reported RAM —
+    // in particular it never exceeds FDT_ARENA_BYTES.
+    assert!(exe_t.arena_bytes() > 0);
+    assert_eq!(
+        exe_t.arena_bytes(),
+        r.final_eval.ram,
+        "executor arena must equal the planner-reported FDT_ARENA_BYTES"
+    );
+    assert!(exe_t.arena_bytes() < exe_u.arena_bytes(), "tiling must shrink the arena");
+
+    // (a) Byte-identical output codes on several inputs.
+    for seed in [1u64, 77, 4242] {
+        let inputs = exec::random_inputs(&g, seed);
+        let a = exe_u.run(&inputs).unwrap();
+        let b = exe_t.run(&inputs).unwrap();
+        assert_eq!(a, b, "seed {seed}: FDT-tiled int8 output codes diverged");
+    }
+
+    // Sanity: the native path tracks the f32 reference.
+    let inputs = exec::random_inputs(&g, 5);
+    let f = exec::run(&g, &inputs).unwrap();
+    let q = exe_u.run_f32(&inputs).unwrap();
+    let d = exec::max_abs_diff(&f, &q);
+    assert!(d < 0.2, "native int8 drifted {d} from f32");
+}
+
+#[test]
+fn txt_flow_int8_byte_identical() {
+    // TXT tiles its embedding buffer depthwise (gather fan-out with an
+    // explicit CONCAT or a dense fan-in + Merge) — the other terminal
+    // flavor from KWS.
+    let g = models::txt();
+    let opts = FlowOptions::default();
+    let r = optimize(&g, &opts);
+    assert!(!r.iterations.is_empty(), "TXT must tile");
+    let (exe_u, exe_t) = pair(&g, &r, &opts);
+    assert_eq!(exe_t.arena_bytes(), r.final_eval.ram);
+    for seed in [3u64, 99] {
+        let inputs = exec::random_inputs(&g, seed);
+        assert_eq!(
+            exe_u.run(&inputs).unwrap(),
+            exe_t.run(&inputs).unwrap(),
+            "seed {seed}: tiled TXT int8 diverged"
+        );
+    }
+}
+
+#[test]
+fn ffmt_flow_int8_byte_identical() {
+    // Spatial (FFMT) tiling: overlapping halo slices + explicit border
+    // padding + concat reassembly must also preserve int8 codes exactly.
+    let g = models::magic_wand();
+    let mut opts = FlowOptions::default();
+    opts.discovery.enable_fdt = false;
+    let r = optimize(&g, &opts);
+    assert!(!r.iterations.is_empty(), "MW must FFMT-tile");
+    let (exe_u, exe_t) = pair(&g, &r, &opts);
+    assert_eq!(exe_t.arena_bytes(), r.final_eval.ram);
+    for seed in [7u64, 123] {
+        let inputs = exec::random_inputs(&g, seed);
+        assert_eq!(
+            exe_u.run(&inputs).unwrap(),
+            exe_t.run(&inputs).unwrap(),
+            "seed {seed}: FFMT-tiled int8 diverged"
+        );
+    }
+}
+
+#[test]
+fn cpu_engine_fallback_runs_flow_models() {
+    // The runtime's CPU fallback is the same arena executor behind the
+    // positional-buffer API (used when the pjrt feature is off).
+    let g = models::radar();
+    let engine = fdt::runtime::CpuEngine::prepare(&g, 1, 3).unwrap();
+    assert!(engine.arena_bytes() > 0);
+    let inputs: Vec<fdt::runtime::Buffer> = g
+        .inputs
+        .iter()
+        .map(|&t| {
+            let tensor = g.tensor(t);
+            fdt::runtime::Buffer::new(tensor.shape.clone(), vec![0.1; tensor.numel()])
+        })
+        .collect();
+    let out = engine.run_f32(&inputs).unwrap();
+    assert_eq!(out.len(), g.outputs.len());
+}

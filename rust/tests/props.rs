@@ -164,6 +164,55 @@ fn exact_placer_never_loses() {
 }
 
 #[test]
+fn int8_executor_codes_invariant_under_depth_tiling() {
+    // Grounding `quant`'s doc-comment claim in the *native* int8 domain:
+    // for random graphs and random discovered SPLIT/Merge (depth) tiling
+    // configs, the int8 arena executor produces byte-identical output
+    // codes with and without tiling — partials stay i32 accumulators and
+    // are requantized exactly once, by the Merge.
+    use fdt::exec::int8::Int8Executable;
+    use fdt::quant::{calibrate, int8::compile, transfer};
+    use fdt::tiling::discovery::{discover, DiscoveryOptions};
+
+    let mut checked = 0usize;
+    for seed in 0..40u64 {
+        let g = random_graph(seed);
+        let grouping = fuse(&g);
+        let m = MemModel::new(&g, &grouping);
+        let s = sched::schedule(&m, SchedOptions::default());
+        let l = layout::plan(&m, &s.order, LayoutOptions::default());
+        let crit = fdt::coordinator::critical_buffers(&m, &s.order, &l);
+        let Some(&t) = crit.first() else { continue };
+        let opts = DiscoveryOptions { enable_ffmt: false, ..DiscoveryOptions::default() };
+        let cfgs = discover(&g, t, &opts);
+        if cfgs.is_empty() {
+            continue;
+        }
+        let cal = calibrate(&g, 1, seed + 1).unwrap();
+        let qm = compile(&g, &cal).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let exe = Int8Executable::plan(&g, &qm).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let inputs = fdt::exec::random_inputs(&g, seed * 13 + 5);
+        let base = exe.run(&inputs).unwrap();
+        for (i, cfg) in cfgs.iter().enumerate().step_by(5.max(cfgs.len() / 4)) {
+            let Ok(tiled) = fdt::transform::apply_tiling(&g, cfg) else { continue };
+            let tcal = transfer(&g, &cal, &tiled);
+            let qm_t = compile(&tiled, &tcal).unwrap_or_else(|e| panic!("seed {seed} cfg {i}: {e}"));
+            let exe_t = Int8Executable::plan(&tiled, &qm_t)
+                .unwrap_or_else(|e| panic!("seed {seed} cfg {i}: {e}"));
+            let b = exe_t.run(&inputs).unwrap();
+            assert_eq!(
+                base,
+                b,
+                "seed {seed} cfg {}: tiled int8 codes diverged",
+                cfg.describe(&g)
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked >= 10, "int8 tiling property exercised too few configs: {checked}");
+}
+
+#[test]
 fn random_tilings_preserve_numerics_and_fdt_macs() {
     use fdt::exec::{max_abs_diff, random_inputs, run};
     use fdt::tiling::discovery::{discover, DiscoveryOptions};
