@@ -38,7 +38,7 @@ fn main() {
         // Heuristic comparison: hill-valley only.
         let heur = sched::schedule(
             &m,
-            SchedOptions { bnb_node_budget: 0, use_sp: false },
+            SchedOptions { bnb_node_budget: 0, wall_ms: None, use_sp: false },
         );
         println!(
             "{:<10} {:>7} {:>12} {:>12} {:>10} {:>14.3?} {:>14}",

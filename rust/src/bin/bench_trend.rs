@@ -218,3 +218,60 @@ fn main() {
         std::process::exit(1);
     }
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_wellformed_records() {
+        let json = r#"{"KWS": {"peak": 1024, "median_s": 0.5, "strategy": "bnb"},
+                       "TXT": {"peak": 2048, "note": null}}"#;
+        let recs = Parser::new(json).records().unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(lookup(&recs, "KWS", "peak"), Some(1024.0));
+        assert_eq!(lookup(&recs, "KWS", "strategy"), None, "strings carry no numeric value");
+        assert_eq!(lookup(&recs, "TXT", "note"), None);
+    }
+
+    #[test]
+    fn malformed_inputs_error_instead_of_panicking() {
+        // Every corruption mode a half-written or truncated benchmark
+        // artifact can produce must surface as Err — never a panic.
+        for bad in [
+            "",                                    // empty file
+            "{",                                   // truncated after open
+            r#"{"a""#,                             // truncated after name
+            r#"{"a": {"k": }}"#,                   // missing value
+            r#"{"a": {"k": 12e}}"#,                // malformed number
+            r#"{"a": {"k": "unterminated"#,        // unterminated string
+            r#"{"a": {"k": 1} "b": {}}"#,          // missing comma
+            r#"[1, 2, 3]"#,                        // not an object
+            r#"{"a": {"k": nul"#,                  // truncated null
+            "\u{0}\u{0}\u{0}",                     // binary garbage
+        ] {
+            let r = Parser::new(bad).records();
+            assert!(r.is_err(), "{bad:?} should fail to parse, got {r:?}");
+        }
+    }
+
+    #[test]
+    fn empty_object_and_empty_records_are_fine() {
+        assert!(Parser::new("{}").records().unwrap().is_empty());
+        let recs = Parser::new(r#"{"a": {}}"#).records().unwrap();
+        assert_eq!(recs.len(), 1);
+        assert!(recs[0].1.is_empty());
+    }
+
+    #[test]
+    fn load_reports_missing_and_corrupt_files_as_errors() {
+        let dir = std::env::temp_dir();
+        let missing = dir.join("bench_trend_test_does_not_exist.json");
+        assert!(load(&missing).is_err());
+        let corrupt = dir.join("bench_trend_test_corrupt.json");
+        std::fs::write(&corrupt, "{\"a\": {\"k\": }}").unwrap();
+        let r = load(&corrupt);
+        assert!(r.is_err(), "corrupt file must error, got {r:?}");
+        let _ = std::fs::remove_file(&corrupt);
+    }
+}

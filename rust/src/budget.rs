@@ -1,0 +1,84 @@
+//! Anytime solver budgets.
+//!
+//! The schedule and layout branch-and-bound solvers are exact but can
+//! blow up on adversarial instances. A [`Budget`] bounds them two ways —
+//! node expansions and wall-clock — turning both into *anytime*
+//! algorithms: when either limit trips they return their best incumbent
+//! (flagged as degraded) instead of running unboundedly. The coordinator
+//! then falls back B&B → first-fit/heuristic → untiled and records the
+//! degradation in the flow result.
+
+use std::time::Instant;
+
+/// Resource limits for one solver invocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Budget {
+    /// Maximum search-tree node expansions (0 disables the solver).
+    pub max_nodes: u64,
+    /// Wall-clock limit in milliseconds; `None` = unbounded time.
+    pub wall_ms: Option<u64>,
+}
+
+impl Budget {
+    /// Effectively unbounded (the practical default for small graphs).
+    pub const UNBOUNDED: Budget = Budget { max_nodes: u64::MAX, wall_ms: None };
+
+    pub fn nodes(max_nodes: u64) -> Budget {
+        Budget { max_nodes, wall_ms: None }
+    }
+
+    /// Start the wall-clock for this invocation.
+    pub fn start(&self) -> Deadline {
+        Deadline::after(self.wall_ms)
+    }
+}
+
+impl Default for Budget {
+    fn default() -> Self {
+        Budget::UNBOUNDED
+    }
+}
+
+/// A started wall-clock limit. `expired()` is cheap enough to poll from
+/// solver inner loops every few hundred expansions.
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    at: Option<Instant>,
+}
+
+impl Deadline {
+    /// No time limit.
+    pub const NONE: Deadline = Deadline { at: None };
+
+    /// A deadline `wall_ms` from now (`None` = no limit).
+    pub fn after(wall_ms: Option<u64>) -> Deadline {
+        Deadline {
+            at: wall_ms.map(|ms| Instant::now() + std::time::Duration::from_millis(ms)),
+        }
+    }
+
+    pub fn expired(&self) -> bool {
+        match self.at {
+            Some(at) => Instant::now() >= at,
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbounded_never_expires() {
+        let d = Budget::UNBOUNDED.start();
+        assert!(!d.expired());
+        assert!(!Deadline::NONE.expired());
+    }
+
+    #[test]
+    fn zero_wall_expires_immediately() {
+        let d = Budget { max_nodes: u64::MAX, wall_ms: Some(0) }.start();
+        assert!(d.expired());
+    }
+}

@@ -35,6 +35,7 @@
 //! byte-identical [`Evaluation`]s.
 
 use crate::analysis::{graph_macs, MemModel};
+use crate::error::{FdtError, FdtResult};
 use crate::graph::fusion::{fuse, Grouping};
 use crate::graph::{Graph, TensorId, TensorKind};
 use crate::layout::{self, heuristic, Layout, LayoutOptions};
@@ -94,7 +95,7 @@ impl Default for FlowOptions {
             sched: SchedOptions::default(),
             layout: LayoutOptions::default(),
             discovery: DiscoveryOptions::default(),
-            screening_sched: SchedOptions { bnb_node_budget: 50_000, use_sp: true },
+            screening_sched: SchedOptions { bnb_node_budget: 50_000, wall_ms: None, use_sp: true },
             max_iterations: 8,
             max_candidates: 6,
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
@@ -140,6 +141,11 @@ pub struct FlowResult {
     pub iterations: Vec<IterationLog>,
     pub configs_tested: usize,
     pub elapsed: std::time::Duration,
+    /// Human-readable notes recorded whenever the flow gracefully
+    /// degraded instead of failing: solver budgets that ran out (best
+    /// incumbent kept), screening workers that panicked on a candidate
+    /// (candidate skipped). Empty on a fully clean run.
+    pub degradations: Vec<String>,
 }
 
 impl FlowResult {
@@ -193,11 +199,12 @@ pub fn int8_executable(
     g: &Graph,
     opts: &FlowOptions,
     cal: &crate::quant::Calibration,
-) -> Result<crate::exec::int8::Int8Executable, String> {
+) -> FdtResult<crate::exec::int8::Int8Executable> {
+    g.validate()?;
     let qm = crate::quant::int8::compile(g, cal)?;
     let grouping = fuse(g);
     let (m, s, l) = plan_graph(g, &grouping, opts);
-    crate::exec::int8::Int8Executable::compile(g, &qm, &grouping, &s.order, &l, &m)
+    Ok(crate::exec::int8::Int8Executable::compile(g, &qm, &grouping, &s.order, &l, &m)?)
 }
 
 /// Critical-buffer detection (§4.3): intermediate buffers that are
@@ -367,6 +374,9 @@ impl ScreenPool {
     }
 
     /// Screen every config of one candidate; returns results by index.
+    /// A worker panic demotes that config to [`Screen::Invalid`] and is
+    /// recorded in `degradations` — one pathological candidate must not
+    /// take the whole exploration down.
     fn run_batch(
         &mut self,
         graph: &Arc<Graph>,
@@ -374,27 +384,47 @@ impl ScreenPool {
         ctx: &ScreenCtx,
         cutoff: usize,
         exact: bool,
+        degradations: &mut Vec<String>,
     ) -> Vec<Screen> {
         self.batch += 1;
         let n = configs.len();
-        let tx = self.tx.as_ref().expect("pool already shut down");
+        let tx = match self.tx.as_ref() {
+            Some(tx) => tx,
+            None => return vec![Screen::Invalid; n], // pool shut down
+        };
+        let mut sent = 0usize;
         for idx in 0..n {
-            tx.send(Job {
-                batch: self.batch,
-                idx,
-                graph: Arc::clone(graph),
-                configs: Arc::clone(configs),
-                ctx: ctx.clone(),
-                cutoff,
-                exact,
-            })
-            .expect("screen worker hung up");
+            if tx
+                .send(Job {
+                    batch: self.batch,
+                    idx,
+                    graph: Arc::clone(graph),
+                    configs: Arc::clone(configs),
+                    ctx: ctx.clone(),
+                    cutoff,
+                    exact,
+                })
+                .is_err()
+            {
+                degradations.push("screening pool hung up; remaining configs skipped".to_string());
+                break;
+            }
+            sent += 1;
         }
         let mut out = vec![Screen::Invalid; n];
-        for _ in 0..n {
-            let (batch, idx, r) = self.results.recv().expect("screen worker died");
+        for _ in 0..sent {
+            let Ok((batch, idx, r)) = self.results.recv() else {
+                degradations.push("screening workers died; partial results kept".to_string());
+                break;
+            };
             debug_assert_eq!(batch, self.batch, "stale screening result");
-            out[idx] = r.unwrap_or_else(|msg| panic!("screening worker panicked: {msg}"));
+            match r {
+                Ok(s) => out[idx] = s,
+                Err(msg) => {
+                    degradations
+                        .push(format!("screening panicked on candidate config {idx}: {msg}"));
+                }
+            }
         }
         out
     }
@@ -435,22 +465,43 @@ fn screen_configs(
     ctx: &ScreenCtx,
     cutoff: usize,
     pool: &mut Option<ScreenPool>,
+    degradations: &mut Vec<String>,
 ) -> (Option<(usize, usize)>, usize) {
-    let mut run = |exact: bool| -> Vec<Screen> {
+    let mut run = |exact: bool, degradations: &mut Vec<String>| -> Vec<Screen> {
         if ctx.opts.threads <= 1 || configs.len() <= 1 {
-            configs.iter().map(|c| screen_one(g, c, ctx, cutoff, exact)).collect()
+            // Sequential path: contain per-config panics exactly like the
+            // pool does, so both paths degrade rather than unwind.
+            configs
+                .iter()
+                .enumerate()
+                .map(|(idx, c)| {
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        screen_one(g, c, ctx, cutoff, exact)
+                    }))
+                    .unwrap_or_else(|p| {
+                        let msg = p
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| p.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "non-string panic payload".to_string());
+                        degradations
+                            .push(format!("screening panicked on candidate config {idx}: {msg}"));
+                        Screen::Invalid
+                    })
+                })
+                .collect()
         } else {
             let p = pool.get_or_insert_with(|| ScreenPool::new(ctx.opts.threads));
-            p.run_batch(g, configs, ctx, cutoff, exact)
+            p.run_batch(g, configs, ctx, cutoff, exact, degradations)
         }
     };
-    let results = run(false);
+    let results = run(false, degradations);
     let tested = results.len();
     let mut best = best_ram(&results);
     let ambiguous = !best.is_some_and(|(ram, _)| ram < cutoff)
         && results.iter().any(|r| matches!(r, Screen::AboveIncumbent));
     if ambiguous {
-        best = best_ram(&run(true));
+        best = best_ram(&run(true, degradations));
     }
     (best, tested)
 }
@@ -485,10 +536,48 @@ fn evaluate_planned(
 }
 
 /// Run the full Fig-3 exploration on `g`.
+///
+/// Infallible wrapper kept for the many internal callers whose graphs
+/// are valid by construction: a malformed graph (or a residual flow bug)
+/// panics with the typed diagnostic. Library callers should prefer
+/// [`try_optimize`], which returns it as an error instead.
 pub fn optimize(g: &Graph, opts: &FlowOptions) -> FlowResult {
+    match try_optimize(g, opts) {
+        Ok(r) => r,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// Fault-tolerant flow entry point: pre-flight-validates `g` (dangling
+/// refs, cycles, shape mismatches, zero-extent inputs) and converts any
+/// residual panic inside the exploration into [`FdtError`] — no panic
+/// escapes this API.
+pub fn try_optimize(g: &Graph, opts: &FlowOptions) -> FdtResult<FlowResult> {
+    g.validate()?;
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| optimize_inner(g, opts))).map_err(
+        |p| FdtError::Other {
+            reason: p
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| p.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "flow panicked with a non-string payload".to_string()),
+        },
+    )
+}
+
+fn optimize_inner(g: &Graph, opts: &FlowOptions) -> FlowResult {
     let t0 = std::time::Instant::now();
     let mut layout_memo = layout::Memo::default();
+    let mut degradations: Vec<String> = Vec::new();
     let (initial, grouping0, s0, l0) = evaluate_planned(g, opts, &mut layout_memo);
+    if s0.degraded {
+        degradations
+            .push("initial schedule: exact search budget exhausted; kept best incumbent".into());
+    }
+    if !l0.optimal {
+        degradations
+            .push("initial layout: exact placer budget exhausted; kept best heuristic".into());
+    }
     // MAC budget relative to the *original* graph, so overhead cannot
     // accumulate past the threshold over iterations.
     let mac_cap = opts
@@ -529,7 +618,8 @@ pub fn optimize(g: &Graph, opts: &FlowOptions) -> FlowResult {
             if configs.is_empty() {
                 continue;
             }
-            let (best, tested) = screen_configs(&current, &configs, &ctx, cutoff, &mut pool);
+            let (best, tested) =
+                screen_configs(&current, &configs, &ctx, cutoff, &mut pool, &mut degradations);
             configs_tested += tested;
             let Some((_, idx)) = best else { continue };
             // Re-evaluate the winner at full fidelity.
@@ -539,6 +629,18 @@ pub fn optimize(g: &Graph, opts: &FlowOptions) -> FlowResult {
             };
             let (eval, gr2, s2, l2) = evaluate_planned(&tiled, opts, &mut layout_memo);
             if eval.ram < current_eval.ram {
+                if s2.degraded {
+                    degradations.push(format!(
+                        "iteration {}: schedule budget exhausted on accepted graph",
+                        iterations.len()
+                    ));
+                }
+                if !l2.optimal {
+                    degradations.push(format!(
+                        "iteration {}: layout placer budget exhausted on accepted graph",
+                        iterations.len()
+                    ));
+                }
                 iterations.push(IterationLog {
                     critical_buffer: current.tensor(t).name.clone(),
                     config: configs[idx].describe(&current),
@@ -562,6 +664,7 @@ pub fn optimize(g: &Graph, opts: &FlowOptions) -> FlowResult {
         iterations,
         configs_tested,
         elapsed: t0.elapsed(),
+        degradations,
     }
 }
 

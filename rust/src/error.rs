@@ -1,0 +1,156 @@
+//! Typed errors for the whole tiling flow.
+//!
+//! [`FdtError`] is the crate-wide error enum (hand-rolled — `thiserror`
+//! is not in the offline vendor set): every library-level failure that
+//! used to `panic!` / `unwrap` on malformed input is expressed as a
+//! variant here, with enough structure for callers to match on and
+//! enough context to diagnose. `From` bridges to and from `String` keep
+//! the pre-existing `Result<_, String>` seams compiling while modules
+//! migrate: a `?` converts in either direction.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type FdtResult<T> = Result<T, FdtError>;
+
+/// Every failure mode of the flow, typed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FdtError {
+    /// An op references a tensor id outside the graph's tensor table.
+    DanglingTensor { op: String, tensor: usize },
+    /// An intermediate tensor is consumed but never produced.
+    MissingProducer { op: String, tensor: String },
+    /// A graph output has no producing op.
+    OutputWithoutProducer { tensor: String },
+    /// The op graph contains a dependency cycle.
+    CyclicGraph { graph: String },
+    /// Shape inference disagrees with the stored tensor shape.
+    ShapeMismatch { op: String, inferred: Vec<usize>, stored: Vec<usize> },
+    /// A model input tensor has a zero-extent dimension.
+    ZeroExtentDim { tensor: String, shape: Vec<usize> },
+    /// An op is structurally invalid (arity, parameters, dtype, …).
+    InvalidOp { op: String, reason: String },
+    /// `quant::calibrate` was asked to calibrate from zero samples.
+    EmptyCalibration,
+    /// An executor was not fed a required model input.
+    MissingInput { name: String },
+    /// A provided input's shape does not match the model signature.
+    InputShapeMismatch { name: String, expected: Vec<usize>, got: Vec<usize> },
+    /// The planned arena exceeds the caller-imposed allocation cap.
+    ArenaOverflow { needed: usize, cap: usize },
+    /// An arena access would fall outside the allocated arena.
+    ArenaBounds { what: String, offset: usize, len: usize, arena: usize },
+    /// A solver exhausted its node/wall-clock budget; the result carries
+    /// a best-effort incumbent elsewhere — this variant is for callers
+    /// that need a hard failure instead.
+    BudgetExhausted { stage: &'static str },
+    /// An inference engine could not be constructed.
+    EngineUnavailable { engine: String, reason: String },
+    /// An inference engine failed while serving.
+    EngineFailed { engine: String, reason: String },
+    /// Every engine in a failover chain failed.
+    AllEnginesFailed { tried: Vec<String> },
+    /// A deterministic chaos-harness fault (testing only).
+    Injected { site: String },
+    /// Legacy catch-all for string-typed failures from not-yet-migrated
+    /// seams (also produced by the `From<String>` bridge).
+    Other { reason: String },
+}
+
+impl fmt::Display for FdtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FdtError::DanglingTensor { op, tensor } => {
+                write!(f, "op `{op}` references tensor id {tensor} outside the tensor table")
+            }
+            FdtError::MissingProducer { op, tensor } => {
+                write!(f, "op `{op}` reads intermediate `{tensor}` which no op produces")
+            }
+            FdtError::OutputWithoutProducer { tensor } => {
+                write!(f, "graph output `{tensor}` has no producer")
+            }
+            FdtError::CyclicGraph { graph } => {
+                write!(f, "graph `{graph}` contains a dependency cycle")
+            }
+            FdtError::ShapeMismatch { op, inferred, stored } => {
+                write!(f, "op `{op}`: inferred shape {inferred:?} != stored {stored:?}")
+            }
+            FdtError::ZeroExtentDim { tensor, shape } => {
+                write!(f, "model input `{tensor}` has a zero-extent dimension: {shape:?}")
+            }
+            FdtError::InvalidOp { op, reason } => write!(f, "op `{op}`: {reason}"),
+            FdtError::EmptyCalibration => {
+                write!(f, "calibration requires at least one sample (got 0)")
+            }
+            FdtError::MissingInput { name } => write!(f, "missing model input `{name}`"),
+            FdtError::InputShapeMismatch { name, expected, got } => {
+                write!(f, "input `{name}`: expected shape {expected:?}, got {got:?}")
+            }
+            FdtError::ArenaOverflow { needed, cap } => {
+                write!(f, "planned arena needs {needed} B, exceeding the {cap} B cap")
+            }
+            FdtError::ArenaBounds { what, offset, len, arena } => {
+                write!(f, "{what}: span [{offset}, {}) outside the {arena} B arena", offset + len)
+            }
+            FdtError::BudgetExhausted { stage } => {
+                write!(f, "{stage}: solver budget exhausted before completion")
+            }
+            FdtError::EngineUnavailable { engine, reason } => {
+                write!(f, "engine `{engine}` unavailable: {reason}")
+            }
+            FdtError::EngineFailed { engine, reason } => {
+                write!(f, "engine `{engine}` failed: {reason}")
+            }
+            FdtError::AllEnginesFailed { tried } => {
+                write!(f, "all engines failed (tried: {})", tried.join(", "))
+            }
+            FdtError::Injected { site } => write!(f, "injected fault at {site}"),
+            FdtError::Other { reason } => f.write_str(reason),
+        }
+    }
+}
+
+impl std::error::Error for FdtError {}
+
+impl From<String> for FdtError {
+    fn from(reason: String) -> Self {
+        FdtError::Other { reason }
+    }
+}
+
+impl From<&str> for FdtError {
+    fn from(reason: &str) -> Self {
+        FdtError::Other { reason: reason.to_string() }
+    }
+}
+
+/// Bridge back into not-yet-migrated `Result<_, String>` seams.
+impl From<FdtError> for String {
+    fn from(e: FdtError) -> Self {
+        e.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn string_bridges_round_trip() {
+        let e: FdtError = "boom".into();
+        assert_eq!(e, FdtError::Other { reason: "boom".to_string() });
+        let s: String = FdtError::EmptyCalibration.into();
+        assert!(s.contains("at least one sample"));
+    }
+
+    #[test]
+    fn display_is_informative() {
+        let e = FdtError::ShapeMismatch {
+            op: "conv".to_string(),
+            inferred: vec![4, 4, 8],
+            stored: vec![4, 4, 4],
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("conv") && msg.contains("[4, 4, 8]") && msg.contains("[4, 4, 4]"));
+    }
+}

@@ -509,7 +509,9 @@ impl Int8Executable {
                     tensor.name, v.shape, tensor.shape
                 ));
             }
-            let view = self.views[t].as_ref().expect("checked at compile");
+            let view = self.views[t]
+                .as_ref()
+                .ok_or_else(|| format!("input {} has no arena view", tensor.name))?;
             let data: Vec<i32> = match self.qm.repr[t] {
                 Repr::Index => v.data.iter().map(|&x| x.round() as i32).collect(),
                 _ => {
@@ -521,7 +523,17 @@ impl Int8Executable {
         }
         for step in &self.steps {
             if let Some((base, len)) = step.zero {
-                arena[base..base + len].fill(0);
+                // Recoverable bounds check (was a slice panic): a corrupt
+                // plan must surface as an error, not take the process down.
+                let end = base.checked_add(len).filter(|&e| e <= arena.len()).ok_or(
+                    crate::error::FdtError::ArenaBounds {
+                        what: "merge zero-fill".to_string(),
+                        offset: base,
+                        len,
+                        arena: arena.len(),
+                    },
+                )?;
+                arena[base..end].fill(0);
             }
             self.run_group(&mut arena, step)?;
         }
@@ -529,7 +541,9 @@ impl Int8Executable {
             .outputs
             .iter()
             .map(|&t| {
-                let view = self.views[t].as_ref().expect("checked at compile");
+                let view = self.views[t]
+                    .as_ref()
+                    .ok_or_else(|| format!("output {} has no arena view", self.g.tensor(t).name))?;
                 let raw = read_view(&arena, view);
                 let params = match self.qm.repr[t] {
                     Repr::Index => QuantParams { scale: 1.0, zero_point: 0 },
@@ -548,6 +562,26 @@ impl Int8Executable {
     /// Execute and dequantize the outputs to f32.
     pub fn run_f32(&self, inputs: &HashMap<String, Value>) -> Result<Vec<Value>, String> {
         Ok(self.run(inputs)?.iter().map(QValue::to_f32).collect())
+    }
+
+    /// [`run`] under an arena allocation cap (deployment guard-rail and
+    /// fault-injection hook): refuses up front with
+    /// [`FdtError::ArenaOverflow`](crate::error::FdtError) when the
+    /// planned arena exceeds `cap` bytes. `None` is uncapped.
+    pub fn run_with_cap(
+        &self,
+        inputs: &HashMap<String, Value>,
+        cap: Option<usize>,
+    ) -> crate::error::FdtResult<Vec<QValue>> {
+        if let Some(cap) = cap {
+            if self.arena_bytes > cap {
+                return Err(crate::error::FdtError::ArenaOverflow {
+                    needed: self.arena_bytes,
+                    cap,
+                });
+            }
+        }
+        self.run(inputs).map_err(crate::error::FdtError::from)
     }
 
     fn run_group(&self, arena: &mut [u8], step: &Step) -> Result<(), String> {

@@ -491,7 +491,7 @@ fn eval(g: &Graph, op: &Op, slots: &[Slot<'_>], pool: &mut Pool) -> Result<Value
             }
             out
         }
-        OpKind::Slice { begins, ends } => {
+        OpKind::Slice { begins, ends: _ } => {
             let (xs, xd) = v(0);
             let in_strides = strides(xs);
             let out_strides = strides(&out_shape);
@@ -509,7 +509,8 @@ fn eval(g: &Graph, op: &Op, slots: &[Slot<'_>], pool: &mut Pool) -> Result<Value
                 }
                 out.data[oflat] = xd[iflat];
             }
-            debug_assert!(begins.iter().zip(ends).all(|(b, e)| b < e));
+            // `begins == ends` on some axis is a legal empty slice: the
+            // copy loop above simply runs zero iterations.
             out
         }
         OpKind::Concat { axis } => {

@@ -15,6 +15,7 @@ pub mod fusion;
 
 pub use build::{GraphBuilder, Rng};
 
+use crate::error::FdtError;
 use std::collections::HashMap;
 use std::fmt;
 
@@ -233,8 +234,26 @@ impl Graph {
     }
 
     /// Ops in a valid topological order (ops are appended in topo order by
-    /// the builder; this re-derives one defensively).
+    /// the builder; this re-derives one defensively). Panics on a cyclic
+    /// graph — use [`Graph::try_topo_order`] (or a [`Graph::validate`]
+    /// pre-flight) when the graph is untrusted.
     pub fn topo_order(&self) -> Vec<OpId> {
+        match self.try_topo_order() {
+            Ok(order) => order,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Ops in a valid topological order, or [`FdtError::CyclicGraph`] /
+    /// [`FdtError::DanglingTensor`] when no such order exists.
+    pub fn try_topo_order(&self) -> Result<Vec<OpId>, FdtError> {
+        for op in &self.ops {
+            for &t in op.inputs.iter().chain(std::iter::once(&op.output)) {
+                if t >= self.tensors.len() {
+                    return Err(FdtError::DanglingTensor { op: op.name.clone(), tensor: t });
+                }
+            }
+        }
         let producers = self.producers();
         let mut indeg: Vec<usize> = self
             .ops
@@ -261,42 +280,103 @@ impl Graph {
                 }
             }
         }
-        assert_eq!(order.len(), self.ops.len(), "graph has a cycle");
-        order
+        if order.len() != self.ops.len() {
+            return Err(FdtError::CyclicGraph { graph: self.name.clone() });
+        }
+        Ok(order)
     }
 
-    /// Validate structural invariants; returns a human-readable error.
-    pub fn validate(&self) -> Result<(), String> {
+    /// Pre-flight validation of structural invariants: dangling tensor
+    /// references, missing producers, dependency cycles, op arity,
+    /// shape-inference mismatches and zero-extent model inputs. The
+    /// coordinator runs this before discovery; any graph that passes is
+    /// safe to feed through the whole flow without panicking.
+    pub fn validate(&self) -> Result<(), FdtError> {
+        // Referential integrity first — nothing below may index out of
+        // bounds on an arbitrary (e.g. fuzz-mutated) graph.
+        for op in &self.ops {
+            for &t in op.inputs.iter().chain(std::iter::once(&op.output)) {
+                if t >= self.tensors.len() {
+                    return Err(FdtError::DanglingTensor { op: op.name.clone(), tensor: t });
+                }
+            }
+            if op.inputs.is_empty() {
+                return Err(FdtError::InvalidOp {
+                    op: op.name.clone(),
+                    reason: "op has no inputs".to_string(),
+                });
+            }
+            let min_arity = match op.kind {
+                OpKind::Conv2d { .. }
+                | OpKind::DepthwiseConv2d { .. }
+                | OpKind::Dense
+                | OpKind::BiasAdd
+                | OpKind::Gather
+                | OpKind::Add
+                | OpKind::Mul => 2,
+                _ => 1,
+            };
+            if op.inputs.len() < min_arity {
+                return Err(FdtError::InvalidOp {
+                    op: op.name.clone(),
+                    reason: format!(
+                        "{} needs {} inputs, has {}",
+                        op.kind.mnemonic(),
+                        min_arity,
+                        op.inputs.len()
+                    ),
+                });
+            }
+        }
+        for &t in self.inputs.iter().chain(self.outputs.iter()) {
+            if t >= self.tensors.len() {
+                return Err(FdtError::DanglingTensor { op: "<model io>".to_string(), tensor: t });
+            }
+        }
+        // Model inputs must have positive extent everywhere (zero-sized
+        // *intermediates* — e.g. empty slices — are legal and inert).
+        for &i in &self.inputs {
+            let t = &self.tensors[i];
+            if t.shape.contains(&0) {
+                return Err(FdtError::ZeroExtentDim {
+                    tensor: t.name.clone(),
+                    shape: t.shape.clone(),
+                });
+            }
+        }
         let producers = self.producers();
         for op in &self.ops {
             for &t in &op.inputs {
-                if t >= self.tensors.len() {
-                    return Err(format!("op {} reads unknown tensor {t}", op.name));
-                }
                 let tensor = &self.tensors[t];
                 if tensor.kind == TensorKind::Intermediate && producers[t].is_none() {
-                    return Err(format!(
-                        "op {} reads intermediate tensor {} with no producer",
-                        op.name, tensor.name
-                    ));
+                    return Err(FdtError::MissingProducer {
+                        op: op.name.clone(),
+                        tensor: tensor.name.clone(),
+                    });
                 }
             }
-            let expect = shape::infer(self, op).map_err(|e| format!("{}: {e}", op.name))?;
+            let expect = shape::infer(self, op).map_err(|e| FdtError::InvalidOp {
+                op: op.name.clone(),
+                reason: e,
+            })?;
             let got = &self.tensors[op.output];
             if expect.shape != got.shape {
-                return Err(format!(
-                    "op {}: output shape mismatch: inferred {:?}, stored {:?}",
-                    op.name, expect.shape, got.shape
-                ));
+                return Err(FdtError::ShapeMismatch {
+                    op: op.name.clone(),
+                    inferred: expect.shape,
+                    stored: got.shape.clone(),
+                });
             }
         }
         for &o in &self.outputs {
             if producers[o].is_none() {
-                return Err(format!("model output {} has no producer", self.tensors[o].name));
+                return Err(FdtError::OutputWithoutProducer {
+                    tensor: self.tensors[o].name.clone(),
+                });
             }
         }
         // Acyclicity.
-        self.topo_order();
+        self.try_topo_order()?;
         Ok(())
     }
 

@@ -13,6 +13,12 @@ pub struct InferredTensor {
 ///
 /// Returns `(out, pad_before, pad_after)`.
 pub fn window_out(input: usize, k: usize, stride: usize, padding: Padding, axis: usize) -> Result<(usize, usize, usize), String> {
+    if stride == 0 {
+        return Err("window stride must be positive".to_string());
+    }
+    if input == 0 {
+        return Err("zero-extent input to a windowed op".to_string());
+    }
     match padding {
         Padding::Valid => {
             if input < k {
@@ -51,6 +57,9 @@ pub fn pad_before(
     k: (usize, usize),
     s: (usize, usize),
 ) -> (isize, isize) {
+    if s.0 == 0 || s.1 == 0 || in_h == 0 || in_w == 0 {
+        return (0, 0); // degenerate windows are rejected upstream by `window_out`
+    }
     match padding {
         Padding::Valid => (0, 0),
         Padding::Same => {
@@ -99,6 +108,9 @@ pub fn infer(g: &Graph, op: &Op) -> Result<InferredTensor, String> {
             if w.len() != 4 {
                 return Err(format!("conv weight must be HWIO rank-4, got {w:?}"));
             }
+            if x.len() != 3 {
+                return Err(format!("conv input must be rank-3 HWC, got {x:?}"));
+            }
             if x[2] != w[2] {
                 return Err(format!("conv cin mismatch: input {x:?} vs weight {w:?}"));
             }
@@ -111,6 +123,9 @@ pub fn infer(g: &Graph, op: &Op) -> Result<InferredTensor, String> {
             let w = &t(1).shape; // [kh, kw, c]
             if w.len() != 3 {
                 return Err(format!("dwconv weight must be rank-3 [kh,kw,c], got {w:?}"));
+            }
+            if x.len() != 3 {
+                return Err(format!("dwconv input must be rank-3 HWC, got {x:?}"));
             }
             if x[2] != w[2] {
                 return Err(format!("dwconv channel mismatch: input {x:?} vs weight {w:?}"));
@@ -135,7 +150,7 @@ pub fn infer(g: &Graph, op: &Op) -> Result<InferredTensor, String> {
             need(2)?;
             let x = &t(0).shape;
             let b = &t(1).shape;
-            if b.len() != 1 || b[0] != *x.last().unwrap() {
+            if b.len() != 1 || x.last() != Some(&b[0]) {
                 return Err(format!("bias {b:?} does not match last axis of {x:?}"));
             }
             Ok(InferredTensor { shape: x.clone(), dtype: t(0).dtype })
@@ -223,7 +238,9 @@ pub fn infer(g: &Graph, op: &Op) -> Result<InferredTensor, String> {
             }
             let mut shape = Vec::with_capacity(x.len());
             for i in 0..x.len() {
-                if begins[i] >= ends[i] || ends[i] > x[i] {
+                // `begins == ends` is a legal empty slice (zero-sized
+                // buffers are inert throughout the flow).
+                if begins[i] > ends[i] || ends[i] > x[i] {
                     return Err(format!(
                         "slice bounds [{}, {}) invalid for axis {i} of {x:?}",
                         begins[i], ends[i]

@@ -13,6 +13,7 @@
 //! TinyML graphs produce (fusion leaves a few dozen RAM buffers).
 
 use super::{heuristic, Layout};
+use crate::budget::{Budget, Deadline};
 
 struct Ctx<'a> {
     sizes: &'a [usize],
@@ -21,6 +22,8 @@ struct Ctx<'a> {
     adj: Vec<Vec<usize>>,
     budget: u64,
     expanded: u64,
+    deadline: Deadline,
+    timed_out: bool,
     best: Layout,
     lb: usize,
     /// Reused interval scratch — `first_fit_offset` runs at every node of
@@ -89,6 +92,20 @@ pub fn place_with_lb(
     warm: Option<Layout>,
     lb_hint: usize,
 ) -> (Layout, bool) {
+    place_budgeted(sizes, conflicts, Budget::nodes(node_budget), warm, lb_hint)
+}
+
+/// [`place_with_lb`] under a full anytime [`Budget`] (node count and/or
+/// wall clock). Either limit running out returns the best incumbent with
+/// `completed = false` — the anytime contract: a starved solver degrades,
+/// it never fails.
+pub fn place_budgeted(
+    sizes: &[usize],
+    conflicts: &[(usize, usize)],
+    budget: Budget,
+    warm: Option<Layout>,
+    lb_hint: usize,
+) -> (Layout, bool) {
     let n = sizes.len();
     if n == 0 {
         return (Layout { offsets: vec![], total: 0, strategy: "bnb", optimal: true }, true);
@@ -115,8 +132,17 @@ pub fn place_with_lb(
         return (warm, true);
     }
 
-    let mut ctx =
-        Ctx { sizes, adj, budget: node_budget, expanded: 0, best: warm, lb, ivs: Vec::new() };
+    let mut ctx = Ctx {
+        sizes,
+        adj,
+        budget: budget.max_nodes,
+        expanded: 0,
+        deadline: budget.start(),
+        timed_out: false,
+        best: warm,
+        lb,
+        ivs: Vec::new(),
+    };
     let mut offsets = vec![usize::MAX; n];
     // Seed order preference: big + highly-conflicting buffers first tends
     // to find the optimum early, tightening the incumbent.
@@ -165,7 +191,12 @@ fn dfs(
         return true;
     }
     ctx.expanded += 1;
-    if ctx.expanded > ctx.budget {
+    // Wall-clock check amortized over 256 expansions (and on the very
+    // first, so a zero budget trips immediately); sticky once hit.
+    if ctx.expanded & 0xFF == 1 && ctx.deadline.expired() {
+        ctx.timed_out = true;
+    }
+    if ctx.expanded > ctx.budget || ctx.timed_out {
         return false;
     }
     // Admissible look-ahead: placements only add occupied intervals, so a
@@ -219,7 +250,7 @@ fn dfs(
             at[c] = old;
         }
         offsets[b] = usize::MAX;
-        if ctx.expanded > ctx.budget {
+        if ctx.expanded > ctx.budget || ctx.timed_out {
             return false;
         }
         if cur_total.max(ctx.lb) >= ctx.best.total {
@@ -252,6 +283,18 @@ mod tests {
         assert!(complete);
         assert!(l.is_valid(&sizes, &conflicts));
         assert_eq!(l.total, 140); // 0:[0,100), 1:[100,140), 2:[0,60)
+    }
+
+    #[test]
+    fn zero_wall_clock_returns_valid_incumbent() {
+        // An already-expired deadline must still yield a *valid* layout
+        // (the warm start), flagged incomplete.
+        let sizes = vec![100, 40, 60, 80, 20];
+        let conflicts = vec![(0, 1), (1, 2), (2, 3), (3, 4), (0, 4)];
+        let budget = Budget { max_nodes: u64::MAX, wall_ms: Some(0) };
+        let (l, complete) = place_budgeted(&sizes, &conflicts, budget, None, 0);
+        assert!(!complete, "expired deadline cannot prove optimality");
+        assert!(l.is_valid(&sizes, &conflicts));
     }
 
     #[test]

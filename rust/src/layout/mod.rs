@@ -73,11 +73,15 @@ impl Layout {
 pub struct LayoutOptions {
     /// Node budget for the exact branch-and-bound placer.
     pub bnb_node_budget: u64,
+    /// Wall-clock limit for the exact placer in milliseconds (`None` =
+    /// node budget only). On expiry the best incumbent is kept and the
+    /// SA fallback gets its shot, exactly as on node-budget exhaustion.
+    pub wall_ms: Option<u64>,
 }
 
 impl Default for LayoutOptions {
     fn default() -> Self {
-        LayoutOptions { bnb_node_budget: 2_000_000 }
+        LayoutOptions { bnb_node_budget: 2_000_000, wall_ms: None }
     }
 }
 
@@ -117,6 +121,7 @@ pub fn plan_memoized(
         conflicts.hash(&mut h);
         clique_lb.hash(&mut h);
         opts.bnb_node_budget.hash(&mut h);
+        opts.wall_ms.hash(&mut h);
         h.finish()
     };
     if let Some(l) = memo.get(&key) {
@@ -135,8 +140,9 @@ fn plan_instance(
     opts: LayoutOptions,
 ) -> Layout {
     let warm = heuristic::first_fit_by_size(sizes, conflicts);
+    let budget = crate::budget::Budget { max_nodes: opts.bnb_node_budget, wall_ms: opts.wall_ms };
     let (mut layout, complete) =
-        bnb::place_with_lb(sizes, conflicts, opts.bnb_node_budget, Some(warm), clique_lb);
+        bnb::place_budgeted(sizes, conflicts, budget, Some(warm), clique_lb);
     if !complete {
         for seed in [7, 11, 23] {
             let sa = heuristic::hill_climb_sa(sizes, conflicts, 2000, seed);

@@ -26,13 +26,26 @@
 //!   CIF, RAD) plus a SwiftNet-like scheduling stress graph.
 //! * [`coordinator`] — the end-to-end exploration loop of Fig. 3.
 //! * [`runtime`] — PJRT loading/execution of the JAX/Pallas AOT
-//!   artifacts (`artifacts/*.hlo.txt`) from the request path.
+//!   artifacts (`artifacts/*.hlo.txt`) from the request path, with a
+//!   [`runtime::FailoverEngine`] degradation chain onto the CPU int8
+//!   executor.
+//! * [`error`] / [`budget`] — the fault-tolerance layer: typed
+//!   [`error::FdtError`] diagnostics and anytime [`budget::Budget`]
+//!   limits for the exact solvers.
+//! * [`testing`] — deterministic fault injection (`testing::chaos`) and
+//!   the random-graph generators backing the no-panic fuzz suite.
 //! * [`report`] — regenerates every table and figure of the paper.
+
+// Library code must surface failures as typed `Result`s, not panics —
+// tests and benches may still unwrap freely.
+#![cfg_attr(not(test), warn(clippy::unwrap_used, clippy::expect_used))]
 
 pub mod analysis;
 pub mod bench;
+pub mod budget;
 pub mod codegen;
 pub mod coordinator;
+pub mod error;
 pub mod exec;
 pub mod graph;
 pub mod layout;
@@ -41,8 +54,11 @@ pub mod quant;
 pub mod report;
 pub mod runtime;
 pub mod sched;
+pub mod testing;
 pub mod tiling;
 pub mod transform;
 pub mod util;
 
+pub use budget::Budget;
+pub use error::{FdtError, FdtResult};
 pub use graph::{ActKind, DType, Graph, Op, OpId, OpKind, Padding, Tensor, TensorId, TensorKind};

@@ -171,6 +171,9 @@ fn optimize(args: &[String]) {
             it.critical_buffer, it.config, it.ram_before, it.ram_after
         );
     }
+    for d in &r.degradations {
+        println!("  degraded: {d}");
+    }
     if let Some(pos) = args.iter().position(|a| a == "--dot") {
         if let Some(path) = args.get(pos + 1) {
             std::fs::write(path, r.graph.to_dot()).expect("writing dot");

@@ -19,6 +19,7 @@
 
 pub mod int8;
 
+use crate::error::{FdtError, FdtResult};
 use crate::exec::{self, Value};
 use crate::graph::{DType, Graph, TensorKind};
 use std::collections::HashMap;
@@ -70,10 +71,17 @@ pub struct Calibration {
 
 /// Observe per-tensor ranges over `samples` random inputs and derive
 /// affine parameters (min/max calibration, the TFLite default).
-pub fn calibrate(g: &Graph, samples: usize, seed: u64) -> Result<Calibration, String> {
+///
+/// `samples == 0` is a caller bug and returns
+/// [`FdtError::EmptyCalibration`] — it used to be silently promoted to
+/// one sample, hiding empty calibration sets upstream.
+pub fn calibrate(g: &Graph, samples: usize, seed: u64) -> FdtResult<Calibration> {
+    if samples == 0 {
+        return Err(FdtError::EmptyCalibration);
+    }
     let mut lo = vec![f32::INFINITY; g.tensors.len()];
     let mut hi = vec![f32::NEG_INFINITY; g.tensors.len()];
-    for s in 0..samples.max(1) {
+    for s in 0..samples {
         let inputs = exec::random_inputs(g, seed + s as u64);
         let vals = exec::run_all(g, &inputs)?;
         for (t, v) in vals.iter().enumerate() {
@@ -217,6 +225,14 @@ mod tests {
     use super::*;
     use crate::coordinator::{optimize, FlowOptions};
     use crate::models;
+
+    #[test]
+    fn zero_sample_calibration_is_a_typed_error() {
+        // Regression: `calibrate(g, 0, _)` used to silently calibrate on
+        // one sample; it must now refuse with the dedicated variant.
+        let g = models::txt();
+        assert_eq!(calibrate(&g, 0, 7).unwrap_err(), crate::error::FdtError::EmptyCalibration);
+    }
 
     #[test]
     fn params_roundtrip() {

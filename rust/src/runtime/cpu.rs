@@ -10,6 +10,7 @@
 //! backend to cross-check artifacts against.
 
 use super::Buffer;
+use crate::error::{FdtError, FdtResult};
 use crate::exec::int8::Int8Executable;
 use crate::exec::Value;
 use crate::graph::Graph;
@@ -29,7 +30,8 @@ pub struct CpuEngine {
 impl CpuEngine {
     /// Calibrate `g` on `samples` random inputs, fold to int8 and plan
     /// the arena executor (default flow fidelity).
-    pub fn prepare(g: &Graph, samples: usize, seed: u64) -> Result<CpuEngine, String> {
+    pub fn prepare(g: &Graph, samples: usize, seed: u64) -> FdtResult<CpuEngine> {
+        g.validate()?;
         let cal = quant::calibrate(g, samples, seed)?;
         let qm = quant::int8::compile(g, &cal)?;
         let exe = Int8Executable::plan(g, &qm)?;
@@ -53,17 +55,26 @@ impl CpuEngine {
     /// Execute one request. Buffers are positional, in the model's input
     /// declaration order (mirroring the PJRT engine signature); outputs
     /// are dequantized to f32.
-    pub fn run_f32(&self, inputs: &[Buffer]) -> Result<Vec<Vec<f32>>, String> {
+    pub fn run_f32(&self, inputs: &[Buffer]) -> FdtResult<Vec<Vec<f32>>> {
         if inputs.len() != self.inputs.len() {
-            return Err(format!(
-                "{}: expected {} inputs, got {}",
-                self.name,
-                self.inputs.len(),
-                inputs.len()
-            ));
+            return Err(FdtError::Other {
+                reason: format!(
+                    "{}: expected {} inputs, got {}",
+                    self.name,
+                    self.inputs.len(),
+                    inputs.len()
+                ),
+            });
         }
         let mut by_name = HashMap::new();
         for ((name, shape), buf) in self.inputs.iter().zip(inputs) {
+            if buf.shape() != shape.as_slice() {
+                return Err(FdtError::InputShapeMismatch {
+                    name: name.clone(),
+                    expected: shape.clone(),
+                    got: buf.shape().to_vec(),
+                });
+            }
             let data: Vec<f32> = match buf {
                 Buffer::F32 { data, .. } => data.clone(),
                 Buffer::I32 { data, .. } => data.iter().map(|&x| x as f32).collect(),

@@ -1,0 +1,184 @@
+//! Graceful engine degradation: a failover chain over inference
+//! backends.
+//!
+//! Serving should survive a preferred engine disappearing (PJRT client
+//! unavailable, artifact mismatch, a backend panicking on one request):
+//! [`FailoverEngine`] holds an ordered chain of [`InferenceBackend`]s,
+//! health-checks them at construction, and on a request failure fails
+//! over to the next backend in the chain — recording every degradation
+//! in an inspectable log. Only when *every* backend has failed does a
+//! request surface [`FdtError::AllEnginesFailed`].
+//!
+//! The chain for a tier-1 (no `pjrt` feature) build is just the CPU
+//! int8 backend, with the PJRT unavailability recorded in the log; the
+//! fault-injection harness ([`crate::testing::chaos`]) prepends flaky
+//! backends to exercise the failover path deterministically.
+
+use super::Buffer;
+use crate::error::{FdtError, FdtResult};
+use crate::graph::Graph;
+use crate::runtime::cpu::CpuEngine;
+
+/// A uniform, object-safe surface over anything that can answer
+/// positional-buffer `run_f32` requests.
+pub trait InferenceBackend {
+    fn name(&self) -> &str;
+
+    /// Cheap liveness probe run at chain construction. The default is
+    /// optimistic; backends with real setup cost override it.
+    fn health_check(&self) -> FdtResult<()> {
+        Ok(())
+    }
+
+    fn run_f32(&self, inputs: &[Buffer]) -> FdtResult<Vec<Vec<f32>>>;
+}
+
+impl InferenceBackend for CpuEngine {
+    fn name(&self) -> &str {
+        CpuEngine::name(self)
+    }
+
+    fn health_check(&self) -> FdtResult<()> {
+        // A planned arena is the engine's whole state; an empty
+        // executable would have failed `prepare` already.
+        Ok(())
+    }
+
+    fn run_f32(&self, inputs: &[Buffer]) -> FdtResult<Vec<Vec<f32>>> {
+        CpuEngine::run_f32(self, inputs)
+    }
+}
+
+/// An ordered chain of backends with automatic fallback-on-error.
+pub struct FailoverEngine {
+    backends: Vec<Box<dyn InferenceBackend>>,
+    /// Index of the backend currently serving (sticky: once a backend
+    /// fails it is never retried for the lifetime of the chain).
+    active: usize,
+    log: Vec<String>,
+}
+
+impl FailoverEngine {
+    /// Build a chain from an explicit backend list. Backends failing
+    /// their health check are recorded and skipped up front; an empty or
+    /// fully-unhealthy chain is an error.
+    pub fn new(backends: Vec<Box<dyn InferenceBackend>>) -> FdtResult<FailoverEngine> {
+        if backends.is_empty() {
+            return Err(FdtError::EngineUnavailable {
+                engine: "failover".to_string(),
+                reason: "empty backend chain".to_string(),
+            });
+        }
+        let mut chain = FailoverEngine { backends, active: 0, log: Vec::new() };
+        while let Some(b) = chain.backends.get(chain.active) {
+            match b.health_check() {
+                Ok(()) => break,
+                Err(e) => {
+                    chain.log.push(format!(
+                        "backend `{}` failed health check: {e}; degrading",
+                        b.name()
+                    ));
+                    chain.active += 1;
+                }
+            }
+        }
+        if chain.active == chain.backends.len() {
+            return Err(FdtError::AllEnginesFailed {
+                tried: chain.backends.iter().map(|b| b.name().to_string()).collect(),
+            });
+        }
+        Ok(chain)
+    }
+
+    /// The default serving chain for `g`: the PJRT runtime when it can be
+    /// reached, then the always-available CPU int8 backend. In tier-1
+    /// builds (no `pjrt` feature) the PJRT tier reports unavailability,
+    /// which is recorded in the log rather than treated as fatal.
+    pub fn for_graph(g: &Graph, samples: usize, seed: u64) -> FdtResult<FailoverEngine> {
+        let mut log = Vec::new();
+        #[cfg(not(feature = "pjrt"))]
+        if let Err(e) = super::Runtime::cpu() {
+            log.push(format!("pjrt engine unavailable: {e}; degrading to CPU int8 backend"));
+        }
+        #[cfg(feature = "pjrt")]
+        log.push(
+            "pjrt engine needs AOT artifacts; pass an explicit chain to FailoverEngine::new"
+                .to_string(),
+        );
+        let cpu = CpuEngine::prepare(g, samples, seed).map_err(|e| FdtError::EngineUnavailable {
+            engine: "cpu-int8".to_string(),
+            reason: e.to_string(),
+        })?;
+        let mut chain = FailoverEngine::new(vec![Box::new(cpu)])?;
+        log.append(&mut chain.log);
+        chain.log = log;
+        Ok(chain)
+    }
+
+    /// Name of the backend currently serving requests.
+    pub fn active_backend(&self) -> &str {
+        self.backends[self.active].name()
+    }
+
+    /// Every degradation recorded so far (health-check failures at
+    /// construction, per-request failovers).
+    pub fn failover_log(&self) -> &[String] {
+        &self.log
+    }
+
+    /// Serve one request: try the active backend, failing over down the
+    /// chain on error. Errs only when every remaining backend fails.
+    pub fn run_f32(&mut self, inputs: &[Buffer]) -> FdtResult<Vec<Vec<f32>>> {
+        while self.active < self.backends.len() {
+            let b = &self.backends[self.active];
+            match b.run_f32(inputs) {
+                Ok(out) => return Ok(out),
+                Err(e) => {
+                    self.log.push(format!("backend `{}` failed: {e}; failing over", b.name()));
+                    self.active += 1;
+                }
+            }
+        }
+        Err(FdtError::AllEnginesFailed {
+            tried: self.backends.iter().map(|b| b.name().to_string()).collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn default_chain_serves_on_cpu_and_logs_pjrt_degradation() {
+        let g = models::kws();
+        let mut engine = FailoverEngine::for_graph(&g, 1, 3).unwrap();
+        assert_eq!(engine.active_backend(), g.name);
+        let inputs: Vec<Buffer> = g
+            .inputs
+            .iter()
+            .map(|&t| {
+                let tensor = g.tensor(t);
+                Buffer::new(tensor.shape.clone(), vec![0.25; tensor.numel()])
+            })
+            .collect();
+        let out = engine.run_f32(&inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        #[cfg(not(feature = "pjrt"))]
+        assert!(
+            engine.failover_log().iter().any(|l| l.contains("pjrt engine unavailable")),
+            "log: {:?}",
+            engine.failover_log()
+        );
+    }
+
+    #[test]
+    fn empty_chain_is_rejected() {
+        match FailoverEngine::new(vec![]) {
+            Err(FdtError::EngineUnavailable { .. }) => {}
+            Err(other) => panic!("expected EngineUnavailable, got {other:?}"),
+            Ok(_) => panic!("expected EngineUnavailable, got a working chain"),
+        }
+    }
+}

@@ -24,6 +24,8 @@ pub use stub::{max_artifact_diff, Buffer, Engine, Runtime, RuntimeUnavailable};
 
 pub mod cpu;
 pub use cpu::CpuEngine;
+pub mod failover;
+pub use failover::{FailoverEngine, InferenceBackend};
 
 /// Locate the artifacts directory: `FDT_ARTIFACTS` env override, else
 /// the nearest `artifacts/` walking up from the current directory (cargo

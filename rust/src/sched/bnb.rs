@@ -18,6 +18,7 @@
 
 use super::Schedule;
 use crate::analysis::MemModel;
+use crate::budget::{Budget, Deadline};
 use crate::graph::fusion::GroupId;
 use crate::util::FnvBuildHasher;
 use std::collections::HashMap;
@@ -61,6 +62,10 @@ struct Ctx<'m> {
     group_floor: Vec<usize>,
     budget: u64,
     expanded: u64,
+    /// Started wall-clock limit, polled every 256 expansions.
+    deadline: Deadline,
+    /// Sticky wall-clock-expired flag: once set, the search unwinds.
+    timed_out: bool,
     best_order: Vec<GroupId>,
     best_peak: usize,
     /// Abandon any prefix whose peak reaches this bound: schedules at or
@@ -82,7 +87,7 @@ impl Ctx<'_> {
 /// means the node budget ran out and the result is the best found (still
 /// a valid schedule thanks to the warm start).
 pub fn schedule(m: &MemModel, node_budget: u64, warm: Option<Schedule>) -> (Schedule, bool) {
-    schedule_bounded(m, node_budget, warm, usize::MAX)
+    schedule_budgeted(m, Budget::nodes(node_budget), warm, usize::MAX)
 }
 
 /// [`schedule`] with an incumbent cutoff: subtrees whose peak already
@@ -94,6 +99,20 @@ pub fn schedule(m: &MemModel, node_budget: u64, warm: Option<Schedule>) -> (Sche
 pub fn schedule_bounded(
     m: &MemModel,
     node_budget: u64,
+    warm: Option<Schedule>,
+    cutoff: usize,
+) -> (Schedule, bool) {
+    schedule_budgeted(m, Budget::nodes(node_budget), warm, cutoff)
+}
+
+/// The anytime core: [`schedule_bounded`] under a full [`Budget`] (node
+/// expansions *and* wall-clock). When either limit trips, the best
+/// incumbent found so far is returned with `completed = false` and
+/// [`Schedule::degraded`] set — still a valid order thanks to the warm
+/// start.
+pub fn schedule_budgeted(
+    m: &MemModel,
+    budget: Budget,
     warm: Option<Schedule>,
     cutoff: usize,
 ) -> (Schedule, bool) {
@@ -122,8 +141,10 @@ pub fn schedule_bounded(
         m,
         preds,
         group_floor,
-        budget: node_budget,
+        budget: budget.max_nodes,
         expanded: 0,
+        deadline: budget.start(),
+        timed_out: false,
         best_order,
         best_peak,
         cutoff,
@@ -149,7 +170,13 @@ pub fn schedule_bounded(
     // actually lies below it (pruned subtrees were all >= cutoff).
     let optimal = completed && (cutoff == usize::MAX || peak < cutoff);
     (
-        Schedule { order: ctx.best_order, peak, strategy: "bnb", optimal },
+        Schedule {
+            order: ctx.best_order,
+            peak,
+            strategy: "bnb",
+            optimal,
+            degraded: !completed,
+        },
         completed,
     )
 }
@@ -199,6 +226,14 @@ fn dfs(
     }
     ctx.expanded += 1;
     if ctx.expanded > ctx.budget {
+        return false;
+    }
+    // Wall-clock check amortized over 256 expansions (and on the very
+    // first, so a zero budget trips immediately); sticky once hit.
+    if ctx.expanded & 0xFF == 1 && ctx.deadline.expired() {
+        ctx.timed_out = true;
+    }
+    if ctx.timed_out {
         return false;
     }
 
@@ -291,7 +326,7 @@ fn dfs(
         for &b in &added {
             live[b] = false;
         }
-        if ctx.expanded > ctx.budget {
+        if ctx.expanded > ctx.budget || ctx.timed_out {
             return false;
         }
     }
@@ -368,6 +403,30 @@ mod tests {
         let m = crate::analysis::MemModel::new(&g, &grouping);
         let (s, complete) = schedule(&m, 1, None); // starved budget
         assert!(!complete);
+        assert!(s.degraded, "starved search must be flagged degraded");
+        assert!(crate::sched::is_valid_order(&m, &s.order));
+    }
+
+    #[test]
+    fn zero_wall_clock_returns_valid_degraded_schedule() {
+        let mut b = GraphBuilder::new("wc");
+        let x = b.input("x", vec![4, 4, 2], DType::I8);
+        let mut outs = Vec::new();
+        for _ in 0..4 {
+            let y = b.conv2d(x, 4, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+            outs.push(b.conv2d(y, 2, (1, 1), (1, 1), Padding::Valid, ActKind::Relu));
+        }
+        let mut acc = outs[0];
+        for &o in &outs[1..] {
+            acc = b.op(OpKind::Add, vec![acc, o]);
+        }
+        let g = b.finish(vec![acc]);
+        let grouping = fuse(&g);
+        let m = crate::analysis::MemModel::new(&g, &grouping);
+        let budget = Budget { max_nodes: u64::MAX, wall_ms: Some(0) };
+        let (s, complete) = schedule_budgeted(&m, budget, None, usize::MAX);
+        assert!(!complete, "expired deadline cannot prove optimality");
+        assert!(s.degraded);
         assert!(crate::sched::is_valid_order(&m, &s.order));
     }
 }

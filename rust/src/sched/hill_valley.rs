@@ -20,7 +20,7 @@ pub fn schedule(m: &MemModel) -> Schedule {
     if let Some(tree) = decompose_sp(m.n(), &preds) {
         let order = sp_hill_valley(m, &tree);
         let peak = m.peak(&order);
-        return Schedule { order, peak, strategy: "hill_valley", optimal: false };
+        return Schedule { order, peak, strategy: "hill_valley", optimal: false, degraded: false };
     }
     greedy(m)
 }
@@ -195,7 +195,7 @@ pub fn greedy(m: &MemModel) -> Schedule {
             unscheduled_preds[s] -= 1;
         }
     }
-    Schedule { order, peak, strategy: "greedy", optimal: false }
+    Schedule { order, peak, strategy: "greedy", optimal: false, degraded: false }
 }
 
 #[cfg(test)]

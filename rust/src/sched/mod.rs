@@ -14,6 +14,7 @@ pub mod hill_valley;
 pub mod sp;
 
 use crate::analysis::{decompose_sp, MemModel};
+use crate::budget::Budget;
 use crate::graph::fusion::GroupId;
 
 /// A complete schedule with its evaluated peak memory.
@@ -25,6 +26,11 @@ pub struct Schedule {
     pub strategy: &'static str,
     /// True when produced by an exact method that ran to completion.
     pub optimal: bool,
+    /// True when an exact search was attempted but its node or wall-clock
+    /// budget ran out — the order is valid (best incumbent found) but may
+    /// be suboptimal. The anytime contract: a budget-starved solver
+    /// degrades, it never fails.
+    pub degraded: bool,
 }
 
 /// Tuning knobs for [`schedule`].
@@ -32,13 +38,17 @@ pub struct Schedule {
 pub struct SchedOptions {
     /// Branch-and-bound node expansion budget before falling back.
     pub bnb_node_budget: u64,
+    /// Wall-clock limit for the branch-and-bound tier in milliseconds
+    /// (`None` = node budget only). On expiry the best incumbent is
+    /// returned with [`Schedule::degraded`] set.
+    pub wall_ms: Option<u64>,
     /// Prefer the SP algorithm when the graph is series-parallel.
     pub use_sp: bool,
 }
 
 impl Default for SchedOptions {
     fn default() -> Self {
-        SchedOptions { bnb_node_budget: 1_000_000, use_sp: true }
+        SchedOptions { bnb_node_budget: 1_000_000, wall_ms: None, use_sp: true }
     }
 }
 
@@ -116,7 +126,13 @@ pub fn peak_lower_bound(m: &MemModel) -> usize {
 pub fn schedule_with_cutoff(m: &MemModel, opts: SchedOptions, cutoff: usize) -> Schedule {
     let n = m.n();
     if n == 0 {
-        return Schedule { order: vec![], peak: m.io_bytes, strategy: "empty", optimal: true };
+        return Schedule {
+            order: vec![],
+            peak: m.io_bytes,
+            strategy: "empty",
+            optimal: true,
+            degraded: false,
+        };
     }
     let preds = m.grouping.preds(m.g);
 
@@ -124,7 +140,7 @@ pub fn schedule_with_cutoff(m: &MemModel, opts: SchedOptions, cutoff: usize) -> 
     if preds.iter().enumerate().all(|(g, ps)| ps.len() <= 1 && (g == 0 || ps == &vec![g - 1])) {
         let order: Vec<GroupId> = (0..n).collect();
         let peak = m.peak(&order);
-        return Schedule { order, peak, strategy: "chain", optimal: true };
+        return Schedule { order, peak, strategy: "chain", optimal: true, degraded: false };
     }
 
     // Incumbent floor: no order can win — skip SP and B&B entirely.
@@ -149,12 +165,14 @@ pub fn schedule_with_cutoff(m: &MemModel, opts: SchedOptions, cutoff: usize) -> 
         Some(s) if s.peak < hv.peak => s.clone(),
         _ => hv.clone(),
     };
-    let budget = if sp_sched.is_some() {
+    let node_budget = if sp_sched.is_some() {
         opts.bnb_node_budget.min(20_000)
     } else {
         opts.bnb_node_budget
     };
-    let (bnb_sched, complete) = bnb::schedule_bounded(m, budget, Some(warm.clone()), cutoff);
+    let budget = Budget { max_nodes: node_budget, wall_ms: opts.wall_ms };
+    let (bnb_sched, complete) =
+        bnb::schedule_budgeted(m, budget, Some(warm.clone()), cutoff);
 
     // Pick the best of all tiers (they are all valid orders).
     let mut best = warm;
@@ -168,6 +186,9 @@ pub fn schedule_with_cutoff(m: &MemModel, opts: SchedOptions, cutoff: usize) -> 
             best = bnb_sched;
         }
     }
+    // An exhausted exact search degrades the whole result: whichever tier
+    // won, optimality is unproved and the caller should know.
+    best.degraded = best.degraded || !complete;
     debug_assert!(is_valid_order(m, &best.order));
     best
 }

@@ -33,7 +33,7 @@ pub fn schedule(m: &MemModel, tree: &SpTree) -> Schedule {
     let order: Vec<GroupId> = segs.into_iter().flat_map(|s| s.groups).collect();
     debug_assert_eq!(order.len(), m.n());
     let peak = m.peak(&order);
-    Schedule { order, peak, strategy: "sp", optimal: false }
+    Schedule { order, peak, strategy: "sp", optimal: false, degraded: false }
 }
 
 fn schedule_tree(m: &MemModel, tree: &SpTree) -> Vec<Segment> {

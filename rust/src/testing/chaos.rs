@@ -1,0 +1,173 @@
+//! Deterministic fault injection ("chaos harness").
+//!
+//! Every fault the robustness layer claims to survive can be injected
+//! here on purpose, deterministically, with no randomness beyond the
+//! caller's seed:
+//!
+//! * **engine init failure** — [`UnhealthyBackend`] fails its health
+//!   check, so a [`FailoverEngine`] chain must skip it at construction;
+//! * **engine exec failure** — [`FailingBackend`] passes the health
+//!   check but fails every request (optionally only after `fail_after`
+//!   successful ones), so the chain must fail over mid-serving;
+//! * **budget exhaustion** — [`starved_flow_options`] zeroes the node
+//!   *and* wall-clock budgets of both exact solvers, so the flow must
+//!   degrade to heuristic plans rather than fail;
+//! * **allocation-cap breach** — drive
+//!   [`Int8Executable::run_with_cap`](crate::exec::int8::Int8Executable::run_with_cap)
+//!   with [`arena_cap_below`] to guarantee an
+//!   [`FdtError::ArenaOverflow`](crate::error::FdtError).
+//!
+//! The fault-tolerance integration suite composes these with the fuzz
+//! generators in [`super`] to assert that no panic ever escapes the
+//! public API.
+
+use crate::coordinator::FlowOptions;
+use crate::error::{FdtError, FdtResult};
+use crate::runtime::failover::InferenceBackend;
+use crate::runtime::Buffer;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A backend whose health check always fails — injected engine *init*
+/// failure. A failover chain must skip it without serving errors.
+pub struct UnhealthyBackend {
+    name: String,
+}
+
+impl UnhealthyBackend {
+    pub fn new(name: impl Into<String>) -> Self {
+        UnhealthyBackend { name: name.into() }
+    }
+}
+
+impl InferenceBackend for UnhealthyBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn health_check(&self) -> FdtResult<()> {
+        Err(FdtError::Injected { site: format!("{}: health check", self.name) })
+    }
+
+    fn run_f32(&self, _inputs: &[Buffer]) -> FdtResult<Vec<Vec<f32>>> {
+        Err(FdtError::Injected { site: format!("{}: run after failed health check", self.name) })
+    }
+}
+
+/// A backend that passes its health check but fails requests — injected
+/// engine *exec* failure. With `fail_after = 0` every request fails;
+/// otherwise the first `fail_after` requests succeed (returning empty
+/// outputs) before the backend starts failing, which exercises sticky
+/// mid-serving failover.
+pub struct FailingBackend {
+    name: String,
+    fail_after: usize,
+    served: AtomicUsize,
+}
+
+impl FailingBackend {
+    pub fn new(name: impl Into<String>, fail_after: usize) -> Self {
+        FailingBackend { name: name.into(), fail_after, served: AtomicUsize::new(0) }
+    }
+
+    /// Requests answered (successfully or not) so far.
+    pub fn requests(&self) -> usize {
+        self.served.load(Ordering::SeqCst)
+    }
+}
+
+impl InferenceBackend for FailingBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run_f32(&self, _inputs: &[Buffer]) -> FdtResult<Vec<Vec<f32>>> {
+        let n = self.served.fetch_add(1, Ordering::SeqCst);
+        if n < self.fail_after {
+            return Ok(vec![]);
+        }
+        Err(FdtError::Injected { site: format!("{}: exec (request {n})", self.name) })
+    }
+}
+
+/// Flow options with both exact solvers starved of node *and* wall-clock
+/// budget (schedule and layout B&B each expire immediately). The flow
+/// must still return a valid — degraded — plan built from the heuristic
+/// tiers.
+pub fn starved_flow_options() -> FlowOptions {
+    let mut opts = FlowOptions::default();
+    opts.sched.bnb_node_budget = 0;
+    opts.sched.wall_ms = Some(0);
+    opts.screening_sched.bnb_node_budget = 0;
+    opts.screening_sched.wall_ms = Some(0);
+    opts.layout.bnb_node_budget = 0;
+    opts.layout.wall_ms = Some(0);
+    opts
+}
+
+/// An arena cap guaranteed to be breached by `exe`: one byte below its
+/// planned arena (saturating at 0 so even a 1-byte arena breaches).
+pub fn arena_cap_below(arena_bytes: usize) -> usize {
+    arena_bytes.saturating_sub(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::runtime::failover::FailoverEngine;
+    use crate::runtime::CpuEngine;
+
+    fn kws_inputs(g: &crate::graph::Graph) -> Vec<Buffer> {
+        g.inputs
+            .iter()
+            .map(|&t| {
+                let tensor = g.tensor(t);
+                Buffer::new(tensor.shape.clone(), vec![0.25; tensor.numel()])
+            })
+            .collect()
+    }
+
+    #[test]
+    fn unhealthy_backend_is_skipped_at_construction() {
+        let g = models::kws();
+        let cpu = CpuEngine::prepare(&g, 1, 3).unwrap();
+        let chain = FailoverEngine::new(vec![
+            Box::new(UnhealthyBackend::new("chaos-init")),
+            Box::new(cpu),
+        ])
+        .unwrap();
+        assert_eq!(chain.active_backend(), g.name);
+        assert!(chain.failover_log().iter().any(|l| l.contains("health check")));
+    }
+
+    #[test]
+    fn failing_backend_triggers_midserving_failover() {
+        let g = models::kws();
+        let cpu = CpuEngine::prepare(&g, 1, 3).unwrap();
+        let mut chain = FailoverEngine::new(vec![
+            Box::new(FailingBackend::new("chaos-exec", 0)),
+            Box::new(cpu),
+        ])
+        .unwrap();
+        assert_eq!(chain.active_backend(), "chaos-exec");
+        let out = chain.run_f32(&kws_inputs(&g)).unwrap();
+        assert_eq!(out.len(), 1, "request must be served by the CPU fallback");
+        assert_eq!(chain.active_backend(), g.name);
+        assert!(chain.failover_log().iter().any(|l| l.contains("failing over")));
+    }
+
+    #[test]
+    fn all_failing_chain_reports_every_engine() {
+        let mut chain = FailoverEngine::new(vec![
+            Box::new(FailingBackend::new("a", 0)) as Box<dyn InferenceBackend>,
+            Box::new(FailingBackend::new("b", 0)),
+        ])
+        .unwrap();
+        match chain.run_f32(&[]) {
+            Err(FdtError::AllEnginesFailed { tried }) => {
+                assert_eq!(tried, vec!["a".to_string(), "b".to_string()]);
+            }
+            other => panic!("expected AllEnginesFailed, got {other:?}"),
+        }
+    }
+}

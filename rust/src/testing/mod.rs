@@ -1,0 +1,162 @@
+//! Test support: deterministic random-graph generation and fault
+//! injection.
+//!
+//! Shipped as a library module (not `#[cfg(test)]`) so integration tests
+//! and downstream users can drive the same no-panic fuzz machinery the
+//! crate's own fault-tolerance suite uses:
+//!
+//! * [`random_graph`] — seeded valid CNN-ish DAGs (the generator behind
+//!   the property suite);
+//! * [`mutate_invalid`] — seeded *structural corruption* of a valid
+//!   graph (dangling refs, wrong shapes, cycles, zero-extent inputs),
+//!   for asserting that `Graph::validate` catches what the flow would
+//!   otherwise trip over;
+//! * [`chaos`] — deterministic fault injection for solver budgets,
+//!   engine failures and allocation caps.
+
+pub mod chaos;
+
+use crate::graph::{ActKind, DType, Graph, GraphBuilder, OpKind, Padding, Rng};
+
+/// Random small CNN-ish DAG: chains with occasional parallel branches
+/// merged by Add, pools, global-average-pool + dense tail. Always valid
+/// and interpretable; the same seed always yields the same graph.
+pub fn random_graph(seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new(format!("fuzz{seed}"));
+    let side = 8 + (rng.next_u64() % 3) as usize * 4; // 8/12/16
+    let c0 = 1 << (rng.next_u64() % 3); // 1/2/4
+    let mut x = b.input("x", vec![side, side, c0], DType::I8);
+    let depth = 2 + (rng.next_u64() % 5) as usize;
+    for _ in 0..depth {
+        match rng.next_u64() % 5 {
+            0 => {
+                let c = 4 << (rng.next_u64() % 3);
+                x = b.conv2d(x, c, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+            }
+            1 => {
+                let c = 4 << (rng.next_u64() % 3);
+                x = b.conv2d(x, c, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+            }
+            2 => {
+                x = b.dwconv(x, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+            }
+            3 => {
+                // Parallel branch -> Add (same shape 1x1 convs).
+                let shape = b.shape_of(x).to_vec();
+                let c = shape[2];
+                let l = b.conv2d(x, c, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+                let r = b.conv2d(x, c, (1, 1), (1, 1), Padding::Valid, ActKind::Relu6);
+                x = b.op(OpKind::Add, vec![l, r]);
+            }
+            _ => {
+                let shape = b.shape_of(x).to_vec();
+                if shape[0] >= 4 && shape[1] >= 4 {
+                    x = b.op(
+                        OpKind::MaxPool2d {
+                            ksize: (2, 2),
+                            stride: (2, 2),
+                            padding: Padding::Valid,
+                        },
+                        vec![x],
+                    );
+                }
+            }
+        }
+    }
+    x = b.op(OpKind::GlobalAvgPool, vec![x]);
+    x = b.dense_act(x, 4, ActKind::Identity);
+    b.finish(vec![x])
+}
+
+/// The structural corruptions [`mutate_invalid`] can apply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Corruption {
+    /// Point an op input at a tensor id beyond the tensor table.
+    DanglingInput,
+    /// Overwrite a stored intermediate shape so inference disagrees.
+    WrongShape,
+    /// Rewire an early op to consume a late op's output (dependency
+    /// cycle).
+    Cycle,
+    /// Zero out one dimension of a model input.
+    ZeroExtentInput,
+}
+
+/// Deterministically corrupt a valid graph. Returns `None` when the
+/// graph is too small to host the requested corruption (e.g. a cycle
+/// needs two ops); otherwise the result is guaranteed to fail
+/// `Graph::validate`.
+pub fn mutate_invalid(g: &Graph, corruption: Corruption, seed: u64) -> Option<Graph> {
+    let mut rng = Rng::new(seed ^ 0x5eed);
+    let mut bad = g.clone();
+    match corruption {
+        Corruption::DanglingInput => {
+            let oid = (rng.next_u64() as usize) % bad.ops.len();
+            let slot = (rng.next_u64() as usize) % bad.ops[oid].inputs.len();
+            bad.ops[oid].inputs[slot] = bad.tensors.len() + 7;
+        }
+        Corruption::WrongShape => {
+            // Only intermediates carry inferred shapes worth corrupting.
+            let inter: Vec<usize> = bad
+                .ops
+                .iter()
+                .map(|o| o.output)
+                .filter(|&t| !bad.tensors[t].shape.is_empty())
+                .collect();
+            let t = inter[(rng.next_u64() as usize) % inter.len()];
+            let d = (rng.next_u64() as usize) % bad.tensors[t].shape.len();
+            bad.tensors[t].shape[d] += 3;
+        }
+        Corruption::Cycle => {
+            if bad.ops.len() < 2 {
+                return None;
+            }
+            let late = bad.ops.len() - 1;
+            let late_out = bad.ops[late].output;
+            let slot = (rng.next_u64() as usize) % bad.ops[0].inputs.len();
+            bad.ops[0].inputs[slot] = late_out;
+        }
+        Corruption::ZeroExtentInput => {
+            let &t = bad.inputs.first()?;
+            if bad.tensors[t].shape.is_empty() {
+                return None;
+            }
+            let d = (rng.next_u64() as usize) % bad.tensors[t].shape.len();
+            bad.tensors[t].shape[d] = 0;
+        }
+    }
+    Some(bad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_graphs_are_valid_and_deterministic() {
+        for seed in 0..16 {
+            let a = random_graph(seed);
+            assert!(a.validate().is_ok(), "seed {seed}: {:?}", a.validate());
+            let b = random_graph(seed);
+            assert_eq!(a.fingerprint(), b.fingerprint(), "seed {seed} not deterministic");
+        }
+    }
+
+    #[test]
+    fn every_corruption_fails_validation() {
+        for seed in 0..8 {
+            let g = random_graph(seed);
+            for c in [
+                Corruption::DanglingInput,
+                Corruption::WrongShape,
+                Corruption::Cycle,
+                Corruption::ZeroExtentInput,
+            ] {
+                if let Some(bad) = mutate_invalid(&g, c, seed) {
+                    assert!(bad.validate().is_err(), "seed {seed}: {c:?} passed validation");
+                }
+            }
+        }
+    }
+}

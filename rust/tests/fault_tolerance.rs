@@ -1,0 +1,212 @@
+//! Fault-tolerance suite: no panic escapes the public API.
+//!
+//! Composes the crate's fuzz generators (`fdt::testing`) with the chaos
+//! harness (`fdt::testing::chaos`) to drive valid, corrupted and
+//! degenerate graphs through validate -> flow -> execution under
+//! injected faults: starved solver budgets, failing engines, arena caps.
+
+use fdt::coordinator::{int8_executable, try_optimize, FlowOptions};
+use fdt::error::FdtError;
+use fdt::graph::{ActKind, DType, Graph, GraphBuilder, OpKind, Padding};
+use fdt::runtime::failover::{FailoverEngine, InferenceBackend};
+use fdt::runtime::{Buffer, CpuEngine};
+use fdt::testing::chaos::{arena_cap_below, starved_flow_options, FailingBackend};
+use fdt::testing::{mutate_invalid, random_graph, Corruption};
+
+const FUZZ_CASES: u64 = 256;
+
+/// Cheap flow options for fuzzing: single-threaded, small search budgets
+/// (degraded-but-valid plans are exactly what the fuzz asserts on).
+fn fuzz_options() -> FlowOptions {
+    let mut opts = FlowOptions::default();
+    opts.threads = 1;
+    opts.max_iterations = 2;
+    opts.max_candidates = 2;
+    opts.sched.bnb_node_budget = 5_000;
+    opts.screening_sched.bnb_node_budget = 1_000;
+    opts.layout.bnb_node_budget = 5_000;
+    opts
+}
+
+#[test]
+fn fuzz_valid_graphs_flow_without_panicking() {
+    let opts = fuzz_options();
+    for seed in 0..FUZZ_CASES {
+        let g = random_graph(seed);
+        g.validate().unwrap_or_else(|e| panic!("seed {seed}: generator made invalid graph: {e}"));
+        // Every seed passes pre-flight; every 4th runs the whole flow
+        // (the flow dominates wall-clock, validate does not).
+        if seed % 4 != 0 {
+            continue;
+        }
+        let r = try_optimize(&g, &opts)
+            .unwrap_or_else(|e| panic!("seed {seed}: flow failed on a valid graph: {e}"));
+        assert!(
+            r.final_eval.ram <= r.initial.ram,
+            "seed {seed}: flow made RAM worse ({} -> {})",
+            r.initial.ram,
+            r.final_eval.ram
+        );
+    }
+}
+
+#[test]
+fn fuzz_corrupted_graphs_are_rejected_not_panicked() {
+    let opts = fuzz_options();
+    let mut rejected = 0usize;
+    for seed in 0..FUZZ_CASES {
+        let g = random_graph(seed);
+        for c in [
+            Corruption::DanglingInput,
+            Corruption::WrongShape,
+            Corruption::Cycle,
+            Corruption::ZeroExtentInput,
+        ] {
+            let Some(bad) = mutate_invalid(&g, c, seed) else { continue };
+            assert!(bad.validate().is_err(), "seed {seed}: {c:?} slipped past validate");
+            // The full flow entry point must return the same rejection as
+            // a typed error — not unwind.
+            match try_optimize(&bad, &opts) {
+                Err(_) => rejected += 1,
+                Ok(_) => panic!("seed {seed}: {c:?} graph sailed through the flow"),
+            }
+        }
+    }
+    assert!(rejected as u64 >= FUZZ_CASES * 3, "too few corruptions exercised: {rejected}");
+}
+
+/// A graph with enough parallel structure that exact scheduling cannot
+/// be short-circuited by the trivial chain tier: four conv branches
+/// merged by Adds.
+fn branchy_graph() -> Graph {
+    let mut b = GraphBuilder::new("branchy");
+    let x = b.input("x", vec![4, 4, 2], DType::I8);
+    let mut outs = Vec::new();
+    for _ in 0..4 {
+        let y = b.conv2d(x, 4, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+        outs.push(b.conv2d(y, 2, (1, 1), (1, 1), Padding::Valid, ActKind::Relu));
+    }
+    let mut acc = outs[0];
+    for &o in &outs[1..] {
+        acc = b.op(OpKind::Add, vec![acc, o]);
+    }
+    b.finish(vec![acc])
+}
+
+#[test]
+fn starved_budgets_still_produce_valid_degraded_plans() {
+    // Budget exhaustion injected at every solver: the flow must degrade
+    // to heuristic plans, record it, and still hand over a working
+    // executable whose arena matches the reported RAM. The branchy graph
+    // guarantees the exact scheduler actually runs (and starves) instead
+    // of the trivial chain tier.
+    let g = branchy_graph();
+    let opts = starved_flow_options();
+    let r = try_optimize(&g, &opts).expect("starved flow must not fail");
+    assert!(r.final_eval.ram > 0);
+    assert!(
+        !r.degradations.is_empty(),
+        "zero-budget solvers must record degradation, got none"
+    );
+    let cal = fdt::quant::calibrate(&r.graph, 1, 7).unwrap();
+    let exe = int8_executable(&r.graph, &opts, &cal).expect("degraded plan must still compile");
+    assert_eq!(exe.arena_bytes(), r.final_eval.ram, "executable arena != reported RAM");
+    let inputs = fdt::exec::random_inputs(&r.graph, 5);
+    exe.run(&inputs).expect("degraded plan must still execute");
+}
+
+#[test]
+fn fault_injected_engine_falls_back_to_working_int8_executor() {
+    // Acceptance: when the preferred engine fails, the chain serves the
+    // request from the CPU int8 backend (an Int8Executable underneath).
+    let g = fdt::models::kws();
+    let cpu = CpuEngine::prepare(&g, 1, 3).unwrap();
+    let arena = cpu.arena_bytes();
+    assert!(arena > 0);
+    let mut chain = FailoverEngine::new(vec![
+        Box::new(FailingBackend::new("preferred", 0)) as Box<dyn InferenceBackend>,
+        Box::new(cpu),
+    ])
+    .unwrap();
+    let inputs: Vec<Buffer> = g
+        .inputs
+        .iter()
+        .map(|&t| {
+            let tensor = g.tensor(t);
+            Buffer::new(tensor.shape.clone(), vec![0.25; tensor.numel()])
+        })
+        .collect();
+    let out = chain.run_f32(&inputs).expect("fallback must serve");
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].len(), 12, "KWS head has 12 classes");
+    assert_eq!(chain.active_backend(), g.name);
+    assert!(!chain.failover_log().is_empty());
+}
+
+#[test]
+fn arena_cap_breach_is_a_typed_error() {
+    let g = fdt::models::txt();
+    let opts = FlowOptions::default();
+    let cal = fdt::quant::calibrate(&g, 1, 7).unwrap();
+    let exe = int8_executable(&g, &opts, &cal).unwrap();
+    let inputs = fdt::exec::random_inputs(&g, 3);
+    match exe.run_with_cap(&inputs, Some(arena_cap_below(exe.arena_bytes()))) {
+        Err(FdtError::ArenaOverflow { needed, cap }) => {
+            assert_eq!(needed, exe.arena_bytes());
+            assert!(cap < needed);
+        }
+        other => panic!("expected ArenaOverflow, got {:?}", other.map(|_| "outputs")),
+    }
+    // At exactly the planned size the cap is satisfied.
+    exe.run_with_cap(&inputs, Some(exe.arena_bytes())).expect("exact cap must pass");
+}
+
+#[test]
+fn empty_calibration_is_rejected_end_to_end() {
+    let g = fdt::models::txt();
+    assert_eq!(fdt::quant::calibrate(&g, 0, 7).unwrap_err(), FdtError::EmptyCalibration);
+}
+
+#[test]
+fn empty_graph_flows_to_a_trivial_result() {
+    let g = Graph::new("empty");
+    g.validate().expect("the empty graph is vacuously valid");
+    let r = try_optimize(&g, &FlowOptions::default()).expect("empty graph must flow");
+    assert_eq!(r.final_eval.ram, 0);
+    assert!(r.iterations.is_empty());
+}
+
+#[test]
+fn single_op_graph_flows_and_executes() {
+    let mut b = GraphBuilder::new("single");
+    let x = b.input("x", vec![16], DType::I8);
+    let y = b.dense_act(x, 4, ActKind::Identity);
+    let g = b.finish(vec![y]);
+    let r = try_optimize(&g, &FlowOptions::default()).expect("single-op graph must flow");
+    assert!(r.final_eval.ram > 0);
+    let inputs = fdt::exec::random_inputs(&r.graph, 1);
+    let out = fdt::exec::run(&r.graph, &inputs).expect("single-op graph must execute");
+    assert_eq!(out[0].data.len(), 4);
+}
+
+#[test]
+fn zero_sized_buffer_graph_survives_the_full_flow() {
+    // An empty slice (begins == ends) produces a legitimate zero-sized
+    // intermediate buffer; the flow, planners and interpreter must all
+    // treat it as inert rather than asserting.
+    let mut b = GraphBuilder::new("zerosize");
+    let x = b.input("x", vec![4, 4, 2], DType::I8);
+    let lo = b.op(OpKind::Slice { begins: vec![0, 0, 0], ends: vec![2, 4, 2] }, vec![x]);
+    let mid = b.op(OpKind::Slice { begins: vec![2, 0, 0], ends: vec![2, 4, 2] }, vec![x]);
+    let hi = b.op(OpKind::Slice { begins: vec![2, 0, 0], ends: vec![4, 4, 2] }, vec![x]);
+    let cat = b.op(OpKind::Concat { axis: 0 }, vec![lo, mid, hi]);
+    let mut y = b.conv2d(cat, 4, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
+    y = b.op(OpKind::GlobalAvgPool, vec![y]);
+    let g = b.finish(vec![y]);
+    g.validate().unwrap_or_else(|e| panic!("empty slice must validate: {e}"));
+    let r = try_optimize(&g, &FlowOptions::default()).expect("zero-sized buffer must flow");
+    assert!(r.final_eval.ram > 0);
+    let inputs = fdt::exec::random_inputs(&g, 11);
+    let a = fdt::exec::run(&g, &inputs).expect("zero-sized buffer graph must execute");
+    assert_eq!(a[0].data.len(), 4);
+}

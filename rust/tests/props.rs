@@ -77,8 +77,8 @@ fn schedules_are_valid_topo_orders() {
         let m = MemModel::new(&g, &grouping);
         for opts in [
             SchedOptions::default(),
-            SchedOptions { bnb_node_budget: 0, use_sp: true },
-            SchedOptions { bnb_node_budget: 0, use_sp: false },
+            SchedOptions { bnb_node_budget: 0, wall_ms: None, use_sp: true },
+            SchedOptions { bnb_node_budget: 0, wall_ms: None, use_sp: false },
         ] {
             let s = sched::schedule(&m, opts);
             assert!(is_valid_order(&m, &s.order), "seed {seed}, {:?}", opts);
@@ -94,7 +94,8 @@ fn exact_scheduler_never_loses_to_heuristic() {
         let grouping = fuse(&g);
         let m = MemModel::new(&g, &grouping);
         let exact = sched::schedule(&m, SchedOptions::default());
-        let heur = sched::schedule(&m, SchedOptions { bnb_node_budget: 0, use_sp: false });
+        let heur =
+            sched::schedule(&m, SchedOptions { bnb_node_budget: 0, wall_ms: None, use_sp: false });
         assert!(
             exact.peak <= heur.peak,
             "seed {seed}: exact {} > heuristic {}",
@@ -116,8 +117,12 @@ fn sp_matches_bnb_on_sp_graphs() {
             continue; // only SP graphs here
         }
         sp_cases += 1;
-        let sp = sched::schedule(&m, SchedOptions { bnb_node_budget: 0, use_sp: true });
-        let bnb = sched::schedule(&m, SchedOptions { bnb_node_budget: 10_000_000, use_sp: false });
+        let sp =
+            sched::schedule(&m, SchedOptions { bnb_node_budget: 0, wall_ms: None, use_sp: true });
+        let bnb = sched::schedule(
+            &m,
+            SchedOptions { bnb_node_budget: 10_000_000, wall_ms: None, use_sp: false },
+        );
         assert!(bnb.optimal, "seed {seed}: B&B must finish on these sizes");
         assert_eq!(sp.peak, bnb.peak, "seed {seed}: SP-optimal != B&B-optimal");
     }
