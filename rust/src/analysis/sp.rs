@@ -58,7 +58,7 @@ fn series(parts: Vec<Payload>) -> Payload {
     }
     match children.len() {
         0 => None,
-        1 => Some(children.pop().unwrap()),
+        1 => children.pop(),
         _ => Some(SpTree::Series(children)),
     }
 }
@@ -76,7 +76,7 @@ fn parallel(a: Payload, b: Payload) -> Payload {
     }
     match children.len() {
         0 => None,
-        1 => Some(children.pop().unwrap()),
+        1 => children.pop(),
         _ => Some(SpTree::Parallel(children)),
     }
 }

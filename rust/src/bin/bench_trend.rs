@@ -9,8 +9,14 @@
 //! Keys ending in `_s` are wall-clock timings (lower is better): a
 //! >10% increase prints a `REGRESSION` warning. Other numeric keys
 //! (config counts, arena bytes, peaks) are reported when they change.
-//! The tool always exits 0 — trend tracking warns, it does not gate —
-//! unless `--strict` is passed, in which case timing regressions fail.
+//!
+//! Exit codes are distinct so CI can tell "slower" from "broken":
+//!
+//! * `0` — clean (or regressions present without `--strict`; missing
+//!   current/baseline files are skips, not failures);
+//! * `1` — `--strict` and at least one timing regression > 10%;
+//! * `2` — a present artifact failed to load or parse (truncated or
+//!   corrupt JSON): the comparison itself is unsound, strict or not.
 //!
 //! The JSON is the restricted format `fdt::bench::write_json` emits
 //! (objects of objects of string/number/null); the parser below covers
@@ -170,6 +176,7 @@ fn main() {
 
     let mut regressions = 0usize;
     let mut compared = 0usize;
+    let mut broken = 0usize;
     for f in &files {
         let cur_path = Path::new(f);
         if !cur_path.is_file() {
@@ -184,7 +191,8 @@ fn main() {
         let (cur, base) = match (load(cur_path), load(&base_path)) {
             (Ok(c), Ok(b)) => (c, b),
             (Err(e), _) | (_, Err(e)) => {
-                println!("bench-trend: {e}");
+                println!("bench-trend: PARSE FAILURE {e}");
+                broken += 1;
                 continue;
             }
         };
@@ -212,8 +220,12 @@ fn main() {
         }
     }
     println!(
-        "bench-trend: {compared} metrics compared, {regressions} timing regression(s) > 10%"
+        "bench-trend: {compared} metrics compared, {regressions} timing regression(s) > 10%, \
+         {broken} unreadable artifact(s)"
     );
+    if broken > 0 {
+        std::process::exit(2);
+    }
     if strict && regressions > 0 {
         std::process::exit(1);
     }

@@ -155,7 +155,10 @@ impl<'a> Emitter<'a> {
             if t.kind != TensorKind::Weight {
                 continue;
             }
-            let data = t.data.as_ref().expect("checked in generate()");
+            let data = t
+                .data
+                .as_ref()
+                .unwrap_or_else(|| panic!("weight `{}` has no data (checked in generate)", t.name));
             rom += data.len() * 4;
             s += &format!("static const float {}[{}] = {{", cname(&t.name), data.len().max(1));
             for (i, x) in data.iter().enumerate() {

@@ -69,6 +69,59 @@ fn st(v: &TView, i: &str, val: &str) -> String {
     }
 }
 
+/// Source of a chain stage: a real arena view, or a `Pad` that has not
+/// been materialized. Conv-like consumers fold an unmaterialized pad
+/// into their loop bounds (the TVM padding fold); every other consumer
+/// gets it materialized into the group's staging view first.
+enum Src {
+    Mem(TView),
+    Pad { inner: TView, pads: Vec<(usize, usize)>, shape: Vec<usize> },
+}
+
+impl Src {
+    fn mem(&self, op: &Op) -> Result<&TView, String> {
+        match self {
+            Src::Mem(v) => Ok(v),
+            Src::Pad { .. } => {
+                Err(format!("{}: unmaterialized Pad reached a non-conv kernel", op.name))
+            }
+        }
+    }
+}
+
+/// Ops whose int8 C kernels can fold a producer `Pad` into their own
+/// boundary handling instead of materializing the padded tensor.
+fn pad_folds_into(kind: &OpKind) -> bool {
+    matches!(
+        kind,
+        OpKind::Conv2d { .. }
+            | OpKind::DepthwiseConv2d { .. }
+            | OpKind::MaxPool2d { .. }
+            | OpKind::AvgPool2d { .. }
+    )
+}
+
+/// Split a conv/pool source into (load view, logical input shape, fold).
+/// `fold = Some((pad_top, pad_left))` when a rank-3 spatial `Pad` is
+/// folded into the kernel instead of being materialized.
+fn src_fold<'s>(
+    op: &Op,
+    x: &'s Src,
+) -> Result<(&'s TView, &'s [usize], Option<(usize, usize)>), String> {
+    match x {
+        Src::Mem(v) => Ok((v, &v.shape, None)),
+        Src::Pad { inner, pads, shape } => {
+            if shape.len() != 3 || pads[2] != (0, 0) {
+                return Err(format!(
+                    "{}: only rank-3 spatial Pad folds into the int8 C backend",
+                    op.name
+                ));
+            }
+            Ok((inner, shape, Some((pads[0].0, pads[1].0))))
+        }
+    }
+}
+
 struct CEmitter<'a> {
     exe: &'a Int8Executable,
     body: String,
@@ -124,45 +177,131 @@ impl<'a> CEmitter<'a> {
         if let Some((base, len)) = step.zero {
             self.line(1, format!("memset(fdt_arena + {base}, 0, {len}); /* merge acc init */"));
         }
-        let last = g.op(*step.members.last().expect("empty group"));
+        let Some(&last_id) = step.members.last() else {
+            return Err("empty fusion group in int8 codegen".to_string());
+        };
+        let last = g.op(last_id);
         let Some(out) = exe.views[last.output].clone() else {
             return Ok(()); // dead group: nothing observable
         };
-        let mut src: Option<TView> = None;
+        let mut src: Option<Src> = None;
         for &oid in &step.members {
             let op = g.op(oid);
             self.line(1, format!("/* {} : {} */", op.name, op.kind.mnemonic()));
             match &op.kind {
                 OpKind::Slice { .. } => {
-                    src = Some(self.view(op.output)?);
+                    src = Some(Src::Mem(self.view(op.output)?));
                 }
                 OpKind::Concat { axis } => {
                     self.emit_concat(op, *axis)?;
-                    src = Some(self.view(op.output)?);
+                    src = Some(Src::Mem(self.view(op.output)?));
                 }
                 OpKind::Merge { act } => {
                     self.emit_merge(op, *act)?;
-                    src = Some(self.view(op.output)?);
+                    src = Some(Src::Mem(self.view(op.output)?));
                 }
-                OpKind::Pad { .. } => {
-                    return Err(format!("{}: Pad is not supported by the int8 C backend", op.name));
+                OpKind::Pad { pads } => {
+                    // Fusion only ever places `Pad` first in a group
+                    // (it fuses *forward* into conv-like anchors), so
+                    // the inner tensor is a real view.
+                    let inner = match src.take() {
+                        Some(Src::Mem(v)) => v,
+                        Some(Src::Pad { .. }) => {
+                            return Err(format!(
+                                "{}: nested Pad is not supported by the int8 C backend",
+                                op.name
+                            ));
+                        }
+                        None => self.view(op.inputs[0])?,
+                    };
+                    let shape = g.tensor(op.output).shape.clone();
+                    if pads.len() != inner.shape.len() || pads.len() != shape.len() {
+                        return Err(format!("{}: pad rank mismatch", op.name));
+                    }
+                    if let Some(v) = exe.views[op.output].clone() {
+                        // Materialized pad (it is the group output):
+                        // zero-point fill + scatter, remapped onto the
+                        // output grid (a no-op — pads propagate their
+                        // input grid).
+                        let p_in = self.params(op.inputs[0]);
+                        let p_out = self.params(op.output);
+                        self.emit_pad_fill(&inner, pads, &shape, &v, p_in, p_out)?;
+                        src = Some(Src::Mem(v));
+                    } else {
+                        src = Some(Src::Pad { inner, pads: pads.clone(), shape });
+                    }
                 }
                 _ => {
-                    let x = match &src {
-                        Some(v) => v.clone(),
+                    let x = match src.take() {
+                        Some(s) => s,
                         // Head of the chain (Add/Mul have no designated
                         // activation input; their kernel reads operand 1
                         // itself).
                         None => {
                             let ai = activation_input(op).unwrap_or(0);
-                            self.view(op.inputs[ai])?
+                            Src::Mem(self.view(op.inputs[ai])?)
                         }
                     };
+                    // Pad folds only into conv-like kernels; epilogue
+                    // consumers (elementwise, shape-preserving) get it
+                    // materialized into the staging view first.
+                    let x = match x {
+                        Src::Pad { inner, pads, shape } if !pad_folds_into(&op.kind) => {
+                            let p = self.params(op.inputs[0]);
+                            self.emit_pad_fill(&inner, &pads, &shape, &out, p, p)?;
+                            Src::Mem(out.clone())
+                        }
+                        other => other,
+                    };
                     self.emit_compute(op, &x, &out)?;
-                    src = Some(out.clone());
+                    src = Some(Src::Mem(out.clone()));
                 }
             }
         }
+        Ok(())
+    }
+
+    /// Materialize a padded tensor into `dst`: fill every element with
+    /// the zero-point code, then scatter the inner view's elements to
+    /// their padded coordinates — exactly the interpreter's `Pad`
+    /// kernel (the fill is the shared quant grid's zero point, so the
+    /// padding is bit-exact).
+    fn emit_pad_fill(
+        &mut self,
+        inner: &TView,
+        pads: &[(usize, usize)],
+        shape: &[usize],
+        dst: &TView,
+        p_in: QuantParams,
+        p_out: QuantParams,
+    ) -> Result<(), String> {
+        if !is_dense(dst) && dst.shape != shape {
+            return Err("materializing Pad into a reshaped strided view is not supported".into());
+        }
+        let nel_out: usize = shape.iter().product();
+        if dst.shape.iter().product::<usize>() != nel_out {
+            return Err("materializing Pad into a view of a different size is not supported".into());
+        }
+        let nel_in: usize = inner.shape.iter().product();
+        let fill = self.remap(&p_in.zero_point.to_string(), p_in, p_out);
+        self.line(1, format!("for (int i = 0; i < {nel_out}; i++) {}", st(dst, "i", &fill)));
+        let in_d = super::dense_strides(&inner.shape);
+        let out_d = super::dense_strides(shape);
+        let mut terms = Vec::new();
+        for d in 0..shape.len() {
+            let coord = if d == 0 {
+                format!("((i) / {})", in_d[0])
+            } else {
+                format!("(((i) / {}) % {})", in_d[d], inner.shape[d])
+            };
+            terms.push(format!("({coord} + {})*{}", pads[d].0, out_d[d]));
+        }
+        let o = terms.join(" + ");
+        let srcv = self.remap(&ld(inner, "i"), p_in, p_out);
+        self.line(
+            1,
+            format!("for (int i = 0; i < {nel_in}; i++) {{ int o = {o}; {} }}", st(dst, "o", &srcv)),
+        );
         Ok(())
     }
 
@@ -188,7 +327,7 @@ impl<'a> CEmitter<'a> {
         }
     }
 
-    fn emit_compute(&mut self, op: &Op, x: &TView, out: &TView) -> Result<(), String> {
+    fn emit_compute(&mut self, op: &Op, x: &Src, out: &TView) -> Result<(), String> {
         let g = &self.exe.g;
         let out_shape = g.tensor(op.output).shape.clone();
         match &op.kind {
@@ -199,11 +338,23 @@ impl<'a> CEmitter<'a> {
                 let w = self.weight_name(op.inputs[1]);
                 let ws = g.tensor(op.inputs[1]).shape.clone();
                 let (kh, kw) = (ws[0], ws[1]);
-                let cin = x.shape[2];
-                let (ih, iw) = (x.shape[0], x.shape[1]);
+                let (xv, logical, fold) = src_fold(op, x)?;
+                let cin = logical[2];
+                let (ih, iw) = (logical[0], logical[1]);
                 let (oh, ow, oc) = (out_shape[0], out_shape[1], out_shape[2]);
                 let (pt, pl) =
                     crate::graph::pad_before(*padding, ih, iw, (kh, kw), *stride);
+                // Folding a producer Pad shifts the tap origin into the
+                // inner view and clips to it: out-of-inner taps would
+                // load the shared zero point and contribute
+                // (zp - zp) * w = 0, exactly like the skip.
+                let (pt, pl, gh, gw, lw) = match fold {
+                    None => (pt, pl, ih, iw, iw),
+                    Some((p0, p1)) => {
+                        let (vh, vw) = (xv.shape[0], xv.shape[1]);
+                        (pt + p0 as isize, pl + p1 as isize, vh, vw, vw)
+                    }
+                };
                 let (zx, zw) = (px.zero_point, pw.zero_point);
                 self.line(
                     1,
@@ -215,21 +366,21 @@ impl<'a> CEmitter<'a> {
                 self.line(2, format!("for (int dy = 0; dy < {kh}; dy++) {{"));
                 self.line(
                     3,
-                    format!("int sy = y*{} + dy - {pt}; if (sy < 0 || sy >= {ih}) continue;", stride.0),
+                    format!("int sy = y*{} + dy - {pt}; if (sy < 0 || sy >= {gh}) continue;", stride.0),
                 );
                 self.line(3, format!("for (int dx = 0; dx < {kw}; dx++) {{"));
                 self.line(
                     4,
-                    format!("int sx = xx*{} + dx - {pl}; if (sx < 0 || sx >= {iw}) continue;", stride.1),
+                    format!("int sx = xx*{} + dx - {pl}; if (sx < 0 || sx >= {gw}) continue;", stride.1),
                 );
                 if depthwise {
-                    let xi = ld(x, &format!("(sy*{iw} + sx)*{cin} + co"));
+                    let xi = ld(xv, &format!("(sy*{lw} + sx)*{cin} + co"));
                     self.line(
                         4,
                         format!("acc += ({xi} - {zx}) * ((int32_t){w}[(dy*{kw} + dx)*{cin} + co] - {zw});"),
                     );
                 } else {
-                    let xi = ld(x, &format!("(sy*{iw} + sx)*{cin} + ci"));
+                    let xi = ld(xv, &format!("(sy*{lw} + sx)*{cin} + ci"));
                     self.line(
                         4,
                         format!(
@@ -250,6 +401,7 @@ impl<'a> CEmitter<'a> {
                 Ok(())
             }
             OpKind::Dense => {
+                let x = x.mem(op)?;
                 let px = self.params(op.inputs[0]);
                 let pw = self.params(op.inputs[1]);
                 let w = self.weight_name(op.inputs[1]);
@@ -272,6 +424,7 @@ impl<'a> CEmitter<'a> {
                 Ok(())
             }
             OpKind::Gather => {
+                let x = x.mem(op)?;
                 let table_t = op.inputs[0];
                 let pt_ = self.params(table_t);
                 let p = self.params(op.output);
@@ -298,6 +451,7 @@ impl<'a> CEmitter<'a> {
                 Ok(())
             }
             OpKind::BiasAdd => {
+                let x = x.mem(op)?;
                 let px = self.params(op.inputs[0]);
                 let p = self.params(op.output);
                 let b = format!("b_{}", op.id);
@@ -325,6 +479,7 @@ impl<'a> CEmitter<'a> {
                 Ok(())
             }
             OpKind::Activation(a) => {
+                let x = x.mem(op)?;
                 let px = self.params(op.inputs[0]);
                 let p = self.params(op.output);
                 let nel: usize = out_shape.iter().product();
@@ -368,7 +523,8 @@ impl<'a> CEmitter<'a> {
                 let is_max = matches!(op.kind, OpKind::MaxPool2d { .. });
                 let px = self.params(op.inputs[0]);
                 let p = self.params(op.output);
-                let (ih, iw, c) = (x.shape[0], x.shape[1], x.shape[2]);
+                let (xv, logical, fold) = src_fold(op, x)?;
+                let (ih, iw, c) = (logical[0], logical[1], logical[2]);
                 let (oh, ow) = (out_shape[0], out_shape[1]);
                 let (pt, pl) = crate::graph::pad_before(*padding, ih, iw, *ksize, *stride);
                 let zx = px.zero_point;
@@ -389,10 +545,30 @@ impl<'a> CEmitter<'a> {
                     4,
                     format!("int sx = xx*{} + dx - {pl}; if (sx < 0 || sx >= {iw}) continue;", stride.1),
                 );
-                let xi = ld(x, &format!("(sy*{iw} + sx)*{c} + ch"));
+                match fold {
+                    None => {
+                        let xi = ld(xv, &format!("(sy*{iw} + sx)*{c} + ch"));
+                        self.line(4, format!("int32_t q = {xi};"));
+                    }
+                    Some((p0, p1)) => {
+                        // Guards stay on the *padded* extent so `cnt`
+                        // matches the interpreter, which pools over the
+                        // materialized padded tensor; out-of-inner taps
+                        // read the fill value — the shared zero point.
+                        let (nh, nw) = (xv.shape[0], xv.shape[1]);
+                        self.line(4, format!("int py = sy - {p0}; int qx = sx - {p1};"));
+                        let xi = ld(xv, &format!("(py*{nw} + qx)*{c} + ch"));
+                        self.line(
+                            4,
+                            format!(
+                                "int32_t q = (py < 0 || py >= {nh} || qx < 0 || qx >= {nw}) ? {zx} : {xi};"
+                            ),
+                        );
+                    }
+                }
                 self.line(
                     4,
-                    format!("int32_t q = {xi}; if (q > best) best = q; sum += (int64_t)(q - {zx}); cnt++;"),
+                    format!("if (q > best) best = q; sum += (int64_t)(q - {zx}); cnt++;"),
                 );
                 self.line(3, "}");
                 self.line(2, "}");
@@ -413,6 +589,7 @@ impl<'a> CEmitter<'a> {
                 Ok(())
             }
             OpKind::GlobalAvgPool => {
+                let x = x.mem(op)?;
                 let px = self.params(op.inputs[0]);
                 let p = self.params(op.output);
                 let (h, w, c) = (x.shape[0], x.shape[1], x.shape[2]);
@@ -439,6 +616,7 @@ impl<'a> CEmitter<'a> {
                 Ok(())
             }
             OpKind::ReduceMean { axis, .. } => {
+                let x = x.mem(op)?;
                 let px = self.params(op.inputs[0]);
                 let p = self.params(op.output);
                 let nax = x.shape[*axis];
@@ -465,6 +643,7 @@ impl<'a> CEmitter<'a> {
                 Ok(())
             }
             OpKind::Softmax => {
+                let x = x.mem(op)?;
                 let px = self.params(op.inputs[0]);
                 let p = self.params(op.output);
                 let nel: usize = out_shape.iter().product();
@@ -489,6 +668,7 @@ impl<'a> CEmitter<'a> {
                 Ok(())
             }
             OpKind::Add | OpKind::Mul => {
+                let x = x.mem(op)?;
                 let pa = self.params(op.inputs[0]);
                 let pb = self.params(op.inputs[1]);
                 let p = self.params(op.output);
@@ -520,6 +700,7 @@ impl<'a> CEmitter<'a> {
                 Ok(())
             }
             OpKind::Reshape { .. } => {
+                let x = x.mem(op)?;
                 // Same flat order; copy only when the value is not
                 // already in the destination buffer.
                 if x.base == out.base && x.off == out.off && is_dense(x) && is_dense(out) {

@@ -213,7 +213,7 @@ pub fn generate(g: &Graph) -> Result<CModule, String> {
                 accumulate: false,
             },
             RootKind::SliceOf => {
-                let p = producers[t].unwrap();
+                let p = producers[t].unwrap_or_else(|| panic!("slice tensor {t} has no producer"));
                 let op = g.op(p);
                 let OpKind::Slice { begins, .. } = &op.kind else { unreachable!() };
                 let src = resolve(op.inputs[0], g, kind, producers, views, arena_ids, next_arena, input_index);
@@ -228,7 +228,7 @@ pub fn generate(g: &Graph) -> Result<CModule, String> {
                 }
             }
             RootKind::IntoInput0 => {
-                let p = producers[t].unwrap();
+                let p = producers[t].unwrap_or_else(|| panic!("view tensor {t} has no producer"));
                 let op = g.op(p);
                 let src = resolve(op.inputs[0], g, kind, producers, views, arena_ids, next_arena, input_index);
                 if matches!(op.kind, OpKind::Reshape { .. }) {

@@ -204,7 +204,10 @@ pub fn int8_executable(
     let qm = crate::quant::int8::compile(g, cal)?;
     let grouping = fuse(g);
     let (m, s, l) = plan_graph(g, &grouping, opts);
-    Ok(crate::exec::int8::Int8Executable::compile(g, &qm, &grouping, &s.order, &l, &m)?)
+    crate::verify::verify_plan(g, &grouping, &s.order, &l)?;
+    let exe = crate::exec::int8::Int8Executable::compile(g, &qm, &grouping, &s.order, &l, &m)?;
+    crate::verify::verify_int8(&exe)?;
+    Ok(exe)
 }
 
 /// Critical-buffer detection (§4.3): intermediate buffers that are
@@ -278,7 +281,7 @@ fn screen_one(g: &Graph, cfg: &PathConfig, ctx: &ScreenCtx, cutoff: usize, exact
     }
     let fp = if ctx.opts.memoize {
         let fp = tiled.fingerprint();
-        match ctx.memo.lock().unwrap().get(&fp).copied() {
+        match ctx.memo.lock().unwrap_or_else(|p| p.into_inner()).get(&fp).copied() {
             Some(hit @ (Screen::Invalid | Screen::Ram(_))) => return hit,
             Some(Screen::AboveIncumbent) if !exact => return Screen::AboveIncumbent,
             _ => {}
@@ -293,7 +296,7 @@ fn screen_one(g: &Graph, cfg: &PathConfig, ctx: &ScreenCtx, cutoff: usize, exact
     // the incumbent means even the exact planner cannot beat it.
     if !exact && sched::peak_lower_bound(&m) >= cutoff {
         if let Some(fp) = fp {
-            ctx.memo.lock().unwrap().insert(fp, Screen::AboveIncumbent);
+            ctx.memo.lock().unwrap_or_else(|p| p.into_inner()).insert(fp, Screen::AboveIncumbent);
         }
         return Screen::AboveIncumbent;
     }
@@ -310,7 +313,7 @@ fn screen_one(g: &Graph, cfg: &PathConfig, ctx: &ScreenCtx, cutoff: usize, exact
         Screen::Ram(heuristic::first_fit_by_size(&m.sizes, &conflicts).total)
     };
     if let Some(fp) = fp {
-        ctx.memo.lock().unwrap().insert(fp, result);
+        ctx.memo.lock().unwrap_or_else(|p| p.into_inner()).insert(fp, result);
     }
     result
 }
@@ -349,7 +352,7 @@ impl ScreenPool {
                 // Holding the lock across `recv` is fine: blocked workers
                 // queue on the mutex instead of the channel, with the
                 // same one-job-per-wakeup distribution.
-                let job = rx.lock().unwrap().recv();
+                let job = rx.lock().unwrap_or_else(|p| p.into_inner()).recv();
                 let Ok(j) = job else { break };
                 // A panicking config must still produce a result, or the
                 // collector would wait forever. The payload is forwarded
@@ -532,6 +535,14 @@ fn evaluate_planned(
         };
         (eval, s, l)
     };
+    // Mandatory post-planning gate: no plan leaves the flow unverified.
+    // The typed counterexample is re-raised through the catch_unwind
+    // backstop in `try_optimize`, which downcasts it back into the
+    // structured `FdtError::PlanVerification` (and `optimize` panics
+    // with its rendered diagnostic, as for any other flow failure).
+    if let Err(e) = crate::verify::verify_plan(g, &grouping, &s.order, &l) {
+        std::panic::panic_any(e);
+    }
     (eval, grouping, s, l)
 }
 
@@ -555,12 +566,18 @@ pub fn optimize(g: &Graph, opts: &FlowOptions) -> FlowResult {
 pub fn try_optimize(g: &Graph, opts: &FlowOptions) -> FdtResult<FlowResult> {
     g.validate()?;
     std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| optimize_inner(g, opts))).map_err(
-        |p| FdtError::Other {
-            reason: p
-                .downcast_ref::<&str>()
-                .map(|s| s.to_string())
-                .or_else(|| p.downcast_ref::<String>().cloned())
-                .unwrap_or_else(|| "flow panicked with a non-string payload".to_string()),
+        // A typed error thrown through the panic path (the plan-verifier
+        // gate uses `panic_any`) survives as itself; anything else is a
+        // residual bug and keeps the legacy string mapping.
+        |p| match p.downcast::<FdtError>() {
+            Ok(e) => *e,
+            Err(p) => FdtError::Other {
+                reason: p
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| p.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "flow panicked with a non-string payload".to_string()),
+            },
         },
     )
 }

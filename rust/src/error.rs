@@ -13,6 +13,77 @@ use std::fmt;
 /// Crate-wide result alias.
 pub type FdtResult<T> = Result<T, FdtError>;
 
+/// Which property of the memory plan a [`PlanViolation`] falsifies.
+///
+/// Produced by `verify::verify_plan`, which re-derives each property
+/// from first principles — independently of the planners — and reports
+/// the first counterexample it finds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VerifyCheck {
+    /// The graph itself failed structural validation.
+    Graph,
+    /// The schedule is not a valid execution order (missing/duplicated
+    /// groups, or a group runs before one of its producers).
+    Schedule,
+    /// Two simultaneously-live buffers overlap in the arena.
+    Overlap,
+    /// A placement or kernel access escapes the planned arena.
+    ArenaBounds,
+    /// A slice/concat view resolves outside its storage root.
+    RootEscape,
+    /// An in-place accumulation alias does not cover its root exactly,
+    /// or concat partition writers collide.
+    Accumulation,
+    /// The layout's buffer table disagrees with independently re-derived
+    /// buffer sizes.
+    SizeMismatch,
+}
+
+impl fmt::Display for VerifyCheck {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            VerifyCheck::Graph => "graph",
+            VerifyCheck::Schedule => "schedule",
+            VerifyCheck::Overlap => "overlap",
+            VerifyCheck::ArenaBounds => "arena-bounds",
+            VerifyCheck::RootEscape => "root-escape",
+            VerifyCheck::Accumulation => "accumulation",
+            VerifyCheck::SizeMismatch => "size-mismatch",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Structured counterexample from the static plan verifier: which check
+/// failed, at which op/step, involving which buffers, over which bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanViolation {
+    /// The falsified property.
+    pub check: VerifyCheck,
+    /// The op or schedule step the violation is attributed to.
+    pub op: String,
+    /// Names of the buffers/tensors involved.
+    pub buffers: Vec<String>,
+    /// Offending absolute arena byte range `[start, end)`, when the
+    /// violation is spatial (overlap / bounds / escape).
+    pub byte_range: Option<(usize, usize)>,
+    /// Human-readable explanation of the counterexample.
+    pub detail: String,
+}
+
+impl fmt::Display for PlanViolation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] at `{}`", self.check, self.op)?;
+        if !self.buffers.is_empty() {
+            write!(f, " buffers [{}]", self.buffers.join(", "))?;
+        }
+        if let Some((lo, hi)) = self.byte_range {
+            write!(f, " bytes [{lo}, {hi})")?;
+        }
+        write!(f, ": {}", self.detail)
+    }
+}
+
 /// Every failure mode of the flow, typed.
 #[derive(Debug, Clone, PartialEq)]
 pub enum FdtError {
@@ -50,6 +121,9 @@ pub enum FdtError {
     EngineFailed { engine: String, reason: String },
     /// Every engine in a failover chain failed.
     AllEnginesFailed { tried: Vec<String> },
+    /// The static plan verifier rejected a `(Graph, Schedule, Layout)`
+    /// triple; carries the structured counterexample.
+    PlanVerification(PlanViolation),
     /// A deterministic chaos-harness fault (testing only).
     Injected { site: String },
     /// Legacy catch-all for string-typed failures from not-yet-migrated
@@ -103,6 +177,9 @@ impl fmt::Display for FdtError {
             }
             FdtError::AllEnginesFailed { tried } => {
                 write!(f, "all engines failed (tried: {})", tried.join(", "))
+            }
+            FdtError::PlanVerification(v) => {
+                write!(f, "plan verification failed: {v}")
             }
             FdtError::Injected { site } => write!(f, "injected fault at {site}"),
             FdtError::Other { reason } => f.write_str(reason),

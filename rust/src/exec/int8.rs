@@ -438,7 +438,10 @@ impl Int8Executable {
         let mut zeroed: Vec<bool> = vec![false; m.buffers.len()];
         for &gid in order {
             let members = grouping.groups[gid].clone();
-            let last_out = g.op(*members.last().expect("empty fusion group")).output;
+            let Some(&last) = members.last() else {
+                return Err(format!("fusion group {gid} is empty"));
+            };
+            let last_out = g.op(last).output;
             let zero = match &views[last_out] {
                 Some(v) if v.accumulate && !zeroed[v.buffer] => {
                     // Zeroing covers the whole root; an accumulator that

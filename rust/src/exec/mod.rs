@@ -85,7 +85,8 @@ impl Pool {
             }
             None => vec![0.0; n],
         };
-        Value::try_new(shape, data).expect("pooled buffer does not fit slot shape")
+        Value::try_new(shape, data)
+            .unwrap_or_else(|e| panic!("pooled buffer does not fit slot shape: {e}"))
     }
     /// A copy of `src` under `shape`, reusing a pooled buffer if free.
     fn copy(&mut self, shape: Vec<usize>, src: &[f32]) -> Value {
@@ -96,7 +97,8 @@ impl Pool {
             }
             None => src.to_vec(),
         };
-        Value::try_new(shape, data).expect("pooled buffer does not fit slot shape")
+        Value::try_new(shape, data)
+            .unwrap_or_else(|e| panic!("pooled buffer does not fit slot shape: {e}"))
     }
     fn put(&mut self, data: Vec<f32>) {
         if self.recycle && !data.is_empty() {
@@ -120,7 +122,11 @@ fn view<'s>(slots: &'s [Slot<'_>], t: TensorId) -> (&'s [usize], &'s [f32]) {
         Slot::Owned(v) => (&v.shape, &v.data),
         Slot::Borrowed(v) => (&v.shape, &v.data),
         Slot::Weight(w) => {
-            (&w.shape, w.data.as_deref().expect("weight data validated at setup"))
+            let data = w
+                .data
+                .as_deref()
+                .unwrap_or_else(|| panic!("weight `{}` has no data at execution", w.name));
+            (&w.shape, data)
         }
         Slot::Empty => panic!("tensor {t} read before being computed"),
     }
@@ -131,10 +137,13 @@ fn slot_value(slots: &[Slot<'_>], t: TensorId) -> Result<Value, String> {
     match &slots[t] {
         Slot::Owned(v) => Ok(v.clone()),
         Slot::Borrowed(v) => Ok((*v).clone()),
-        Slot::Weight(w) => Ok(Value {
-            shape: w.shape.clone(),
-            data: w.data.clone().expect("weight data validated at setup"),
-        }),
+        Slot::Weight(w) => {
+            let data = w
+                .data
+                .clone()
+                .ok_or_else(|| format!("weight `{}` has no data", w.name))?;
+            Ok(Value { shape: w.shape.clone(), data })
+        }
         Slot::Empty => Err(format!("tensor {t} not computed")),
     }
 }

@@ -136,7 +136,8 @@ impl GraphBuilder {
         padding: Padding,
         act: ActKind,
     ) -> TensorId {
-        let cin = *self.g.tensor(x).shape.last().unwrap();
+        let cin =
+            *self.g.tensor(x).shape.last().unwrap_or_else(|| panic!("conv2d input is rank 0"));
         let n = self.g.ops.len();
         let w = self.weight(&format!("conv{n}_w"), vec![k.0, k.1, cin, cout], DType::I8);
         let b = self.weight(&format!("conv{n}_b"), vec![cout], DType::I32);
@@ -154,7 +155,8 @@ impl GraphBuilder {
         padding: Padding,
         act: ActKind,
     ) -> TensorId {
-        let c = *self.g.tensor(x).shape.last().unwrap();
+        let c =
+            *self.g.tensor(x).shape.last().unwrap_or_else(|| panic!("dwconv input is rank 0"));
         let n = self.g.ops.len();
         let w = self.weight(&format!("dw{n}_w"), vec![k.0, k.1, c], DType::I8);
         let b = self.weight(&format!("dw{n}_b"), vec![c], DType::I32);

@@ -34,11 +34,14 @@
 //!   limits for the exact solvers.
 //! * [`testing`] — deterministic fault injection (`testing::chaos`) and
 //!   the random-graph generators backing the no-panic fuzz suite.
+//! * [`verify`] — the static plan verifier: an independent
+//!   lifetime/aliasing oracle (liveness re-derivation, arena overlap
+//!   proofs, symbolic view intervals) that every emitted plan must pass.
 //! * [`report`] — regenerates every table and figure of the paper.
 
 // Library code must surface failures as typed `Result`s, not panics —
 // tests and benches may still unwrap freely.
-#![cfg_attr(not(test), warn(clippy::unwrap_used, clippy::expect_used))]
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
 pub mod analysis;
 pub mod bench;
@@ -58,7 +61,8 @@ pub mod testing;
 pub mod tiling;
 pub mod transform;
 pub mod util;
+pub mod verify;
 
 pub use budget::Budget;
-pub use error::{FdtError, FdtResult};
+pub use error::{FdtError, FdtResult, PlanViolation, VerifyCheck};
 pub use graph::{ActKind, DType, Graph, Op, OpId, OpKind, Padding, Tensor, TensorId, TensorKind};

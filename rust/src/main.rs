@@ -11,6 +11,7 @@
 //! fdt layout-compare [MODEL ...]  # §5.1 optimal vs TVM heuristic
 //! fdt sched-bench                 # §5.1 SwiftNet scheduling runtime
 //! fdt flow-stats [MODEL ...]      # §5.1 configs + flow runtime
+//! fdt verify MODEL [--optimized]  # static plan verifier (liveness/aliasing)
 //! fdt verify-artifacts [DIR]      # PJRT: tiled vs untiled equivalence
 //! fdt serve MODEL [N]             # synchronous PJRT serving loop demo
 //! ```
@@ -40,6 +41,7 @@ fn main() {
             let models = select_models(rest, &["KWS", "TXT", "MW", "CIF", "RAD"]);
             print!("{}", report::flow_stats(&models, &FlowOptions::default()));
         }
+        "verify" => verify_plan_cmd(rest),
         "verify-artifacts" => verify_artifacts(rest),
         "serve" => serve(rest),
         "codegen" => codegen(rest),
@@ -64,7 +66,8 @@ fn help() {
          commands: table1 | table2 [MODEL..] | fig1 | discover-demo |\n\
          optimize MODEL [--fdt-only|--ffmt-only] [--dot FILE] |\n\
          layout-compare [MODEL..] | sched-bench | flow-stats [MODEL..] |\n\
-         verify-artifacts [DIR] | serve MODEL [N] | dot MODEL |\n\
+         verify MODEL [--optimized] | verify-artifacts [DIR] |\n\
+         serve MODEL [N] | dot MODEL |\n\
          codegen MODEL [-o FILE] [--optimize|--fdt-only|--ffmt-only] |\n\
          int8 MODEL   (native int8: tiled-vs-untiled code equality + arena)\n\
          models: KWS TXT MW POS SSD CIF RAD SWIFTNET FIG5"
@@ -220,6 +223,37 @@ fn codegen(args: &[String]) {
         eprintln!("[codegen] wrote {path}");
     } else {
         print!("{}", m.source);
+    }
+}
+
+/// Static plan verification: fuse, schedule and lay out MODEL, then run
+/// the independent lifetime/aliasing verifier on the resulting
+/// `(graph, schedule, layout)` triple. With `--optimized` the full
+/// tiling flow runs first and the tiled graph's plan is checked too.
+fn verify_plan_cmd(args: &[String]) {
+    let name = args.first().expect("usage: fdt verify MODEL [--optimized]");
+    let g = models::by_name(name).expect("unknown model");
+    let mut graphs = vec![("untiled", g.clone())];
+    if args.iter().any(|a| a == "--optimized") {
+        eprintln!("[verify] running the tiling flow on {} ...", g.name);
+        let r = fdt::coordinator::optimize(&g, &FlowOptions::default());
+        graphs.push(("tiled", r.graph));
+    }
+    let mut failures = 0;
+    for (tag, graph) in &graphs {
+        match fdt::verify::plan_and_verify(graph, Default::default(), Default::default()) {
+            Ok((rep, s, l)) => println!(
+                "{tag} {}: OK — {rep} (schedule: {}, layout: {})",
+                graph.name, s.strategy, l.strategy
+            ),
+            Err(e) => {
+                println!("{tag} {}: REJECTED — {e}", graph.name);
+                failures += 1;
+            }
+        }
+    }
+    if failures > 0 {
+        std::process::exit(1);
     }
 }
 

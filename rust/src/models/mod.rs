@@ -257,7 +257,7 @@ pub fn swiftnet_like() -> Graph {
     for (i, &w) in widths.iter().enumerate() {
         // Each node reads the previous node, plus a skip two back when
         // widths match (creating the classic non-SP "N" crossings).
-        let prev = *nodes.last().unwrap();
+        let prev = *nodes.last().unwrap_or(&x);
         let mut y = b.conv2d(prev, w, (1, 1), (1, 1), Padding::Valid, ActKind::Relu);
         if i >= 2 {
             let skip = nodes[nodes.len() - 2];
@@ -267,7 +267,7 @@ pub fn swiftnet_like() -> Graph {
         }
         nodes.push(y);
     }
-    let y = *nodes.last().unwrap();
+    let y = *nodes.last().unwrap_or(&x);
     let y = b.op(OpKind::GlobalAvgPool, vec![y]);
     let y = b.dense_act(y, 10, ActKind::Identity);
     b.finish(vec![y])

@@ -217,7 +217,9 @@ pub fn fig1() -> String {
             let path: Vec<usize> = (0..g.ops.len()).collect();
             let tiles: Vec<Region> =
                 bands(16, 4).into_iter().map(|h| Region { h, w: (0, 16) }).collect();
-            let st = path_overlap(&g, &path, &tiles).unwrap();
+            let Some(st) = path_overlap(&g, &path, &tiles) else {
+                continue;
+            };
             s += &format!(
                 "{:<8} {:>8} {:>14} {:>14} {:>10}\n",
                 format!("{k}x{k}"),

@@ -167,7 +167,7 @@ pub fn greedy(m: &MemModel) -> Schedule {
                 best = Some(cand);
             }
         }
-        let (_, _, g) = best.expect("no ready group: cyclic graph?");
+        let (_, _, g) = best.unwrap_or_else(|| panic!("no ready group: cyclic graph?"));
         // Commit g.
         for &b in &m.group_writes[g] {
             if !live[b] {

@@ -77,7 +77,7 @@ fn segments_of(m: &MemModel, seq: &[GroupId]) -> Vec<Segment> {
                 j = k;
             }
         }
-        let hill = prof[i..=j].iter().map(|&(d, _)| d).max().unwrap() - base;
+        let hill = prof[i..=j].iter().map(|&(d, _)| d).max().unwrap_or(base) - base;
         let valley = prof[j].1 - base;
         segs.push(Segment { groups: seq[i..=j].to_vec(), hill, valley });
         base = prof[j].1;
@@ -104,18 +104,18 @@ fn merge_many(mut lists: Vec<Vec<Segment>>) -> Vec<Segment> {
         let mut pick: Option<usize> = None;
         for (i, l) in lists.iter().enumerate() {
             let Some(head) = l.last() else { continue };
-            match pick {
+            match pick.and_then(|p| lists[p].last()) {
                 None => pick = Some(i),
-                Some(p) => {
-                    if before(head, lists[p].last().unwrap()) {
+                Some(cur) => {
+                    if before(head, cur) {
                         pick = Some(i);
                     }
                 }
             }
         }
-        match pick {
-            Some(i) => out.push(lists[i].pop().unwrap()),
-            None => break,
+        match pick.map(|i| (i, lists[i].pop())) {
+            Some((_, Some(seg))) => out.push(seg),
+            _ => break,
         }
     }
     out

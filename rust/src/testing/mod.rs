@@ -11,6 +11,10 @@
 //!   graph (dangling refs, wrong shapes, cycles, zero-extent inputs),
 //!   for asserting that `Graph::validate` catches what the flow would
 //!   otherwise trip over;
+//! * [`mutate_layout`] — seeded corruption of a valid memory layout
+//!   (overlapping placements, out-of-arena escapes, truncated arena
+//!   totals), for asserting that the static plan verifier
+//!   (`crate::verify`) pinpoints each violation;
 //! * [`chaos`] — deterministic fault injection for solver budgets,
 //!   engine failures and allocation caps.
 
@@ -124,6 +128,81 @@ pub fn mutate_invalid(g: &Graph, corruption: Corruption, seed: u64) -> Option<Gr
             }
             let d = (rng.next_u64() as usize) % bad.tensors[t].shape.len();
             bad.tensors[t].shape[d] = 0;
+        }
+    }
+    Some(bad)
+}
+
+/// The layout corruptions [`mutate_layout`] can apply.
+///
+/// Each targets a distinct property the static plan verifier
+/// (`crate::verify`) must falsify with the matching
+/// [`crate::VerifyCheck`] kind (noted per variant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayoutCorruption {
+    /// Collapse one buffer's offset onto another simultaneously-live
+    /// buffer's range (expected rejection: `Overlap`).
+    OverlapShift,
+    /// Push one buffer past the declared arena end without growing
+    /// `total` (expected rejection: `ArenaBounds`).
+    OutOfArena,
+    /// Shrink the declared `total` below the highest placement end
+    /// (expected rejection: `ArenaBounds` or `SizeMismatch`).
+    TruncatedTotal,
+    /// Zero every offset, stacking all buffers at the arena base
+    /// (expected rejection: `Overlap` on any graph with two or more
+    /// simultaneously-live buffers).
+    ZeroedOffsets,
+}
+
+/// Deterministically corrupt a valid layout. Returns `None` when the
+/// layout is too small to host the requested corruption (e.g. overlap
+/// needs two non-empty buffers); otherwise the result is guaranteed to
+/// violate the property named on the [`LayoutCorruption`] variant.
+pub fn mutate_layout(
+    layout: &crate::layout::Layout,
+    sizes: &[usize],
+    conflicts: &[(usize, usize)],
+    corruption: LayoutCorruption,
+    seed: u64,
+) -> Option<crate::layout::Layout> {
+    let mut rng = Rng::new(seed ^ 0x1a0e);
+    let mut bad = layout.clone();
+    let nonzero: Vec<usize> = (0..sizes.len()).filter(|&b| sizes[b] > 0).collect();
+    // Conflicting pairs where both buffers occupy bytes: only these are
+    // guaranteed to clash when stacked on the same offset.
+    let hot: Vec<(usize, usize)> =
+        conflicts.iter().copied().filter(|&(a, b)| sizes[a] > 0 && sizes[b] > 0).collect();
+    match corruption {
+        LayoutCorruption::OverlapShift => {
+            // Move one buffer of a conflicting pair onto the other's
+            // start byte: both are simultaneously live, so they clash.
+            // Re-derive `total` so the arena accounting stays
+            // consistent and the overlap is the *only* falsified
+            // property.
+            let &(a, b) = hot.get((rng.next_u64() as usize) % hot.len().max(1))?;
+            bad.offsets[a] = bad.offsets[b];
+            bad.total = (0..sizes.len()).map(|i| bad.offsets[i] + sizes[i]).max().unwrap_or(0);
+        }
+        LayoutCorruption::OutOfArena => {
+            let &b = nonzero.first()?;
+            bad.offsets[b] = bad.total.saturating_sub(sizes[b] / 2).max(bad.offsets[b] + 1);
+        }
+        LayoutCorruption::TruncatedTotal => {
+            if bad.total == 0 {
+                return None;
+            }
+            bad.total -= 1;
+        }
+        LayoutCorruption::ZeroedOffsets => {
+            if hot.is_empty() {
+                return None;
+            }
+            for off in &mut bad.offsets {
+                *off = 0;
+            }
+            // As above: keep `total` truthful so only the overlap fails.
+            bad.total = sizes.iter().copied().max().unwrap_or(0);
         }
     }
     Some(bad)

@@ -213,7 +213,7 @@ fn discover_depth(
         // prefer the topmost op (longest path — more buffers tiled).
         let pos = (0..up_parts.len())
             .max_by_key(|&i| (std::cmp::Reverse(input_bytes(g, up_parts[i])), i))
-            .unwrap();
+            .unwrap_or(0);
         let mut path_up: Vec<OpId> = up_parts[..=pos].to_vec();
         path_up.reverse();
         starts.push((TerminalMode::Explicit, path_up.clone()));
@@ -234,7 +234,7 @@ fn discover_depth(
     if !down_parts.is_empty() {
         let pos = (0..down_parts.len())
             .max_by_key(|&i| (std::cmp::Reverse(output_bytes(g, down_parts[i])), i))
-            .unwrap();
+            .unwrap_or(0);
         ends.push((TerminalMode::Explicit, down_parts[..=pos].to_vec()));
         if pos + 1 < down_parts.len() {
             ends.push((TerminalMode::Explicit, down_parts.clone()));
@@ -257,7 +257,9 @@ fn discover_depth(
         return;
     }
 
-    let c = *g.tensor(critical).shape.last().unwrap();
+    let Some(&c) = g.tensor(critical).shape.last() else {
+        return;
+    };
     for (smode, sops) in &starts {
         for (emode, eops) in &ends {
             let mut ops = sops.clone();
@@ -344,15 +346,22 @@ fn discover_fm(
         let seg_up = &up_ops[..up_len];
         let seg_down = &down_ops[..down_len];
         // Terminal trim by buffer size (§4.3).
-        let sbest = seg_up.iter().copied().min_by_key(|&o| input_bytes(g, o)).unwrap();
-        let spos = seg_up.iter().position(|&o| o == sbest).unwrap();
-        let ebest = seg_down.iter().copied().min_by_key(|&o| output_bytes(g, o)).unwrap();
-        let epos = seg_down.iter().position(|&o| o == ebest).unwrap();
+        let Some(sbest) = seg_up.iter().copied().min_by_key(|&o| input_bytes(g, o)) else {
+            return;
+        };
+        let spos = seg_up.iter().position(|&o| o == sbest).unwrap_or(0);
+        let Some(ebest) = seg_down.iter().copied().min_by_key(|&o| output_bytes(g, o)) else {
+            return;
+        };
+        let epos = seg_down.iter().position(|&o| o == ebest).unwrap_or(0);
         let mut ops: Vec<OpId> = seg_up[..=spos].to_vec();
         ops.reverse();
         ops.extend(seg_down[..=epos].iter().copied());
         // Output spatial size of the last op bounds the partition count.
-        let last_shape = g.tensor(g.op(*ops.last().unwrap()).output).shape.clone();
+        let Some(&last_op) = ops.last() else {
+            return;
+        };
+        let last_shape = g.tensor(g.op(last_op).output).shape.clone();
         if last_shape.len() != 3 {
             return;
         }

@@ -134,7 +134,10 @@ impl<'g> Editor<'g> {
             .old
             .outputs
             .iter()
-            .map(|&t| self.tmap[t].expect("model output not produced by rewritten graph"))
+            .map(|&t| {
+                self.tmap[t]
+                    .unwrap_or_else(|| panic!("model output {t} not produced by rewritten graph"))
+            })
             .collect();
         self.new.outputs = outputs;
         self.new

@@ -20,7 +20,7 @@ mod slice;
 
 pub use editor::Editor;
 
-use crate::graph::{DType, Graph, Op, OpKind, Padding, TensorId};
+use crate::graph::{DType, Graph, Op, OpId, OpKind, Padding, TensorId};
 use crate::tiling::overlap::{bands, input_region, Region, TilePad};
 use crate::tiling::{
     activation_input, depth_ranges, depth_role, fm_role, DepthRole, FmRole, PartitionSpec,
@@ -40,7 +40,7 @@ pub fn apply_tiling(g: &Graph, cfg: &PathConfig) -> Result<Graph, String> {
     };
 
     let mut ed = Editor::new(g);
-    let post_old = g.op(*cfg.ops.last().unwrap()).output;
+    let post_old = g.op(path_last(cfg)).output;
 
     for oid in g.topo_order() {
         if path_set[oid] {
@@ -60,6 +60,11 @@ pub fn apply_tiling(g: &Graph, cfg: &PathConfig) -> Result<Graph, String> {
     out.name = g.name.clone();
     out.validate().map_err(|e| format!("transformed graph invalid: {e}"))?;
     Ok(out)
+}
+
+/// Last op of the path; `validate_config` guarantees it is non-empty.
+fn path_last(cfg: &PathConfig) -> OpId {
+    cfg.ops.last().copied().unwrap_or_else(|| panic!("empty tiling path"))
 }
 
 /// Structural checks before transforming.
@@ -118,14 +123,14 @@ fn validate_config(g: &Graph, cfg: &PathConfig) -> Result<(), String> {
         }
         PartitionSpec::Rows(nr) => {
             fm_checks(g, cfg)?;
-            let h = g.tensor(g.op(*cfg.ops.last().unwrap()).output).shape[0];
+            let h = g.tensor(g.op(path_last(cfg)).output).shape[0];
             if nr > h {
                 return Err(format!("{nr} row bands exceed {h} rows"));
             }
         }
         PartitionSpec::Grid(nh, nw) => {
             fm_checks(g, cfg)?;
-            let s = &g.tensor(g.op(*cfg.ops.last().unwrap()).output).shape;
+            let s = &g.tensor(g.op(path_last(cfg)).output).shape;
             if nh > s[0] || nw > s[1] {
                 return Err(format!("{nh}x{nw} grid exceeds {}x{}", s[0], s[1]));
             }
@@ -150,13 +155,15 @@ fn fm_checks(g: &Graph, cfg: &PathConfig) -> Result<(), String> {
 /// Channel count of the tiled region (the last axis shared by the path).
 fn tiled_channels(g: &Graph, cfg: &PathConfig) -> usize {
     let first = g.op(cfg.ops[0]);
-    if cfg.start == TerminalMode::Implicit {
+    let t = if cfg.start == TerminalMode::Implicit {
         // Fan-out: its output channels are what gets split.
-        *g.tensor(first.output).shape.last().unwrap()
+        first.output
     } else {
-        let ai = activation_input(first).unwrap();
-        *g.tensor(first.inputs[ai]).shape.last().unwrap()
-    }
+        let ai = activation_input(first)
+            .unwrap_or_else(|| panic!("{} has no activation input", first.name));
+        first.inputs[ai]
+    };
+    g.tensor(t).shape.last().copied().unwrap_or(1)
 }
 
 // ---------------------------------------------------------------------
@@ -167,7 +174,8 @@ fn emit_depth(g: &Graph, cfg: &PathConfig, n: usize, ed: &mut Editor) -> Result<
     let c = tiled_channels(g, cfg);
     let ranges = depth_ranges(c, n);
     let first_op = g.op(cfg.ops[0]);
-    let ai0 = activation_input(first_op).unwrap();
+    let ai0 = activation_input(first_op)
+        .ok_or_else(|| format!("{} has no activation input", first_op.name))?;
     let pre_old = first_op.inputs[ai0];
     let pre_new = ed.map_tensor(pre_old);
 
@@ -178,8 +186,10 @@ fn emit_depth(g: &Graph, cfg: &PathConfig, n: usize, ed: &mut Editor) -> Result<
         for (p, &(c0, c1)) in ranges.iter().enumerate() {
             let mut begins = vec![0; pre_shape.len()];
             let mut ends = pre_shape.clone();
-            *begins.last_mut().unwrap() = c0;
-            *ends.last_mut().unwrap() = c1;
+            if let (Some(b), Some(e)) = (begins.last_mut(), ends.last_mut()) {
+                *b = c0;
+                *e = c1;
+            }
             let out = ed.emit_op(
                 format!("split_p{p}"),
                 OpKind::Slice { begins, ends },
@@ -209,7 +219,7 @@ fn emit_depth(g: &Graph, cfg: &PathConfig, n: usize, ed: &mut Editor) -> Result<
     }
 
     // Terminal: merge partials or concat partitions.
-    let post_old = g.op(*cfg.ops.last().unwrap()).output;
+    let post_old = g.op(path_last(cfg)).output;
     let post_dtype = g.tensor(post_old).dtype;
     let out = if cfg.end == TerminalMode::Implicit {
         // The merge output is the in-place i32 accumulator the partials
@@ -326,7 +336,7 @@ fn emit_depth_op(
 // ---------------------------------------------------------------------
 
 fn emit_fm(g: &Graph, cfg: &PathConfig, ed: &mut Editor) -> Result<TensorId, String> {
-    let last = g.op(*cfg.ops.last().unwrap());
+    let last = g.op(path_last(cfg));
     let out_shape = g.tensor(last.output).shape.clone();
     let tiles: Vec<Region> = match cfg.spec {
         PartitionSpec::Rows(n) => bands(out_shape[0], n)
@@ -361,7 +371,9 @@ fn emit_fm(g: &Graph, cfg: &PathConfig, ed: &mut Editor) -> Result<TensorId, Str
     }
 
     let first_op = g.op(cfg.ops[0]);
-    let pre_old = first_op.inputs[activation_input(first_op).unwrap()];
+    let ai0 = activation_input(first_op)
+        .ok_or_else(|| format!("{} has no activation input", first_op.name))?;
+    let pre_old = first_op.inputs[ai0];
     let pre_new = ed.map_tensor(pre_old);
     let pre_shape = g.tensor(pre_old).shape.clone();
 

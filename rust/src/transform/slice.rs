@@ -39,7 +39,7 @@ pub fn fan_in_dense_rows(
     c1: usize,
 ) -> (Vec<usize>, Option<Vec<f32>>) {
     assert_eq!(w_shape.len(), 2);
-    let c = *in_shape.last().unwrap();
+    let c = *in_shape.last().unwrap_or_else(|| panic!("rank-0 input shape"));
     let lead: usize = in_shape[..in_shape.len() - 1].iter().product();
     assert_eq!(lead * c, w_shape[0], "dense weight rows must match input numel");
     assert!(c0 < c1 && c1 <= c);

@@ -1,0 +1,832 @@
+//! Static plan verifier — an independent safety oracle over a
+//! `(Graph, Schedule, Layout)` triple.
+//!
+//! FDT's whole value is that fused depthwise tiles share and overwrite
+//! buffers aggressively: slice outputs are views, concat partitions
+//! write straight into the destination, i32 partials accumulate in
+//! place at `Merge`. A single liveness or aliasing mistake silently
+//! corrupts activations on a device with no MMU, so every plan the flow
+//! emits passes through this module before anything downstream trusts
+//! it ([`crate::coordinator::try_optimize`] gates on it).
+//!
+//! The checker deliberately does **not** reuse the planners' own
+//! machinery to judge their output:
+//!
+//! * storage roots (SPLIT/CONCAT elision, in-place merge accumulators)
+//!   are re-resolved from the graph by an independent fixpoint
+//!   implementation and cross-validated against the cost model's
+//!   per-group read/write sets;
+//! * buffer liveness is re-derived from the schedule from first
+//!   principles (birth = first writing step, death = last referencing
+//!   step; model inputs born at step 0, model outputs die at the last
+//!   step) rather than taken from [`MemModel::lifetimes`];
+//! * every pair of simultaneously-live buffers is proven byte-disjoint
+//!   in the arena — not via [`crate::layout::Layout::is_valid`], which
+//!   trusts the planner's own conflict list;
+//! * every tensor's storage view is resolved symbolically
+//!   (slice/concat/merge aliasing) and its byte interval proven inside
+//!   its storage root and inside the planned arena;
+//! * the FDT partial-accumulation precondition (a partial may alias its
+//!   `Merge` accumulator only at exactly matching byte size) is
+//!   re-checked against the graph structure.
+//!
+//! On failure the verifier returns [`FdtError::PlanVerification`] with
+//! a structured [`PlanViolation`] counterexample: which check fell,
+//! at which op/step, which buffers, which byte range.
+//!
+//! [`verify_int8`] additionally audits a compiled
+//! [`Int8Executable`]: the concrete views and zero-init ranges the
+//! executor will really dereference must stay inside the arena
+//! (`FDT_ARENA_BYTES` in the generated C), and accumulator views must
+//! cover their root exactly (the zero-init wipes whole roots).
+
+use crate::analysis::MemModel;
+use crate::codegen::dense_strides;
+use crate::error::{FdtError, FdtResult, PlanViolation, VerifyCheck};
+use crate::exec::int8::Int8Executable;
+use crate::graph::fusion::{fuse, GroupId, Grouping};
+use crate::graph::{Graph, OpId, OpKind, TensorId, TensorKind};
+use crate::layout::{self, Layout, LayoutOptions};
+use crate::sched::{self, SchedOptions, Schedule};
+use std::fmt;
+
+/// Statistics of a successful verification — what was actually proven.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct VerifyReport {
+    /// RAM buffers in the plan.
+    pub buffers: usize,
+    /// Simultaneously-live buffer pairs proven byte-disjoint.
+    pub live_pairs: usize,
+    /// Tensor storage views proven inside their roots and the arena.
+    pub views: usize,
+    /// Verified arena size in bytes.
+    pub arena: usize,
+}
+
+impl fmt::Display for VerifyReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} buffers, {} live pairs disjoint, {} views in bounds, arena {} B",
+            self.buffers, self.live_pairs, self.views, self.arena
+        )
+    }
+}
+
+fn fail(
+    check: VerifyCheck,
+    op: impl Into<String>,
+    buffers: Vec<String>,
+    byte_range: Option<(usize, usize)>,
+    detail: impl Into<String>,
+) -> FdtError {
+    FdtError::PlanVerification(PlanViolation {
+        check,
+        op: op.into(),
+        buffers,
+        byte_range,
+        detail: detail.into(),
+    })
+}
+
+/// Independent storage-root resolution (the SPLIT/CONCAT elision rules
+/// of the paper / [`MemModel`], re-implemented as a one-step alias
+/// relation + fixpoint walk instead of the cost model's recursion):
+///
+/// 1. a `Slice` output aliases its source;
+/// 2. a non-I/O tensor whose only consumer is a `Concat` aliases the
+///    concat output;
+/// 3. a non-I/O tensor whose only consumer is a `Merge` of identical
+///    byte size aliases the merge accumulator (in-place `+=`).
+fn storage_roots(g: &Graph) -> Vec<TensorId> {
+    let producers = g.producers();
+    let consumers = g.consumers();
+    let mut parent: Vec<TensorId> = (0..g.tensors.len()).collect();
+    for t in 0..g.tensors.len() {
+        if let Some(p) = producers[t] {
+            if matches!(g.op(p).kind, OpKind::Slice { .. }) {
+                parent[t] = g.op(p).inputs[0];
+                continue;
+            }
+        }
+        if g.outputs.contains(&t) || g.tensor(t).kind == TensorKind::Input {
+            continue;
+        }
+        if let [c] = consumers[t][..] {
+            let cop = g.op(c);
+            match cop.kind {
+                OpKind::Concat { .. } => parent[t] = cop.output,
+                OpKind::Merge { .. }
+                    if g.tensor(cop.output).bytes() == g.tensor(t).bytes() =>
+                {
+                    parent[t] = cop.output
+                }
+                _ => {}
+            }
+        }
+    }
+    (0..parent.len())
+        .map(|t| {
+            let mut r = t;
+            // Alias chains are finite on a DAG; the guard bounds the walk
+            // defensively on corrupt inputs.
+            let mut guard = 0usize;
+            while parent[r] != r && guard <= parent.len() {
+                r = parent[r];
+                guard += 1;
+            }
+            r
+        })
+        .collect()
+}
+
+/// A symbolically resolved storage view: which arena buffer a tensor
+/// lives in and which element interval of it the kernels will touch.
+#[derive(Debug, Clone)]
+struct SymView {
+    /// Arena buffer index (same indexing as `Layout::offsets`).
+    buffer: usize,
+    /// Element offset within the root buffer.
+    off: usize,
+    /// Per-axis element strides (root coordinates).
+    strides: Vec<usize>,
+    shape: Vec<usize>,
+    /// Element width in bytes.
+    width: usize,
+    /// Reached through the in-place `Merge` accumulator alias.
+    accumulate: bool,
+}
+
+impl SymView {
+    fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+    /// One past the last element index addressed (relative to the root).
+    fn span_elems(&self) -> usize {
+        let reach: usize =
+            self.shape.iter().zip(&self.strides).map(|(&d, &s)| d.saturating_sub(1) * s).sum();
+        self.off + reach + 1
+    }
+}
+
+fn sym_view(
+    t: TensorId,
+    g: &Graph,
+    m: &MemModel,
+    producers: &[Option<OpId>],
+    consumers: &[Vec<OpId>],
+    memo: &mut Vec<Option<Option<SymView>>>,
+) -> Option<SymView> {
+    if let Some(v) = &memo[t] {
+        return v.clone();
+    }
+    memo[t] = Some(None); // cycle guard — validated graphs are DAGs
+    let tensor = g.tensor(t);
+    let width = tensor.dtype.size();
+    let v: Option<SymView> = 'resolve: {
+        if let Some(p) = producers[t] {
+            if let OpKind::Slice { begins, .. } = &g.op(p).kind {
+                let Some(src) = sym_view(g.op(p).inputs[0], g, m, producers, consumers, memo)
+                else {
+                    break 'resolve None;
+                };
+                let off = src.off
+                    + begins.iter().zip(&src.strides).map(|(&b, &s)| b * s).sum::<usize>();
+                break 'resolve Some(SymView {
+                    buffer: src.buffer,
+                    off,
+                    strides: src.strides.clone(),
+                    shape: tensor.shape.clone(),
+                    width,
+                    accumulate: false,
+                });
+            }
+        }
+        let is_io = g.outputs.contains(&t) || tensor.kind == TensorKind::Input;
+        if !is_io {
+            if let [c] = consumers[t][..] {
+                let cop = g.op(c);
+                match &cop.kind {
+                    OpKind::Concat { axis } => {
+                        let Some(dst) = sym_view(cop.output, g, m, producers, consumers, memo)
+                        else {
+                            break 'resolve None;
+                        };
+                        let mut pos = 0usize;
+                        for &i in &cop.inputs {
+                            if i == t {
+                                break;
+                            }
+                            pos += g.tensor(i).shape.get(*axis).copied().unwrap_or(0);
+                        }
+                        let step = dst.strides.get(*axis).copied().unwrap_or(0);
+                        break 'resolve Some(SymView {
+                            buffer: dst.buffer,
+                            off: dst.off + pos * step,
+                            strides: dst.strides.clone(),
+                            shape: tensor.shape.clone(),
+                            width,
+                            accumulate: dst.accumulate,
+                        });
+                    }
+                    OpKind::Merge { .. }
+                        if g.tensor(cop.output).bytes() == tensor.bytes() =>
+                    {
+                        let Some(dst) = sym_view(cop.output, g, m, producers, consumers, memo)
+                        else {
+                            break 'resolve None;
+                        };
+                        break 'resolve Some(SymView {
+                            buffer: dst.buffer,
+                            off: dst.off,
+                            strides: dense_strides(&tensor.shape),
+                            shape: tensor.shape.clone(),
+                            width,
+                            accumulate: true,
+                        });
+                    }
+                    _ => {}
+                }
+            }
+        }
+        let b = m.buffer_index[t];
+        if b == usize::MAX {
+            break 'resolve None; // interior to a fusion group: never in RAM
+        }
+        Some(SymView {
+            buffer: b,
+            off: 0,
+            strides: dense_strides(&tensor.shape),
+            shape: tensor.shape.clone(),
+            width,
+            accumulate: false,
+        })
+    };
+    memo[t] = Some(v.clone());
+    v
+}
+
+/// Name an op to attribute a tensor-level violation to: its producer,
+/// else its first consumer, else the tensor's own role.
+fn attribute(
+    g: &Graph,
+    producers: &[Option<OpId>],
+    consumers: &[Vec<OpId>],
+    t: TensorId,
+) -> String {
+    if let Some(p) = producers[t] {
+        return g.op(p).name.clone();
+    }
+    if let Some(&c) = consumers[t].first() {
+        return g.op(c).name.clone();
+    }
+    if g.tensor(t).kind == TensorKind::Input {
+        "<input>".to_string()
+    } else {
+        "<unused>".to_string()
+    }
+}
+
+/// Statically verify a complete memory plan.
+///
+/// `order` must be the schedule's group order and `layout` the arena
+/// placement for the buffers of `MemModel::new(g, grouping)`. Returns
+/// [`FdtError::PlanVerification`] with a structured counterexample on
+/// the first falsified property, or a [`VerifyReport`] of what was
+/// proven.
+pub fn verify_plan(
+    g: &Graph,
+    grouping: &Grouping,
+    order: &[GroupId],
+    layout: &Layout,
+) -> FdtResult<VerifyReport> {
+    // ---- 0. the graph itself -------------------------------------------
+    if let Err(e) = g.validate() {
+        return Err(fail(VerifyCheck::Graph, "<graph>", Vec::new(), None, e.to_string()));
+    }
+
+    // ---- 1. grouping consistency + schedule validity -------------------
+    let n = grouping.len();
+    if order.len() != n {
+        return Err(fail(
+            VerifyCheck::Schedule,
+            "<schedule>",
+            Vec::new(),
+            None,
+            format!("schedule has {} steps for {} fusion groups", order.len(), n),
+        ));
+    }
+    let mut seen = vec![false; n];
+    for &gid in order {
+        if gid >= n || seen[gid] {
+            return Err(fail(
+                VerifyCheck::Schedule,
+                format!("group{gid}"),
+                Vec::new(),
+                None,
+                if gid >= n {
+                    "schedule step names a nonexistent group"
+                } else {
+                    "group scheduled twice"
+                },
+            ));
+        }
+        seen[gid] = true;
+    }
+    for (gid, members) in grouping.groups.iter().enumerate() {
+        if members.is_empty() {
+            return Err(fail(
+                VerifyCheck::Schedule,
+                format!("group{gid}"),
+                Vec::new(),
+                None,
+                "empty fusion group",
+            ));
+        }
+        for &op in members {
+            if grouping.group_of.get(op).copied() != Some(gid) {
+                return Err(fail(
+                    VerifyCheck::Schedule,
+                    g.op(op).name.clone(),
+                    Vec::new(),
+                    None,
+                    format!("op listed in group{gid} but mapped elsewhere"),
+                ));
+            }
+        }
+    }
+    let mut pos = vec![usize::MAX; n];
+    for (i, &gid) in order.iter().enumerate() {
+        pos[gid] = i;
+    }
+    let producers = g.producers();
+    let consumers = g.consumers();
+    for (gid, ins) in grouping.inputs.iter().enumerate() {
+        for &t in ins {
+            if let Some(p) = producers.get(t).copied().flatten() {
+                let pg = grouping.group_of[p];
+                if pg != gid && pos[pg] >= pos[gid] {
+                    return Err(fail(
+                        VerifyCheck::Schedule,
+                        group_name(g, grouping, gid),
+                        vec![g.tensor(t).name.clone()],
+                        None,
+                        format!(
+                            "consumes `{}` produced by a group scheduled at step {} >= {}",
+                            g.tensor(t).name,
+                            pos[pg],
+                            pos[gid]
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // ---- 2. buffer table: independent roots vs the cost model ----------
+    let m = MemModel::new(g, grouping);
+    let roots = storage_roots(g);
+    let buffer_of = |t: TensorId| -> usize {
+        roots
+            .get(t)
+            .and_then(|&r| m.buffer_index.get(r))
+            .copied()
+            .unwrap_or(usize::MAX)
+    };
+    let nb = m.sizes.len();
+    if layout.offsets.len() != nb {
+        return Err(fail(
+            VerifyCheck::SizeMismatch,
+            "<layout>",
+            Vec::new(),
+            None,
+            format!("layout places {} buffers, plan has {}", layout.offsets.len(), nb),
+        ));
+    }
+    // Re-derive per-group read/write buffer sets and cross-validate them
+    // against the cost model's — any divergence between the two root
+    // resolutions is a planning-substrate bug worth failing loudly on.
+    for gid in 0..n {
+        let mut my_writes: Vec<usize> = grouping.outputs[gid]
+            .iter()
+            .map(|&t| buffer_of(t))
+            .filter(|&b| b != usize::MAX)
+            .collect();
+        my_writes.sort_unstable();
+        my_writes.dedup();
+        let mut mem_writes = m.group_writes[gid].clone();
+        mem_writes.sort_unstable();
+        let mut my_reads: Vec<usize> = grouping.inputs[gid]
+            .iter()
+            .map(|&t| buffer_of(t))
+            .filter(|&b| b != usize::MAX && !my_writes.contains(&b))
+            .collect();
+        my_reads.sort_unstable();
+        my_reads.dedup();
+        let mut mem_reads = m.group_reads[gid].clone();
+        mem_reads.sort_unstable();
+        if my_writes != mem_writes || my_reads != mem_reads {
+            return Err(fail(
+                VerifyCheck::SizeMismatch,
+                group_name(g, grouping, gid),
+                Vec::new(),
+                None,
+                "cost model read/write sets disagree with independent root resolution",
+            ));
+        }
+    }
+    for b in 0..nb {
+        let derived = g.tensor(m.buffers[b]).bytes();
+        if derived != m.sizes[b] {
+            return Err(fail(
+                VerifyCheck::SizeMismatch,
+                attribute(g, &producers, &consumers, m.buffers[b]),
+                vec![g.tensor(m.buffers[b]).name.clone()],
+                None,
+                format!("buffer sized {} B, tensor needs {} B", m.sizes[b], derived),
+            ));
+        }
+    }
+
+    // ---- 3. arena bounds + total ---------------------------------------
+    for b in 0..nb {
+        if m.sizes[b] == 0 {
+            continue;
+        }
+        let end = layout.offsets[b] + m.sizes[b];
+        if end > layout.total {
+            return Err(fail(
+                VerifyCheck::ArenaBounds,
+                attribute(g, &producers, &consumers, m.buffers[b]),
+                vec![g.tensor(m.buffers[b]).name.clone()],
+                Some((layout.offsets[b], end)),
+                format!("buffer ends at {} B, past the {} B arena", end, layout.total),
+            ));
+        }
+    }
+    let max_end =
+        (0..nb).map(|b| layout.offsets[b] + m.sizes[b]).max().unwrap_or(0);
+    if layout.total != max_end {
+        return Err(fail(
+            VerifyCheck::SizeMismatch,
+            "<layout>",
+            Vec::new(),
+            Some((max_end.min(layout.total), max_end.max(layout.total))),
+            format!("arena total {} B != max buffer end {} B", layout.total, max_end),
+        ));
+    }
+
+    // ---- 4. liveness from first principles + disjointness --------------
+    let mut writes_at: Vec<Vec<usize>> = vec![Vec::new(); nb];
+    let mut reads_at: Vec<Vec<usize>> = vec![Vec::new(); nb];
+    for (gid, outs) in grouping.outputs.iter().enumerate() {
+        for &t in outs {
+            let b = buffer_of(t);
+            if b != usize::MAX {
+                writes_at[b].push(pos[gid]);
+            }
+        }
+    }
+    for (gid, ins) in grouping.inputs.iter().enumerate() {
+        for &t in ins {
+            let b = buffer_of(t);
+            if b != usize::MAX {
+                reads_at[b].push(pos[gid]);
+            }
+        }
+    }
+    let mut is_out = vec![false; nb];
+    for &t in &g.outputs {
+        let b = buffer_of(t);
+        if b != usize::MAX {
+            is_out[b] = true;
+        }
+    }
+    let last = order.len().saturating_sub(1);
+    let life: Vec<(usize, usize)> = (0..nb)
+        .map(|b| {
+            let birth = writes_at[b].iter().min().copied().unwrap_or(0);
+            let death = if is_out[b] {
+                last
+            } else {
+                reads_at[b]
+                    .iter()
+                    .chain(writes_at[b].iter())
+                    .max()
+                    .copied()
+                    .unwrap_or(birth)
+            };
+            (birth, death)
+        })
+        .collect();
+    // Birth-ordered sweep: every pair alive at a common step must occupy
+    // disjoint arena bytes.
+    let mut by_birth: Vec<usize> = (0..nb).filter(|&b| m.sizes[b] > 0).collect();
+    by_birth.sort_unstable_by_key(|&b| life[b].0);
+    let mut active: Vec<usize> = Vec::new();
+    let mut live_pairs = 0usize;
+    for &b in &by_birth {
+        let (birth, _) = life[b];
+        active.retain(|&a| life[a].1 >= birth);
+        for &a in &active {
+            live_pairs += 1;
+            let (sa, ea) = (layout.offsets[a], layout.offsets[a] + m.sizes[a]);
+            let (sb, eb) = (layout.offsets[b], layout.offsets[b] + m.sizes[b]);
+            if sa < eb && sb < ea {
+                let step = life[a].0.max(birth);
+                let op = order
+                    .get(step)
+                    .map(|&gid| group_name(g, grouping, gid))
+                    .unwrap_or_else(|| "<init>".to_string());
+                return Err(fail(
+                    VerifyCheck::Overlap,
+                    op,
+                    vec![
+                        g.tensor(m.buffers[a]).name.clone(),
+                        g.tensor(m.buffers[b]).name.clone(),
+                    ],
+                    Some((sa.max(sb), ea.min(eb))),
+                    format!(
+                        "both live over steps [{}, {}] but share arena bytes \
+                         ([{sa}, {ea}) vs [{sb}, {eb}))",
+                        life[a].0.max(birth),
+                        life[a].1.min(life[b].1),
+                    ),
+                ));
+            }
+        }
+        active.push(b);
+    }
+
+    // ---- 5. per-tensor symbolic view intervals --------------------------
+    let mut memo: Vec<Option<Option<SymView>>> = vec![None; g.tensors.len()];
+    let mut views_checked = 0usize;
+    for t in 0..g.tensors.len() {
+        let Some(v) = sym_view(t, g, &m, &producers, &consumers, &mut memo) else {
+            continue;
+        };
+        if v.numel() == 0 {
+            continue;
+        }
+        views_checked += 1;
+        let span = v.span_elems();
+        let root_bytes = m.sizes.get(v.buffer).copied().unwrap_or(0);
+        let base = layout.offsets.get(v.buffer).copied().unwrap_or(0);
+        let root_name = m
+            .buffers
+            .get(v.buffer)
+            .map(|&r| g.tensor(r).name.clone())
+            .unwrap_or_else(|| format!("buffer{}", v.buffer));
+        if span * v.width > root_bytes {
+            return Err(fail(
+                VerifyCheck::RootEscape,
+                attribute(g, &producers, &consumers, t),
+                vec![g.tensor(t).name.clone(), root_name],
+                Some((base + v.off * v.width, base + span * v.width)),
+                format!(
+                    "view of `{}` addresses {} B of its {} B storage root",
+                    g.tensor(t).name,
+                    span * v.width,
+                    root_bytes
+                ),
+            ));
+        }
+        if base + span * v.width > layout.total {
+            return Err(fail(
+                VerifyCheck::ArenaBounds,
+                attribute(g, &producers, &consumers, t),
+                vec![g.tensor(t).name.clone(), root_name],
+                Some((base + v.off * v.width, base + span * v.width)),
+                format!(
+                    "view of `{}` ends at byte {}, past the {} B arena",
+                    g.tensor(t).name,
+                    base + span * v.width,
+                    layout.total
+                ),
+            ));
+        }
+    }
+
+    // ---- 6. FDT partial-accumulation aliasing ---------------------------
+    // A merge input may share storage with the accumulator only at
+    // exactly matching byte size — an undersized partial accumulated in
+    // place would leave stale bytes, an oversized one would clobber a
+    // neighbour. Checked directly on the graph + root relation, not on
+    // the view rules that encode the same precondition.
+    for op in &g.ops {
+        if let OpKind::Merge { .. } = op.kind {
+            let ob = buffer_of(op.output);
+            if ob == usize::MAX {
+                continue;
+            }
+            for &p in &op.inputs {
+                if buffer_of(p) == ob && g.tensor(p).bytes() != g.tensor(op.output).bytes() {
+                    return Err(fail(
+                        VerifyCheck::Accumulation,
+                        op.name.clone(),
+                        vec![g.tensor(p).name.clone(), g.tensor(op.output).name.clone()],
+                        None,
+                        format!(
+                            "partial `{}` ({} B) shares the accumulator of `{}` ({} B)",
+                            g.tensor(p).name,
+                            g.tensor(p).bytes(),
+                            g.tensor(op.output).name,
+                            g.tensor(op.output).bytes()
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    Ok(VerifyReport { buffers: nb, live_pairs, views: views_checked, arena: layout.total })
+}
+
+/// Display name of a fusion group: its anchor (last member) op.
+fn group_name(g: &Graph, grouping: &Grouping, gid: GroupId) -> String {
+    grouping
+        .groups
+        .get(gid)
+        .and_then(|ms| ms.last())
+        .map(|&o| g.op(o).name.clone())
+        .unwrap_or_else(|| format!("group{gid}"))
+}
+
+/// Audit a compiled [`Int8Executable`]: every concrete view and
+/// zero-init range the executor dereferences must stay inside the arena,
+/// and in-place accumulators must cover their root exactly (their
+/// zero-init wipes the whole root).
+pub fn verify_int8(exe: &Int8Executable) -> FdtResult<VerifyReport> {
+    let arena = exe.arena_bytes;
+    let mut views = 0usize;
+    for (t, view) in exe.views.iter().enumerate() {
+        let Some(v) = view else { continue };
+        if v.numel() == 0 {
+            continue;
+        }
+        views += 1;
+        let span = v.off
+            + v.shape
+                .iter()
+                .zip(&v.strides)
+                .map(|(&d, &s)| d.saturating_sub(1) * s)
+                .sum::<usize>()
+            + 1;
+        let w = v.elem.size();
+        let name = exe.g.tensor(t).name.clone();
+        if span * w > v.root_bytes {
+            return Err(fail(
+                VerifyCheck::RootEscape,
+                name.clone(),
+                vec![name],
+                Some((v.base + v.off * w, v.base + span * w)),
+                format!("compiled view addresses {} B of a {} B root", span * w, v.root_bytes),
+            ));
+        }
+        if v.base + span * w > arena {
+            return Err(fail(
+                VerifyCheck::ArenaBounds,
+                name.clone(),
+                vec![name],
+                Some((v.base + v.off * w, v.base + span * w)),
+                format!("compiled view ends at byte {}, arena is {} B", v.base + span * w, arena),
+            ));
+        }
+        if v.accumulate && (v.off != 0 || v.numel() * w != v.root_bytes) {
+            return Err(fail(
+                VerifyCheck::Accumulation,
+                name.clone(),
+                vec![name],
+                Some((v.base, v.base + v.root_bytes)),
+                format!(
+                    "accumulator view covers {} B at element offset {} of a {} B root",
+                    v.numel() * w,
+                    v.off,
+                    v.root_bytes
+                ),
+            ));
+        }
+    }
+    for (i, step) in exe.steps.iter().enumerate() {
+        let Some((base, len)) = step.zero else { continue };
+        if base + len > arena {
+            return Err(fail(
+                VerifyCheck::ArenaBounds,
+                format!("step{i}"),
+                Vec::new(),
+                Some((base, base + len)),
+                format!("zero-init range ends at byte {}, arena is {arena} B", base + len),
+            ));
+        }
+    }
+    Ok(VerifyReport { buffers: 0, live_pairs: 0, views, arena })
+}
+
+/// Convenience entry point for the CLI and tests: validate, fuse,
+/// schedule, plan and verify `g` in one call. Unlike [`verify_plan`]
+/// (whose `Grouping` argument requires a pre-validated graph), this
+/// accepts arbitrary — e.g. fuzz-corrupted — graphs and reports their
+/// structural failures as [`VerifyCheck::Graph`] violations.
+pub fn plan_and_verify(
+    g: &Graph,
+    sched_opts: SchedOptions,
+    layout_opts: LayoutOptions,
+) -> FdtResult<(VerifyReport, Schedule, Layout)> {
+    if let Err(e) = g.validate() {
+        return Err(fail(VerifyCheck::Graph, "<graph>", Vec::new(), None, e.to_string()));
+    }
+    let grouping = fuse(g);
+    let (s, l) = {
+        let m = MemModel::new(g, &grouping);
+        let s = sched::schedule(&m, sched_opts);
+        let l = layout::plan(&m, &s.order, layout_opts);
+        (s, l)
+    };
+    let report = verify_plan(g, &grouping, &s.order, &l)?;
+    Ok((report, s, l))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::fusion::fuse;
+    use crate::graph::{ActKind, DType, GraphBuilder, Padding};
+
+    fn chain() -> Graph {
+        let mut b = GraphBuilder::new("vchain");
+        let x = b.input("x", vec![8, 8, 4], DType::I8);
+        let y = b.conv2d(x, 16, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+        let z = b.conv2d(y, 2, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+        b.finish(vec![z])
+    }
+
+    #[test]
+    fn valid_plan_verifies() {
+        let g = chain();
+        let (report, _, _) =
+            plan_and_verify(&g, SchedOptions::default(), LayoutOptions::default()).unwrap();
+        assert!(report.buffers >= 3);
+        assert!(report.live_pairs >= 2);
+        assert!(report.arena > 0);
+    }
+
+    #[test]
+    fn overlap_is_pinpointed() {
+        let g = chain();
+        let grouping = fuse(&g);
+        let m = MemModel::new(&g, &grouping);
+        let s = sched::schedule(&m, SchedOptions::default());
+        let mut l = layout::plan(&m, &s.order, LayoutOptions::default());
+        // Collapse every conflicting buffer onto offset 0.
+        for off in &mut l.offsets {
+            *off = 0;
+        }
+        l.total = m.sizes.iter().copied().max().unwrap_or(0);
+        let err = verify_plan(&g, &grouping, &s.order, &l).unwrap_err();
+        match err {
+            FdtError::PlanVerification(v) => {
+                assert_eq!(v.check, VerifyCheck::Overlap);
+                assert_eq!(v.buffers.len(), 2);
+                let (lo, hi) = v.byte_range.expect("overlap carries a byte range");
+                assert!(lo < hi);
+            }
+            other => panic!("expected PlanVerification, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_schedule_is_rejected() {
+        let g = chain();
+        let grouping = fuse(&g);
+        let m = MemModel::new(&g, &grouping);
+        let s = sched::schedule(&m, SchedOptions::default());
+        let l = layout::plan(&m, &s.order, LayoutOptions::default());
+        let mut rev = s.order.clone();
+        rev.reverse();
+        let err = verify_plan(&g, &grouping, &rev, &l).unwrap_err();
+        match err {
+            FdtError::PlanVerification(v) => assert_eq!(v.check, VerifyCheck::Schedule),
+            other => panic!("expected PlanVerification, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn out_of_arena_is_rejected() {
+        let g = chain();
+        let grouping = fuse(&g);
+        let m = MemModel::new(&g, &grouping);
+        let s = sched::schedule(&m, SchedOptions::default());
+        let mut l = layout::plan(&m, &s.order, LayoutOptions::default());
+        if let Some(off) = l.offsets.first_mut() {
+            *off += 1 << 20; // ends past the declared total
+        }
+        let err = verify_plan(&g, &grouping, &s.order, &l).unwrap_err();
+        match err {
+            FdtError::PlanVerification(v) => {
+                assert_eq!(v.check, VerifyCheck::ArenaBounds);
+                assert!(v.byte_range.is_some());
+            }
+            other => panic!("expected PlanVerification, got {other:?}"),
+        }
+    }
+}

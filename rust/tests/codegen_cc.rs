@@ -12,6 +12,19 @@ use fdt::models;
 use std::io::Write;
 use std::process::Command;
 
+/// `cc` flags for the cross-check builds. Set `FDT_CC_SANITIZE=1` (the
+/// CI `c-sanitizers` job does) to compile under ASan + UBSan with
+/// recovery disabled, so any out-of-arena access, misaligned load or
+/// signed overflow in the *generated* kernels aborts the test binary
+/// instead of silently producing the right answer by luck.
+fn cc_flags() -> Vec<&'static str> {
+    let mut flags = vec!["-O1"];
+    if std::env::var_os("FDT_CC_SANITIZE").is_some_and(|v| v != "0") {
+        flags.extend(["-g", "-fsanitize=address,undefined", "-fno-sanitize-recover=all"]);
+    }
+    flags
+}
+
 /// Compile `module.source` + a test main with baked inputs; run; compare.
 fn check_c_matches_interpreter(g: &Graph, tag: &str) {
     let module = generate(g).unwrap_or_else(|e| panic!("{} {tag}: {e}", g.name));
@@ -70,7 +83,8 @@ fn check_c_matches_interpreter(g: &Graph, tag: &str) {
     std::fs::File::create(dir.join("main.c")).unwrap().write_all(main_c.as_bytes()).unwrap();
     let exe = dir.join("test");
     let cc = Command::new("cc")
-        .args(["-O1", "-o"])
+        .args(cc_flags())
+        .arg("-o")
         .arg(&exe)
         .arg(dir.join("model.c"))
         .arg(dir.join("main.c"))
@@ -246,7 +260,8 @@ fn check_int8_c_with_cal(g: &Graph, cal: &fdt::quant::Calibration, tag: &str, ls
     std::fs::File::create(dir.join("main.c")).unwrap().write_all(main_c.as_bytes()).unwrap();
     let exe_path = dir.join("test");
     let cc = Command::new("cc")
-        .args(["-O1", "-o"])
+        .args(cc_flags())
+        .arg("-o")
         .arg(&exe_path)
         .arg(dir.join("model.c"))
         .arg(dir.join("main.c"))
@@ -335,4 +350,65 @@ fn same_padding_convention_c_matches_interpreter_over_grid() {
         let g = b.finish(vec![y]);
         check_c_matches_interpreter(&g, "padgrid");
     }
+}
+
+// ---------------------------------------------------------------------
+// Explicit Pad ops through the int8 C backend (parity-gap regression)
+// ---------------------------------------------------------------------
+
+use fdt::graph::OpKind;
+
+#[test]
+fn int8_c_pad_folded_into_convs_bit_exact() {
+    // Explicit asymmetric `Pad` ops fused forward into conv/dwconv: the
+    // C backend folds them into the loop bounds (origin shift + clip to
+    // the inner view) instead of materializing. All-integer chain, so
+    // 0.4 codes asserts bit-exactness — including the conv's own Same
+    // padding stacked on top of the folded pad.
+    let mut b = GraphBuilder::new("pad_conv");
+    let x = b.input("x", vec![7, 7, 3], DType::I8);
+    let p = b.op(OpKind::Pad { pads: vec![(2, 1), (0, 3), (0, 0)] }, vec![x]);
+    let y = b.conv2d(p, 4, (3, 3), (2, 2), Padding::Valid, ActKind::Relu);
+    let p2 = b.op(OpKind::Pad { pads: vec![(1, 1), (1, 1), (0, 0)] }, vec![y]);
+    let y = b.dwconv(p2, (3, 3), (1, 1), Padding::Same, ActKind::Relu6);
+    let g = b.finish(vec![y]);
+    check_int8_c_matches_interpreter(&g, "padconv", 0.4);
+}
+
+#[test]
+fn int8_c_pad_folded_into_pools_matches() {
+    // Pad fused into max/avg pooling: the fold cannot skip fill taps
+    // (the fill participates in `max` and in the mean's divisor), so
+    // the C kernel guards on the padded extent and reads the zero point
+    // for out-of-inner taps. MaxPool stays integer; AvgPool's f64 mean
+    // gets the usual one-LSB allowance.
+    let mut b = GraphBuilder::new("pad_pool");
+    let x = b.input("x", vec![6, 6, 2], DType::I8);
+    let p = b.op(OpKind::Pad { pads: vec![(1, 0), (0, 1), (0, 0)] }, vec![x]);
+    let y = b.op(
+        OpKind::MaxPool2d { ksize: (2, 2), stride: (2, 2), padding: Padding::Valid },
+        vec![p],
+    );
+    let p2 = b.op(OpKind::Pad { pads: vec![(1, 1), (1, 1), (0, 0)] }, vec![y]);
+    let y = b.op(
+        OpKind::AvgPool2d { ksize: (3, 3), stride: (1, 1), padding: Padding::Valid },
+        vec![p2],
+    );
+    let g = b.finish(vec![y]);
+    check_int8_c_matches_interpreter(&g, "padpool", 0.9);
+}
+
+#[test]
+fn int8_c_materialized_pad_matches() {
+    // Pads that cannot fold: a dense consumer (not conv-like, so the
+    // pad is a singleton group materialized by zero-point fill +
+    // scatter — including a channel pad) and a pad that is itself a
+    // model output (rank-1, after the dense head).
+    let mut b = GraphBuilder::new("pad_mat");
+    let x = b.input("x", vec![4, 4, 2], DType::I8);
+    let p = b.op(OpKind::Pad { pads: vec![(1, 1), (2, 0), (1, 1)] }, vec![x]);
+    let y = b.dense_act(p, 5, ActKind::Relu);
+    let p_out = b.op(OpKind::Pad { pads: vec![(0, 3)] }, vec![y]);
+    let g = b.finish(vec![p_out]);
+    check_int8_c_matches_interpreter(&g, "padmat", 0.4);
 }

@@ -1,0 +1,237 @@
+//! Adversarial suite for the static plan verifier (`fdt::verify`).
+//!
+//! Two directions, both load-bearing:
+//!
+//! * **No false positives** — every plan the planners actually emit
+//!   (B&B and heuristic/first-fit, untiled and tiled, the whole model
+//!   zoo plus fuzz graphs) must verify clean, since the verifier gates
+//!   `coordinator::try_optimize`.
+//! * **No false negatives** — every seeded corruption of a valid graph
+//!   ([`fdt::testing::mutate_invalid`]) or of a valid layout
+//!   ([`fdt::testing::mutate_layout`]) must be rejected with a
+//!   structured [`fdt::PlanViolation`] naming the right check, the
+//!   offending buffers, and (for spatial violations) the byte window.
+
+use fdt::analysis::MemModel;
+use fdt::coordinator::{optimize, try_optimize, FlowOptions};
+use fdt::graph::fusion::fuse;
+use fdt::graph::{ActKind, DType, GraphBuilder, Padding};
+use fdt::layout::{Layout, LayoutOptions};
+use fdt::models;
+use fdt::sched::SchedOptions;
+use fdt::testing::{mutate_invalid, mutate_layout, random_graph, Corruption, LayoutCorruption};
+use fdt::verify::{plan_and_verify, verify_plan};
+use fdt::{FdtError, VerifyCheck};
+
+/// Solver budgets small enough to keep the big zoo models (PoseNet,
+/// SSDLite) fast in debug builds while still exercising the B&B path.
+fn capped() -> (SchedOptions, LayoutOptions) {
+    let s = SchedOptions { bnb_node_budget: 200_000, wall_ms: Some(2_000), use_sp: true };
+    let l = LayoutOptions { bnb_node_budget: 200_000, wall_ms: Some(2_000) };
+    (s, l)
+}
+
+/// Budget-zero options: the B&B solvers fall back to their heuristics
+/// (hill-valley schedule, first-fit layout) immediately.
+fn heuristic() -> (SchedOptions, LayoutOptions) {
+    let s = SchedOptions { bnb_node_budget: 0, wall_ms: Some(1), use_sp: true };
+    let l = LayoutOptions { bnb_node_budget: 0, wall_ms: Some(1) };
+    (s, l)
+}
+
+#[test]
+fn zoo_bnb_plans_verify_clean() {
+    let (so, lo) = capped();
+    for g in models::zoo() {
+        let (rep, s, _l) = plan_and_verify(&g, so, lo)
+            .unwrap_or_else(|e| panic!("{}: clean B&B plan rejected: {e}", g.name));
+        assert!(rep.buffers > 0, "{}: no buffers verified", g.name);
+        assert_eq!(s.order.len(), fuse(&g).len(), "{}: schedule length", g.name);
+    }
+}
+
+#[test]
+fn zoo_heuristic_plans_verify_clean() {
+    let (so, lo) = heuristic();
+    for g in models::zoo() {
+        plan_and_verify(&g, so, lo)
+            .unwrap_or_else(|e| panic!("{}: clean heuristic plan rejected: {e}", g.name));
+    }
+    for g in [models::posenet_tiny(), models::ssdlite_tiny(), models::swiftnet_like()] {
+        plan_and_verify(&g, so, lo)
+            .unwrap_or_else(|e| panic!("{}: clean heuristic plan rejected: {e}", g.name));
+    }
+}
+
+#[test]
+fn tiled_plans_verify_clean() {
+    // Tiled graphs carry the structures the verifier has to reason
+    // hardest about: slice/concat views, merge accumulator aliasing,
+    // partial-sum groups.
+    for g in [models::txt(), models::radar(), models::fig5_example()] {
+        let r = optimize(&g, &FlowOptions::default());
+        let (so, lo) = capped();
+        plan_and_verify(&r.graph, so, lo)
+            .unwrap_or_else(|e| panic!("{}: tiled plan rejected: {e}", g.name));
+    }
+}
+
+#[test]
+fn fuzz_graphs_verify_clean() {
+    let (so, lo) = capped();
+    for seed in 0..24 {
+        let g = random_graph(seed);
+        plan_and_verify(&g, so, lo)
+            .unwrap_or_else(|e| panic!("seed {seed}: clean fuzz plan rejected: {e}"));
+    }
+}
+
+#[test]
+fn corrupted_graphs_rejected_as_graph_violations() {
+    let (so, lo) = capped();
+    let mut hits = 0;
+    for seed in 0..8 {
+        let g = random_graph(seed);
+        for c in [
+            Corruption::DanglingInput,
+            Corruption::WrongShape,
+            Corruption::Cycle,
+            Corruption::ZeroExtentInput,
+        ] {
+            let Some(bad) = mutate_invalid(&g, c, seed) else { continue };
+            match plan_and_verify(&bad, so, lo) {
+                Ok(_) => panic!("seed {seed} {c:?}: corrupted graph accepted"),
+                Err(FdtError::PlanVerification(v)) => {
+                    assert_eq!(v.check, VerifyCheck::Graph, "seed {seed} {c:?}: {v}");
+                    hits += 1;
+                }
+                Err(e) => panic!("seed {seed} {c:?}: untyped rejection: {e}"),
+            }
+        }
+    }
+    assert!(hits >= 24, "corruption coverage collapsed: only {hits} rejections");
+}
+
+#[test]
+fn corrupted_layouts_pinpointed() {
+    let graphs = [models::kws(), models::txt(), random_graph(3), random_graph(7)];
+    let (so, lo) = capped();
+    let mut hits = 0;
+    for g in &graphs {
+        let grouping = fuse(g);
+        let m = MemModel::new(g, &grouping);
+        let s = fdt::sched::schedule(&m, so);
+        let l = fdt::layout::plan(&m, &s.order, lo);
+        verify_plan(g, &grouping, &s.order, &l)
+            .unwrap_or_else(|e| panic!("{}: clean plan rejected: {e}", g.name));
+        let conflicts = m.conflicts(&s.order);
+        for corr in [
+            LayoutCorruption::OverlapShift,
+            LayoutCorruption::OutOfArena,
+            LayoutCorruption::TruncatedTotal,
+            LayoutCorruption::ZeroedOffsets,
+        ] {
+            for seed in 0..4 {
+                let Some(bad) = mutate_layout(&l, &m.sizes, &conflicts, corr, seed) else {
+                    continue;
+                };
+                let v = match verify_plan(g, &grouping, &s.order, &bad) {
+                    Ok(_) => {
+                        panic!("{} {corr:?} seed {seed}: corrupted layout accepted", g.name)
+                    }
+                    Err(FdtError::PlanVerification(v)) => v,
+                    Err(e) => panic!("{} {corr:?} seed {seed}: untyped rejection: {e}", g.name),
+                };
+                let expected: &[VerifyCheck] = match corr {
+                    LayoutCorruption::OverlapShift | LayoutCorruption::ZeroedOffsets => {
+                        &[VerifyCheck::Overlap]
+                    }
+                    LayoutCorruption::OutOfArena => &[VerifyCheck::ArenaBounds],
+                    LayoutCorruption::TruncatedTotal => {
+                        &[VerifyCheck::ArenaBounds, VerifyCheck::SizeMismatch]
+                    }
+                };
+                assert!(
+                    expected.contains(&v.check),
+                    "{} {corr:?} seed {seed}: wrong check kind: {v}",
+                    g.name
+                );
+                match v.check {
+                    VerifyCheck::Overlap => {
+                        assert_eq!(v.buffers.len(), 2, "{v}");
+                        let (lo_b, hi_b) = v.byte_range.unwrap_or((0, 0));
+                        assert!(lo_b < hi_b, "degenerate overlap window: {v}");
+                    }
+                    VerifyCheck::ArenaBounds => {
+                        assert!(!v.buffers.is_empty() && v.byte_range.is_some(), "{v}");
+                    }
+                    _ => {}
+                }
+                hits += 1;
+            }
+        }
+    }
+    assert!(hits >= 16, "layout-corruption coverage collapsed: only {hits} rejections");
+}
+
+#[test]
+fn handbuilt_overlap_reports_exact_bytes() {
+    // x -> conv1 -> conv2: conv1's output and conv2's output are
+    // simultaneously live while conv2 runs. Place them by hand so they
+    // overlap over a known window and check the counterexample verbatim.
+    let mut b = GraphBuilder::new("overlap");
+    let x = b.input("x", vec![6, 6, 2], DType::I8);
+    let y = b.conv2d(x, 4, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+    let z = b.conv2d(y, 2, (3, 3), (1, 1), Padding::Same, ActKind::Relu);
+    let g = b.finish(vec![z]);
+    let grouping = fuse(&g);
+    let m = MemModel::new(&g, &grouping);
+    let (so, _) = capped();
+    let s = fdt::sched::schedule(&m, so);
+
+    let n = m.sizes.len();
+    assert_eq!(n, 3, "expected exactly input/mid/output buffers");
+    let bx = m.buffer_index[g.inputs[0]];
+    let bz = (0..n).find(|&i| m.is_output[i]).unwrap_or(n);
+    let by = (0..n).find(|&i| i != bx && i != bz).unwrap_or(n);
+    let (sx, sy) = (m.sizes[bx], m.sizes[by]);
+    assert!(sy > 8, "mid buffer too small to stage the overlap");
+
+    // y at [sx, sx+sy); z shifted to start 8 bytes before y's end.
+    let mut offsets = vec![0; n];
+    offsets[bx] = 0;
+    offsets[by] = sx;
+    offsets[bz] = sx + sy - 8;
+    let total = (0..n).map(|i| offsets[i] + m.sizes[i]).max().unwrap_or(0);
+    let bad = Layout { offsets, total, strategy: "handbuilt", optimal: false };
+
+    match verify_plan(&g, &grouping, &s.order, &bad) {
+        Ok(_) => panic!("overlapping hand-built layout accepted"),
+        Err(FdtError::PlanVerification(v)) => {
+            assert_eq!(v.check, VerifyCheck::Overlap, "{v}");
+            let names: Vec<String> =
+                vec![g.tensor(m.buffers[by]).name.clone(), g.tensor(m.buffers[bz]).name.clone()];
+            let mut got = v.buffers.clone();
+            got.sort();
+            let mut want = names;
+            want.sort();
+            assert_eq!(got, want, "{v}");
+            let lo_b = sx + sy - 8;
+            let hi_b = (sx + sy).min(lo_b + m.sizes[bz]);
+            assert_eq!(v.byte_range, Some((lo_b, hi_b)), "{v}");
+        }
+        Err(e) => panic!("untyped rejection: {e}"),
+    }
+}
+
+#[test]
+fn flow_gate_accepts_models_end_to_end() {
+    // `try_optimize` verifies every emitted plan (untiled evaluation,
+    // every screened candidate's winner, and the final int8 arena);
+    // a verifier false positive would surface here as an Err.
+    for g in [models::kws(), models::magic_wand(), models::fig5_example()] {
+        let r = try_optimize(&g, &FlowOptions::default())
+            .unwrap_or_else(|e| panic!("{}: flow gate tripped: {e}", g.name));
+        assert!(r.final_eval.ram <= r.initial.ram, "{}: flow regressed RAM", g.name);
+    }
+}
