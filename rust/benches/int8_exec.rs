@@ -1,0 +1,72 @@
+//! Bench: **int8 serving throughput** — the native arena interpreter on
+//! the paper's model zoo, untiled vs FDT/FFMT-tiled, scalar vs
+//! dispatched SIMD microkernels.
+//!
+//! The paper's claim is about *memory*: tiling must not change what is
+//! computed, only where it lives. This bench quantifies the *time* side
+//! of that bargain after the kernel-dispatch work: how much the SIMD
+//! tier (AVX2/NEON, selected at plan time) buys over the bit-identical
+//! scalar reference, and what the tiled schedule costs or saves at
+//! execution time. Emits `BENCH_int8.json` for the CI bench-trend job.
+//!
+//! ```bash
+//! cargo bench --bench int8_exec
+//! ```
+
+use fdt::bench::{bench, black_box, header, write_json, JsonRecord};
+use fdt::coordinator::{optimize, FlowOptions};
+use fdt::exec::int8::Int8Executable;
+use fdt::exec::random_inputs;
+use fdt::models;
+use fdt::quant::{calibrate, int8::compile, transfer};
+use std::time::Duration;
+
+fn main() {
+    header(
+        "int8_exec",
+        "int8 interpreter throughput: scalar vs dispatched SIMD, untiled vs tiled",
+    );
+    println!(
+        "{:<6} {:<8} {:>8} {:>14} {:>14} {:>9}",
+        "Graph", "variant", "kernels", "scalar (us)", "simd (us)", "speedup"
+    );
+    let mut records: Vec<(String, JsonRecord)> = Vec::new();
+    for name in ["KWS", "TXT", "MW", "RAD"] {
+        let g = models::by_name(name).unwrap();
+        let cal = calibrate(&g, 1, 7).unwrap();
+        let r = optimize(&g, &FlowOptions::default());
+        let tcal = transfer(&g, &cal, &r.graph);
+        for (variant, graph, vcal) in [("untiled", &g, &cal), ("tiled", &r.graph, &tcal)] {
+            let qm = compile(graph, vcal).unwrap();
+            let mut exe = Int8Executable::plan(graph, &qm).unwrap();
+            let inputs = random_inputs(graph, 23);
+            let kern = exe.kernels_name();
+            let fast = bench(2, 5, Duration::from_millis(300), || {
+                black_box(exe.run(&inputs).unwrap())
+            });
+            exe.force_scalar_kernels();
+            let slow = bench(2, 5, Duration::from_millis(300), || {
+                black_box(exe.run(&inputs).unwrap())
+            });
+            let scalar_us = slow.median.as_secs_f64() * 1e6;
+            let simd_us = fast.median.as_secs_f64() * 1e6;
+            let speedup = scalar_us / simd_us.max(1e-9);
+            println!(
+                "{:<6} {:<8} {:>8} {:>14.1} {:>14.1} {:>8.2}x",
+                name, variant, kern, scalar_us, simd_us, speedup
+            );
+            records.push((
+                format!("{name}_{variant}"),
+                JsonRecord::new()
+                    .str("kernels", kern)
+                    .num("scalar_us", scalar_us)
+                    .num("simd_us", simd_us)
+                    .num("speedup", speedup),
+            ));
+        }
+    }
+    match write_json("BENCH_int8.json", &records) {
+        Ok(()) => println!("wrote BENCH_int8.json"),
+        Err(e) => eprintln!("could not write BENCH_int8.json: {e}"),
+    }
+}

@@ -9,16 +9,20 @@
 //! interpreter runs: identical views (slice elision, concat write-in,
 //! in-place merge accumulation), identical TFLite fixed-point
 //! requantization constants (computed here at emission time), and the
-//! same per-op grids. Integer kernels are bit-identical by construction;
-//! the few f64-assisted kernels (softmax, pooling means, sigmoid/tanh)
-//! may differ from Rust by libm rounding in the last code, which the
-//! cross-check test covers with a one-LSB tolerance.
+//! same per-op grids. Integer kernels are bit-identical by construction.
+//! Sigmoid/tanh activations and softmax are bit-identical too: their
+//! 256-entry tables ([`act_lut`], [`softmax_exp_lut`]) are computed once
+//! in Rust and embedded in the C unit (softmax entries as IEEE-754 bit
+//! patterns), so both back ends look up — and sum — the exact same
+//! values. The only remaining f64 seam is a `Merge` carrying a
+//! sigmoid/tanh epilogue (an i32 accumulator domain, untabulable), where
+//! C libm `exp`/`tanh` may differ from Rust in the last code.
 
 use super::emit::cname;
 use super::CModule;
-use crate::exec::int8::{act_code_range, Elem, Int8Executable, Step, TView};
+use crate::exec::int8::{Elem, Int8Executable, Step, TView};
 use crate::graph::{ActKind, Graph, Op, OpKind, TensorKind};
-use crate::quant::int8::{quantize_multiplier, Repr};
+use crate::quant::int8::{act_code_range, act_lut, quantize_multiplier, softmax_exp_lut, Repr};
 use crate::quant::{Calibration, QuantParams};
 use crate::tiling::activation_input;
 
@@ -125,6 +129,10 @@ fn src_fold<'s>(
 struct CEmitter<'a> {
     exe: &'a Int8Executable,
     body: String,
+    /// Static lookup-table declarations (sigmoid/tanh code maps, softmax
+    /// exp tables), collected while emitting ops and placed before the
+    /// entry point.
+    luts: String,
 }
 
 impl<'a> CEmitter<'a> {
@@ -154,6 +162,32 @@ impl<'a> CEmitter<'a> {
     fn requant(&self, acc: &str, s_in: f64, p_out: QuantParams, lo: i32, hi: i32) -> String {
         let (m, sh) = quantize_multiplier(s_in / p_out.scale as f64);
         format!("fdt_requant({acc}, {m}, {sh}, {}, {lo}, {hi})", p_out.zero_point)
+    }
+
+    /// Declare a 256-entry int8 code table (indexed by `q + 128`).
+    fn lut_i8(&mut self, name: &str, t: &[i8; 256]) {
+        self.luts.push_str(&format!("static const int8_t {name}[256] = {{"));
+        for (i, v) in t.iter().enumerate() {
+            if i % 16 == 0 {
+                self.luts.push_str("\n  ");
+            }
+            self.luts.push_str(&format!("{v}, "));
+        }
+        self.luts.push_str("\n};\n");
+    }
+
+    /// Declare a 256-entry f64 table as IEEE-754 bit patterns, so the C
+    /// build reads back the exact doubles Rust computed (no literal
+    /// round-tripping, no libm).
+    fn lut_f64(&mut self, name: &str, t: &[f64; 256]) {
+        self.luts.push_str(&format!("static const uint64_t {name}[256] = {{"));
+        for (i, v) in t.iter().enumerate() {
+            if i % 4 == 0 {
+                self.luts.push_str("\n  ");
+            }
+            self.luts.push_str(&format!("0x{:016x}ULL, ", v.to_bits()));
+        }
+        self.luts.push_str("\n};\n");
     }
 
     /// Code re-grid expression (pass-through when the grids coincide).
@@ -497,23 +531,17 @@ impl<'a> CEmitter<'a> {
                         self.line(1, format!("for (int i = 0; i < {nel}; i++) {}", st(out, "i", &rq)));
                     }
                     ActKind::Sigmoid | ActKind::Tanh => {
-                        let f = if matches!(a, ActKind::Sigmoid) {
-                            "1.0 / (1.0 + exp(-real))".to_string()
-                        } else {
-                            "tanh(real)".to_string()
-                        };
-                        self.line(1, format!("for (int i = 0; i < {nel}; i++) {{"));
+                        // i8 input domain = 256 codes: embed the
+                        // interpreter's exact code map ([`act_lut`]) so
+                        // the C build is bit-identical, libm-free.
+                        let name = format!("lut_{}", op.id);
+                        let t = act_lut(*a, px, p);
+                        self.lut_i8(&name, &t);
+                        let e = format!("(int32_t){name}[({xi}) + 128]");
                         self.line(
-                            2,
-                            format!(
-                                "double real = ((double)({xi} - {})) * (double){};",
-                                px.zero_point,
-                                flit(px.scale)
-                            ),
+                            1,
+                            format!("for (int i = 0; i < {nel}; i++) {}", st(out, "i", &e)),
                         );
-                        let q = format!("fdt_quantf({f}, {}, {})", flit(p.scale), p.zero_point);
-                        self.line(2, st(out, "i", &q));
-                        self.line(1, "}");
                     }
                 }
                 Ok(())
@@ -648,19 +676,28 @@ impl<'a> CEmitter<'a> {
                 let p = self.params(op.output);
                 let nel: usize = out_shape.iter().product();
                 let xi = ld(x, "i");
+                // exp(x - x_max) depends only on the code distance
+                // q_max - q ∈ [0, 255]: embed the interpreter's exact
+                // f64 exp table ([`softmax_exp_lut`]) as bit patterns —
+                // both back ends then sum identical doubles in identical
+                // (ascending) order, so the output codes are
+                // bit-identical, libm-free.
+                let name = format!("smx_{}", op.id);
+                let t = softmax_exp_lut(px.scale);
+                self.lut_f64(&name, &t);
                 self.line(1, "{");
-                self.line(2, format!("double ex[{nel}]; double mx = -INFINITY; double sum = 0.0;"));
+                self.line(2, format!("double ex[{nel}]; double sum = 0.0; int32_t mx = -128;"));
                 self.line(
                     2,
                     format!(
-                        "for (int i = 0; i < {nel}; i++) {{ ex[i] = ((double)({xi} - {})) * (double){}; if (ex[i] > mx) mx = ex[i]; }}",
-                        px.zero_point,
-                        flit(px.scale)
+                        "for (int i = 0; i < {nel}; i++) {{ int32_t q = {xi}; if (q > mx) mx = q; }}"
                     ),
                 );
                 self.line(
                     2,
-                    format!("for (int i = 0; i < {nel}; i++) {{ ex[i] = exp(ex[i] - mx); sum += ex[i]; }}"),
+                    format!(
+                        "for (int i = 0; i < {nel}; i++) {{ ex[i] = fdt_bits2d({name}[mx - ({xi})]); sum += ex[i]; }}"
+                    ),
                 );
                 let q = format!("fdt_quantf(ex[i] / sum, {}, {})", flit(p.scale), p.zero_point);
                 self.line(2, format!("for (int i = 0; i < {nel}; i++) {}", st(out, "i", &q)));
@@ -812,7 +849,7 @@ pub fn generate_int8(g: &Graph, cal: &Calibration) -> Result<CModule, String> {
     let qm = crate::quant::int8::compile(g, cal)?;
     let exe = Int8Executable::plan(g, &qm)?;
 
-    let mut em = CEmitter { exe: &exe, body: String::new() };
+    let mut em = CEmitter { exe: &exe, body: String::new(), luts: String::new() };
     let steps = exe.steps.clone();
     for step in &steps {
         em.emit_group(step)?;
@@ -898,7 +935,14 @@ pub fn generate_int8(g: &Graph, cal: &Calibration) -> Result<CModule, String> {
     s += "  return fdt_quantf(((double)(q - zi)) * (double)si, so, zo);\n}\n";
     s += "static int32_t fdt_quant8(float x, float scale, int32_t zp) {\n";
     s += "  float q = roundf(x / scale + (float)zp);\n";
-    s += "  if (q < -128.0f) q = -128.0f;\n  if (q > 127.0f) q = 127.0f;\n  return (int32_t)q;\n}\n\n";
+    s += "  if (q < -128.0f) q = -128.0f;\n  if (q > 127.0f) q = 127.0f;\n  return (int32_t)q;\n}\n";
+    s += "static double fdt_bits2d(uint64_t b) { double d; memcpy(&d, &b, 8); return d; }\n\n";
+
+    // Lookup tables shared bit-for-bit with the interpreter.
+    if !em.luts.is_empty() {
+        s += &em.luts;
+        s += "\n";
+    }
 
     // Entry point (same signature as the f32 build).
     let ins: Vec<String> =

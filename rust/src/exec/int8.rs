@@ -29,20 +29,42 @@
 //! Numerics are per-op, matching the documented fake-quant semantics:
 //! each op output is requantized onto its own calibrated grid
 //! (integer-only TFLite fixed-point for matmuls / bias / relu-family;
-//! deterministic f64 for the saturating ops like softmax and the
-//! pooling means). Because partition tensors inherit their original
+//! 256-entry tables built with the deterministic f64 reference for
+//! sigmoid/tanh/softmax, shared with the C emitter so both back ends are
+//! bit-identical). Because partition tensors inherit their original
 //! tensor's grid (see [`crate::quant::transfer`]), a tiled graph
 //! performs bit-for-bit the same integer arithmetic as the untiled one.
+//!
+//! Execution speed (the path every serving request takes):
+//!
+//! * the hot loop nests run over **borrowed arena slices** — a
+//!   contiguous i8 activation is handed to the kernels as `&[i8]`
+//!   straight out of the arena, never widened through a per-op
+//!   `Vec<i32>`; only genuinely strided/padded views are gathered, into
+//!   a pooled [`Scratch`] buffer that is recycled across ops;
+//! * the inner i8×i8→i32 row primitives dispatch through
+//!   [`crate::exec::kernels`]: scalar reference, AVX2 (runtime-detected)
+//!   or NEON, chosen once at compile/plan time and overridable with
+//!   `FDT_FORCE_SCALAR=1`;
+//! * large conv/dense output ranges fan out over scoped worker threads
+//!   past a MAC threshold (see `kernels::PAR_MIN_MACS`) — disjoint
+//!   output chunks keep per-element accumulation order, so parallelism
+//!   never costs bit-exactness.
 
 use super::Value;
 use crate::analysis::MemModel;
 use crate::codegen::dense_strides;
+use crate::error::{FdtError, FdtResult};
+use crate::exec::kernels::{self, Microkernels};
 use crate::graph::fusion::{fuse, Grouping};
 use crate::graph::{
     pad_before, ActKind, DType, Graph, Op, OpId, OpKind, TensorId, TensorKind,
 };
 use crate::layout::{self, Layout, LayoutOptions};
-use crate::quant::int8::{quantize_multiplier, requantize, QuantizedModel, Repr};
+use crate::quant::int8::{
+    act_code_range, act_lut, quantize_f64, remap_code, softmax_exp_lut, QuantizedModel, Repr,
+    RequantPlan,
+};
 use crate::quant::QuantParams;
 use crate::sched::{self, SchedOptions};
 use crate::tiling::activation_input;
@@ -129,16 +151,24 @@ impl QValue {
     }
 }
 
-/// Chain value passed between the ops of one fusion group.
+/// Owned payload of a chain value: i8 codes, or i32 accumulators/raw
+/// indices. Narrow storage is the point — codes travel as one byte per
+/// element instead of the historical widened `Vec<i32>`.
+enum CD {
+    I8(Vec<i8>),
+    I32(Vec<i32>),
+}
+
+/// Chain value passed between the ops of one fusion group (owned).
 struct ChainVal {
     shape: Vec<usize>,
-    data: Vec<i32>,
+    data: CD,
     q: ValQ,
 }
 
 #[derive(Clone, Copy)]
 enum ValQ {
-    /// Quantized codes on this grid (widened to i32).
+    /// Quantized codes on this grid.
     Codes(QuantParams),
     /// i32 accumulator at this scale (zero point 0).
     Acc(f64),
@@ -147,38 +177,146 @@ enum ValQ {
 }
 
 impl ChainVal {
-    fn codes(&self) -> Result<QuantParams, String> {
+    fn codes(&self) -> FdtResult<QuantParams> {
         match self.q {
             ValQ::Codes(p) => Ok(p),
-            _ => Err("expected quantized codes".to_string()),
+            _ => Err(FdtError::Other { reason: "expected quantized codes".to_string() }),
+        }
+    }
+
+    fn i8s(&self) -> FdtResult<&[i8]> {
+        match &self.data {
+            CD::I8(v) => Ok(v),
+            CD::I32(_) => Err(FdtError::Other { reason: "expected i8 codes".to_string() }),
+        }
+    }
+
+    /// Lift to a kernel input (no copy — ownership moves).
+    fn into_x(self) -> XVal<'static> {
+        let data = match self.data {
+            CD::I8(v) => XD::I8Own(v),
+            CD::I32(v) => XD::I32Own(v),
+        };
+        XVal { shape: self.shape, data, q: self.q }
+    }
+}
+
+/// Kernel input payload: a zero-copy borrow of a contiguous arena view,
+/// or an owned gather for the strided/widened cases.
+enum XD<'a> {
+    /// Contiguous i8 codes borrowed straight from the arena (or a folded
+    /// weight's ROM) — the fast path.
+    I8(&'a [i8]),
+    I8Own(Vec<i8>),
+    I32Own(Vec<i32>),
+}
+
+/// A chain-op input: shape + payload + grid.
+struct XVal<'a> {
+    shape: Vec<usize>,
+    data: XD<'a>,
+    q: ValQ,
+}
+
+impl<'a> XVal<'a> {
+    fn codes(&self) -> FdtResult<QuantParams> {
+        match self.q {
+            ValQ::Codes(p) => Ok(p),
+            _ => Err(FdtError::Other { reason: "expected quantized codes".to_string() }),
+        }
+    }
+
+    fn i8s(&self) -> FdtResult<&[i8]> {
+        match &self.data {
+            XD::I8(s) => Ok(s),
+            XD::I8Own(v) => Ok(v),
+            XD::I32Own(_) => Err(FdtError::Other { reason: "expected i8 codes".to_string() }),
+        }
+    }
+
+    fn i32s(&self) -> FdtResult<&[i32]> {
+        match &self.data {
+            XD::I32Own(v) => Ok(v),
+            _ => Err(FdtError::Other { reason: "expected raw i32 values".to_string() }),
+        }
+    }
+
+    /// Materialize as an owned payload (borrowed fast-path data is
+    /// copied from a pooled buffer; owned data moves through).
+    fn into_cd(self, scratch: &mut Scratch) -> CD {
+        match self.data {
+            XD::I8(s) => {
+                let mut v = scratch.take_i8(s.len());
+                v.copy_from_slice(s);
+                CD::I8(v)
+            }
+            XD::I8Own(v) => CD::I8(v),
+            XD::I32Own(v) => CD::I32(v),
         }
     }
 }
 
-/// Deterministic f64 quantization onto an i8 grid.
-fn quantize_f64(x: f64, p: QuantParams) -> i32 {
-    (x / p.scale as f64 + p.zero_point as f64).round().clamp(-128.0, 127.0) as i32
+/// Pooled scratch buffers: the executor's only steady-state heap churn.
+/// Buffers taken for an op's accumulator/output return to the pool when
+/// the value is stored, so a whole inference recycles a handful of
+/// allocations regardless of model depth.
+#[derive(Default)]
+struct Scratch {
+    i32s: Vec<Vec<i32>>,
+    i8s: Vec<Vec<i8>>,
 }
 
-/// Re-grid a code from one affine grid to another (exact pass-through
-/// when the grids coincide, which the compile-time parameter propagation
-/// guarantees for views).
-fn remap_code(q: i32, from: QuantParams, to: QuantParams) -> i32 {
-    if from == to {
-        return q;
+impl Scratch {
+    fn take_i32(&mut self, n: usize) -> Vec<i32> {
+        let mut v = self.i32s.pop().unwrap_or_default();
+        v.clear();
+        v.resize(n, 0);
+        v
     }
-    quantize_f64((q - from.zero_point) as f64 * from.scale as f64, to)
+
+    fn give_i32(&mut self, v: Vec<i32>) {
+        self.i32s.push(v);
+    }
+
+    fn take_i8(&mut self, n: usize) -> Vec<i8> {
+        let mut v = self.i8s.pop().unwrap_or_default();
+        v.clear();
+        v.resize(n, 0);
+        v
+    }
+
+    fn give_i8(&mut self, v: Vec<i8>) {
+        self.i8s.push(v);
+    }
 }
 
-/// Clamp range (in output codes) of a fused activation.
-pub(crate) fn act_code_range(a: ActKind, p: QuantParams) -> (i32, i32) {
-    match a {
-        ActKind::Relu => (p.zero_point.max(-128), 127),
-        ActKind::Relu6 => {
-            let hi = (p.zero_point as f64 + (6.0 / p.scale as f64).round()).min(127.0);
-            (p.zero_point.max(-128), hi as i32)
+/// Reinterpret arena bytes as i8 codes (same size/align — always sound).
+fn as_i8(b: &[u8]) -> &[i8] {
+    // SAFETY: u8 and i8 have identical size, alignment and validity.
+    unsafe { std::slice::from_raw_parts(b.as_ptr().cast(), b.len()) }
+}
+
+/// Reinterpret i8 codes as raw bytes for a contiguous arena store.
+fn i8_bytes(v: &[i8]) -> &[u8] {
+    // SAFETY: u8 and i8 have identical size, alignment and validity.
+    unsafe { std::slice::from_raw_parts(v.as_ptr().cast(), v.len()) }
+}
+
+/// A view is contiguous exactly when its strides are the dense row-major
+/// strides of its shape — then element order == byte order and kernels
+/// can run straight over the arena slice.
+fn contiguous(v: &TView) -> bool {
+    v.strides == dense_strides(&v.shape)
+}
+
+/// Advance a multi-dimensional index in row-major order.
+fn advance(idx: &mut [usize], shape: &[usize]) {
+    for d in (0..idx.len()).rev() {
+        idx[d] += 1;
+        if idx[d] < shape[d] {
+            break;
         }
-        _ => (-128, 127),
+        idx[d] = 0;
     }
 }
 
@@ -195,13 +333,7 @@ fn read_view(arena: &[u8], v: &TView) -> Vec<i32> {
                 i32::from_le_bytes([arena[at], arena[at + 1], arena[at + 2], arena[at + 3]])
             }
         });
-        for d in (0..idx.len()).rev() {
-            idx[d] += 1;
-            if idx[d] < v.shape[d] {
-                break;
-            }
-            idx[d] = 0;
-        }
+        advance(&mut idx, &v.shape);
     }
     out
 }
@@ -227,14 +359,58 @@ fn write_view(arena: &mut [u8], v: &TView, data: &[i32], accumulate: bool) {
                 arena[at..at + 4].copy_from_slice(&bytes);
             }
         }
-        for d in (0..idx.len()).rev() {
-            idx[d] += 1;
-            if idx[d] < v.shape[d] {
-                break;
+        advance(&mut idx, &v.shape);
+    }
+}
+
+/// Store i8 codes into a view. Contiguous i8 views are a single byte
+/// copy; strided i8 views scatter; i32-element views (`CodesI32`
+/// storage) widen per element.
+fn write_codes(arena: &mut [u8], v: &TView, data: &[i8]) {
+    debug_assert_eq!(data.len(), v.numel());
+    match v.elem {
+        Elem::I8 => {
+            if contiguous(v) {
+                let at = v.base + v.off;
+                arena[at..at + data.len()].copy_from_slice(i8_bytes(data));
+                return;
             }
-            idx[d] = 0;
+            let mut idx = vec![0usize; v.shape.len()];
+            for &val in data {
+                let e = v.off + idx.iter().zip(&v.strides).map(|(i, s)| i * s).sum::<usize>();
+                arena[v.base + e] = val as u8;
+                advance(&mut idx, &v.shape);
+            }
+        }
+        Elem::I32 => {
+            let mut idx = vec![0usize; v.shape.len()];
+            for &val in data {
+                let e = v.off + idx.iter().zip(&v.strides).map(|(i, s)| i * s).sum::<usize>();
+                let at = v.base + e * 4;
+                arena[at..at + 4].copy_from_slice(&(val as i32).to_le_bytes());
+                advance(&mut idx, &v.shape);
+            }
         }
     }
+}
+
+/// Store i32 values into an i32 view; contiguous views write (or `+=`)
+/// directly over 4-byte LE chunks, strided views fall back to the
+/// walker.
+fn write_i32(arena: &mut [u8], v: &TView, data: &[i32], accumulate: bool) {
+    debug_assert_eq!(v.elem, Elem::I32);
+    if contiguous(v) {
+        debug_assert_eq!(data.len(), v.numel());
+        let at = v.base + v.off * 4;
+        let dst = &mut arena[at..at + data.len() * 4];
+        for (c, &val) in dst.chunks_exact_mut(4).zip(data) {
+            let cur =
+                if accumulate { i32::from_le_bytes([c[0], c[1], c[2], c[3]]) } else { 0 };
+            c.copy_from_slice(&cur.wrapping_add(val).to_le_bytes());
+        }
+        return;
+    }
+    write_view(arena, v, data, accumulate);
 }
 
 /// Resolve the storage view of every tensor, mirroring the storage-root
@@ -355,6 +531,8 @@ pub struct Int8Executable {
     pub(crate) steps: Vec<Step>,
     pub(crate) views: Vec<Option<TView>>,
     pub(crate) arena_bytes: usize,
+    /// Microkernel tier, selected once at compile time.
+    kern: &'static dyn Microkernels,
 }
 
 impl Int8Executable {
@@ -367,9 +545,11 @@ impl Int8Executable {
         order: &[usize],
         layout: &Layout,
         m: &MemModel,
-    ) -> Result<Int8Executable, String> {
+    ) -> FdtResult<Int8Executable> {
         if qm.params.len() != g.tensors.len() {
-            return Err("quantized model does not match graph".to_string());
+            return Err(FdtError::Other {
+                reason: "quantized model does not match graph".to_string(),
+            });
         }
         let producers = g.producers();
         let consumers = g.consumers();
@@ -396,26 +576,31 @@ impl Int8Executable {
                 // E.g. an i32 tensor aliased into an i8-sized root (a
                 // pathological nested-tiling structure): bail instead of
                 // corrupting neighbouring buffers.
-                return Err(format!(
-                    "tensor {} view ({} B) exceeds its root buffer ({} B)",
-                    g.tensor(t).name,
-                    span * v.elem.size(),
-                    v.root_bytes
-                ));
+                return Err(FdtError::Other {
+                    reason: format!(
+                        "tensor {} view ({} B) exceeds its root buffer ({} B)",
+                        g.tensor(t).name,
+                        span * v.elem.size(),
+                        v.root_bytes
+                    ),
+                });
             }
             if v.base + span * v.elem.size() > layout.total {
-                return Err(format!(
-                    "tensor {} spans past the planned arena ({} B)",
-                    g.tensor(t).name,
-                    layout.total
-                ));
+                return Err(FdtError::ArenaBounds {
+                    what: format!("tensor {} view", g.tensor(t).name),
+                    offset: v.base,
+                    len: span * v.elem.size(),
+                    arena: layout.total,
+                });
             }
         }
 
         // Model I/O must be addressable.
         for &t in g.inputs.iter().chain(&g.outputs) {
             if views[t].is_none() {
-                return Err(format!("model i/o tensor {} has no storage", g.tensor(t).name));
+                return Err(FdtError::Other {
+                    reason: format!("model i/o tensor {} has no storage", g.tensor(t).name),
+                });
             }
         }
 
@@ -428,7 +613,10 @@ impl Int8Executable {
                     .and_then(|ai| next.inputs.get(ai))
                     .is_some_and(|&x| x == prev.output);
                 if !chained {
-                    return Err(format!("fusion group is not a chain at {}", next.name));
+                    return Err(FdtError::InvalidOp {
+                        op: next.name.clone(),
+                        reason: "fusion group is not a chain".to_string(),
+                    });
                 }
             }
         }
@@ -439,7 +627,7 @@ impl Int8Executable {
         for &gid in order {
             let members = grouping.groups[gid].clone();
             let Some(&last) = members.last() else {
-                return Err(format!("fusion group {gid} is empty"));
+                return Err(FdtError::Other { reason: format!("fusion group {gid} is empty") });
             };
             let last_out = g.op(last).output;
             let zero = match &views[last_out] {
@@ -448,10 +636,12 @@ impl Int8Executable {
                     // does not own its full root (nested aliasing) would
                     // wipe a neighbour's live region.
                     if v.off != 0 || v.numel() * v.elem.size() != v.root_bytes {
-                        return Err(format!(
-                            "partial {} does not span its merge buffer",
-                            g.tensor(last_out).name
-                        ));
+                        return Err(FdtError::Other {
+                            reason: format!(
+                                "partial {} does not span its merge buffer",
+                                g.tensor(last_out).name
+                            ),
+                        });
                     }
                     zeroed[v.buffer] = true;
                     Some((v.base, v.root_bytes))
@@ -474,12 +664,13 @@ impl Int8Executable {
             steps,
             views,
             arena_bytes: layout.total,
+            kern: kernels::select(),
         })
     }
 
     /// Convenience: fuse, schedule and plan `g` with default options,
     /// then compile (the coordinator offers a flow-fidelity variant).
-    pub fn plan(g: &Graph, qm: &QuantizedModel) -> Result<Int8Executable, String> {
+    pub fn plan(g: &Graph, qm: &QuantizedModel) -> FdtResult<Int8Executable> {
         let grouping = fuse(g);
         let m = MemModel::new(g, &grouping);
         let s = sched::schedule(&m, SchedOptions::default());
@@ -497,24 +688,60 @@ impl Int8Executable {
         self.qm.params[t]
     }
 
+    /// Name of the selected microkernel tier (`"scalar"`, `"avx2"`,
+    /// `"neon"`).
+    pub fn kernels_name(&self) -> &'static str {
+        self.kern.name()
+    }
+
+    /// Pin this executable to the scalar reference kernels regardless of
+    /// host capabilities — the deterministic, race-free alternative to
+    /// setting `FDT_FORCE_SCALAR=1` (used by the scalar-vs-SIMD
+    /// equivalence property and A/B benchmarks).
+    pub fn force_scalar_kernels(&mut self) {
+        self.kern = &kernels::SCALAR;
+    }
+
     /// Execute: f32 inputs are quantized onto their calibrated grids (i32
     /// index inputs pass through); returns the output code tensors.
-    pub fn run(&self, inputs: &HashMap<String, Value>) -> Result<Vec<QValue>, String> {
+    pub fn run(&self, inputs: &HashMap<String, Value>) -> FdtResult<Vec<QValue>> {
         let mut arena = vec![0u8; self.arena_bytes];
+        self.run_in_arena(&mut arena, inputs)
+    }
+
+    /// [`run`](Int8Executable::run), additionally returning the final
+    /// arena bytes — lets equivalence tests assert that two executions
+    /// agree not just on outputs but on every intermediate byte.
+    pub fn run_capture(
+        &self,
+        inputs: &HashMap<String, Value>,
+    ) -> FdtResult<(Vec<QValue>, Vec<u8>)> {
+        let mut arena = vec![0u8; self.arena_bytes];
+        let out = self.run_in_arena(&mut arena, inputs)?;
+        Ok((out, arena))
+    }
+
+    fn run_in_arena(
+        &self,
+        arena: &mut [u8],
+        inputs: &HashMap<String, Value>,
+    ) -> FdtResult<Vec<QValue>> {
+        let mut scratch = Scratch::default();
         for &t in &self.g.inputs {
             let tensor = self.g.tensor(t);
             let v = inputs
                 .get(&tensor.name)
-                .ok_or_else(|| format!("missing input {}", tensor.name))?;
+                .ok_or_else(|| FdtError::MissingInput { name: tensor.name.clone() })?;
             if v.shape != tensor.shape {
-                return Err(format!(
-                    "input {} shape {:?} != {:?}",
-                    tensor.name, v.shape, tensor.shape
-                ));
+                return Err(FdtError::InputShapeMismatch {
+                    name: tensor.name.clone(),
+                    expected: tensor.shape.clone(),
+                    got: v.shape.clone(),
+                });
             }
-            let view = self.views[t]
-                .as_ref()
-                .ok_or_else(|| format!("input {} has no arena view", tensor.name))?;
+            let view = self.views[t].as_ref().ok_or_else(|| FdtError::Other {
+                reason: format!("input {} has no arena view", tensor.name),
+            })?;
             let data: Vec<i32> = match self.qm.repr[t] {
                 Repr::Index => v.data.iter().map(|&x| x.round() as i32).collect(),
                 _ => {
@@ -522,14 +749,14 @@ impl Int8Executable {
                     v.data.iter().map(|&x| p.quantize(x) as i32).collect()
                 }
             };
-            write_view(&mut arena, view, &data, false);
+            write_view(arena, view, &data, false);
         }
         for step in &self.steps {
             if let Some((base, len)) = step.zero {
                 // Recoverable bounds check (was a slice panic): a corrupt
                 // plan must surface as an error, not take the process down.
                 let end = base.checked_add(len).filter(|&e| e <= arena.len()).ok_or(
-                    crate::error::FdtError::ArenaBounds {
+                    FdtError::ArenaBounds {
                         what: "merge zero-fill".to_string(),
                         offset: base,
                         len,
@@ -538,16 +765,16 @@ impl Int8Executable {
                 )?;
                 arena[base..end].fill(0);
             }
-            self.run_group(&mut arena, step)?;
+            self.run_group(arena, step, &mut scratch)?;
         }
         self.g
             .outputs
             .iter()
             .map(|&t| {
-                let view = self.views[t]
-                    .as_ref()
-                    .ok_or_else(|| format!("output {} has no arena view", self.g.tensor(t).name))?;
-                let raw = read_view(&arena, view);
+                let view = self.views[t].as_ref().ok_or_else(|| FdtError::Other {
+                    reason: format!("output {} has no arena view", self.g.tensor(t).name),
+                })?;
+                let raw = read_view(arena, view);
                 let params = match self.qm.repr[t] {
                     Repr::Index => QuantParams { scale: 1.0, zero_point: 0 },
                     Repr::Acc(s) => QuantParams { scale: s as f32, zero_point: 0 },
@@ -563,61 +790,61 @@ impl Int8Executable {
     }
 
     /// Execute and dequantize the outputs to f32.
-    pub fn run_f32(&self, inputs: &HashMap<String, Value>) -> Result<Vec<Value>, String> {
+    pub fn run_f32(&self, inputs: &HashMap<String, Value>) -> FdtResult<Vec<Value>> {
         Ok(self.run(inputs)?.iter().map(QValue::to_f32).collect())
     }
 
-    /// [`run`] under an arena allocation cap (deployment guard-rail and
-    /// fault-injection hook): refuses up front with
-    /// [`FdtError::ArenaOverflow`](crate::error::FdtError) when the
-    /// planned arena exceeds `cap` bytes. `None` is uncapped.
+    /// [`run`](Int8Executable::run) under an arena allocation cap
+    /// (deployment guard-rail and fault-injection hook): refuses up front
+    /// with [`FdtError::ArenaOverflow`] when the planned arena exceeds
+    /// `cap` bytes. `None` is uncapped.
     pub fn run_with_cap(
         &self,
         inputs: &HashMap<String, Value>,
         cap: Option<usize>,
-    ) -> crate::error::FdtResult<Vec<QValue>> {
+    ) -> FdtResult<Vec<QValue>> {
         if let Some(cap) = cap {
             if self.arena_bytes > cap {
-                return Err(crate::error::FdtError::ArenaOverflow {
-                    needed: self.arena_bytes,
-                    cap,
-                });
+                return Err(FdtError::ArenaOverflow { needed: self.arena_bytes, cap });
             }
         }
-        self.run(inputs).map_err(crate::error::FdtError::from)
+        self.run(inputs)
     }
 
-    fn run_group(&self, arena: &mut [u8], step: &Step) -> Result<(), String> {
+    fn run_group(&self, arena: &mut [u8], step: &Step, scratch: &mut Scratch) -> FdtResult<()> {
         let mut state: Option<ChainVal> = None;
         let n = step.members.len();
         for (i, &oid) in step.members.iter().enumerate() {
             let op = self.g.op(oid);
             match &op.kind {
                 OpKind::Concat { axis } => {
-                    self.exec_concat(arena, op, *axis)?;
+                    self.exec_concat(arena, op, *axis, scratch)?;
                     state = None;
                 }
                 OpKind::Merge { act } => {
-                    self.exec_merge(arena, op, *act)?;
+                    self.exec_merge(arena, op, *act, scratch)?;
                     state = None;
                 }
                 OpKind::Slice { .. } => {
                     state = None; // the output is a view — nothing moves
                 }
                 _ => {
-                    let x = match state.take() {
-                        Some(v) => v,
-                        // Head of the chain: load the dataflow input
-                        // (Add/Mul have no designated activation input —
-                        // their kernel loads the second operand itself).
-                        None => {
-                            let ai = activation_input(op).unwrap_or(0);
-                            self.load(arena, op.inputs[ai])?
-                        }
+                    let out = {
+                        let x: XVal = match state.take() {
+                            Some(v) => v.into_x(),
+                            // Head of the chain: borrow the dataflow input
+                            // straight from the arena (Add/Mul have no
+                            // designated activation input — their kernel
+                            // loads the second operand itself).
+                            None => {
+                                let ai = activation_input(op).unwrap_or(0);
+                                self.load_x(&*arena, op.inputs[ai])?
+                            }
+                        };
+                        self.eval_op(&*arena, op, x, scratch)?
                     };
-                    let out = self.eval_op(arena, op, x)?;
                     if i + 1 == n {
-                        self.store(arena, op.output, &out)?;
+                        self.store(arena, op.output, out, scratch)?;
                     } else {
                         state = Some(out);
                     }
@@ -626,426 +853,497 @@ impl Int8Executable {
             // An epilogue following an in-place head (concat/merge/slice)
             // re-loads the just-stored value.
             if state.is_none() && i + 1 < n {
-                state = Some(self.load(arena, op.output)?);
+                state = Some(self.load(&*arena, op.output)?);
             }
         }
         Ok(())
     }
 
-    /// Load a stored tensor (or a folded weight) as a chain value.
-    fn load(&self, arena: &[u8], t: TensorId) -> Result<ChainVal, String> {
+    /// Borrow a stored tensor (or a folded weight) as a kernel input.
+    /// Contiguous i8 code views are zero-copy arena slices; strided or
+    /// widened storage gathers into an owned buffer.
+    fn load_x<'x>(&'x self, arena: &'x [u8], t: TensorId) -> FdtResult<XVal<'x>> {
         let tensor = self.g.tensor(t);
         if tensor.kind == TensorKind::Weight {
-            let codes = self.qm.weights[t]
-                .as_ref()
-                .ok_or_else(|| format!("weight {} not folded to i8", tensor.name))?;
-            return Ok(ChainVal {
+            let codes = self.qm.weights[t].as_ref().ok_or_else(|| FdtError::Other {
+                reason: format!("weight {} not folded to i8", tensor.name),
+            })?;
+            return Ok(XVal {
                 shape: tensor.shape.clone(),
-                data: codes.iter().map(|&c| c as i32).collect(),
+                data: XD::I8(codes),
                 q: ValQ::Codes(self.qm.params[t]),
             });
         }
-        let view = self.views[t]
-            .as_ref()
-            .ok_or_else(|| format!("tensor {} has no storage", tensor.name))?;
-        let data = read_view(arena, view);
+        let view = self.views[t].as_ref().ok_or_else(|| FdtError::Other {
+            reason: format!("tensor {} has no storage", tensor.name),
+        })?;
         let q = match self.qm.repr[t] {
             Repr::I8 | Repr::CodesI32 => ValQ::Codes(self.qm.params[t]),
             Repr::Acc(s) => ValQ::Acc(s),
             Repr::Index => ValQ::Raw,
         };
+        let data = match (view.elem, self.qm.repr[t]) {
+            (Elem::I8, _) if contiguous(view) => {
+                let at = view.base + view.off;
+                XD::I8(as_i8(&arena[at..at + view.numel()]))
+            }
+            (Elem::I8, _) | (_, Repr::I8 | Repr::CodesI32) => {
+                // Strided i8, or codes widened into i32 storage: gather
+                // and narrow (every producer clamps to [-128, 127], so
+                // the narrowing is lossless).
+                let raw = read_view(arena, view);
+                XD::I8Own(raw.iter().map(|&v| v as i8).collect())
+            }
+            _ => XD::I32Own(read_view(arena, view)),
+        };
+        Ok(XVal { shape: view.shape.clone(), data, q })
+    }
+
+    /// Load a stored tensor (or a folded weight) as an owned chain value
+    /// (the cold path: epilogue reloads, concat/merge inputs, Add/Mul
+    /// second operands).
+    fn load(&self, arena: &[u8], t: TensorId) -> FdtResult<ChainVal> {
+        let tensor = self.g.tensor(t);
+        if tensor.kind == TensorKind::Weight {
+            let codes = self.qm.weights[t].as_ref().ok_or_else(|| FdtError::Other {
+                reason: format!("weight {} not folded to i8", tensor.name),
+            })?;
+            return Ok(ChainVal {
+                shape: tensor.shape.clone(),
+                data: CD::I8(codes.clone()),
+                q: ValQ::Codes(self.qm.params[t]),
+            });
+        }
+        let view = self.views[t].as_ref().ok_or_else(|| FdtError::Other {
+            reason: format!("tensor {} has no storage", tensor.name),
+        })?;
+        let raw = read_view(arena, view);
+        let (data, q) = match self.qm.repr[t] {
+            Repr::I8 | Repr::CodesI32 => (
+                CD::I8(raw.iter().map(|&v| v as i8).collect()),
+                ValQ::Codes(self.qm.params[t]),
+            ),
+            Repr::Acc(s) => (CD::I32(raw), ValQ::Acc(s)),
+            Repr::Index => (CD::I32(raw), ValQ::Raw),
+        };
         Ok(ChainVal { shape: view.shape.clone(), data, q })
     }
 
-    /// Store the final chain value into the output tensor's view.
-    fn store(&self, arena: &mut [u8], t: TensorId, val: &ChainVal) -> Result<(), String> {
+    /// Store the final chain value into the output tensor's view and
+    /// recycle its buffer.
+    fn store(
+        &self,
+        arena: &mut [u8],
+        t: TensorId,
+        val: ChainVal,
+        scratch: &mut Scratch,
+    ) -> FdtResult<()> {
         let Some(view) = self.views[t].as_ref() else {
-            return Ok(()); // dead output (no consumer, not a model output)
+            // Dead output (no consumer, not a model output).
+            match val.data {
+                CD::I8(v) => scratch.give_i8(v),
+                CD::I32(v) => scratch.give_i32(v),
+            }
+            return Ok(());
         };
-        match (&val.q, self.qm.repr[t]) {
-            (ValQ::Acc(_), Repr::Acc(_)) => {
-                write_view(arena, view, &val.data, view.accumulate);
+        match (val.q, self.qm.repr[t], val.data) {
+            (ValQ::Acc(_), Repr::Acc(_), CD::I32(v)) => {
+                write_i32(arena, view, &v, view.accumulate);
+                scratch.give_i32(v);
                 Ok(())
             }
-            (ValQ::Codes(p), Repr::I8 | Repr::CodesI32) => {
+            (ValQ::Codes(p), Repr::I8 | Repr::CodesI32, CD::I8(mut v)) => {
                 if view.accumulate {
-                    return Err(format!(
-                        "{}: quantized codes cannot accumulate in place",
-                        self.g.tensor(t).name
-                    ));
+                    return Err(FdtError::Other {
+                        reason: format!(
+                            "{}: quantized codes cannot accumulate in place",
+                            self.g.tensor(t).name
+                        ),
+                    });
                 }
                 let pt = self.qm.params[t];
-                if *p == pt {
-                    write_view(arena, view, &val.data, false);
-                } else {
-                    let data: Vec<i32> =
-                        val.data.iter().map(|&q| remap_code(q, *p, pt)).collect();
-                    write_view(arena, view, &data, false);
+                if p != pt {
+                    for e in v.iter_mut() {
+                        *e = remap_code(*e as i32, p, pt) as i8;
+                    }
                 }
+                write_codes(arena, view, &v);
+                scratch.give_i8(v);
                 Ok(())
             }
-            (ValQ::Raw, Repr::Index) => {
-                write_view(arena, view, &val.data, false);
+            (ValQ::Raw, Repr::Index, CD::I32(v)) => {
+                write_i32(arena, view, &v, false);
+                scratch.give_i32(v);
                 Ok(())
             }
-            _ => Err(format!(
-                "{}: chain value does not match stored representation",
-                self.g.tensor(t).name
-            )),
+            _ => Err(FdtError::Other {
+                reason: format!(
+                    "{}: chain value does not match stored representation",
+                    self.g.tensor(t).name
+                ),
+            }),
         }
     }
 
     /// Requantize a freshly computed i32 accumulator onto the op output's
     /// grid — or keep it as an accumulator when the output is an FDT
-    /// partial.
+    /// partial. The i32 accumulator buffer returns to the scratch pool
+    /// when requantized.
     fn finish_matmul(
         &self,
         op: &Op,
         acc: Vec<i32>,
         shape: Vec<usize>,
         s_acc: f64,
-    ) -> Result<ChainVal, String> {
+        scratch: &mut Scratch,
+    ) -> FdtResult<ChainVal> {
         match self.qm.repr[op.output] {
             Repr::Acc(s) => {
                 debug_assert!((s - s_acc).abs() <= s.abs() * 1e-9 + f64::MIN_POSITIVE);
-                Ok(ChainVal { shape, data: acc, q: ValQ::Acc(s) })
+                Ok(ChainVal { shape, data: CD::I32(acc), q: ValQ::Acc(s) })
             }
             _ => {
                 let p = self.qm.params[op.output];
-                let (m, sh) = quantize_multiplier(s_acc / p.scale as f64);
-                let data =
-                    acc.iter().map(|&a| requantize(a, m, sh, p.zero_point, -128, 127)).collect();
-                Ok(ChainVal { shape, data, q: ValQ::Codes(p) })
+                let rq = RequantPlan::new(s_acc, p, -128, 127);
+                let mut data = scratch.take_i8(acc.len());
+                for (o, &a) in data.iter_mut().zip(&acc) {
+                    *o = rq.apply(a) as i8;
+                }
+                scratch.give_i32(acc);
+                Ok(ChainVal { shape, data: CD::I8(data), q: ValQ::Codes(p) })
             }
         }
     }
 
-    fn eval_op(&self, arena: &[u8], op: &Op, x: ChainVal) -> Result<ChainVal, String> {
+    fn eval_op(
+        &self,
+        arena: &[u8],
+        op: &Op,
+        x: XVal<'_>,
+        scratch: &mut Scratch,
+    ) -> FdtResult<ChainVal> {
         let out_shape = self.g.tensor(op.output).shape.clone();
         match &op.kind {
             OpKind::Conv2d { stride, padding } => {
                 let px = x.codes()?;
+                let xs = x.i8s()?;
                 let w_t = op.inputs[1];
-                let wd = self.qm.weights[w_t]
-                    .as_ref()
-                    .ok_or_else(|| format!("{}: weight not folded", op.name))?;
+                let wd = self.qm.weights[w_t].as_ref().ok_or_else(|| FdtError::InvalidOp {
+                    op: op.name.clone(),
+                    reason: "weight not folded".to_string(),
+                })?;
                 let pw = self.qm.params[w_t];
                 let ws = &self.g.tensor(w_t).shape;
                 let (kh, kw, cin, cout) = (ws[0], ws[1], ws[2], ws[3]);
                 let (ih, iw) = (x.shape[0], x.shape[1]);
                 let (oh, ow) = (out_shape[0], out_shape[1]);
                 let (pt, pl) = pad_before(*padding, ih, iw, (kh, kw), *stride);
-                let (zx, zw) = (px.zero_point, pw.zero_point);
-                let mut acc = vec![0i32; oh * ow * cout];
-                for y in 0..oh {
-                    for dy in 0..kh {
-                        let sy = y as isize * stride.0 as isize + dy as isize - pt;
-                        if sy < 0 || sy >= ih as isize {
-                            continue;
-                        }
-                        let xrow = sy as usize * iw;
-                        let wdy = dy * kw;
-                        for xx in 0..ow {
-                            let obase = (y * ow + xx) * cout;
-                            for dx in 0..kw {
-                                let sx = xx as isize * stride.1 as isize + dx as isize - pl;
-                                if sx < 0 || sx >= iw as isize {
-                                    continue;
-                                }
-                                let xbase = (xrow + sx as usize) * cin;
-                                let wbase = (wdy + dx) * cin * cout;
-                                for ci in 0..cin {
-                                    let xv = x.data[xbase + ci] - zx;
-                                    let wrow = &wd[wbase + ci * cout..wbase + (ci + 1) * cout];
-                                    let arow = &mut acc[obase..obase + cout];
-                                    for (a, &wq) in arow.iter_mut().zip(wrow) {
-                                        *a += xv * (wq as i32 - zw);
-                                    }
-                                }
-                            }
-                        }
-                    }
-                }
-                self.finish_matmul(op, acc, out_shape, px.scale as f64 * pw.scale as f64)
+                let s = kernels::ConvShape {
+                    kh,
+                    kw,
+                    cin,
+                    cout,
+                    ih,
+                    iw,
+                    oh,
+                    ow,
+                    stride: *stride,
+                    pad: (pt, pl),
+                    zx: px.zero_point,
+                    zw: pw.zero_point,
+                };
+                let mut acc = scratch.take_i32(oh * ow * cout);
+                kernels::conv2d(self.kern, xs, wd, &mut acc, &s);
+                self.finish_matmul(op, acc, out_shape, px.scale as f64 * pw.scale as f64, scratch)
             }
             OpKind::DepthwiseConv2d { stride, padding } => {
                 let px = x.codes()?;
+                let xs = x.i8s()?;
                 let w_t = op.inputs[1];
-                let wd = self.qm.weights[w_t]
-                    .as_ref()
-                    .ok_or_else(|| format!("{}: weight not folded", op.name))?;
+                let wd = self.qm.weights[w_t].as_ref().ok_or_else(|| FdtError::InvalidOp {
+                    op: op.name.clone(),
+                    reason: "weight not folded".to_string(),
+                })?;
                 let pw = self.qm.params[w_t];
                 let ws = &self.g.tensor(w_t).shape;
                 let (kh, kw, c) = (ws[0], ws[1], ws[2]);
                 let (ih, iw) = (x.shape[0], x.shape[1]);
                 let (oh, ow) = (out_shape[0], out_shape[1]);
                 let (pt, pl) = pad_before(*padding, ih, iw, (kh, kw), *stride);
-                let (zx, zw) = (px.zero_point, pw.zero_point);
-                let mut acc = vec![0i32; oh * ow * c];
-                for y in 0..oh {
-                    for dy in 0..kh {
-                        let sy = y as isize * stride.0 as isize + dy as isize - pt;
-                        if sy < 0 || sy >= ih as isize {
-                            continue;
-                        }
-                        let xrow = sy as usize * iw;
-                        for xx in 0..ow {
-                            let obase = (y * ow + xx) * c;
-                            for dx in 0..kw {
-                                let sx = xx as isize * stride.1 as isize + dx as isize - pl;
-                                if sx < 0 || sx >= iw as isize {
-                                    continue;
-                                }
-                                let xbase = (xrow + sx as usize) * c;
-                                let wbase = (dy * kw + dx) * c;
-                                for ch in 0..c {
-                                    acc[obase + ch] += (x.data[xbase + ch] - zx)
-                                        * (wd[wbase + ch] as i32 - zw);
-                                }
-                            }
-                        }
-                    }
-                }
-                self.finish_matmul(op, acc, out_shape, px.scale as f64 * pw.scale as f64)
+                let s = kernels::ConvShape {
+                    kh,
+                    kw,
+                    cin: 1,
+                    cout: c,
+                    ih,
+                    iw,
+                    oh,
+                    ow,
+                    stride: *stride,
+                    pad: (pt, pl),
+                    zx: px.zero_point,
+                    zw: pw.zero_point,
+                };
+                let mut acc = scratch.take_i32(oh * ow * c);
+                kernels::dwconv2d(self.kern, xs, wd, &mut acc, &s);
+                self.finish_matmul(op, acc, out_shape, px.scale as f64 * pw.scale as f64, scratch)
             }
             OpKind::Dense => {
                 let px = x.codes()?;
+                let xs = x.i8s()?;
                 let w_t = op.inputs[1];
-                let wd = self.qm.weights[w_t]
-                    .as_ref()
-                    .ok_or_else(|| format!("{}: weight not folded", op.name))?;
+                let wd = self.qm.weights[w_t].as_ref().ok_or_else(|| FdtError::InvalidOp {
+                    op: op.name.clone(),
+                    reason: "weight not folded".to_string(),
+                })?;
                 let pw = self.qm.params[w_t];
                 let fout = self.g.tensor(w_t).shape[1];
-                let (zx, zw) = (px.zero_point, pw.zero_point);
-                let mut acc = vec![0i32; fout];
-                for (i, &xq) in x.data.iter().enumerate() {
-                    let xv = xq - zx;
-                    let wrow = &wd[i * fout..(i + 1) * fout];
-                    for (a, &wq) in acc.iter_mut().zip(wrow) {
-                        *a += xv * (wq as i32 - zw);
-                    }
-                }
-                self.finish_matmul(op, acc, out_shape, px.scale as f64 * pw.scale as f64)
+                let mut acc = scratch.take_i32(fout);
+                kernels::dense(self.kern, xs, wd, &mut acc, px.zero_point, pw.zero_point);
+                self.finish_matmul(op, acc, out_shape, px.scale as f64 * pw.scale as f64, scratch)
             }
             OpKind::Gather => {
                 let ValQ::Raw = x.q else {
-                    return Err(format!("{}: gather indices must be raw i32", op.name));
+                    return Err(FdtError::InvalidOp {
+                        op: op.name.clone(),
+                        reason: "gather indices must be raw i32".to_string(),
+                    });
                 };
+                let ixs = x.i32s()?;
                 let table_t = op.inputs[0];
-                let td = self.qm.weights[table_t]
-                    .as_ref()
-                    .ok_or_else(|| format!("{}: table not folded", op.name))?;
+                let td = self.qm.weights[table_t].as_ref().ok_or_else(|| {
+                    FdtError::InvalidOp {
+                        op: op.name.clone(),
+                        reason: "table not folded".to_string(),
+                    }
+                })?;
                 let pt_ = self.qm.params[table_t];
                 let p = self.qm.params[op.output];
                 let ts = &self.g.tensor(table_t).shape;
                 let (vocab, emb) = (ts[0], ts[1]);
-                let mut data = Vec::with_capacity(x.data.len() * emb);
-                for &ix in &x.data {
+                let mut data = scratch.take_i8(ixs.len() * emb);
+                for (k, &ix) in ixs.iter().enumerate() {
                     if ix < 0 || ix as usize >= vocab {
-                        return Err(format!("{}: index {ix} out of range", op.name));
+                        return Err(FdtError::InvalidOp {
+                            op: op.name.clone(),
+                            reason: format!("index {ix} out of range"),
+                        });
                     }
                     let row = ix as usize;
                     for e in 0..emb {
-                        data.push(remap_code(td[row * emb + e] as i32, pt_, p));
+                        data[k * emb + e] = remap_code(td[row * emb + e] as i32, pt_, p) as i8;
                     }
                 }
-                Ok(ChainVal { shape: out_shape, data, q: ValQ::Codes(p) })
+                Ok(ChainVal { shape: out_shape, data: CD::I8(data), q: ValQ::Codes(p) })
             }
             OpKind::BiasAdd => {
                 let px = x.codes()?;
-                let b = self.qm.bias[op.id]
-                    .as_ref()
-                    .ok_or_else(|| format!("{}: bias not folded", op.name))?;
+                let xs = x.i8s()?;
+                let b = self.qm.bias[op.id].as_ref().ok_or_else(|| FdtError::InvalidOp {
+                    op: op.name.clone(),
+                    reason: "bias not folded".to_string(),
+                })?;
                 let c = b.len();
                 let p = self.qm.params[op.output];
-                let (m, sh) = quantize_multiplier(px.scale as f64 / p.scale as f64);
-                let data = x
-                    .data
-                    .iter()
-                    .enumerate()
-                    .map(|(i, &q)| {
-                        let acc = ((q - px.zero_point) as i64 + b[i % c] as i64)
-                            .clamp(i32::MIN as i64, i32::MAX as i64)
-                            as i32;
-                        requantize(acc, m, sh, p.zero_point, -128, 127)
-                    })
-                    .collect();
-                Ok(ChainVal { shape: out_shape, data, q: ValQ::Codes(p) })
+                let rq = RequantPlan::new(px.scale as f64, p, -128, 127);
+                let mut data = scratch.take_i8(xs.len());
+                for (i, (&q, o)) in xs.iter().zip(data.iter_mut()).enumerate() {
+                    let acc = ((q as i32 - px.zero_point) as i64 + b[i % c] as i64)
+                        .clamp(i32::MIN as i64, i32::MAX as i64)
+                        as i32;
+                    *o = rq.apply(acc) as i8;
+                }
+                Ok(ChainVal { shape: out_shape, data: CD::I8(data), q: ValQ::Codes(p) })
             }
             OpKind::Activation(a) => {
                 let px = x.codes()?;
+                let xs = x.i8s()?;
                 let p = self.qm.params[op.output];
-                let data: Vec<i32> = match a {
-                    ActKind::Identity | ActKind::Relu | ActKind::Relu6 => {
-                        let (m, sh) = quantize_multiplier(px.scale as f64 / p.scale as f64);
-                        let (lo, hi) = act_code_range(*a, p);
-                        x.data
-                            .iter()
-                            .map(|&q| requantize(q - px.zero_point, m, sh, p.zero_point, lo, hi))
-                            .collect()
-                    }
-                    ActKind::Sigmoid | ActKind::Tanh => x
-                        .data
-                        .iter()
-                        .map(|&q| {
-                            let real = (q - px.zero_point) as f64 * px.scale as f64;
-                            let y = match a {
-                                ActKind::Sigmoid => 1.0 / (1.0 + (-real).exp()),
-                                _ => real.tanh(),
-                            };
-                            quantize_f64(y, p)
-                        })
-                        .collect(),
-                };
-                Ok(ChainVal { shape: out_shape, data, q: ValQ::Codes(p) })
+                // The input domain is 256 codes: one table lookup per
+                // element, built with the exact reference math (shared
+                // with the C emitter — bit-identical by construction).
+                let lut = act_lut(*a, px, p);
+                let mut data = scratch.take_i8(xs.len());
+                for (o, &q) in data.iter_mut().zip(xs) {
+                    *o = lut[(q as i32 + 128) as usize];
+                }
+                Ok(ChainVal { shape: out_shape, data: CD::I8(data), q: ValQ::Codes(p) })
             }
             OpKind::MaxPool2d { ksize, stride, padding }
             | OpKind::AvgPool2d { ksize, stride, padding } => {
                 let is_max = matches!(op.kind, OpKind::MaxPool2d { .. });
                 let px = x.codes()?;
+                let xs = x.i8s()?;
                 let (ih, iw, c) = (x.shape[0], x.shape[1], x.shape[2]);
                 let (oh, ow) = (out_shape[0], out_shape[1]);
                 let (pt, pl) = pad_before(*padding, ih, iw, *ksize, *stride);
                 let p = self.qm.params[op.output];
-                let mut data = Vec::with_capacity(oh * ow * c);
+                let mut data = scratch.take_i8(oh * ow * c);
+                let mut row = scratch.take_i32(c);
                 for y in 0..oh {
                     for xx in 0..ow {
-                        for ch in 0..c {
-                            let mut best = i32::MIN;
-                            let mut sum = 0i64;
-                            let mut cnt = 0usize;
-                            for dy in 0..ksize.0 {
-                                let sy = y as isize * stride.0 as isize + dy as isize - pt;
-                                if sy < 0 || sy >= ih as isize {
+                        let o0 = (y * ow + xx) * c;
+                        row.fill(if is_max { i32::MIN } else { 0 });
+                        let mut cnt = 0usize;
+                        for dy in 0..ksize.0 {
+                            let sy = y as isize * stride.0 as isize + dy as isize - pt;
+                            if sy < 0 || sy >= ih as isize {
+                                continue;
+                            }
+                            for dx in 0..ksize.1 {
+                                let sx = xx as isize * stride.1 as isize + dx as isize - pl;
+                                if sx < 0 || sx >= iw as isize {
                                     continue;
                                 }
-                                for dx in 0..ksize.1 {
-                                    let sx = xx as isize * stride.1 as isize + dx as isize - pl;
-                                    if sx < 0 || sx >= iw as isize {
-                                        continue;
-                                    }
-                                    let q = x.data[(sy as usize * iw + sx as usize) * c + ch];
-                                    best = best.max(q);
-                                    sum += (q - px.zero_point) as i64;
-                                    cnt += 1;
+                                let base = (sy as usize * iw + sx as usize) * c;
+                                let tap = &xs[base..base + c];
+                                if is_max {
+                                    self.kern.vmax(&mut row, tap);
+                                } else {
+                                    self.kern.vsum(&mut row, tap, px.zero_point);
                                 }
+                                cnt += 1;
                             }
-                            if is_max {
-                                let q = if cnt == 0 { px.zero_point } else { best };
-                                data.push(remap_code(q, px, p));
+                        }
+                        // i32 window sums cannot overflow: |q - zp| <= 255
+                        // per tap and windows are tiny.
+                        for ch in 0..c {
+                            data[o0 + ch] = if is_max {
+                                let q = if cnt == 0 { px.zero_point } else { row[ch] };
+                                remap_code(q, px, p) as i8
                             } else {
                                 let real =
-                                    sum as f64 * px.scale as f64 / cnt.max(1) as f64;
-                                data.push(quantize_f64(real, p));
-                            }
+                                    row[ch] as f64 * px.scale as f64 / cnt.max(1) as f64;
+                                quantize_f64(real, p) as i8
+                            };
                         }
                     }
                 }
-                Ok(ChainVal { shape: out_shape, data, q: ValQ::Codes(p) })
+                scratch.give_i32(row);
+                Ok(ChainVal { shape: out_shape, data: CD::I8(data), q: ValQ::Codes(p) })
             }
             OpKind::GlobalAvgPool => {
                 let px = x.codes()?;
+                let xs = x.i8s()?;
                 let (h, w, c) = (x.shape[0], x.shape[1], x.shape[2]);
                 let p = self.qm.params[op.output];
                 let mut sums = vec![0i64; c];
                 for i in 0..h * w {
-                    for (s, &q) in sums.iter_mut().zip(&x.data[i * c..(i + 1) * c]) {
-                        *s += (q - px.zero_point) as i64;
+                    for (s, &q) in sums.iter_mut().zip(&xs[i * c..(i + 1) * c]) {
+                        *s += (q as i32 - px.zero_point) as i64;
                     }
                 }
-                let data = sums
-                    .iter()
-                    .map(|&s| quantize_f64(s as f64 * px.scale as f64 / (h * w) as f64, p))
-                    .collect();
-                Ok(ChainVal { shape: out_shape, data, q: ValQ::Codes(p) })
+                let mut data = scratch.take_i8(c);
+                for (o, &s) in data.iter_mut().zip(&sums) {
+                    *o = quantize_f64(s as f64 * px.scale as f64 / (h * w) as f64, p) as i8;
+                }
+                Ok(ChainVal { shape: out_shape, data: CD::I8(data), q: ValQ::Codes(p) })
             }
             OpKind::ReduceMean { axis, .. } => {
                 let px = x.codes()?;
+                let xs = x.i8s()?;
                 let n = x.shape[*axis];
                 let outer: usize = x.shape[..*axis].iter().product();
                 let inner: usize = x.shape[*axis + 1..].iter().product();
                 let p = self.qm.params[op.output];
-                let mut data = Vec::with_capacity(outer * inner);
+                let mut data = scratch.take_i8(outer * inner);
                 for o in 0..outer {
                     for i in 0..inner {
                         let mut sum = 0i64;
                         for a in 0..n {
-                            sum += (x.data[(o * n + a) * inner + i] - px.zero_point) as i64;
+                            sum += (xs[(o * n + a) * inner + i] as i32 - px.zero_point) as i64;
                         }
-                        data.push(quantize_f64(sum as f64 * px.scale as f64 / n as f64, p));
+                        data[o * inner + i] =
+                            quantize_f64(sum as f64 * px.scale as f64 / n as f64, p) as i8;
                     }
                 }
-                Ok(ChainVal { shape: out_shape, data, q: ValQ::Codes(p) })
+                Ok(ChainVal { shape: out_shape, data: CD::I8(data), q: ValQ::Codes(p) })
             }
             OpKind::Softmax => {
                 let px = x.codes()?;
+                let xs = x.i8s()?;
                 let p = self.qm.params[op.output];
-                let reals: Vec<f64> = x
-                    .data
-                    .iter()
-                    .map(|&q| (q - px.zero_point) as f64 * px.scale as f64)
-                    .collect();
-                let m = reals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-                let exps: Vec<f64> = reals.iter().map(|&r| (r - m).exp()).collect();
+                // exp(x_q - x_max) = exp(-(q_max - q) * s): 256 exact f64
+                // exponentials cover the whole input domain. The C emitter
+                // embeds the same table's bit patterns, so both back ends
+                // sum identical doubles in identical order.
+                let t = softmax_exp_lut(px.scale);
+                let mx = xs.iter().map(|&q| q as i32).max().unwrap_or(0);
+                let exps: Vec<f64> = xs.iter().map(|&q| t[(mx - q as i32) as usize]).collect();
                 let sum: f64 = exps.iter().sum();
-                let data = exps.iter().map(|&e| quantize_f64(e / sum, p)).collect();
-                Ok(ChainVal { shape: out_shape, data, q: ValQ::Codes(p) })
+                let mut data = scratch.take_i8(xs.len());
+                for (o, &e) in data.iter_mut().zip(&exps) {
+                    *o = quantize_f64(e / sum, p) as i8;
+                }
+                Ok(ChainVal { shape: out_shape, data: CD::I8(data), q: ValQ::Codes(p) })
             }
             OpKind::Add | OpKind::Mul => {
                 let pa = x.codes()?;
+                let xs = x.i8s()?;
                 let other = self.load(arena, op.inputs[1])?;
                 let pb = other.codes()?;
+                let os = other.i8s()?;
                 let p = self.qm.params[op.output];
                 let mul = matches!(op.kind, OpKind::Mul);
-                let data = x
-                    .data
-                    .iter()
-                    .zip(&other.data)
-                    .map(|(&qa, &qb)| {
-                        let a = (qa - pa.zero_point) as f64 * pa.scale as f64;
-                        let b = (qb - pb.zero_point) as f64 * pb.scale as f64;
-                        quantize_f64(if mul { a * b } else { a + b }, p)
-                    })
-                    .collect();
-                Ok(ChainVal { shape: out_shape, data, q: ValQ::Codes(p) })
+                let mut data = scratch.take_i8(xs.len());
+                for ((o, &qa), &qb) in data.iter_mut().zip(xs).zip(os) {
+                    let a = (qa as i32 - pa.zero_point) as f64 * pa.scale as f64;
+                    let b = (qb as i32 - pb.zero_point) as f64 * pb.scale as f64;
+                    *o = quantize_f64(if mul { a * b } else { a + b }, p) as i8;
+                }
+                if let CD::I8(v) = other.data {
+                    scratch.give_i8(v);
+                }
+                Ok(ChainVal { shape: out_shape, data: CD::I8(data), q: ValQ::Codes(p) })
             }
             OpKind::Pad { pads } => {
                 let px = x.codes()?;
+                let xs = x.i8s()?;
                 let n: usize = out_shape.iter().product();
-                let mut data = vec![px.zero_point; n];
+                let mut data = scratch.take_i8(n);
+                data.fill(px.zero_point as i8);
                 let out_strides = dense_strides(&out_shape);
                 let mut idx = vec![0usize; x.shape.len()];
-                for &xq in &x.data {
+                for &xq in xs {
                     let mut oflat = 0usize;
                     for d in 0..idx.len() {
                         oflat += (idx[d] + pads[d].0) * out_strides[d];
                     }
                     data[oflat] = xq;
-                    for d in (0..idx.len()).rev() {
-                        idx[d] += 1;
-                        if idx[d] < x.shape[d] {
-                            break;
-                        }
-                        idx[d] = 0;
-                    }
+                    advance(&mut idx, &x.shape);
                 }
                 // Output keeps the input grid (compile propagates it), so
                 // zero-fill (= the input zero point) stays exact.
-                Ok(ChainVal { shape: out_shape, data, q: ValQ::Codes(px) })
+                Ok(ChainVal { shape: out_shape, data: CD::I8(data), q: ValQ::Codes(px) })
             }
-            OpKind::Reshape { .. } => Ok(ChainVal { shape: out_shape, data: x.data, q: x.q }),
+            OpKind::Reshape { .. } => {
+                let q = x.q;
+                Ok(ChainVal { shape: out_shape, data: x.into_cd(scratch), q })
+            }
             OpKind::Slice { .. } | OpKind::Concat { .. } | OpKind::Merge { .. } => {
-                Err(format!("{}: handled outside the chain evaluator", op.name))
+                Err(FdtError::InvalidOp {
+                    op: op.name.clone(),
+                    reason: "handled outside the chain evaluator".to_string(),
+                })
             }
         }
     }
 
     /// Concat: aliased inputs already live in the destination; copy (and
     /// re-grid if needed) the rest.
-    fn exec_concat(&self, arena: &mut [u8], op: &Op, axis: usize) -> Result<(), String> {
+    fn exec_concat(
+        &self,
+        arena: &mut [u8],
+        op: &Op,
+        axis: usize,
+        scratch: &mut Scratch,
+    ) -> FdtResult<()> {
         let out = self.views[op.output]
             .as_ref()
-            .ok_or_else(|| format!("{}: concat output has no storage", op.name))?
+            .ok_or_else(|| FdtError::InvalidOp {
+                op: op.name.clone(),
+                reason: "concat output has no storage".to_string(),
+            })?
             .clone();
         let p_out = self.qm.params[op.output];
         let mut pos = 0usize;
@@ -1061,15 +1359,25 @@ impl Int8Executable {
                 buffer: out.buffer,
                 root_bytes: out.root_bytes,
             };
-            let aliased = self.views[t]
-                .as_ref()
-                .is_some_and(|v| v.base == sub.base && v.off == sub.off && v.strides == sub.strides);
+            let aliased = self.views[t].as_ref().is_some_and(|v| {
+                v.base == sub.base && v.off == sub.off && v.strides == sub.strides
+            });
             if !aliased {
-                let v = self.load(arena, t)?;
+                let v = self.load(&*arena, t)?;
                 let p_in = v.codes()?;
-                let data: Vec<i32> =
-                    v.data.iter().map(|&q| remap_code(q, p_in, p_out)).collect();
-                write_view(arena, &sub, &data, false);
+                let CD::I8(mut d) = v.data else {
+                    return Err(FdtError::InvalidOp {
+                        op: op.name.clone(),
+                        reason: "concat input is not i8 codes".to_string(),
+                    });
+                };
+                if p_in != p_out {
+                    for e in d.iter_mut() {
+                        *e = remap_code(*e as i32, p_in, p_out) as i8;
+                    }
+                }
+                write_codes(arena, &sub, &d);
+                scratch.give_i8(d);
             }
             pos += shape[axis];
         }
@@ -1078,10 +1386,19 @@ impl Int8Executable {
 
     /// Merge: sum the i32 partials (aliased ones already accumulated in
     /// place) and requantize once onto the output grid, in place.
-    fn exec_merge(&self, arena: &mut [u8], op: &Op, act: ActKind) -> Result<(), String> {
+    fn exec_merge(
+        &self,
+        arena: &mut [u8],
+        op: &Op,
+        act: ActKind,
+        scratch: &mut Scratch,
+    ) -> FdtResult<()> {
         let out = self.views[op.output]
             .as_ref()
-            .ok_or_else(|| format!("{}: merge output has no storage", op.name))?
+            .ok_or_else(|| FdtError::InvalidOp {
+                op: op.name.clone(),
+                reason: "merge output has no storage".to_string(),
+            })?
             .clone();
         let any_aliased = op
             .inputs
@@ -1095,28 +1412,46 @@ impl Int8Executable {
         let mut s_acc: Option<f64> = None;
         for &t in &op.inputs {
             let Repr::Acc(s) = self.qm.repr[t] else {
-                return Err(format!(
-                    "{}: merge input {} is not an i32 partial",
-                    op.name,
-                    self.g.tensor(t).name
-                ));
+                return Err(FdtError::InvalidOp {
+                    op: op.name.clone(),
+                    reason: format!(
+                        "merge input {} is not an i32 partial",
+                        self.g.tensor(t).name
+                    ),
+                });
             };
             match s_acc {
                 None => s_acc = Some(s),
                 Some(s0) if (s0 - s).abs() > s0.abs() * 1e-9 => {
-                    return Err(format!("{}: merge partials disagree on scale", op.name));
+                    return Err(FdtError::InvalidOp {
+                        op: op.name.clone(),
+                        reason: "merge partials disagree on scale".to_string(),
+                    });
                 }
                 _ => {}
             }
             let aliased = self.views[t].as_ref().is_some_and(|v| v.accumulate);
             if !aliased {
-                let v = self.load(arena, t)?;
-                for (a, &x) in acc.iter_mut().zip(&v.data) {
-                    *a += x as i64;
+                match self.load(&*arena, t)?.data {
+                    CD::I32(d) => {
+                        for (a, &x) in acc.iter_mut().zip(&d) {
+                            *a += x as i64;
+                        }
+                        scratch.give_i32(d);
+                    }
+                    CD::I8(_) => {
+                        return Err(FdtError::InvalidOp {
+                            op: op.name.clone(),
+                            reason: "merge partial loaded as i8 codes".to_string(),
+                        });
+                    }
                 }
             }
         }
-        let s_acc = s_acc.ok_or_else(|| format!("{}: merge has no inputs", op.name))?;
+        let s_acc = s_acc.ok_or_else(|| FdtError::InvalidOp {
+            op: op.name.clone(),
+            reason: "merge has no inputs".to_string(),
+        })?;
         let p = self.qm.params[op.output];
         let codes: Vec<i32> = match act {
             ActKind::Sigmoid | ActKind::Tanh => acc
@@ -1131,12 +1466,12 @@ impl Int8Executable {
                 })
                 .collect(),
             _ => {
-                let (m, sh) = quantize_multiplier(s_acc / p.scale as f64);
                 let (lo, hi) = act_code_range(act, p);
+                let rq = RequantPlan::new(s_acc, p, lo, hi);
                 acc.iter()
                     .map(|&a| {
                         let a = a.clamp(i32::MIN as i64, i32::MAX as i64) as i32;
-                        requantize(a, m, sh, p.zero_point, lo, hi)
+                        rq.apply(a)
                     })
                     .collect()
             }
@@ -1193,5 +1528,17 @@ mod tests {
         let a = exe.run(&inputs).unwrap();
         let b = exe.run(&inputs).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn forced_scalar_matches_dispatched_outputs_and_arena() {
+        let g = models::kws();
+        let (mut exe, inputs) = native(&g, 13);
+        let (fast, arena_fast) = exe.run_capture(&inputs).unwrap();
+        exe.force_scalar_kernels();
+        assert_eq!(exe.kernels_name(), "scalar");
+        let (slow, arena_slow) = exe.run_capture(&inputs).unwrap();
+        assert_eq!(fast, slow);
+        assert_eq!(arena_fast, arena_slow);
     }
 }

@@ -1,0 +1,137 @@
+//! AVX2 tier (x86_64): 8 i32 lanes per 256-bit register, entered only
+//! after `is_x86_feature_detected!("avx2")` succeeds in `select`.
+//!
+//! Each primitive widens 8 i8 codes (`_mm_loadl_epi64` +
+//! `_mm256_cvtepi8_epi32` — SSE2/AVX2 only) and performs the identical
+//! per-lane exact i32 arithmetic as the scalar tier; ragged tails fall
+//! back to the same scalar loop. Integer adds are associative and each
+//! output lane is touched by exactly one lane position, so results are
+//! bit-identical to `scalar::Scalar` — asserted by the module tests and
+//! the scalar-vs-dispatched property suite.
+
+#![allow(unsafe_code)]
+
+use super::Microkernels;
+use std::arch::x86_64::{
+    __m256i, _mm256_add_epi32, _mm256_cvtepi8_epi32, _mm256_loadu_si256, _mm256_max_epi32,
+    _mm256_mullo_epi32, _mm256_set1_epi32, _mm256_storeu_si256, _mm256_sub_epi32, _mm_loadl_epi64,
+};
+
+pub(crate) struct Avx2;
+
+/// Widen 8 consecutive i8 codes starting at `p` to 8 i32 lanes.
+///
+/// # Safety
+/// `p` must be valid for reading 8 bytes.
+#[target_feature(enable = "avx2")]
+unsafe fn widen8(p: *const i8) -> __m256i {
+    _mm256_cvtepi8_epi32(_mm_loadl_epi64(p.cast()))
+}
+
+/// # Safety
+/// Caller must ensure AVX2 is available and slices hold ≥ `n8 * 8`
+/// elements at the given bases.
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(acc: *mut i32, w: *const i8, n8: usize, xv: i32, zw: i32) {
+    let xvv = _mm256_set1_epi32(xv);
+    let zwv = _mm256_set1_epi32(zw);
+    for b in 0..n8 {
+        let a = acc.add(b * 8).cast();
+        let wv = _mm256_sub_epi32(widen8(w.add(b * 8)), zwv);
+        let cur = _mm256_loadu_si256(a);
+        _mm256_storeu_si256(a, _mm256_add_epi32(cur, _mm256_mullo_epi32(xvv, wv)));
+    }
+}
+
+/// # Safety
+/// Caller must ensure AVX2 is available and slices hold ≥ `n8 * 8`
+/// elements at the given bases.
+#[target_feature(enable = "avx2")]
+unsafe fn mac_avx2(acc: *mut i32, x: *const i8, zx: i32, w: *const i8, zw: i32, n8: usize) {
+    let zxv = _mm256_set1_epi32(zx);
+    let zwv = _mm256_set1_epi32(zw);
+    for b in 0..n8 {
+        let a = acc.add(b * 8).cast();
+        let xv = _mm256_sub_epi32(widen8(x.add(b * 8)), zxv);
+        let wv = _mm256_sub_epi32(widen8(w.add(b * 8)), zwv);
+        let cur = _mm256_loadu_si256(a);
+        _mm256_storeu_si256(a, _mm256_add_epi32(cur, _mm256_mullo_epi32(xv, wv)));
+    }
+}
+
+/// # Safety
+/// Caller must ensure AVX2 is available and slices hold ≥ `n8 * 8`
+/// elements at the given bases.
+#[target_feature(enable = "avx2")]
+unsafe fn vmax_avx2(best: *mut i32, x: *const i8, n8: usize) {
+    for b in 0..n8 {
+        let p = best.add(b * 8).cast();
+        let xv = widen8(x.add(b * 8));
+        let cur = _mm256_loadu_si256(p);
+        _mm256_storeu_si256(p, _mm256_max_epi32(cur, xv));
+    }
+}
+
+/// # Safety
+/// Caller must ensure AVX2 is available and slices hold ≥ `n8 * 8`
+/// elements at the given bases.
+#[target_feature(enable = "avx2")]
+unsafe fn vsum_avx2(sum: *mut i32, x: *const i8, zx: i32, n8: usize) {
+    let zxv = _mm256_set1_epi32(zx);
+    for b in 0..n8 {
+        let p = sum.add(b * 8).cast();
+        let xv = _mm256_sub_epi32(widen8(x.add(b * 8)), zxv);
+        let cur = _mm256_loadu_si256(p);
+        _mm256_storeu_si256(p, _mm256_add_epi32(cur, xv));
+    }
+}
+
+impl Microkernels for Avx2 {
+    fn name(&self) -> &'static str {
+        "avx2"
+    }
+
+    fn axpy(&self, acc: &mut [i32], w: &[i8], xv: i32, zw: i32) {
+        let n = acc.len().min(w.len());
+        let n8 = n / 8;
+        // SAFETY: select() only hands out Avx2 after runtime detection;
+        // both slices hold at least n8 * 8 elements.
+        unsafe { axpy_avx2(acc.as_mut_ptr(), w.as_ptr(), n8, xv, zw) };
+        for i in n8 * 8..n {
+            acc[i] += xv * (w[i] as i32 - zw);
+        }
+    }
+
+    fn mac(&self, acc: &mut [i32], x: &[i8], zx: i32, w: &[i8], zw: i32) {
+        let n = acc.len().min(x.len()).min(w.len());
+        let n8 = n / 8;
+        // SAFETY: as above.
+        unsafe { mac_avx2(acc.as_mut_ptr(), x.as_ptr(), zx, w.as_ptr(), zw, n8) };
+        for i in n8 * 8..n {
+            acc[i] += (x[i] as i32 - zx) * (w[i] as i32 - zw);
+        }
+    }
+
+    fn vmax(&self, best: &mut [i32], x: &[i8]) {
+        let n = best.len().min(x.len());
+        let n8 = n / 8;
+        // SAFETY: as above.
+        unsafe { vmax_avx2(best.as_mut_ptr(), x.as_ptr(), n8) };
+        for i in n8 * 8..n {
+            let v = x[i] as i32;
+            if v > best[i] {
+                best[i] = v;
+            }
+        }
+    }
+
+    fn vsum(&self, sum: &mut [i32], x: &[i8], zx: i32) {
+        let n = sum.len().min(x.len());
+        let n8 = n / 8;
+        // SAFETY: as above.
+        unsafe { vsum_avx2(sum.as_mut_ptr(), x.as_ptr(), zx, n8) };
+        for i in n8 * 8..n {
+            sum[i] += x[i] as i32 - zx;
+        }
+    }
+}

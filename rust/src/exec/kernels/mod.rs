@@ -1,0 +1,399 @@
+//! Vectorized int8 microkernels with runtime dispatch.
+//!
+//! The hot inner loops of the int8 executor — the i8×i8→i32 dot products
+//! of conv/dwconv/dense and the widen/max/sum row primitives of the
+//! pooling kernels — are extracted behind the [`Microkernels`] trait:
+//!
+//! * [`scalar::Scalar`] is the bit-for-bit reference (plain loops,
+//!   exactly the executor's historical arithmetic);
+//! * `avx2::Avx2` (x86_64, behind `is_x86_feature_detected!("avx2")`)
+//!   widens 8 i8 lanes to i32 and runs the same lane-independent
+//!   multiply-accumulate per 256-bit register;
+//! * `neon::Neon` (aarch64) does the same over 128-bit registers via
+//!   widening `s8→s16→s32` multiply-accumulates.
+//!
+//! Every primitive is *lane-independent*: each output element sees the
+//! identical sequence of exact integer adds in the identical order, so
+//! all tiers are bit-identical by construction — the scalar-vs-dispatched
+//! property in `tests/props.rs` asserts it over the zoo and fuzzed
+//! graphs. Requantization (SRDHM + rounding shift) stays scalar in every
+//! tier: it is O(output) against the O(output·k·k·cin) MACs, and its
+//! saturating rounding semantics are exactly the part a subtle SIMD port
+//! would silently break.
+//!
+//! Selection happens once, at `Int8Executable::plan`/`compile` time
+//! ([`select`]), overridable with `FDT_FORCE_SCALAR=1` for testing and
+//! A/B benchmarking.
+//!
+//! The module also hosts the intra-op parallel drivers ([`conv2d`],
+//! [`dense`]): output rows (conv) or output-column blocks (dense) are
+//! chunked over scoped worker threads when an op crosses
+//! [`PAR_MIN_MACS`], so tiny TinyML layers never pay spawn overhead.
+//! Chunks own disjoint accumulator slices, so per-output accumulation
+//! order — and therefore bit-exactness — is unchanged.
+
+mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+use std::sync::OnceLock;
+
+/// Row-level int8 primitives the executor's loop nests call into.
+///
+/// All slices of one call have matching lengths (callers slice rows out
+/// of validated views); implementations must process exactly
+/// `acc.len().min(row.len())` lanes with per-lane exact i32 arithmetic.
+pub(crate) trait Microkernels: Sync {
+    /// Dispatch-tier name (`"scalar"`, `"avx2"`, `"neon"`).
+    fn name(&self) -> &'static str;
+
+    /// `acc[i] += xv * (w[i] - zw)` — the conv/dense inner row: one
+    /// activation value broadcast against a contiguous weight row.
+    fn axpy(&self, acc: &mut [i32], w: &[i8], xv: i32, zw: i32);
+
+    /// `acc[i] += (x[i] - zx) * (w[i] - zw)` — the depthwise tap: one
+    /// activation row against one weight row, channel-wise.
+    fn mac(&self, acc: &mut [i32], x: &[i8], zx: i32, w: &[i8], zw: i32);
+
+    /// `best[i] = max(best[i], x[i])` — max-pool tap over a channel row.
+    fn vmax(&self, best: &mut [i32], x: &[i8]);
+
+    /// `sum[i] += x[i] - zx` — avg-pool tap over a channel row.
+    fn vsum(&self, sum: &mut [i32], x: &[i8], zx: i32);
+}
+
+/// The scalar reference tier (also the `FDT_FORCE_SCALAR` target).
+pub(crate) static SCALAR: scalar::Scalar = scalar::Scalar;
+
+#[cfg(target_arch = "x86_64")]
+fn native() -> &'static dyn Microkernels {
+    static AVX2: avx2::Avx2 = avx2::Avx2;
+    if std::is_x86_feature_detected!("avx2") {
+        &AVX2
+    } else {
+        &SCALAR
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn native() -> &'static dyn Microkernels {
+    // NEON is architecturally mandatory on AArch64.
+    static NEON: neon::Neon = neon::Neon;
+    &NEON
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn native() -> &'static dyn Microkernels {
+    &SCALAR
+}
+
+/// Select the kernel tier for this host: the best SIMD tier the CPU
+/// reports, or the scalar reference when `FDT_FORCE_SCALAR=1` is set.
+/// Called once per plan/compile — never on the inference path.
+pub(crate) fn select() -> &'static dyn Microkernels {
+    if std::env::var("FDT_FORCE_SCALAR").is_ok_and(|v| v == "1") {
+        &SCALAR
+    } else {
+        native()
+    }
+}
+
+/// Minimum multiply-accumulates before an op fans out over worker
+/// threads: below this, spawn + join overhead dwarfs the work (the
+/// paper's TinyML layers are all far below it; server-sized layers
+/// cross it).
+pub(crate) const PAR_MIN_MACS: usize = 2_000_000;
+
+/// Worker threads for intra-op parallelism: `FDT_EXEC_THREADS` when set
+/// (≥1), otherwise the host's available parallelism. Cached for the
+/// process lifetime.
+pub(crate) fn exec_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("FDT_EXEC_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Geometry + zero points of one conv2d / depthwise-conv2d invocation
+/// (HWC activations, HWIO / HWC weights — the executor's layouts).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct ConvShape {
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub ih: usize,
+    pub iw: usize,
+    pub oh: usize,
+    pub ow: usize,
+    pub stride: (usize, usize),
+    /// (pad_top, pad_left), already sign-extended.
+    pub pad: (isize, isize),
+    pub zx: i32,
+    pub zw: i32,
+}
+
+/// Standard conv2d: `acc[(y*ow + xx)*cout + co] += (x - zx) * (w - zw)`
+/// over `(dy, dx, ci)` ascending — the executor's historical
+/// accumulation order per output element. Fans out over output-row
+/// blocks past [`PAR_MIN_MACS`].
+pub(crate) fn conv2d(
+    k: &'static dyn Microkernels,
+    x: &[i8],
+    w: &[i8],
+    acc: &mut [i32],
+    s: &ConvShape,
+) {
+    let macs = s.oh * s.ow * s.cout * s.kh * s.kw * s.cin;
+    let nt = exec_threads().min(s.oh.max(1));
+    if nt <= 1 || macs < PAR_MIN_MACS {
+        conv2d_rows(k, x, w, acc, s, 0);
+        return;
+    }
+    let rows_per = s.oh.div_ceil(nt);
+    let chunk = rows_per * s.ow * s.cout;
+    if chunk == 0 {
+        conv2d_rows(k, x, w, acc, s, 0);
+        return;
+    }
+    std::thread::scope(|scope| {
+        for (ti, a) in acc.chunks_mut(chunk).enumerate() {
+            let y0 = ti * rows_per;
+            scope.spawn(move || conv2d_rows(k, x, w, a, s, y0));
+        }
+    });
+}
+
+/// Serial conv over the output rows `y0..y0 + acc.len()/(ow*cout)`,
+/// writing into a row-local accumulator slice.
+fn conv2d_rows(
+    k: &dyn Microkernels,
+    x: &[i8],
+    w: &[i8],
+    acc: &mut [i32],
+    s: &ConvShape,
+    y0: usize,
+) {
+    let row_elems = s.ow * s.cout;
+    if row_elems == 0 {
+        return;
+    }
+    let rows = acc.len() / row_elems;
+    for ly in 0..rows {
+        let y = y0 + ly;
+        for dy in 0..s.kh {
+            let sy = y as isize * s.stride.0 as isize + dy as isize - s.pad.0;
+            if sy < 0 || sy >= s.ih as isize {
+                continue;
+            }
+            let xrow = sy as usize * s.iw;
+            let wdy = dy * s.kw;
+            for xx in 0..s.ow {
+                let obase = (ly * s.ow + xx) * s.cout;
+                for dx in 0..s.kw {
+                    let sx = xx as isize * s.stride.1 as isize + dx as isize - s.pad.1;
+                    if sx < 0 || sx >= s.iw as isize {
+                        continue;
+                    }
+                    let xbase = (xrow + sx as usize) * s.cin;
+                    let wbase = (wdy + dx) * s.cin * s.cout;
+                    for ci in 0..s.cin {
+                        let xv = x[xbase + ci] as i32 - s.zx;
+                        k.axpy(
+                            &mut acc[obase..obase + s.cout],
+                            &w[wbase + ci * s.cout..wbase + (ci + 1) * s.cout],
+                            xv,
+                            s.zw,
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Depthwise conv2d: per-tap channel-row MACs, `(dy, dx)` ascending per
+/// output element (`cout` is the channel count `c`; `cin` unused).
+pub(crate) fn dwconv2d(k: &dyn Microkernels, x: &[i8], w: &[i8], acc: &mut [i32], s: &ConvShape) {
+    let c = s.cout;
+    for y in 0..s.oh {
+        for dy in 0..s.kh {
+            let sy = y as isize * s.stride.0 as isize + dy as isize - s.pad.0;
+            if sy < 0 || sy >= s.ih as isize {
+                continue;
+            }
+            let xrow = sy as usize * s.iw;
+            for xx in 0..s.ow {
+                let obase = (y * s.ow + xx) * c;
+                for dx in 0..s.kw {
+                    let sx = xx as isize * s.stride.1 as isize + dx as isize - s.pad.1;
+                    if sx < 0 || sx >= s.iw as isize {
+                        continue;
+                    }
+                    let xbase = (xrow + sx as usize) * c;
+                    let wbase = (dy * s.kw + dx) * c;
+                    k.mac(
+                        &mut acc[obase..obase + c],
+                        &x[xbase..xbase + c],
+                        s.zx,
+                        &w[wbase..wbase + c],
+                        s.zw,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Dense / fully-connected: `acc[o] += (x[i] - zx) * (w[i*fout + o] - zw)`
+/// with `i` ascending per output — an axpy of each input value against
+/// its weight row. Fans out over output-column blocks past
+/// [`PAR_MIN_MACS`] (each block owns a disjoint `acc` slice and reads a
+/// strided weight sub-row, so per-output order is unchanged).
+pub(crate) fn dense(
+    k: &'static dyn Microkernels,
+    x: &[i8],
+    w: &[i8],
+    acc: &mut [i32],
+    zx: i32,
+    zw: i32,
+) {
+    let fout = acc.len();
+    let macs = x.len() * fout;
+    let nt = exec_threads().min(fout.max(1));
+    if nt <= 1 || macs < PAR_MIN_MACS {
+        dense_cols(k, x, w, acc, fout, 0, zx, zw);
+        return;
+    }
+    let per = fout.div_ceil(nt);
+    if per == 0 {
+        dense_cols(k, x, w, acc, fout, 0, zx, zw);
+        return;
+    }
+    std::thread::scope(|scope| {
+        for (ti, a) in acc.chunks_mut(per).enumerate() {
+            let c0 = ti * per;
+            scope.spawn(move || dense_cols(k, x, w, a, fout, c0, zx, zw));
+        }
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dense_cols(
+    k: &dyn Microkernels,
+    x: &[i8],
+    w: &[i8],
+    acc: &mut [i32],
+    fout: usize,
+    c0: usize,
+    zx: i32,
+    zw: i32,
+) {
+    let nc = acc.len();
+    for (i, &xq) in x.iter().enumerate() {
+        let xv = xq as i32 - zx;
+        k.axpy(acc, &w[i * fout + c0..i * fout + c0 + nc], xv, zw);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vecs(seed: u64, n: usize) -> (Vec<i8>, Vec<i8>) {
+        let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15) | 1;
+        let mut next = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            s as i8
+        };
+        ((0..n).map(|_| next()).collect(), (0..n).map(|_| next()).collect())
+    }
+
+    /// Every tier the host can run must match the scalar reference
+    /// bit-for-bit on every primitive, including ragged tails.
+    #[test]
+    fn dispatched_primitives_match_scalar() {
+        let k = native();
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 64, 100] {
+            let (x, w) = vecs(n as u64 + 1, n);
+            for (zx, zw) in [(0i32, 0i32), (-3, 5), (12, -7), (-128, 127)] {
+                let mut a = vec![7i32; n];
+                let mut b = a.clone();
+                SCALAR.axpy(&mut a, &w, 11 - zx, zw);
+                k.axpy(&mut b, &w, 11 - zx, zw);
+                assert_eq!(a, b, "axpy n={n} zw={zw}");
+
+                let mut a = vec![-9i32; n];
+                let mut b = a.clone();
+                SCALAR.mac(&mut a, &x, zx, &w, zw);
+                k.mac(&mut b, &x, zx, &w, zw);
+                assert_eq!(a, b, "mac n={n} zx={zx} zw={zw}");
+
+                let mut a = vec![i32::MIN; n];
+                let mut b = a.clone();
+                SCALAR.vmax(&mut a, &x);
+                k.vmax(&mut b, &x);
+                assert_eq!(a, b, "vmax n={n}");
+
+                let mut a = vec![3i32; n];
+                let mut b = a.clone();
+                SCALAR.vsum(&mut a, &x, zx);
+                k.vsum(&mut b, &x, zx);
+                assert_eq!(a, b, "vsum n={n} zx={zx}");
+            }
+        }
+    }
+
+    #[test]
+    fn force_scalar_env_selects_scalar_name() {
+        // `select` honors FDT_FORCE_SCALAR=1; without it the native tier
+        // is returned (which may itself be scalar on plain hosts).
+        assert!(["scalar", "avx2", "neon"].contains(&native().name()));
+        assert_eq!(SCALAR.name(), "scalar");
+    }
+
+    /// The parallel conv driver must agree with the serial row kernel
+    /// regardless of thread count (chunks own disjoint rows).
+    #[test]
+    fn parallel_conv_matches_serial() {
+        let s = ConvShape {
+            kh: 3,
+            kw: 3,
+            cin: 4,
+            cout: 8,
+            ih: 10,
+            iw: 10,
+            oh: 10,
+            ow: 10,
+            stride: (1, 1),
+            pad: (1, 1),
+            zx: -2,
+            zw: 3,
+        };
+        let (x, _) = vecs(5, s.ih * s.iw * s.cin);
+        let (w, _) = vecs(9, s.kh * s.kw * s.cin * s.cout);
+        let mut serial = vec![0i32; s.oh * s.ow * s.cout];
+        conv2d_rows(&SCALAR, &x, &w, &mut serial, &s, 0);
+        // Emulate the chunked fan-out deterministically on this thread.
+        for nt in [2usize, 3, 7] {
+            let rows_per = s.oh.div_ceil(nt);
+            let chunk = rows_per * s.ow * s.cout;
+            let mut par = vec![0i32; s.oh * s.ow * s.cout];
+            for (ti, a) in par.chunks_mut(chunk).enumerate() {
+                conv2d_rows(&SCALAR, &x, &w, a, &s, ti * rows_per);
+            }
+            assert_eq!(serial, par, "nt={nt}");
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! NEON tier (aarch64): 8 codes per step via widening s8→s16→s32
+//! multiply-accumulates. NEON is architecturally mandatory on AArch64,
+//! so no runtime detection is needed. Per-lane arithmetic is the exact
+//! i32 math of the scalar tier (operands fit i16, products fit i32:
+//! `|code − zp| ≤ 255`), so results are bit-identical; the
+//! scalar-vs-dispatched property and the CI aarch64 cross-check guard
+//! this path on x86 development hosts.
+
+#![allow(unsafe_code)]
+
+use super::Microkernels;
+use std::arch::aarch64::{
+    int16x8_t, vaddq_s32, vdupq_n_s16, vget_high_s16, vget_low_s16, vld1_s8, vld1q_s32,
+    vmaxq_s32, vmlal_s16, vmovl_s16, vmovl_s8, vst1q_s32, vsubq_s16,
+};
+
+pub(crate) struct Neon;
+
+/// Widen 8 consecutive i8 codes at `p` to 8 i16 lanes and subtract `z`.
+///
+/// # Safety
+/// `p` must be valid for reading 8 bytes.
+#[target_feature(enable = "neon")]
+unsafe fn centered8(p: *const i8, z: i16) -> int16x8_t {
+    vsubq_s16(vmovl_s8(vld1_s8(p)), vdupq_n_s16(z))
+}
+
+/// # Safety
+/// Slices must hold ≥ `n8 * 8` elements at the given bases.
+#[target_feature(enable = "neon")]
+unsafe fn axpy_neon(acc: *mut i32, w: *const i8, n8: usize, xv: i32, zw: i32) {
+    let xv16 = vdupq_n_s16(xv as i16);
+    for b in 0..n8 {
+        let wv = centered8(w.add(b * 8), zw as i16);
+        let a0 = acc.add(b * 8);
+        let a1 = acc.add(b * 8 + 4);
+        let lo = vmlal_s16(vld1q_s32(a0), vget_low_s16(wv), vget_low_s16(xv16));
+        let hi = vmlal_s16(vld1q_s32(a1), vget_high_s16(wv), vget_high_s16(xv16));
+        vst1q_s32(a0, lo);
+        vst1q_s32(a1, hi);
+    }
+}
+
+/// # Safety
+/// Slices must hold ≥ `n8 * 8` elements at the given bases.
+#[target_feature(enable = "neon")]
+unsafe fn mac_neon(acc: *mut i32, x: *const i8, zx: i32, w: *const i8, zw: i32, n8: usize) {
+    for b in 0..n8 {
+        let xv = centered8(x.add(b * 8), zx as i16);
+        let wv = centered8(w.add(b * 8), zw as i16);
+        let a0 = acc.add(b * 8);
+        let a1 = acc.add(b * 8 + 4);
+        let lo = vmlal_s16(vld1q_s32(a0), vget_low_s16(xv), vget_low_s16(wv));
+        let hi = vmlal_s16(vld1q_s32(a1), vget_high_s16(xv), vget_high_s16(wv));
+        vst1q_s32(a0, lo);
+        vst1q_s32(a1, hi);
+    }
+}
+
+/// # Safety
+/// Slices must hold ≥ `n8 * 8` elements at the given bases.
+#[target_feature(enable = "neon")]
+unsafe fn vmax_neon(best: *mut i32, x: *const i8, n8: usize) {
+    for b in 0..n8 {
+        let xv = centered8(x.add(b * 8), 0);
+        let lo = vmovl_s16(vget_low_s16(xv));
+        let hi = vmovl_s16(vget_high_s16(xv));
+        let p0 = best.add(b * 8);
+        let p1 = best.add(b * 8 + 4);
+        vst1q_s32(p0, vmaxq_s32(vld1q_s32(p0), lo));
+        vst1q_s32(p1, vmaxq_s32(vld1q_s32(p1), hi));
+    }
+}
+
+/// # Safety
+/// Slices must hold ≥ `n8 * 8` elements at the given bases.
+#[target_feature(enable = "neon")]
+unsafe fn vsum_neon(sum: *mut i32, x: *const i8, zx: i32, n8: usize) {
+    for b in 0..n8 {
+        let xv = centered8(x.add(b * 8), zx as i16);
+        let lo = vmovl_s16(vget_low_s16(xv));
+        let hi = vmovl_s16(vget_high_s16(xv));
+        let p0 = sum.add(b * 8);
+        let p1 = sum.add(b * 8 + 4);
+        vst1q_s32(p0, vaddq_s32(vld1q_s32(p0), lo));
+        vst1q_s32(p1, vaddq_s32(vld1q_s32(p1), hi));
+    }
+}
+
+impl Microkernels for Neon {
+    fn name(&self) -> &'static str {
+        "neon"
+    }
+
+    fn axpy(&self, acc: &mut [i32], w: &[i8], xv: i32, zw: i32) {
+        let n = acc.len().min(w.len());
+        // xv = x − zx ∈ [−255, 255] fits i16; (x−zx)(w−zw) fits i32.
+        let n8 = n / 8;
+        // SAFETY: NEON is mandatory on aarch64; slices hold ≥ n8*8.
+        unsafe { axpy_neon(acc.as_mut_ptr(), w.as_ptr(), n8, xv, zw) };
+        for i in n8 * 8..n {
+            acc[i] += xv * (w[i] as i32 - zw);
+        }
+    }
+
+    fn mac(&self, acc: &mut [i32], x: &[i8], zx: i32, w: &[i8], zw: i32) {
+        let n = acc.len().min(x.len()).min(w.len());
+        let n8 = n / 8;
+        // SAFETY: as above.
+        unsafe { mac_neon(acc.as_mut_ptr(), x.as_ptr(), zx, w.as_ptr(), zw, n8) };
+        for i in n8 * 8..n {
+            acc[i] += (x[i] as i32 - zx) * (w[i] as i32 - zw);
+        }
+    }
+
+    fn vmax(&self, best: &mut [i32], x: &[i8]) {
+        let n = best.len().min(x.len());
+        let n8 = n / 8;
+        // SAFETY: as above.
+        unsafe { vmax_neon(best.as_mut_ptr(), x.as_ptr(), n8) };
+        for i in n8 * 8..n {
+            let v = x[i] as i32;
+            if v > best[i] {
+                best[i] = v;
+            }
+        }
+    }
+
+    fn vsum(&self, sum: &mut [i32], x: &[i8], zx: i32) {
+        let n = sum.len().min(x.len());
+        let n8 = n / 8;
+        // SAFETY: as above.
+        unsafe { vsum_neon(sum.as_mut_ptr(), x.as_ptr(), zx, n8) };
+        for i in n8 * 8..n {
+            sum[i] += x[i] as i32 - zx;
+        }
+    }
+}

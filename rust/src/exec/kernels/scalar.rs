@@ -1,0 +1,43 @@
+//! Scalar reference tier: plain loops, bit-for-bit the executor's
+//! historical arithmetic. Every SIMD tier is validated against this.
+
+use super::Microkernels;
+
+pub(crate) struct Scalar;
+
+impl Microkernels for Scalar {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn axpy(&self, acc: &mut [i32], w: &[i8], xv: i32, zw: i32) {
+        let n = acc.len().min(w.len());
+        for i in 0..n {
+            acc[i] += xv * (w[i] as i32 - zw);
+        }
+    }
+
+    fn mac(&self, acc: &mut [i32], x: &[i8], zx: i32, w: &[i8], zw: i32) {
+        let n = acc.len().min(x.len()).min(w.len());
+        for i in 0..n {
+            acc[i] += (x[i] as i32 - zx) * (w[i] as i32 - zw);
+        }
+    }
+
+    fn vmax(&self, best: &mut [i32], x: &[i8]) {
+        let n = best.len().min(x.len());
+        for i in 0..n {
+            let v = x[i] as i32;
+            if v > best[i] {
+                best[i] = v;
+            }
+        }
+    }
+
+    fn vsum(&self, sum: &mut [i32], x: &[i8], zx: i32) {
+        let n = sum.len().min(x.len());
+        for i in 0..n {
+            sum[i] += x[i] as i32 - zx;
+        }
+    }
+}

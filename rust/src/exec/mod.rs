@@ -23,6 +23,7 @@ use crate::util::FnvHashMap;
 use std::collections::HashMap;
 
 pub mod int8;
+pub(crate) mod kernels;
 
 /// A dense f32 tensor value.
 #[derive(Debug, Clone, PartialEq)]

@@ -28,7 +28,8 @@
 //! interpreter and the generated C.
 
 use super::{Calibration, QuantParams};
-use crate::graph::{DType, Graph, OpKind, TensorKind};
+use crate::error::{FdtError, FdtResult};
+use crate::graph::{ActKind, DType, Graph, OpKind, TensorKind};
 
 // (The executor consuming this model lives in `crate::exec::int8`; the C
 // flavor in `crate::codegen` shares the same folded constants.)
@@ -66,13 +67,15 @@ pub struct QuantizedModel {
 /// without weight data (`without_data` zoo models) and for structures the
 /// int8 executor does not support (f32 tensors, i32 intermediates that
 /// are neither fan-in partials nor merge results).
-pub fn compile(g: &Graph, cal: &Calibration) -> Result<QuantizedModel, String> {
+pub fn compile(g: &Graph, cal: &Calibration) -> FdtResult<QuantizedModel> {
     if cal.params.len() != g.tensors.len() {
-        return Err(format!(
-            "calibration covers {} tensors, graph has {}",
-            cal.params.len(),
-            g.tensors.len()
-        ));
+        return Err(FdtError::Other {
+            reason: format!(
+                "calibration covers {} tensors, graph has {}",
+                cal.params.len(),
+                g.tensors.len()
+            ),
+        });
     }
     let mut params = cal.params.clone();
 
@@ -98,7 +101,9 @@ pub fn compile(g: &Graph, cal: &Calibration) -> Result<QuantizedModel, String> {
         match t.dtype {
             DType::I8 => {}
             DType::F32 => {
-                return Err(format!("tensor {}: f32 has no int8 representation", t.name));
+                return Err(FdtError::Other {
+                    reason: format!("tensor {}: f32 has no int8 representation", t.name),
+                });
             }
             DType::I32 => repr[t.id] = Repr::Index,
         }
@@ -121,20 +126,22 @@ pub fn compile(g: &Graph, cal: &Calibration) -> Result<QuantizedModel, String> {
             OpKind::Concat { .. } => {
                 for &i in &op.inputs {
                     if matches!(repr[i], Repr::Acc(_)) {
-                        return Err(format!(
-                            "{}: cannot concat i32 partial accumulators",
-                            op.name
-                        ));
+                        return Err(FdtError::InvalidOp {
+                            op: op.name.clone(),
+                            reason: "cannot concat i32 partial accumulators".to_string(),
+                        });
                     }
                 }
                 repr[op.inputs[0]]
             }
             other => {
-                return Err(format!(
-                    "{}: unsupported producer `{}` for an i32 intermediate",
-                    op.name,
-                    other.mnemonic()
-                ));
+                return Err(FdtError::InvalidOp {
+                    op: op.name.clone(),
+                    reason: format!(
+                        "unsupported producer `{}` for an i32 intermediate",
+                        other.mnemonic()
+                    ),
+                });
             }
         };
     }
@@ -145,11 +152,13 @@ pub fn compile(g: &Graph, cal: &Calibration) -> Result<QuantizedModel, String> {
         if matches!(r, Repr::Acc(_)) {
             for &c in &consumers[t] {
                 if !matches!(g.op(c).kind, OpKind::Merge { .. }) {
-                    return Err(format!(
-                        "partial {} consumed by non-merge op {}",
-                        g.tensor(t).name,
-                        g.op(c).name
-                    ));
+                    return Err(FdtError::InvalidOp {
+                        op: g.op(c).name.clone(),
+                        reason: format!(
+                            "consumes partial {} but only Merge may consume accumulators",
+                            g.tensor(t).name
+                        ),
+                    });
                 }
             }
         }
@@ -162,7 +171,9 @@ pub fn compile(g: &Graph, cal: &Calibration) -> Result<QuantizedModel, String> {
             continue;
         }
         let Some(data) = &t.data else {
-            return Err(format!("weight {} has no data (model built without_data)", t.name));
+            return Err(FdtError::Other {
+                reason: format!("weight {} has no data (model built without_data)", t.name),
+            });
         };
         if t.dtype == DType::I8 {
             let p = params[t.id];
@@ -176,7 +187,7 @@ pub fn compile(g: &Graph, cal: &Calibration) -> Result<QuantizedModel, String> {
         if matches!(op.kind, OpKind::BiasAdd) {
             let b = g.tensor(op.inputs[1]);
             let Some(data) = &b.data else {
-                return Err(format!("bias {} has no data", b.name));
+                return Err(FdtError::Other { reason: format!("bias {} has no data", b.name) });
             };
             let s_in = params[op.inputs[0]].scale as f64;
             bias[op.id] = Some(
@@ -261,6 +272,110 @@ pub fn multiply_by_quantized_multiplier(x: i32, multiplier: i32, shift: i32) -> 
 pub fn requantize(acc: i32, multiplier: i32, shift: i32, zero_point: i32, lo: i32, hi: i32) -> i32 {
     let v = zero_point as i64 + multiply_by_quantized_multiplier(acc, multiplier, shift) as i64;
     v.clamp(lo as i64, hi as i64) as i32
+}
+
+/// A requantization step with every constant folded to kernel-friendly
+/// form: the Q31 multiplier + shift of `s_in / p_out.scale`, the output
+/// zero point and the clamp window. Built once per op, applied per
+/// element — the shape the microkernels ([`crate::exec`]) and the C
+/// emitter both consume.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequantPlan {
+    pub multiplier: i32,
+    pub shift: i32,
+    pub zero_point: i32,
+    pub lo: i32,
+    pub hi: i32,
+}
+
+impl RequantPlan {
+    /// Fold `s_in / p_out.scale` into fixed-point constants with the
+    /// clamp window `[lo, hi]` (in output codes).
+    pub fn new(s_in: f64, p_out: QuantParams, lo: i32, hi: i32) -> RequantPlan {
+        let (multiplier, shift) = quantize_multiplier(s_in / p_out.scale as f64);
+        RequantPlan { multiplier, shift, zero_point: p_out.zero_point, lo, hi }
+    }
+
+    /// Requantize one accumulator.
+    #[inline]
+    pub fn apply(&self, acc: i32) -> i32 {
+        requantize(acc, self.multiplier, self.shift, self.zero_point, self.lo, self.hi)
+    }
+}
+
+/// Deterministic f64 quantization onto an i8 grid (the reference rounding
+/// every f64-assisted kernel and the generated C's `fdt_quantf` share).
+pub fn quantize_f64(x: f64, p: QuantParams) -> i32 {
+    (x / p.scale as f64 + p.zero_point as f64).round().clamp(-128.0, 127.0) as i32
+}
+
+/// Re-grid a code from one affine grid to another (exact pass-through
+/// when the grids coincide, which compile-time parameter propagation
+/// guarantees for views).
+pub fn remap_code(q: i32, from: QuantParams, to: QuantParams) -> i32 {
+    if from == to {
+        return q;
+    }
+    quantize_f64((q - from.zero_point) as f64 * from.scale as f64, to)
+}
+
+/// Clamp range (in output codes) of a fused activation.
+pub fn act_code_range(a: ActKind, p: QuantParams) -> (i32, i32) {
+    match a {
+        ActKind::Relu => (p.zero_point.max(-128), 127),
+        ActKind::Relu6 => {
+            let hi = (p.zero_point as f64 + (6.0 / p.scale as f64).round()).min(127.0);
+            (p.zero_point.max(-128), hi as i32)
+        }
+        _ => (-128, 127),
+    }
+}
+
+/// 256-entry code→code table for an `Activation` op: entry `q + 128` is
+/// the output code for input code `q`. The i8 input domain has exactly
+/// 256 values, so a table built with the reference math *is* the
+/// reference kernel — the interpreter indexes it and the C emitter embeds
+/// it, making the two bit-identical by construction (the historical
+/// libm-rounding parity gap for sigmoid/tanh closes because only the
+/// table builder calls libm).
+pub fn act_lut(a: ActKind, px: QuantParams, p: QuantParams) -> [i8; 256] {
+    let mut lut = [0i8; 256];
+    match a {
+        ActKind::Identity | ActKind::Relu | ActKind::Relu6 => {
+            let (lo, hi) = act_code_range(a, p);
+            let rq = RequantPlan::new(px.scale as f64, p, lo, hi);
+            for (i, e) in lut.iter_mut().enumerate() {
+                let q = i as i32 - 128;
+                *e = rq.apply(q - px.zero_point) as i8;
+            }
+        }
+        ActKind::Sigmoid | ActKind::Tanh => {
+            for (i, e) in lut.iter_mut().enumerate() {
+                let q = i as i32 - 128;
+                let real = (q - px.zero_point) as f64 * px.scale as f64;
+                let y = match a {
+                    ActKind::Sigmoid => 1.0 / (1.0 + (-real).exp()),
+                    _ => real.tanh(),
+                };
+                *e = quantize_f64(y, p) as i8;
+            }
+        }
+    }
+    lut
+}
+
+/// 256-entry softmax exponent table for input scale `s`: entry `d` is
+/// `exp(-d * s)` — the exponential of a code that sits `d` codes below
+/// the row maximum. Softmax over i8 codes only ever needs these 256
+/// values (`exp(x_q - x_max) = exp(-(q_max - q) * s)`); the interpreter
+/// indexes the table and the C emitter embeds its exact f64 bit patterns,
+/// so both back ends sum identical doubles in identical order.
+pub fn softmax_exp_lut(scale: f32) -> [f64; 256] {
+    let mut t = [0f64; 256];
+    for (d, e) in t.iter_mut().enumerate() {
+        *e = (-(d as f64) * scale as f64).exp();
+    }
+    t
 }
 
 #[cfg(test)]

@@ -52,6 +52,13 @@ impl CpuEngine {
         self.exe.arena_bytes()
     }
 
+    /// Microkernel tier serving this engine (`"scalar"`, `"avx2"`,
+    /// `"neon"`) — selected once at `prepare` time by CPU detection,
+    /// overridable with `FDT_FORCE_SCALAR=1`.
+    pub fn kernels(&self) -> &'static str {
+        self.exe.kernels_name()
+    }
+
     /// Execute one request. Buffers are positional, in the model's input
     /// declaration order (mirroring the PJRT engine signature); outputs
     /// are dequantized to f32.
@@ -96,6 +103,7 @@ mod tests {
         let g = models::kws();
         let engine = CpuEngine::prepare(&g, 1, 3).unwrap();
         assert!(engine.arena_bytes() > 0);
+        assert!(["scalar", "avx2", "neon"].contains(&engine.kernels()));
         let inputs: Vec<Buffer> = g
             .inputs
             .iter()

@@ -188,8 +188,11 @@ use fdt::graph::{ActKind, DType, GraphBuilder, Padding};
 
 /// Compile the int8 C module with baked inputs and compare its f32
 /// outputs against the native int8 interpreter, element-wise, within
-/// `lsb` output codes (integer kernels are bit-identical by
-/// construction; softmax/sigmoid may differ by libm rounding).
+/// `lsb` output codes. Integer kernels are bit-identical by
+/// construction, and softmax/sigmoid/tanh activations share 256-entry
+/// tables with the interpreter, so whole-model runs are expected
+/// bit-exact (lsb < 0.5) unless a Merge carries a sigmoid/tanh epilogue
+/// (the one remaining libm seam).
 fn check_int8_c_matches_interpreter(g: &Graph, tag: &str, lsb: f32) {
     let cal = fdt::quant::calibrate(g, 1, 31).unwrap();
     check_int8_c_with_cal(g, &cal, tag, lsb);
@@ -302,8 +305,11 @@ fn int8_c_bit_exact_on_integer_kernels() {
 
 #[test]
 fn int8_c_matches_interpreter_on_zoo() {
-    check_int8_c_matches_interpreter(&models::kws(), "untiled", 2.5);
-    check_int8_c_matches_interpreter(&models::txt(), "untiled", 2.5);
+    // Bit-exact since the sigmoid/softmax LUTs are shared with the
+    // interpreter: every kernel these models touch is either pure
+    // fixed-point or identical-f64-by-construction.
+    check_int8_c_matches_interpreter(&models::kws(), "untiled", 0.4);
+    check_int8_c_matches_interpreter(&models::txt(), "untiled", 0.4);
 }
 
 #[test]

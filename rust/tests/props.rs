@@ -9,7 +9,9 @@
 //! * every layout is conflict-free, >= max buffer, <= sum of buffers;
 //! * the exact placer never loses to first-fit or SA;
 //! * random discovered+applied tiling configs preserve interpreter
-//!   numerics and never add MACs when they are FDT.
+//!   numerics and never add MACs when they are FDT;
+//! * SIMD-dispatched int8 execution is byte-identical to the scalar
+//!   reference tier (outputs and full arena).
 
 use fdt::analysis::{graph_macs, MemModel};
 use fdt::graph::fusion::fuse;
@@ -215,6 +217,42 @@ fn int8_executor_codes_invariant_under_depth_tiling() {
         }
     }
     assert!(checked >= 10, "int8 tiling property exercised too few configs: {checked}");
+}
+
+#[test]
+fn dispatched_kernels_byte_identical_to_scalar() {
+    // The SIMD tiers must be invisible: for the whole zoo plus random
+    // graphs, the dispatched executable and the scalar-pinned one must
+    // produce byte-identical output codes AND byte-identical final
+    // arenas (every intermediate tensor, not just the outputs). Uses
+    // `force_scalar_kernels` rather than the env var so the comparison
+    // is race-free under the parallel test harness. On hosts without
+    // SIMD both runs use the scalar tier and the check is vacuous —
+    // CI's x86-64 runners exercise the AVX2 tier.
+    use fdt::exec::int8::Int8Executable;
+    use fdt::models;
+    use fdt::quant::{calibrate, int8::compile};
+
+    let mut graphs: Vec<Graph> =
+        vec![models::kws(), models::txt(), models::magic_wand(), models::radar()];
+    graphs.extend((0..12u64).map(random_graph));
+    for g in &graphs {
+        let cal = calibrate(g, 1, 17).unwrap();
+        let qm = compile(g, &cal).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        let mut exe =
+            Int8Executable::plan(g, &qm).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        let inputs = fdt::exec::random_inputs(g, 0xfd7);
+        let (fast, arena_fast) = exe.run_capture(&inputs).unwrap();
+        exe.force_scalar_kernels();
+        assert_eq!(exe.kernels_name(), "scalar");
+        let (slow, arena_slow) = exe.run_capture(&inputs).unwrap();
+        assert_eq!(fast, slow, "{}: output codes diverged between kernel tiers", g.name);
+        assert_eq!(
+            arena_fast, arena_slow,
+            "{}: arena bytes diverged between kernel tiers",
+            g.name
+        );
+    }
 }
 
 #[test]
