@@ -1,94 +1,97 @@
-//! Serving driver: batched KWS inference over the FDT artifact with a
-//! multi-producer request queue — the L3 "request path" with Python
-//! nowhere in sight.
+//! Serving driver: micro-batched KWS inference on the `runtime::serve`
+//! tier — concurrent clients, per-worker int8 arena pools, latency SLO
+//! metrics, typed errors end to end.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve_kws -- [N_REQS] [N_CLIENTS]
+//! cargo run --release --example serve_kws -- [N_REQS] [N_CLIENTS] [WORKERS]
 //! ```
 //!
-//! Architecture (vllm-router-style, scaled to a microcontroller model):
-//! client threads push requests into a bounded channel; the leader thread
-//! drains the queue, runs inference on the PJRT engine, and completes
-//! requests; latency/throughput percentiles are reported at the end.
+//! Architecture: client threads submit random MFCC windows to an
+//! [`InferenceServer`]; its workers drain the bounded queue in
+//! latency-bounded micro-batches, each executing on its own
+//! weight-sharing clone of the CPU int8 engine (a failover chain of
+//! one in the hermetic build — a PJRT tier would sit in front). The
+//! server's own metrics layer reports percentiles, batch shapes and
+//! per-backend throughput at the end; no `expect` anywhere on the
+//! serving path, and any failure exits non-zero with the typed error.
 
-use fdt::runtime::{artifacts_dir, Buffer, Runtime};
-use std::sync::mpsc;
-use std::time::{Duration, Instant};
+use fdt::error::{FdtError, FdtResult};
+use fdt::models;
+use fdt::runtime::serve::{InferenceServer, ServeConfig};
+use fdt::runtime::Buffer;
+use std::sync::Arc;
+use std::time::Duration;
 
-struct Request {
-    input: Buffer,
-    submitted: Instant,
-    done: mpsc::Sender<(usize, Duration)>,
-    id: usize,
-}
-
-fn main() {
+fn run() -> FdtResult<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let n_reqs: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(400);
     let n_clients: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let workers: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(2);
 
-    let dir = artifacts_dir();
-    let path = dir.join("kws_fdt.hlo.txt");
-    if !path.exists() {
-        eprintln!("artifact missing — run `make artifacts` first");
-        std::process::exit(1);
-    }
-    let rt = Runtime::cpu().expect("PJRT CPU client");
-    let engine = rt.load(&path).expect("load kws_fdt");
-    println!("serving {} on {} ({} clients, {} requests)", engine.name(), rt.platform(), n_clients, n_reqs);
+    let g = models::kws();
+    let cfg = ServeConfig {
+        slo_p99: Some(Duration::from_millis(50)),
+        ..ServeConfig::default()
+    };
+    let srv = Arc::new(InferenceServer::for_graph(&g, 1, 3, workers, cfg)?);
+    println!(
+        "serving `{}` on {} worker(s) ({n_clients} clients, {n_reqs} requests, \
+         int8 arena per worker)",
+        g.name,
+        srv.workers()
+    );
 
-    let (tx, rx) = mpsc::sync_channel::<Request>(64); // bounded: backpressure
-    let (done_tx, done_rx) = mpsc::channel();
-
-    // Client threads: generate random MFCC windows, submit, await.
     let mut clients = Vec::new();
     for c in 0..n_clients {
-        let tx = tx.clone();
-        let done_tx = done_tx.clone();
+        let srv = Arc::clone(&srv);
         let quota = n_reqs / n_clients + usize::from(c < n_reqs % n_clients);
-        clients.push(std::thread::spawn(move || {
+        clients.push(std::thread::spawn(move || -> FdtResult<usize> {
             let mut rng = fdt::graph::Rng::new(100 + c as u64);
-            for i in 0..quota {
+            let mut served = 0usize;
+            for _ in 0..quota {
                 let data: Vec<f32> =
-                    (0..49 * 10 * 8).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
-                let req = Request {
-                    input: Buffer::new(vec![49, 10, 8], data),
-                    submitted: Instant::now(),
-                    done: done_tx.clone(),
-                    id: c * 1_000_000 + i,
-                };
-                tx.send(req).expect("queue closed");
+                    (0..49 * 10 * 8).map(|_| rng.next_f32() * 2.0).collect();
+                let out = srv.infer(vec![Buffer::new(vec![49, 10, 8], data)])?;
+                if out.first().map(Vec::len) != Some(12) {
+                    return Err(FdtError::Other {
+                        reason: format!(
+                            "KWS head must emit 12 classes, got {:?}",
+                            out.first().map(Vec::len)
+                        ),
+                    });
+                }
+                served += 1;
             }
+            Ok(served)
         }));
     }
-    drop(tx);
-    drop(done_tx);
 
-    // Leader loop (main thread — PJRT handles are not Send): drain the
-    // queue, execute, complete.
-    let t0 = Instant::now();
     let mut served = 0usize;
-    while let Ok(req) = rx.recv() {
-        let out = engine.run_f32(&[req.input]).expect("inference");
-        debug_assert_eq!(out[0].len(), 12);
-        let _ = req.done.send((req.id, req.submitted.elapsed()));
-        served += 1;
-    }
-    let mut lat: Vec<Duration> = done_rx.iter().map(|(_, d)| d).collect();
     for c in clients {
-        c.join().unwrap();
+        served += c.join().map_err(|_| FdtError::Other {
+            reason: "client thread panicked".to_string(),
+        })??;
     }
-    let total = t0.elapsed();
 
-    lat.sort();
-    let pct = |p: usize| lat[(lat.len() * p / 100).min(lat.len() - 1)];
-    println!(
-        "served {served} requests in {:.2?}: {:.0} req/s\n  e2e latency p50 {:?}  p90 {:?}  p99 {:?}  max {:?}",
-        total,
-        served as f64 / total.as_secs_f64(),
-        pct(50),
-        pct(90),
-        pct(99),
-        lat[lat.len() - 1]
-    );
+    let srv = Arc::try_unwrap(srv).map_err(|_| FdtError::Other {
+        reason: "server still referenced after clients joined".to_string(),
+    })?;
+    let report = srv.shutdown();
+    print!("{report}");
+    if served != n_reqs || report.completed != n_reqs as u64 {
+        return Err(FdtError::Other {
+            reason: format!(
+                "served {served} of {n_reqs} requests (metrics: {})",
+                report.completed
+            ),
+        });
+    }
+    Ok(())
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("serve_kws: {e}");
+        std::process::exit(1);
+    }
 }

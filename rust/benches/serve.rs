@@ -1,0 +1,196 @@
+//! Bench: **serving throughput and tail latency** — the micro-batched
+//! multi-worker serving tier over the paper's model zoo.
+//!
+//! Two load shapes:
+//!
+//! * **Scaling sweep** (closed-loop saturation): KWS int8 under many
+//!   concurrent client threads, sweeping worker count × batching window.
+//!   This is the worker-scaling acceptance number: requests/sec at 4
+//!   workers vs 1 (meaningful on multi-core CI runners; on a 1-core
+//!   host the sweep still measures the serving tier's overhead).
+//! * **Open-loop multi-tenant**: each zoo model behind its own 2-worker
+//!   server with clients submitting on a fixed arrival schedule
+//!   (handles redeemed after the fact), the load shape that exercises
+//!   queueing and batching rather than raw compute.
+//!
+//! Emits `BENCH_serve.json` for the CI bench-trend job (`_rps` keys are
+//! higher-is-better there). `--quick` shrinks request counts for the CI
+//! smoke run.
+//!
+//! ```bash
+//! cargo bench --bench serve            # full sweep
+//! cargo bench --bench serve -- --quick # CI smoke
+//! ```
+
+use fdt::bench::{header, write_json, JsonRecord};
+use fdt::graph::Graph;
+use fdt::models;
+use fdt::runtime::serve::{InferenceServer, ServeConfig};
+use fdt::runtime::Buffer;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Deterministic per-request inputs (request index seeds the stream).
+fn seeded_inputs(g: &Graph, req: u64) -> Vec<Buffer> {
+    let mut rng = fdt::graph::Rng::new(0xBE7C_4A11 ^ req);
+    g.inputs
+        .iter()
+        .map(|&t| {
+            let tensor = g.tensor(t);
+            let data = (0..tensor.numel()).map(|_| rng.next_f32()).collect();
+            Buffer::new(tensor.shape.clone(), data)
+        })
+        .collect()
+}
+
+/// Closed-loop saturation: `clients` threads each fire `per_client`
+/// back-to-back `infer` calls at the server. Returns (req/s, p50, p99).
+fn closed_loop(
+    g: &Graph,
+    workers: usize,
+    cfg: ServeConfig,
+    clients: usize,
+    per_client: u64,
+) -> (f64, u64, u64) {
+    let srv = Arc::new(
+        InferenceServer::for_graph(g, 1, 3, workers, cfg)
+            .unwrap_or_else(|e| panic!("server for {}: {e}", g.name)),
+    );
+    let t0 = Instant::now();
+    let threads: Vec<_> = (0..clients)
+        .map(|c| {
+            let srv = Arc::clone(&srv);
+            let g = g.clone();
+            std::thread::spawn(move || {
+                for k in 0..per_client {
+                    let req = c as u64 * per_client + k;
+                    srv.infer(seeded_inputs(&g, req))
+                        .unwrap_or_else(|e| panic!("request {req}: {e}"));
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().expect("client thread panicked");
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let total = clients as u64 * per_client;
+    // Every infer() was synchronous, so the metrics are complete;
+    // dropping the Arc afterwards drains + joins the (idle) workers.
+    let report = srv.metrics();
+    assert_eq!(report.completed, total, "closed-loop dropped requests");
+    (total as f64 / wall, report.p50_us, report.p99_us)
+}
+
+/// Open-loop arrival: submit every `interval`, redeem handles at the
+/// end. Returns (req/s over the serving wall, p99, rejected count).
+fn open_loop(
+    g: &Graph,
+    workers: usize,
+    cfg: ServeConfig,
+    requests: u64,
+    interval: Duration,
+) -> (f64, u64, u64) {
+    let srv = InferenceServer::for_graph(g, 1, 3, workers, cfg)
+        .unwrap_or_else(|e| panic!("server for {}: {e}", g.name));
+    let mut handles = Vec::with_capacity(requests as usize);
+    let mut rejected = 0u64;
+    let t0 = Instant::now();
+    for req in 0..requests {
+        // Fixed arrival schedule: sleep up to the request's slot (an
+        // open-loop generator does not wait for responses).
+        let slot = interval * req as u32;
+        let now = t0.elapsed();
+        if now < slot {
+            std::thread::sleep(slot - now);
+        }
+        match srv.submit(seeded_inputs(g, req)) {
+            Ok(h) => handles.push(h),
+            Err(_) => rejected += 1,
+        }
+    }
+    for h in handles {
+        h.wait().expect("accepted request must complete");
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let report = srv.shutdown();
+    assert_eq!(report.completed + rejected, requests);
+    ((requests - rejected) as f64 / wall, report.p99_us, rejected)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    header(
+        "serve",
+        "micro-batched serving tier: worker scaling, batching window, multi-tenant open loop",
+    );
+    let mut records: Vec<(String, JsonRecord)> = Vec::new();
+
+    // -- Scaling sweep: KWS, workers x batching window, closed loop. --
+    let g = models::kws();
+    let clients = 16;
+    let per_client: u64 = if quick { 4 } else { 32 };
+    println!(
+        "{:<22} {:>8} {:>12} {:>10} {:>10}",
+        "config", "workers", "req/s", "p50 (us)", "p99 (us)"
+    );
+    let mut kws_rps = std::collections::BTreeMap::new();
+    for &workers in &[1usize, 2, 4] {
+        for (label, max_batch, wait_us) in [("nobatch", 1usize, 0u64), ("b8w200", 8, 200)] {
+            let cfg = ServeConfig {
+                max_batch,
+                max_wait: Duration::from_micros(wait_us),
+                ..ServeConfig::default()
+            };
+            let (rps, p50, p99) = closed_loop(&g, workers, cfg, clients, per_client);
+            let name = format!("KWS_w{workers}_{label}");
+            println!("{name:<22} {workers:>8} {rps:>12.0} {p50:>10} {p99:>10}");
+            if label == "b8w200" {
+                kws_rps.insert(workers, rps);
+            }
+            records.push((
+                name,
+                JsonRecord::new()
+                    .int("workers", workers as u64)
+                    .int("max_batch", max_batch as u64)
+                    .num("throughput_rps", rps)
+                    .num("p50_us", p50 as f64)
+                    .num("p99_us", p99 as f64),
+            ));
+        }
+    }
+    if let (Some(&one), Some(&four)) = (kws_rps.get(&1), kws_rps.get(&4)) {
+        let scaling = four / one.max(1e-9);
+        println!("KWS 4-worker/1-worker scaling: {scaling:.2}x");
+        records.push((
+            "KWS_scaling".to_string(),
+            JsonRecord::new().num("workers4_over_1", scaling),
+        ));
+    }
+
+    // -- Multi-tenant open loop: each zoo model on a 2-worker server. --
+    let requests: u64 = if quick { 16 } else { 128 };
+    let interval = Duration::from_micros(if quick { 500 } else { 250 });
+    println!(
+        "\n{:<16} {:>12} {:>10} {:>9}  (open loop, 2 workers, {:?} arrivals)",
+        "model", "req/s", "p99 (us)", "rejected", interval
+    );
+    for name in ["KWS", "TXT", "MW", "RAD"] {
+        let g = models::by_name(name).unwrap_or_else(|| panic!("unknown model {name}"));
+        let (rps, p99, rejected) =
+            open_loop(&g, 2, ServeConfig::default(), requests, interval);
+        println!("{name:<16} {rps:>12.0} {p99:>10} {rejected:>9}");
+        records.push((
+            format!("{name}_openloop"),
+            JsonRecord::new()
+                .num("throughput_rps", rps)
+                .num("p99_us", p99 as f64)
+                .int("rejected", rejected),
+        ));
+    }
+
+    match write_json("BENCH_serve.json", &records) {
+        Ok(()) => println!("wrote BENCH_serve.json"),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+}

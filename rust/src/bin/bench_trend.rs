@@ -6,15 +6,18 @@
 //! bench-trend --baseline .bench-baseline [FILES...]
 //! ```
 //!
-//! Keys ending in `_s` are wall-clock timings (lower is better): a
-//! >10% increase prints a `REGRESSION` warning. Other numeric keys
-//! (config counts, arena bytes, peaks) are reported when they change.
+//! Metric keys carry their direction in their suffix: `_s` / `_ms` /
+//! `_us` are wall-clock timings (lower is better — a >10% increase is a
+//! `REGRESSION`), `_rps` is throughput (higher is better — a >10%
+//! *decrease* is a `REGRESSION`). Other numeric keys (config counts,
+//! arena bytes, peaks) are direction-neutral and reported when they
+//! change.
 //!
 //! Exit codes are distinct so CI can tell "slower" from "broken":
 //!
 //! * `0` — clean (or regressions present without `--strict`; missing
 //!   current/baseline files are skips, not failures);
-//! * `1` — `--strict` and at least one timing regression > 10%;
+//! * `1` — `--strict` and at least one regression > 10%;
 //! * `2` — a present artifact failed to load or parse (truncated or
 //!   corrupt JSON): the comparison itself is unsound, strict or not.
 //!
@@ -153,6 +156,37 @@ fn lookup(recs: &Records, name: &str, key: &str) -> Option<f64> {
         .and_then(|(_, v)| *v)
 }
 
+/// Which direction of change is a regression for a metric key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Dir {
+    /// Timings (`_s`, `_ms`, `_us` suffixes): an increase is a regression.
+    LowerIsBetter,
+    /// Throughput (`_rps` suffix): a decrease is a regression.
+    HigherIsBetter,
+    /// Counts/sizes: reported when changed, never a regression.
+    Neutral,
+}
+
+fn classify(key: &str) -> Dir {
+    if key.ends_with("_rps") {
+        Dir::HigherIsBetter
+    } else if key.ends_with("_s") || key.ends_with("_ms") || key.ends_with("_us") {
+        Dir::LowerIsBetter
+    } else {
+        Dir::Neutral
+    }
+}
+
+/// Whether a `pct` percent change on `key` regresses it (>10% in the
+/// key's bad direction).
+fn is_regression(key: &str, pct: f64) -> bool {
+    match classify(key) {
+        Dir::LowerIsBetter => pct > 10.0,
+        Dir::HigherIsBetter => pct < -10.0,
+        Dir::Neutral => false,
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let strict = args.iter().any(|a| a == "--strict");
@@ -168,10 +202,16 @@ fn main() {
         .cloned()
         .collect();
     if files.is_empty() {
-        files = ["BENCH_flow.json", "BENCH_sched.json", "BENCH_discovery.json"]
-            .iter()
-            .map(|s| s.to_string())
-            .collect();
+        files = [
+            "BENCH_flow.json",
+            "BENCH_sched.json",
+            "BENCH_discovery.json",
+            "BENCH_int8.json",
+            "BENCH_serve.json",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
     }
 
     let mut regressions = 0usize;
@@ -207,8 +247,7 @@ fn main() {
                 }
                 compared += 1;
                 let pct = 100.0 * (now - then) / then;
-                let timing = key.ends_with("_s");
-                if timing && pct > 10.0 {
+                if is_regression(key, pct) {
                     regressions += 1;
                     println!(
                         "  REGRESSION {name}.{key}: {then:.6} -> {now:.6} ({pct:+.1}%)"
@@ -220,7 +259,7 @@ fn main() {
         }
     }
     println!(
-        "bench-trend: {compared} metrics compared, {regressions} timing regression(s) > 10%, \
+        "bench-trend: {compared} metrics compared, {regressions} regression(s) > 10%, \
          {broken} unreadable artifact(s)"
     );
     if broken > 0 {
@@ -265,6 +304,34 @@ mod tests {
             let r = Parser::new(bad).records();
             assert!(r.is_err(), "{bad:?} should fail to parse, got {r:?}");
         }
+    }
+
+    #[test]
+    fn direction_classification_by_suffix() {
+        assert_eq!(classify("median_s"), Dir::LowerIsBetter);
+        assert_eq!(classify("p99_us"), Dir::LowerIsBetter);
+        assert_eq!(classify("wall_ms"), Dir::LowerIsBetter);
+        assert_eq!(classify("throughput_rps"), Dir::HigherIsBetter);
+        assert_eq!(classify("peak"), Dir::Neutral);
+        assert_eq!(classify("arena_bytes"), Dir::Neutral);
+        // `_rps` must not be mistaken for a timing despite ending in `s`.
+        assert_eq!(classify("rps"), Dir::Neutral, "bare `rps` has no suffix marker");
+    }
+
+    #[test]
+    fn regression_respects_direction() {
+        // Timing: slower is a regression, faster is not.
+        assert!(is_regression("median_s", 25.0));
+        assert!(!is_regression("median_s", -25.0));
+        // Throughput: less is a regression, more is not.
+        assert!(is_regression("throughput_rps", -25.0));
+        assert!(!is_regression("throughput_rps", 25.0));
+        // Within the ±10% band nothing regresses.
+        assert!(!is_regression("median_s", 9.9));
+        assert!(!is_regression("throughput_rps", -9.9));
+        // Neutral keys never regress, whichever way they move.
+        assert!(!is_regression("peak", 400.0));
+        assert!(!is_regression("peak", -80.0));
     }
 
     #[test]

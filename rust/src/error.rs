@@ -121,6 +121,10 @@ pub enum FdtError {
     EngineFailed { engine: String, reason: String },
     /// Every engine in a failover chain failed.
     AllEnginesFailed { tried: Vec<String> },
+    /// The serving tier's bounded request queue is full: the request is
+    /// rejected up front (back-pressure) instead of growing the queue
+    /// without bound. Carries the observed depth and the configured cap.
+    ServerOverloaded { depth: usize, cap: usize },
     /// The static plan verifier rejected a `(Graph, Schedule, Layout)`
     /// triple; carries the structured counterexample.
     PlanVerification(PlanViolation),
@@ -177,6 +181,9 @@ impl fmt::Display for FdtError {
             }
             FdtError::AllEnginesFailed { tried } => {
                 write!(f, "all engines failed (tried: {})", tried.join(", "))
+            }
+            FdtError::ServerOverloaded { depth, cap } => {
+                write!(f, "server overloaded: request queue at depth {depth} (cap {cap})")
             }
             FdtError::PlanVerification(v) => {
                 write!(f, "plan verification failed: {v}")

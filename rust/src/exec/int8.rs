@@ -69,6 +69,7 @@ use crate::quant::QuantParams;
 use crate::sched::{self, SchedOptions};
 use crate::tiling::activation_input;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Element width of a stored tensor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -525,14 +526,26 @@ fn resolve_view(
 
 /// A graph compiled against a concrete schedule + arena layout, ready to
 /// execute int8 inference.
+///
+/// The folded weights/biases/LUT parameters live behind an [`Arc`], so
+/// `clone()` is cheap: a serving tier hands every worker its own
+/// executable (own steps/views bookkeeping, own arenas via
+/// [`new_arena`](Int8Executable::new_arena)) while all workers share one
+/// copy of the int8 ROM.
+#[derive(Clone)]
 pub struct Int8Executable {
     pub(crate) g: Graph,
-    pub(crate) qm: QuantizedModel,
+    pub(crate) qm: Arc<QuantizedModel>,
     pub(crate) steps: Vec<Step>,
     pub(crate) views: Vec<Option<TView>>,
     pub(crate) arena_bytes: usize,
     /// Microkernel tier, selected once at compile time.
     kern: &'static dyn Microkernels,
+    /// Intra-op worker-thread budget, resolved once at compile time from
+    /// `FDT_EXEC_THREADS`/host parallelism; overridable per executor via
+    /// [`set_exec_threads`](Int8Executable::set_exec_threads) so a
+    /// serving worker can pin it without re-reading the environment.
+    threads: usize,
 }
 
 impl Int8Executable {
@@ -660,11 +673,12 @@ impl Int8Executable {
         }
         Ok(Int8Executable {
             g: g_shapes,
-            qm: qm.clone(),
+            qm: Arc::new(qm.clone()),
             steps,
             views,
             arena_bytes: layout.total,
             kern: kernels::select(),
+            threads: kernels::exec_threads(),
         })
     }
 
@@ -700,6 +714,43 @@ impl Int8Executable {
     /// equivalence property and A/B benchmarks).
     pub fn force_scalar_kernels(&mut self) {
         self.kern = &kernels::SCALAR;
+    }
+
+    /// Override the intra-op worker-thread budget for this executable
+    /// (clamped to ≥ 1). The compile-time default is
+    /// `FDT_EXEC_THREADS`/host parallelism; a serving worker pins this
+    /// to 1 so worker-level and op-level threading never multiply.
+    /// Thread count cannot change results: parallel chunks own disjoint
+    /// output accumulators, so execution stays bit-exact.
+    pub fn set_exec_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    /// The executable's current intra-op worker-thread budget.
+    pub fn exec_threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Allocate a zeroed arena of exactly this executable's planned
+    /// size, for use with [`run_in`](Int8Executable::run_in). A serving
+    /// worker keeps one per thread and reuses it across requests.
+    pub fn new_arena(&self) -> Vec<u8> {
+        vec![0u8; self.arena_bytes]
+    }
+
+    /// Execute in a caller-owned, reusable arena: the buffer is resized
+    /// to the planned arena size and re-zeroed (capacity is retained, so
+    /// steady-state serving performs no allocation), then inference runs
+    /// exactly as [`run`](Int8Executable::run) — results are
+    /// byte-identical to a fresh arena.
+    pub fn run_in(
+        &self,
+        arena: &mut Vec<u8>,
+        inputs: &HashMap<String, Value>,
+    ) -> FdtResult<Vec<QValue>> {
+        arena.clear();
+        arena.resize(self.arena_bytes, 0);
+        self.run_in_arena(arena, inputs)
     }
 
     /// Execute: f32 inputs are quantized onto their calibrated grids (i32
@@ -1053,7 +1104,7 @@ impl Int8Executable {
                     zw: pw.zero_point,
                 };
                 let mut acc = scratch.take_i32(oh * ow * cout);
-                kernels::conv2d(self.kern, xs, wd, &mut acc, &s);
+                kernels::conv2d(self.kern, xs, wd, &mut acc, &s, self.threads);
                 self.finish_matmul(op, acc, out_shape, px.scale as f64 * pw.scale as f64, scratch)
             }
             OpKind::DepthwiseConv2d { stride, padding } => {
@@ -1099,7 +1150,15 @@ impl Int8Executable {
                 let pw = self.qm.params[w_t];
                 let fout = self.g.tensor(w_t).shape[1];
                 let mut acc = scratch.take_i32(fout);
-                kernels::dense(self.kern, xs, wd, &mut acc, px.zero_point, pw.zero_point);
+                kernels::dense(
+                    self.kern,
+                    xs,
+                    wd,
+                    &mut acc,
+                    px.zero_point,
+                    pw.zero_point,
+                    self.threads,
+                );
                 self.finish_matmul(op, acc, out_shape, px.scale as f64 * pw.scale as f64, scratch)
             }
             OpKind::Gather => {

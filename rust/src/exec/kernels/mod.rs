@@ -108,9 +108,12 @@ pub(crate) fn select() -> &'static dyn Microkernels {
 /// cross it).
 pub(crate) const PAR_MIN_MACS: usize = 2_000_000;
 
-/// Worker threads for intra-op parallelism: `FDT_EXEC_THREADS` when set
-/// (≥1), otherwise the host's available parallelism. Cached for the
-/// process lifetime.
+/// Default worker threads for intra-op parallelism: `FDT_EXEC_THREADS`
+/// when set (≥1), otherwise the host's available parallelism. Cached for
+/// the process lifetime and resolved once per executable at
+/// compile/plan time — `Int8Executable::set_exec_threads` overrides it
+/// per executor without touching the environment (the serving tier pins
+/// its workers to 1 so worker- and op-level threading don't multiply).
 pub(crate) fn exec_threads() -> usize {
     static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| {
@@ -145,16 +148,20 @@ pub(crate) struct ConvShape {
 /// Standard conv2d: `acc[(y*ow + xx)*cout + co] += (x - zx) * (w - zw)`
 /// over `(dy, dx, ci)` ascending — the executor's historical
 /// accumulation order per output element. Fans out over output-row
-/// blocks past [`PAR_MIN_MACS`].
+/// blocks past [`PAR_MIN_MACS`] when the caller grants more than one
+/// thread (`threads` is the executable's resolved intra-op budget — the
+/// env var is *not* re-read here, so a serving worker can pin it to 1
+/// and never multiply worker-level and op-level parallelism).
 pub(crate) fn conv2d(
     k: &'static dyn Microkernels,
     x: &[i8],
     w: &[i8],
     acc: &mut [i32],
     s: &ConvShape,
+    threads: usize,
 ) {
     let macs = s.oh * s.ow * s.cout * s.kh * s.kw * s.cin;
-    let nt = exec_threads().min(s.oh.max(1));
+    let nt = threads.max(1).min(s.oh.max(1));
     if nt <= 1 || macs < PAR_MIN_MACS {
         conv2d_rows(k, x, w, acc, s, 0);
         return;
@@ -257,8 +264,10 @@ pub(crate) fn dwconv2d(k: &dyn Microkernels, x: &[i8], w: &[i8], acc: &mut [i32]
 /// Dense / fully-connected: `acc[o] += (x[i] - zx) * (w[i*fout + o] - zw)`
 /// with `i` ascending per output — an axpy of each input value against
 /// its weight row. Fans out over output-column blocks past
-/// [`PAR_MIN_MACS`] (each block owns a disjoint `acc` slice and reads a
-/// strided weight sub-row, so per-output order is unchanged).
+/// [`PAR_MIN_MACS`] when granted more than one thread (each block owns a
+/// disjoint `acc` slice and reads a strided weight sub-row, so
+/// per-output order is unchanged).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn dense(
     k: &'static dyn Microkernels,
     x: &[i8],
@@ -266,10 +275,11 @@ pub(crate) fn dense(
     acc: &mut [i32],
     zx: i32,
     zw: i32,
+    threads: usize,
 ) {
     let fout = acc.len();
     let macs = x.len() * fout;
-    let nt = exec_threads().min(fout.max(1));
+    let nt = threads.max(1).min(fout.max(1));
     if nt <= 1 || macs < PAR_MIN_MACS {
         dense_cols(k, x, w, acc, fout, 0, zx, zw);
         return;

@@ -16,8 +16,14 @@ use crate::exec::Value;
 use crate::graph::Graph;
 use crate::quant;
 use std::collections::HashMap;
+use std::sync::Mutex;
 
 /// A model prepared for native int8 CPU execution.
+///
+/// `clone()` is cheap and weight-sharing: the folded int8 ROM lives
+/// behind an `Arc` inside the executable, so a serving tier clones one
+/// prepared engine per worker — each clone executes in its own arena
+/// pool (no cross-worker contention) over the shared weights.
 pub struct CpuEngine {
     name: String,
     /// Model-input names + shapes, in declaration order (the executable
@@ -25,6 +31,23 @@ pub struct CpuEngine {
     /// double the weight memory of a long-lived engine).
     inputs: Vec<(String, Vec<usize>)>,
     exe: Int8Executable,
+    /// Recycled arenas: `run_f32` pops one (or allocates the first),
+    /// executes, and returns it — steady-state serving allocates
+    /// nothing. Uncontended in the per-worker-clone serving design.
+    arenas: Mutex<Vec<Vec<u8>>>,
+}
+
+impl Clone for CpuEngine {
+    fn clone(&self) -> CpuEngine {
+        CpuEngine {
+            name: self.name.clone(),
+            inputs: self.inputs.clone(),
+            exe: self.exe.clone(),
+            // Arenas are scratch state, not model state: clones start
+            // with an empty pool and grow their own.
+            arenas: Mutex::new(Vec::new()),
+        }
+    }
 }
 
 impl CpuEngine {
@@ -40,7 +63,14 @@ impl CpuEngine {
             .iter()
             .map(|&t| (g.tensor(t).name.clone(), g.tensor(t).shape.clone()))
             .collect();
-        Ok(CpuEngine { name: g.name.clone(), inputs, exe })
+        Ok(CpuEngine { name: g.name.clone(), inputs, exe, arenas: Mutex::new(Vec::new()) })
+    }
+
+    /// Override the executable's intra-op worker-thread budget (see
+    /// [`Int8Executable::set_exec_threads`]). Serving workers pin this
+    /// to 1 so worker-level and op-level threading don't multiply.
+    pub fn set_exec_threads(&mut self, threads: usize) {
+        self.exe.set_exec_threads(threads);
     }
 
     pub fn name(&self) -> &str {
@@ -88,8 +118,14 @@ impl CpuEngine {
             };
             by_name.insert(name.clone(), Value::try_new(shape.clone(), data)?);
         }
-        let out = self.exe.run_f32(&by_name)?;
-        Ok(out.into_iter().map(|v| v.data).collect())
+        let mut arena = {
+            let mut pool = self.arenas.lock().unwrap_or_else(|p| p.into_inner());
+            pool.pop().unwrap_or_default()
+        };
+        let out = self.exe.run_in(&mut arena, &by_name);
+        self.arenas.lock().unwrap_or_else(|p| p.into_inner()).push(arena);
+        let out = out?;
+        Ok(out.into_iter().map(|v| v.to_f32().data).collect())
     }
 }
 

@@ -21,7 +21,16 @@ use crate::runtime::cpu::CpuEngine;
 
 /// A uniform, object-safe surface over anything that can answer
 /// positional-buffer `run_f32` requests.
-pub trait InferenceBackend {
+///
+/// `Send + Sync` is a supertrait bound so the serving tier can move
+/// per-worker backend chains onto worker threads and share probes
+/// (health checks) across them; requests take `&self`, so a backend's
+/// mutable state must be interior (the CPU engine's arena pool is a
+/// mutex, the chaos backends use atomics). A backend over thread-pinned
+/// handles (PJRT executables are neither `Send` nor `Sync`) must wrap
+/// them behind a channel to a dedicated owner thread before
+/// implementing this.
+pub trait InferenceBackend: Send + Sync {
     fn name(&self) -> &str;
 
     /// Cheap liveness probe run at chain construction. The default is
@@ -31,6 +40,23 @@ pub trait InferenceBackend {
     }
 
     fn run_f32(&self, inputs: &[Buffer]) -> FdtResult<Vec<Vec<f32>>>;
+
+    /// Execute a micro-batch of requests (one `Vec<Buffer>` per
+    /// request), returning one output set per request in order.
+    ///
+    /// The default loops the requests through [`run_f32`] — the correct
+    /// strategy for the CPU int8 engine, whose arena is planned for
+    /// batch 1. Natively batched backends (a PJRT engine compiled with a
+    /// leading batch dimension) override this with pad-to-batch
+    /// execution (see `runtime::serve::batch` for the stack/unstack
+    /// helpers). A mid-batch failure fails the whole batch: the failover
+    /// chain re-runs the entire batch on the next backend, so no request
+    /// is partially completed.
+    ///
+    /// [`run_f32`]: InferenceBackend::run_f32
+    fn run_batch_f32(&self, batch: &[Vec<Buffer>]) -> FdtResult<Vec<Vec<Vec<f32>>>> {
+        batch.iter().map(|req| self.run_f32(req)).collect()
+    }
 }
 
 impl InferenceBackend for CpuEngine {
@@ -142,6 +168,46 @@ impl FailoverEngine {
         Err(FdtError::AllEnginesFailed {
             tried: self.backends.iter().map(|b| b.name().to_string()).collect(),
         })
+    }
+
+    /// Serve one micro-batch with the same sticky failover semantics as
+    /// [`run_f32`](FailoverEngine::run_f32): a backend failure anywhere
+    /// in the batch degrades the chain and re-runs the *whole* batch on
+    /// the next backend — in-flight requests are recomputed, never
+    /// dropped or partially answered (execution is deterministic, so a
+    /// re-run is byte-identical). Errs only when every backend fails.
+    pub fn run_batch_f32(&mut self, batch: &[Vec<Buffer>]) -> FdtResult<Vec<Vec<Vec<f32>>>> {
+        while self.active < self.backends.len() {
+            let b = &self.backends[self.active];
+            match b.run_batch_f32(batch) {
+                Ok(out) if out.len() == batch.len() => return Ok(out),
+                Ok(out) => {
+                    self.log.push(format!(
+                        "backend `{}` answered {} of {} batch requests; failing over",
+                        b.name(),
+                        out.len(),
+                        batch.len()
+                    ));
+                    self.active += 1;
+                }
+                Err(e) => {
+                    self.log.push(format!(
+                        "backend `{}` failed mid-batch: {e}; failing over",
+                        b.name()
+                    ));
+                    self.active += 1;
+                }
+            }
+        }
+        Err(FdtError::AllEnginesFailed {
+            tried: self.backends.iter().map(|b| b.name().to_string()).collect(),
+        })
+    }
+
+    /// Record an external degradation event (e.g. the serving tier
+    /// noting that a preferred engine could not be constructed).
+    pub fn log_degradation(&mut self, line: impl Into<String>) {
+        self.log.push(line.into());
     }
 }
 

@@ -26,6 +26,8 @@ pub mod cpu;
 pub use cpu::CpuEngine;
 pub mod failover;
 pub use failover::{FailoverEngine, InferenceBackend};
+pub mod serve;
+pub use serve::{InferenceServer, MetricsReport, ServeConfig};
 
 /// Locate the artifacts directory: `FDT_ARTIFACTS` env override, else
 /// the nearest `artifacts/` walking up from the current directory (cargo

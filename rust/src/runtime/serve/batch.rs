@@ -1,0 +1,225 @@
+//! Micro-batch formation: the latency-bounded batching window, and the
+//! pad-to-batch stack/unstack helpers for natively batched backends.
+//!
+//! The window policy is the standard serving trade: the first request a
+//! worker dequeues opens a batch; the worker then keeps the batch open
+//! until it holds `max_batch` requests **or** `max_wait` has elapsed
+//! since it opened, whichever comes first. `max_wait` bounds the queue
+//! latency any request can pay to batching (zero makes the server
+//! purely work-conserving); `max_batch` bounds the tail latency the
+//! *last* request of a batch pays to the first. Batches bigger than one
+//! therefore only form under backlog — exactly when amortizing
+//! per-request overhead matters.
+//!
+//! Execution strategy is the backend's choice
+//! ([`InferenceBackend::run_batch_f32`]): the CPU int8 engine loops the
+//! batch through its single-request arena (its arena layout *is* the
+//! paper's per-inference RAM story, so batch-1 execution is the point),
+//! while a PJRT engine compiled with a leading batch dimension executes
+//! one padded device call via [`stack_pad_to_batch`]/[`unstack_batch`].
+//!
+//! [`InferenceBackend::run_batch_f32`]:
+//!     crate::runtime::failover::InferenceBackend::run_batch_f32
+
+use super::{Request, ServeConfig, Shared};
+use crate::error::{FdtError, FdtResult};
+use crate::runtime::Buffer;
+use std::time::Instant;
+
+/// Dequeue the next micro-batch, blocking while the queue is empty.
+/// Returns `None` when the server is shut down *and* fully drained —
+/// the worker's signal to exit. Never returns an empty batch.
+pub(crate) fn collect_batch(shared: &Shared, cfg: &ServeConfig) -> Option<Vec<Request>> {
+    let mut q = shared.lock_queue();
+    loop {
+        if let Some(first) = q.deque.pop_front() {
+            let mut batch = vec![first];
+            let deadline = Instant::now() + cfg.max_wait;
+            while batch.len() < cfg.max_batch {
+                if let Some(r) = q.deque.pop_front() {
+                    batch.push(r);
+                    continue;
+                }
+                // Drain fast on shutdown; never wait past the window.
+                if q.closed {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _timeout) = shared
+                    .cv
+                    .wait_timeout(q, deadline - now)
+                    .unwrap_or_else(|p| p.into_inner());
+                q = guard;
+            }
+            return Some(batch);
+        }
+        if q.closed {
+            return None;
+        }
+        q = shared.cv.wait(q).unwrap_or_else(|p| p.into_inner());
+    }
+}
+
+/// Stack a micro-batch of single-sample requests into one padded batch
+/// call: input position `i` of every request is stacked along a new
+/// leading axis of extent `pad_to`, with the **last request replicated**
+/// into the padding rows (real data keeps the device's denormal/NaN
+/// behavior uniform, unlike zero padding, and its outputs are simply
+/// dropped by [`unstack_batch`]).
+///
+/// All requests must agree with the first on arity, per-position shape
+/// and dtype; `batch.len()` must not exceed `pad_to`. This is the
+/// helper a natively batched (PJRT) backend builds `run_batch_f32`
+/// from; the CPU loop-over-batch path never calls it.
+pub fn stack_pad_to_batch(batch: &[Vec<Buffer>], pad_to: usize) -> FdtResult<Vec<Buffer>> {
+    let first = batch.first().ok_or(FdtError::Other {
+        reason: "cannot stack an empty micro-batch".to_string(),
+    })?;
+    if batch.len() > pad_to {
+        return Err(FdtError::Other {
+            reason: format!("micro-batch of {} exceeds pad-to-batch size {pad_to}", batch.len()),
+        });
+    }
+    let mut stacked = Vec::with_capacity(first.len());
+    for pos in 0..first.len() {
+        let proto = &first[pos];
+        let mut shape = vec![pad_to];
+        shape.extend_from_slice(proto.shape());
+        // Validate arity/shape/dtype agreement across the batch first,
+        // then stack `pad_to` rows, replicating the last request.
+        for (r, req) in batch.iter().enumerate() {
+            let buf = req.get(pos).ok_or_else(|| FdtError::Other {
+                reason: format!("batch request {r} has {} inputs, expected {}", req.len(), first.len()),
+            })?;
+            if buf.shape() != proto.shape() {
+                return Err(FdtError::InputShapeMismatch {
+                    name: format!("batch request {r} input {pos}"),
+                    expected: proto.shape().to_vec(),
+                    got: buf.shape().to_vec(),
+                });
+            }
+        }
+        let rows = (0..pad_to).map(|r| &batch[r.min(batch.len() - 1)][pos]);
+        stacked.push(match proto {
+            Buffer::F32 { .. } => {
+                let mut data = Vec::with_capacity(pad_to * proto.shape().iter().product::<usize>());
+                for row in rows {
+                    let Buffer::F32 { data: d, .. } = row else {
+                        return Err(FdtError::Other {
+                            reason: format!("batch dtype mismatch at input {pos} (expected f32)"),
+                        });
+                    };
+                    data.extend_from_slice(d);
+                }
+                Buffer::F32 { shape, data }
+            }
+            Buffer::I32 { .. } => {
+                let mut data = Vec::with_capacity(pad_to * proto.shape().iter().product::<usize>());
+                for row in rows {
+                    let Buffer::I32 { data: d, .. } = row else {
+                        return Err(FdtError::Other {
+                            reason: format!("batch dtype mismatch at input {pos} (expected i32)"),
+                        });
+                    };
+                    data.extend_from_slice(d);
+                }
+                Buffer::I32 { shape, data }
+            }
+        });
+    }
+    Ok(stacked)
+}
+
+/// Split the outputs of a padded batch call back into per-request
+/// output sets: each output is assumed to carry the batch along its
+/// leading axis (extent `pad_to`); the first `live` rows are returned,
+/// the padding rows dropped.
+pub fn unstack_batch(
+    outputs: &[Vec<f32>],
+    pad_to: usize,
+    live: usize,
+) -> FdtResult<Vec<Vec<Vec<f32>>>> {
+    if live > pad_to {
+        return Err(FdtError::Other {
+            reason: format!("cannot unstack {live} live rows from a batch of {pad_to}"),
+        });
+    }
+    let mut per_request: Vec<Vec<Vec<f32>>> = vec![Vec::with_capacity(outputs.len()); live];
+    for out in outputs {
+        if pad_to == 0 || out.len() % pad_to != 0 {
+            return Err(FdtError::Other {
+                reason: format!(
+                    "batched output of {} elements does not divide into {pad_to} rows",
+                    out.len()
+                ),
+            });
+        }
+        let row = out.len() / pad_to;
+        for (r, dst) in per_request.iter_mut().enumerate() {
+            dst.push(out[r * row..(r + 1) * row].to_vec());
+        }
+    }
+    Ok(per_request)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(vals: &[f32]) -> Vec<Buffer> {
+        vec![Buffer::new(vec![vals.len()], vals.to_vec())]
+    }
+
+    #[test]
+    fn stack_pads_with_last_request_and_unstack_drops_padding() {
+        let batch = vec![req(&[1.0, 2.0]), req(&[3.0, 4.0]), req(&[5.0, 6.0])];
+        let stacked = stack_pad_to_batch(&batch, 4).unwrap();
+        assert_eq!(stacked.len(), 1);
+        assert_eq!(stacked[0].shape(), &[4, 2]);
+        let Buffer::F32 { data, .. } = &stacked[0] else { panic!("expected f32") };
+        assert_eq!(data, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 5.0, 6.0]);
+
+        // Model: identity over the batch — unstack returns live rows.
+        let outs = unstack_batch(&[data.clone()], 4, 3).unwrap();
+        assert_eq!(outs.len(), 3);
+        assert_eq!(outs[1], vec![vec![3.0, 4.0]]);
+        assert_eq!(outs[2], vec![vec![5.0, 6.0]]);
+    }
+
+    #[test]
+    fn stack_validates_shape_arity_and_capacity() {
+        let batch = vec![req(&[1.0, 2.0]), req(&[3.0])];
+        match stack_pad_to_batch(&batch, 4) {
+            Err(FdtError::InputShapeMismatch { .. }) => {}
+            other => panic!("expected InputShapeMismatch, got {other:?}"),
+        }
+        assert!(stack_pad_to_batch(&[], 4).is_err());
+        let too_many = vec![req(&[1.0]); 5];
+        assert!(stack_pad_to_batch(&too_many, 4).is_err());
+        let ragged = vec![req(&[1.0]), vec![]];
+        assert!(stack_pad_to_batch(&ragged, 2).is_err());
+    }
+
+    #[test]
+    fn i32_buffers_stack_and_dtype_mismatch_is_rejected() {
+        let a = vec![Buffer::new_i32(vec![2], vec![1, 2])];
+        let b = vec![Buffer::new_i32(vec![2], vec![3, 4])];
+        let stacked = stack_pad_to_batch(&[a.clone(), b], 2).unwrap();
+        let Buffer::I32 { data, shape } = &stacked[0] else { panic!("expected i32") };
+        assert_eq!(shape, &[2, 2]);
+        assert_eq!(data, &[1, 2, 3, 4]);
+
+        let mixed = vec![a, vec![Buffer::new(vec![2], vec![0.5, 0.5])]];
+        assert!(stack_pad_to_batch(&mixed, 2).is_err());
+    }
+
+    #[test]
+    fn unstack_rejects_indivisible_outputs() {
+        assert!(unstack_batch(&[vec![0.0; 7]], 4, 2).is_err());
+        assert!(unstack_batch(&[vec![0.0; 8]], 4, 5).is_err());
+        assert!(unstack_batch(&[], 4, 0).unwrap().is_empty());
+    }
+}

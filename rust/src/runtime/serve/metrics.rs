@@ -1,0 +1,260 @@
+//! Serving metrics: latency percentiles, queue depth, batch-size
+//! histogram, per-backend throughput, SLO accounting.
+//!
+//! [`Metrics`] is the shared, interior-mutable recorder the server and
+//! its workers write into (one coarse mutex — recording is a few dozen
+//! nanoseconds against requests that take tens of microseconds, and the
+//! serving design gives each worker its own engine so this is the only
+//! shared write point besides the queue). [`MetricsReport`] is an owned
+//! snapshot with the derived statistics, pretty-printable via
+//! `Display`.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Everything recorded since the server started.
+#[derive(Debug, Default)]
+struct Inner {
+    /// End-to-end latency (enqueue → completion) per completed request,
+    /// in microseconds. Exact percentiles beat bucketed ones at serving
+    /// scale: one `u64` per request is 8 MB per million requests.
+    lat_us: Vec<u64>,
+    /// Requests that exceeded the configured p99 SLO target.
+    slo_miss: u64,
+    /// Requests rejected with `ServerOverloaded` at submit time.
+    rejected: u64,
+    /// Requests completed with an error (every backend failed).
+    failed: u64,
+    /// batch size → number of batches executed at that size.
+    batch_hist: BTreeMap<usize, u64>,
+    /// backend name → requests completed on it.
+    per_backend: BTreeMap<String, u64>,
+    /// Deepest queue observed at submit time.
+    queue_depth_max: usize,
+}
+
+/// Shared recorder; cloned snapshots are taken via [`Metrics::report`].
+#[derive(Debug)]
+pub(crate) struct Metrics {
+    inner: Mutex<Inner>,
+    t0: Instant,
+    slo_p99: Option<Duration>,
+}
+
+impl Metrics {
+    pub(crate) fn new(slo_p99: Option<Duration>) -> Metrics {
+        Metrics { inner: Mutex::new(Inner::default()), t0: Instant::now(), slo_p99 }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// One request completed successfully on `backend` after `lat`.
+    pub(crate) fn record_done(&self, lat: Duration, backend: &str) {
+        let mut m = self.lock();
+        m.lat_us.push(lat.as_micros().min(u64::MAX as u128) as u64);
+        if self.slo_p99.is_some_and(|slo| lat > slo) {
+            m.slo_miss += 1;
+        }
+        *m.per_backend.entry(backend.to_string()).or_insert(0) += 1;
+    }
+
+    /// One micro-batch of `n` requests was executed.
+    pub(crate) fn record_batch(&self, n: usize) {
+        *self.lock().batch_hist.entry(n).or_insert(0) += 1;
+    }
+
+    pub(crate) fn record_rejected(&self) {
+        self.lock().rejected += 1;
+    }
+
+    pub(crate) fn record_failed(&self) {
+        self.lock().failed += 1;
+    }
+
+    /// Queue depth observed after an enqueue.
+    pub(crate) fn note_depth(&self, depth: usize) {
+        let mut m = self.lock();
+        m.queue_depth_max = m.queue_depth_max.max(depth);
+    }
+
+    /// Snapshot the derived statistics.
+    pub(crate) fn report(&self) -> MetricsReport {
+        let m = self.lock();
+        let mut lat = m.lat_us.clone();
+        lat.sort_unstable();
+        let pct = |p: usize| -> u64 {
+            if lat.is_empty() {
+                0
+            } else {
+                lat[(lat.len() * p / 100).min(lat.len() - 1)]
+            }
+        };
+        let wall = self.t0.elapsed();
+        let completed = lat.len() as u64;
+        let secs = wall.as_secs_f64().max(1e-9);
+        MetricsReport {
+            completed,
+            failed: m.failed,
+            rejected: m.rejected,
+            slo_miss: m.slo_miss,
+            slo_p99: self.slo_p99,
+            p50_us: pct(50),
+            p95_us: pct(95),
+            p99_us: pct(99),
+            max_us: lat.last().copied().unwrap_or(0),
+            throughput_rps: completed as f64 / secs,
+            batch_hist: m.batch_hist.iter().map(|(&k, &v)| (k, v)).collect(),
+            per_backend: m
+                .per_backend
+                .iter()
+                .map(|(k, &v)| (k.clone(), v, v as f64 / secs))
+                .collect(),
+            queue_depth_max: m.queue_depth_max,
+            wall,
+        }
+    }
+}
+
+/// An owned snapshot of the server's health, taken by
+/// `InferenceServer::metrics` / returned by `shutdown`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsReport {
+    /// Requests answered successfully.
+    pub completed: u64,
+    /// Requests answered with an error (every backend in the worker's
+    /// chain failed).
+    pub failed: u64,
+    /// Requests rejected at submit time (queue at capacity).
+    pub rejected: u64,
+    /// Completed requests whose end-to-end latency exceeded the p99 SLO
+    /// target (0 when no target is configured).
+    pub slo_miss: u64,
+    /// The configured p99 latency SLO target, if any.
+    pub slo_p99: Option<Duration>,
+    /// End-to-end (enqueue → completion) latency percentiles, µs.
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+    /// Completed requests per second of server wall-clock.
+    pub throughput_rps: f64,
+    /// `(batch size, batches executed at that size)`, ascending.
+    pub batch_hist: Vec<(usize, u64)>,
+    /// `(backend name, requests completed, requests/sec)` per backend
+    /// that served at least one request.
+    pub per_backend: Vec<(String, u64, f64)>,
+    /// Deepest request queue observed at submit time.
+    pub queue_depth_max: usize,
+    /// Server wall-clock covered by this snapshot.
+    pub wall: Duration,
+}
+
+impl MetricsReport {
+    /// Whether the p99 SLO target holds: configured, and the measured
+    /// p99 latency is at or under it. `true` when no target is set.
+    pub fn slo_met(&self) -> bool {
+        match self.slo_p99 {
+            Some(slo) => Duration::from_micros(self.p99_us) <= slo,
+            None => true,
+        }
+    }
+
+    /// Mean executed batch size (0 when nothing ran).
+    pub fn mean_batch(&self) -> f64 {
+        let (reqs, batches) = self
+            .batch_hist
+            .iter()
+            .fold((0u64, 0u64), |(r, b), &(size, n)| (r + size as u64 * n, b + n));
+        if batches == 0 {
+            0.0
+        } else {
+            reqs as f64 / batches as f64
+        }
+    }
+}
+
+impl std::fmt::Display for MetricsReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "served {} ok / {} failed / {} rejected in {:.2?}: {:.0} req/s",
+            self.completed, self.failed, self.rejected, self.wall, self.throughput_rps
+        )?;
+        writeln!(
+            f,
+            "  latency p50 {} µs  p95 {} µs  p99 {} µs  max {} µs",
+            self.p50_us, self.p95_us, self.p99_us, self.max_us
+        )?;
+        if let Some(slo) = self.slo_p99 {
+            writeln!(
+                f,
+                "  SLO p99 ≤ {slo:?}: {} ({} miss)",
+                if self.slo_met() { "met" } else { "VIOLATED" },
+                self.slo_miss
+            )?;
+        }
+        write!(f, "  batches:")?;
+        for &(size, n) in &self.batch_hist {
+            write!(f, " {size}×{n}")?;
+        }
+        writeln!(f, "  (mean {:.2})", self.mean_batch())?;
+        writeln!(f, "  max queue depth {}", self.queue_depth_max)?;
+        for (name, n, rps) in &self.per_backend {
+            writeln!(f, "  backend `{name}`: {n} requests ({rps:.0} req/s)")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_and_histograms() {
+        let m = Metrics::new(Some(Duration::from_micros(150)));
+        for us in 1..=100u64 {
+            m.record_done(Duration::from_micros(us * 2), "cpu-int8");
+        }
+        m.record_batch(4);
+        m.record_batch(4);
+        m.record_batch(1);
+        m.record_rejected();
+        m.record_failed();
+        m.note_depth(3);
+        m.note_depth(9);
+        m.note_depth(2);
+        let r = m.report();
+        assert_eq!(r.completed, 100);
+        assert_eq!(r.rejected, 1);
+        assert_eq!(r.failed, 1);
+        assert_eq!(r.p50_us, 102);
+        assert_eq!(r.p99_us, 200);
+        assert_eq!(r.max_us, 200);
+        // 2·k µs latencies: 150 µs SLO admits k ≤ 75, so 25 misses.
+        assert_eq!(r.slo_miss, 25);
+        assert!(!r.slo_met(), "p99 of 200 µs must violate a 150 µs target");
+        assert_eq!(r.batch_hist, vec![(1, 1), (4, 2)]);
+        assert!((r.mean_batch() - 3.0).abs() < 1e-12);
+        assert_eq!(r.queue_depth_max, 9);
+        assert_eq!(r.per_backend.len(), 1);
+        assert_eq!(r.per_backend[0].1, 100);
+        assert!(r.throughput_rps > 0.0);
+        let shown = r.to_string();
+        assert!(shown.contains("p99 200"), "{shown}");
+        assert!(shown.contains("VIOLATED"), "{shown}");
+    }
+
+    #[test]
+    fn empty_report_is_well_formed() {
+        let r = Metrics::new(None).report();
+        assert_eq!(r.completed, 0);
+        assert_eq!((r.p50_us, r.p99_us, r.max_us), (0, 0, 0));
+        assert!(r.slo_met());
+        assert_eq!(r.mean_batch(), 0.0);
+        r.to_string(); // must not panic
+    }
+}

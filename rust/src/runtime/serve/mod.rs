@@ -1,0 +1,341 @@
+//! Async micro-batched inference serving tier.
+//!
+//! [`InferenceServer`] fronts a pool of worker threads, each owning its
+//! own [`FailoverEngine`] chain, with a single bounded request queue
+//! between them:
+//!
+//! ```text
+//!   clients ──submit()──▶ bounded queue ──collect_batch()──▶ workers
+//!      ▲                   (back-pressure:                    │ each: own
+//!      └── ResponseHandle    ServerOverloaded                 │ FailoverEngine
+//!           (per-request      when full)                      │ (own arena pool,
+//!            channel)                                         ▼  shared weights)
+//!                                                      run_batch_f32
+//! ```
+//!
+//! The design follows the paper's memory story into the serving layer:
+//! a worker's CPU engine is a cheap [`CpuEngine`] clone — the folded
+//! int8 ROM and LUTs are shared via `Arc`, while the FDT-planned arena
+//! (the per-inference RAM) is per-worker and recycled across requests,
+//! so steady-state serving performs **zero** allocation on the hot path
+//! and workers never contend on scratch memory. Requests are answered
+//! in micro-batches formed under a latency-bounded window
+//! ([`ServeConfig::max_batch`] / [`ServeConfig::max_wait`], see
+//! [`batch`]); worker engines degrade through their failover chain on
+//! fault without dropping in-flight requests; [`metrics`] accounts
+//! latency percentiles, batch-size and per-backend distributions, and
+//! an optional p99 SLO target.
+//!
+//! Worker-level parallelism composes with op-level parallelism by
+//! *not* multiplying: [`ServeConfig::exec_threads`] defaults to 1, so a
+//! 4-worker server on a 4-core host runs 4 single-threaded engines
+//! instead of 4 engines each trying to fan every conv across all 4
+//! cores (oversubscription that serializes everything through the OS
+//! scheduler). Standalone single-request users keep the executor's
+//! host-parallel default.
+
+pub mod batch;
+pub mod metrics;
+mod pool;
+
+pub use batch::{stack_pad_to_batch, unstack_batch};
+pub use metrics::MetricsReport;
+
+use super::failover::FailoverEngine;
+use super::{Buffer, CpuEngine};
+use crate::error::{FdtError, FdtResult};
+use crate::graph::Graph;
+use metrics::Metrics;
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Tuning knobs for an [`InferenceServer`].
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Largest micro-batch a worker executes in one backend call.
+    pub max_batch: usize,
+    /// Longest a worker holds an open batch waiting for it to fill.
+    /// Zero = purely work-conserving (batch whatever is queued *now*).
+    pub max_wait: Duration,
+    /// Bounded queue capacity; submissions beyond it are rejected with
+    /// [`FdtError::ServerOverloaded`] instead of queued.
+    pub queue_cap: usize,
+    /// Intra-op worker threads for each worker's CPU engine (see
+    /// [`CpuEngine::set_exec_threads`]). Default 1: worker-level
+    /// parallelism replaces op-level parallelism in the server.
+    pub exec_threads: usize,
+    /// Optional p99 end-to-end latency target, accounted per request in
+    /// [`MetricsReport::slo_miss`] and checked by
+    /// [`MetricsReport::slo_met`].
+    pub slo_p99: Option<Duration>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 256,
+            exec_threads: 1,
+            slo_p99: None,
+        }
+    }
+}
+
+/// One queued request: its payload, its enqueue timestamp (end-to-end
+/// latency starts at submit), and the completion channel back to the
+/// caller's [`ResponseHandle`].
+pub(crate) struct Request {
+    pub(crate) inputs: Vec<Buffer>,
+    pub(crate) submitted: Instant,
+    pub(crate) tx: mpsc::Sender<FdtResult<Vec<Vec<f32>>>>,
+}
+
+/// Queue contents guarded by [`Shared::q`].
+pub(crate) struct QueueState {
+    pub(crate) deque: VecDeque<Request>,
+    /// Set by shutdown/Drop: no new submissions; workers drain what is
+    /// queued and exit.
+    pub(crate) closed: bool,
+}
+
+/// State shared between the server handle and its workers.
+pub(crate) struct Shared {
+    q: Mutex<QueueState>,
+    pub(crate) cv: Condvar,
+}
+
+impl Shared {
+    pub(crate) fn lock_queue(&self) -> MutexGuard<'_, QueueState> {
+        self.q.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// Completion handle for a submitted request; redeem with
+/// [`ResponseHandle::wait`]. Dropping it abandons the result (the
+/// request still executes and is still metered).
+pub struct ResponseHandle {
+    rx: mpsc::Receiver<FdtResult<Vec<Vec<f32>>>>,
+}
+
+impl ResponseHandle {
+    /// Block until the request completes; returns the model outputs
+    /// (one `Vec<f32>` per graph output) or the error the worker's
+    /// whole failover chain produced.
+    pub fn wait(self) -> FdtResult<Vec<Vec<f32>>> {
+        self.rx.recv().map_err(|_| FdtError::Other {
+            reason: "server shut down before completing request".to_string(),
+        })?
+    }
+}
+
+/// Multi-worker micro-batching inference server. See the module docs
+/// for the architecture.
+pub struct InferenceServer {
+    shared: Arc<Shared>,
+    metrics: Arc<Metrics>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    queue_cap: usize,
+}
+
+impl InferenceServer {
+    /// Start a server with one worker per engine in `engines` (each
+    /// worker owns its chain exclusively — build one chain per worker).
+    pub fn new(engines: Vec<FailoverEngine>, cfg: ServeConfig) -> FdtResult<InferenceServer> {
+        if engines.is_empty() {
+            return Err(FdtError::EngineUnavailable {
+                engine: "serve".to_string(),
+                reason: "server needs at least one worker engine".to_string(),
+            });
+        }
+        if cfg.max_batch == 0 || cfg.queue_cap == 0 {
+            return Err(FdtError::Other {
+                reason: format!(
+                    "invalid serve config: max_batch {} and queue_cap {} must be >= 1",
+                    cfg.max_batch, cfg.queue_cap
+                ),
+            });
+        }
+        let shared = Arc::new(Shared {
+            q: Mutex::new(QueueState { deque: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        });
+        let metrics = Arc::new(Metrics::new(cfg.slo_p99));
+        let queue_cap = cfg.queue_cap;
+        let workers = pool::spawn_workers(engines, &shared, &metrics, &cfg);
+        Ok(InferenceServer { shared, metrics, workers, queue_cap })
+    }
+
+    /// Convenience constructor for the common chain: prepare the CPU
+    /// int8 engine for `g` **once** (calibrate, fold, plan), then give
+    /// each of the `workers` threads a weight-sharing clone with
+    /// intra-op threading pinned to [`ServeConfig::exec_threads`],
+    /// wrapped in a single-backend failover chain. PJRT unavailability
+    /// (tier-1 builds) is recorded in each chain's degradation log, as
+    /// in [`FailoverEngine::for_graph`].
+    pub fn for_graph(
+        g: &Graph,
+        samples: usize,
+        seed: u64,
+        workers: usize,
+        cfg: ServeConfig,
+    ) -> FdtResult<InferenceServer> {
+        if workers == 0 {
+            return Err(FdtError::EngineUnavailable {
+                engine: "serve".to_string(),
+                reason: "server needs at least one worker".to_string(),
+            });
+        }
+        let proto = CpuEngine::prepare(g, samples, seed).map_err(|e| {
+            FdtError::EngineUnavailable { engine: "cpu-int8".to_string(), reason: e.to_string() }
+        })?;
+        #[cfg(not(feature = "pjrt"))]
+        let pjrt_note = super::Runtime::cpu()
+            .err()
+            .map(|e| format!("pjrt engine unavailable: {e}; serving on CPU int8 workers"));
+        #[cfg(feature = "pjrt")]
+        let pjrt_note: Option<String> = None;
+        let mut engines = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let mut eng = proto.clone();
+            eng.set_exec_threads(cfg.exec_threads);
+            let mut chain = FailoverEngine::new(vec![Box::new(eng)])?;
+            if let Some(note) = &pjrt_note {
+                chain.log_degradation(note.clone());
+            }
+            engines.push(chain);
+        }
+        InferenceServer::new(engines, cfg)
+    }
+
+    /// Number of worker threads serving requests.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue one request without blocking for its result. Rejects
+    /// with [`FdtError::ServerOverloaded`] when the queue is at
+    /// capacity (back-pressure: shed at the door, never grow unbounded)
+    /// and with an error after shutdown.
+    pub fn submit(&self, inputs: Vec<Buffer>) -> FdtResult<ResponseHandle> {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.shared.lock_queue();
+            if q.closed {
+                return Err(FdtError::Other {
+                    reason: "server is shut down; no new requests accepted".to_string(),
+                });
+            }
+            if q.deque.len() >= self.queue_cap {
+                drop(q);
+                self.metrics.record_rejected();
+                return Err(FdtError::ServerOverloaded {
+                    depth: self.queue_cap,
+                    cap: self.queue_cap,
+                });
+            }
+            q.deque.push_back(Request { inputs, submitted: Instant::now(), tx });
+            self.metrics.note_depth(q.deque.len());
+        }
+        self.shared.cv.notify_one();
+        Ok(ResponseHandle { rx })
+    }
+
+    /// Submit one request and block for its outputs (closed-loop
+    /// client convenience over [`submit`](InferenceServer::submit)).
+    pub fn infer(&self, inputs: Vec<Buffer>) -> FdtResult<Vec<Vec<f32>>> {
+        self.submit(inputs)?.wait()
+    }
+
+    /// Snapshot the serving metrics so far.
+    pub fn metrics(&self) -> MetricsReport {
+        self.metrics.report()
+    }
+
+    /// Graceful shutdown: stop accepting requests, let the workers
+    /// drain everything already queued, join them, and return the
+    /// final metrics snapshot.
+    pub fn shutdown(mut self) -> MetricsReport {
+        self.close_and_join();
+        self.metrics.report()
+    }
+
+    fn close_and_join(&mut self) {
+        self.shared.lock_queue().closed = true;
+        self.shared.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for InferenceServer {
+    /// Dropping the server is a graceful shutdown: queued requests are
+    /// drained, not dropped.
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    fn kws_input(g: &Graph, fill: f32) -> Vec<Buffer> {
+        g.inputs
+            .iter()
+            .map(|&t| {
+                let tensor = g.tensor(t);
+                Buffer::new(tensor.shape.clone(), vec![fill; tensor.numel()])
+            })
+            .collect()
+    }
+
+    #[test]
+    fn serves_and_shuts_down_gracefully() {
+        let g = models::kws();
+        let srv = InferenceServer::for_graph(&g, 1, 3, 2, ServeConfig::default()).unwrap();
+        assert_eq!(srv.workers(), 2);
+        let out = srv.infer(kws_input(&g, 0.25)).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), 12);
+        // Submit a handful, then shut down before waiting: all drain.
+        let handles: Vec<_> =
+            (0..6).map(|_| srv.submit(kws_input(&g, 0.1)).unwrap()).collect();
+        let report = srv.shutdown();
+        for h in handles {
+            h.wait().unwrap();
+        }
+        assert_eq!(report.completed, 7);
+        assert_eq!(report.failed + report.rejected, 0);
+    }
+
+    #[test]
+    fn rejects_invalid_configs_and_empty_pools() {
+        let g = models::kws();
+        assert!(matches!(
+            InferenceServer::for_graph(&g, 1, 3, 0, ServeConfig::default()),
+            Err(FdtError::EngineUnavailable { .. })
+        ));
+        assert!(matches!(
+            InferenceServer::new(vec![], ServeConfig::default()),
+            Err(FdtError::EngineUnavailable { .. })
+        ));
+        let bad = ServeConfig { max_batch: 0, ..ServeConfig::default() };
+        assert!(InferenceServer::for_graph(&g, 1, 3, 1, bad).is_err());
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_rejected() {
+        let g = models::kws();
+        let mut srv =
+            InferenceServer::for_graph(&g, 1, 3, 1, ServeConfig::default()).unwrap();
+        srv.close_and_join();
+        match srv.submit(kws_input(&g, 0.0)) {
+            Err(FdtError::Other { reason }) => assert!(reason.contains("shut down")),
+            other => panic!("expected shutdown rejection, got {:?}", other.map(|_| ())),
+        }
+    }
+}

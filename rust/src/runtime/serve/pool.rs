@@ -1,0 +1,80 @@
+//! Worker pool: one thread per engine, each looping
+//! collect-batch → execute → complete.
+//!
+//! Each worker exclusively owns a [`FailoverEngine`] chain — typically
+//! a weight-sharing [`CpuEngine`](crate::runtime::CpuEngine) clone with
+//! its own recycled arena pool — so execution never takes a lock; the
+//! only shared state is the request queue and the metrics recorder. A
+//! backend fault inside a batch degrades that worker's chain (sticky)
+//! and re-runs the whole batch on the next backend, so every in-flight
+//! request is answered exactly once: with outputs if any backend in the
+//! chain works, with the chain's terminal error otherwise.
+
+use super::batch::collect_batch;
+use super::metrics::Metrics;
+use super::{ServeConfig, Shared};
+use crate::runtime::failover::FailoverEngine;
+use crate::runtime::Buffer;
+use std::sync::Arc;
+use std::thread;
+
+/// Spawn one worker thread per engine. Threads exit when the queue is
+/// closed and drained (see [`collect_batch`]).
+pub(crate) fn spawn_workers(
+    engines: Vec<FailoverEngine>,
+    shared: &Arc<Shared>,
+    metrics: &Arc<Metrics>,
+    cfg: &ServeConfig,
+) -> Vec<thread::JoinHandle<()>> {
+    engines
+        .into_iter()
+        .enumerate()
+        .map(|(i, engine)| {
+            let shared = Arc::clone(shared);
+            let metrics = Arc::clone(metrics);
+            let cfg = cfg.clone();
+            thread::Builder::new()
+                .name(format!("fdt-serve-{i}"))
+                .spawn(move || worker_loop(shared, engine, metrics, cfg))
+                .unwrap_or_else(|e| {
+                    // Out of threads at startup is unrecoverable for a
+                    // server: surface it loudly rather than serve with
+                    // silently fewer workers than configured.
+                    panic!("failed to spawn serving worker {i}: {e}")
+                })
+        })
+        .collect()
+}
+
+fn worker_loop(
+    shared: Arc<Shared>,
+    mut engine: FailoverEngine,
+    metrics: Arc<Metrics>,
+    cfg: ServeConfig,
+) {
+    while let Some(mut batch) = collect_batch(&shared, &cfg) {
+        let payloads: Vec<Vec<Buffer>> =
+            batch.iter_mut().map(|r| std::mem::take(&mut r.inputs)).collect();
+        metrics.record_batch(batch.len());
+        match engine.run_batch_f32(&payloads) {
+            Ok(outs) => {
+                // Attribute the whole batch to the backend that answered
+                // it (failover is sticky, so `active_backend` after the
+                // call is exactly the one that succeeded).
+                let backend = engine.active_backend().to_string();
+                for (req, out) in batch.into_iter().zip(outs) {
+                    metrics.record_done(req.submitted.elapsed(), &backend);
+                    // A dropped ResponseHandle is a client that stopped
+                    // caring; the work is still metered.
+                    let _ = req.tx.send(Ok(out));
+                }
+            }
+            Err(e) => {
+                for req in batch {
+                    metrics.record_failed();
+                    let _ = req.tx.send(Err(e.clone()));
+                }
+            }
+        }
+    }
+}

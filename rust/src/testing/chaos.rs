@@ -9,6 +9,10 @@
 //! * **engine exec failure** — [`FailingBackend`] passes the health
 //!   check but fails every request (optionally only after `fail_after`
 //!   successful ones), so the chain must fail over mid-serving;
+//! * **intermittent exec faults** — [`FlakyBackend`] wraps a *real*
+//!   backend and injects a failure every `fail_every`-th request
+//!   (optionally flapping its health probe), so concurrent-serving
+//!   tests can assert byte-identical outputs across sticky failover;
 //! * **budget exhaustion** — [`starved_flow_options`] zeroes the node
 //!   *and* wall-clock budgets of both exact solvers, so the flow must
 //!   degrade to heuristic plans rather than fail;
@@ -89,6 +93,69 @@ impl InferenceBackend for FailingBackend {
     }
 }
 
+/// A backend that *works* — it delegates to a real inner backend — but
+/// deterministically fails every `fail_every`-th request and (optionally)
+/// flaps its health check. Unlike [`FailingBackend`], whose "successes"
+/// return empty outputs, a `FlakyBackend`'s successes are the inner
+/// backend's real outputs, so byte-identity assertions hold across its
+/// faults: any request it answers is answered correctly, any request it
+/// fails is recomputed by the next backend in the chain.
+///
+/// With `fail_every = 0` it never injects (a pure pass-through).
+pub struct FlakyBackend {
+    name: String,
+    inner: Box<dyn InferenceBackend>,
+    fail_every: usize,
+    flap_health: bool,
+    calls: AtomicUsize,
+    health_calls: AtomicUsize,
+}
+
+impl FlakyBackend {
+    pub fn new(name: impl Into<String>, inner: Box<dyn InferenceBackend>, fail_every: usize) -> Self {
+        FlakyBackend {
+            name: name.into(),
+            inner,
+            fail_every,
+            flap_health: false,
+            calls: AtomicUsize::new(0),
+            health_calls: AtomicUsize::new(0),
+        }
+    }
+
+    /// Make `health_check` alternate Ok / Err on successive probes.
+    pub fn with_flapping_health(mut self) -> Self {
+        self.flap_health = true;
+        self
+    }
+
+    /// Requests attempted (injected faults included) so far.
+    pub fn requests(&self) -> usize {
+        self.calls.load(Ordering::SeqCst)
+    }
+}
+
+impl InferenceBackend for FlakyBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn health_check(&self) -> FdtResult<()> {
+        if self.flap_health && self.health_calls.fetch_add(1, Ordering::SeqCst) % 2 == 1 {
+            return Err(FdtError::Injected { site: format!("{}: flapping health", self.name) });
+        }
+        self.inner.health_check()
+    }
+
+    fn run_f32(&self, inputs: &[Buffer]) -> FdtResult<Vec<Vec<f32>>> {
+        let n = self.calls.fetch_add(1, Ordering::SeqCst) + 1;
+        if self.fail_every > 0 && n % self.fail_every == 0 {
+            return Err(FdtError::Injected { site: format!("{}: exec (request {n})", self.name) });
+        }
+        self.inner.run_f32(inputs)
+    }
+}
+
 /// Flow options with both exact solvers starved of node *and* wall-clock
 /// budget (schedule and layout B&B each expire immediately). The flow
 /// must still return a valid — degraded — plan built from the heuristic
@@ -154,6 +221,40 @@ mod tests {
         assert_eq!(out.len(), 1, "request must be served by the CPU fallback");
         assert_eq!(chain.active_backend(), g.name);
         assert!(chain.failover_log().iter().any(|l| l.contains("failing over")));
+    }
+
+    #[test]
+    fn flaky_backend_answers_correctly_or_not_at_all() {
+        let g = models::kws();
+        let cpu = CpuEngine::prepare(&g, 1, 3).unwrap();
+        let reference = cpu.run_f32(&kws_inputs(&g)).unwrap();
+        let flaky = FlakyBackend::new("chaos-flaky", Box::new(cpu), 3);
+        let mut served = 0;
+        let mut injected = 0;
+        for _ in 0..9 {
+            match flaky.run_f32(&kws_inputs(&g)) {
+                Ok(out) => {
+                    assert_eq!(out, reference, "a flaky success must be the real answer");
+                    served += 1;
+                }
+                Err(FdtError::Injected { .. }) => injected += 1,
+                Err(other) => panic!("unexpected error {other:?}"),
+            }
+        }
+        assert_eq!((served, injected), (6, 3), "fail_every=3 over 9 requests");
+        assert_eq!(flaky.requests(), 9);
+    }
+
+    #[test]
+    fn flapping_health_alternates() {
+        let g = models::kws();
+        let cpu = CpuEngine::prepare(&g, 1, 3).unwrap();
+        let flaky = FlakyBackend::new("chaos-flap", Box::new(cpu), 0).with_flapping_health();
+        assert!(flaky.health_check().is_ok());
+        assert!(flaky.health_check().is_err());
+        assert!(flaky.health_check().is_ok());
+        // fail_every = 0 never injects.
+        assert!(flaky.run_f32(&kws_inputs(&g)).is_ok());
     }
 
     #[test]

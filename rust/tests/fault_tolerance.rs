@@ -10,7 +10,7 @@ use fdt::error::FdtError;
 use fdt::graph::{ActKind, DType, Graph, GraphBuilder, OpKind, Padding};
 use fdt::runtime::failover::{FailoverEngine, InferenceBackend};
 use fdt::runtime::{Buffer, CpuEngine};
-use fdt::testing::chaos::{arena_cap_below, starved_flow_options, FailingBackend};
+use fdt::testing::chaos::{arena_cap_below, starved_flow_options, FailingBackend, FlakyBackend};
 use fdt::testing::{mutate_invalid, random_graph, Corruption};
 
 const FUZZ_CASES: u64 = 256;
@@ -141,6 +141,122 @@ fn fault_injected_engine_falls_back_to_working_int8_executor() {
     assert_eq!(out[0].len(), 12, "KWS head has 12 classes");
     assert_eq!(chain.active_backend(), g.name);
     assert!(!chain.failover_log().is_empty());
+}
+
+#[test]
+fn concurrent_hammer_keeps_failover_sticky_and_byte_identical() {
+    // Satellite: many threads hammer one FailoverEngine while its
+    // preferred backend injects faults and an independent prober flaps
+    // its health check. Required invariants: every request completes
+    // exactly once, sticky failover never reverts (exactly one
+    // mid-serving degradation), and every answer is byte-identical to
+    // single-threaded execution.
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, Mutex};
+
+    /// Share one chaos backend between the failover chain and the
+    /// health-flapping prober thread.
+    struct SharedBackend(Arc<FlakyBackend>);
+    impl InferenceBackend for SharedBackend {
+        fn name(&self) -> &str {
+            self.0.name()
+        }
+        fn health_check(&self) -> fdt::error::FdtResult<()> {
+            self.0.health_check()
+        }
+        fn run_f32(&self, inputs: &[Buffer]) -> fdt::error::FdtResult<Vec<Vec<f32>>> {
+            self.0.run_f32(inputs)
+        }
+    }
+
+    const THREADS: u64 = 8;
+    const PER_THREAD: u64 = 12;
+    let g = fdt::models::kws();
+    let cpu = CpuEngine::prepare(&g, 1, 3).unwrap();
+    let make_inputs = |req: u64| -> Vec<Buffer> {
+        let mut rng = fdt::graph::Rng::new(0xC0FF_EE00 ^ req);
+        g.inputs
+            .iter()
+            .map(|&t| {
+                let tensor = g.tensor(t);
+                let data = (0..tensor.numel()).map(|_| rng.next_f32()).collect();
+                Buffer::new(tensor.shape.clone(), data)
+            })
+            .collect()
+    };
+    let reference: Vec<Vec<Vec<f32>>> = (0..THREADS * PER_THREAD)
+        .map(|i| cpu.run_f32(&make_inputs(i)).unwrap())
+        .collect();
+
+    // Preferred backend: real outputs (a weight-sharing CPU clone), but
+    // every 5th request faults and its health probe flaps. The first
+    // construction-time probe passes, so the chain starts on it.
+    let flaky = Arc::new(
+        FlakyBackend::new("chaos-preferred", Box::new(cpu.clone()), 5).with_flapping_health(),
+    );
+    let chain = FailoverEngine::new(vec![
+        Box::new(SharedBackend(Arc::clone(&flaky))) as Box<dyn InferenceBackend>,
+        Box::new(cpu.clone()) as Box<dyn InferenceBackend>,
+    ])
+    .unwrap();
+    assert_eq!(chain.active_backend(), "chaos-preferred");
+    let chain = Arc::new(Mutex::new(chain));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let prober = {
+        let flaky = Arc::clone(&flaky);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut flips = 0u64;
+            while !stop.load(Ordering::SeqCst) {
+                let _ = flaky.health_check();
+                flips += 1;
+                std::thread::yield_now();
+            }
+            flips
+        })
+    };
+
+    let workers: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let chain = Arc::clone(&chain);
+            let reference = reference.clone();
+            let make = (t * PER_THREAD..(t + 1) * PER_THREAD).map(make_inputs).collect::<Vec<_>>();
+            std::thread::spawn(move || {
+                for (k, inputs) in make.iter().enumerate() {
+                    let i = t * PER_THREAD + k as u64;
+                    let out = chain
+                        .lock()
+                        .unwrap()
+                        .run_f32(inputs)
+                        .unwrap_or_else(|e| panic!("request {i} dropped: {e}"));
+                    let got: Vec<Vec<u32>> =
+                        out.iter().map(|o| o.iter().map(|x| x.to_bits()).collect()).collect();
+                    let want: Vec<Vec<u32>> = reference[i as usize]
+                        .iter()
+                        .map(|o| o.iter().map(|x| x.to_bits()).collect())
+                        .collect();
+                    assert_eq!(got, want, "request {i} not byte-identical under chaos");
+                }
+                PER_THREAD
+            })
+        })
+        .collect();
+    let completed: u64 = workers.into_iter().map(|h| h.join().unwrap()).sum();
+    stop.store(true, Ordering::SeqCst);
+    let flips = prober.join().unwrap();
+
+    assert_eq!(completed, THREADS * PER_THREAD, "every request completes exactly once");
+    assert!(flips > 0, "health prober never ran");
+    let chain = chain.lock().unwrap();
+    // 96 requests with a fault every 5th: the chain must have degraded,
+    // and stickiness means it degraded exactly once and never reverted.
+    assert_eq!(chain.active_backend(), g.name);
+    let failovers =
+        chain.failover_log().iter().filter(|l| l.contains("failing over")).count();
+    assert_eq!(failovers, 1, "sticky failover must degrade exactly once: {:?}", chain.failover_log());
+    // The preferred backend answered only its pre-fault requests.
+    assert_eq!(flaky.requests(), 5, "preferred backend must not be retried after failover");
 }
 
 #[test]

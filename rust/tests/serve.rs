@@ -1,0 +1,233 @@
+//! Integration suite for the micro-batched serving tier
+//! (`fdt::runtime::serve`).
+//!
+//! Everything here is deterministic: concurrency is real (worker
+//! threads, simultaneous clients) but every synchronization point the
+//! assertions depend on is an explicit gate or counter, never a sleep
+//! race. The two ISSUE acceptance properties live here: served outputs
+//! are **byte-identical** to sequential execution, and an injected
+//! preferred-engine fault mid-load completes every in-flight request
+//! via CPU failover.
+
+use fdt::error::{FdtError, FdtResult};
+use fdt::graph::Graph;
+use fdt::runtime::failover::{FailoverEngine, InferenceBackend};
+use fdt::runtime::serve::{InferenceServer, ServeConfig};
+use fdt::runtime::{Buffer, CpuEngine};
+use fdt::testing::chaos::FlakyBackend;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Deterministic per-request model inputs (request index is the seed).
+fn seeded_inputs(g: &Graph, req: u64) -> Vec<Buffer> {
+    let mut rng = fdt::graph::Rng::new(0x5E12_F00D ^ req);
+    g.inputs
+        .iter()
+        .map(|&t| {
+            let tensor = g.tensor(t);
+            let data = (0..tensor.numel()).map(|_| rng.next_f32()).collect();
+            Buffer::new(tensor.shape.clone(), data)
+        })
+        .collect()
+}
+
+fn bits(outputs: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    outputs.iter().map(|o| o.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+#[test]
+fn served_outputs_are_byte_identical_to_sequential_execution() {
+    const REQS: u64 = 32;
+    let g = fdt::models::kws();
+    // Sequential reference: same calibration samples + seed as the server.
+    let reference = CpuEngine::prepare(&g, 1, 3).unwrap();
+    let expected: Vec<Vec<Vec<u32>>> =
+        (0..REQS).map(|i| bits(&reference.run_f32(&seeded_inputs(&g, i)).unwrap())).collect();
+
+    let cfg = ServeConfig { slo_p99: Some(Duration::from_nanos(1)), ..ServeConfig::default() };
+    let srv = InferenceServer::for_graph(&g, 1, 3, 4, cfg).unwrap();
+    assert_eq!(srv.workers(), 4);
+    let handles: Vec<_> = (0..REQS).map(|i| srv.submit(seeded_inputs(&g, i)).unwrap()).collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let out = h.wait().unwrap();
+        assert_eq!(bits(&out), expected[i], "request {i} differs from sequential execution");
+    }
+
+    let report = srv.shutdown();
+    assert_eq!(report.completed, REQS);
+    assert_eq!(report.failed + report.rejected, 0);
+    assert_eq!(report.per_backend.iter().map(|(_, n, _)| n).sum::<u64>(), REQS);
+    // Every int8 KWS inference takes far longer than the 1 ns SLO target.
+    assert_eq!(report.slo_miss, REQS);
+    assert!(!report.slo_met());
+    assert!(report.throughput_rps > 0.0);
+}
+
+#[test]
+fn injected_fault_mid_load_completes_every_request_via_cpu_failover() {
+    const REQS: u64 = 24;
+    let g = fdt::models::kws();
+    let proto = CpuEngine::prepare(&g, 1, 3).unwrap();
+    let expected: Vec<Vec<Vec<u32>>> =
+        (0..REQS).map(|i| bits(&proto.run_f32(&seeded_inputs(&g, i)).unwrap())).collect();
+
+    // Two workers, each fronted by a flaky "preferred" engine that
+    // answers correctly until it starts injecting faults mid-load. The
+    // chain must re-run failed batches on the CPU engine: nothing
+    // dropped, nothing answered twice, nothing answered differently.
+    //
+    // fail_every (9) exceeds max_batch (4), so a worker's first batches
+    // always succeed on its preferred engine before the fault lands
+    // mid-batch; and with 24 requests over 2 workers capped at 8 served
+    // pre-fault each, at least one worker must fault and degrade.
+    let engines = (0..2)
+        .map(|w| {
+            let flaky =
+                FlakyBackend::new(format!("preferred-{w}"), Box::new(proto.clone()), 9);
+            FailoverEngine::new(vec![
+                Box::new(flaky) as Box<dyn InferenceBackend>,
+                Box::new(proto.clone()) as Box<dyn InferenceBackend>,
+            ])
+            .unwrap()
+        })
+        .collect();
+    let cfg = ServeConfig { max_batch: 4, ..ServeConfig::default() };
+    let srv = InferenceServer::new(engines, cfg).unwrap();
+
+    let handles: Vec<_> = (0..REQS).map(|i| srv.submit(seeded_inputs(&g, i)).unwrap()).collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let out = h.wait().unwrap_or_else(|e| panic!("request {i} dropped by failover: {e}"));
+        assert_eq!(bits(&out), expected[i], "request {i} differs across failover");
+    }
+
+    let report = srv.shutdown();
+    assert_eq!(report.completed, REQS, "failover must not drop or double-complete requests");
+    assert_eq!(report.failed + report.rejected, 0);
+    // At least one worker kept serving on its preferred engine until its
+    // first injected fault, then degraded to the CPU backend.
+    let backends: Vec<&str> = report.per_backend.iter().map(|(n, _, _)| n.as_str()).collect();
+    assert!(
+        backends.iter().any(|n| n.starts_with("preferred-")),
+        "preferred engines served nothing: {backends:?}"
+    );
+    assert!(
+        backends.contains(&g.name.as_str()),
+        "CPU fallback never took over: {backends:?}"
+    );
+}
+
+/// A backend that blocks every request until the test opens its gate,
+/// counting how many requests have entered. Lets tests hold a worker
+/// mid-batch deterministically (no sleep races).
+struct GatedBackend {
+    gate: Arc<(Mutex<bool>, Condvar)>,
+    entered: Arc<AtomicUsize>,
+}
+
+impl GatedBackend {
+    fn new() -> (GatedBackend, Arc<(Mutex<bool>, Condvar)>, Arc<AtomicUsize>) {
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let entered = Arc::new(AtomicUsize::new(0));
+        (GatedBackend { gate: Arc::clone(&gate), entered: Arc::clone(&entered) }, gate, entered)
+    }
+}
+
+impl InferenceBackend for GatedBackend {
+    fn name(&self) -> &str {
+        "gated"
+    }
+
+    fn run_f32(&self, _inputs: &[Buffer]) -> FdtResult<Vec<Vec<f32>>> {
+        self.entered.fetch_add(1, Ordering::SeqCst);
+        let (open, cv) = &*self.gate;
+        let mut guard = open.lock().unwrap();
+        while !*guard {
+            guard = cv.wait(guard).unwrap();
+        }
+        Ok(vec![vec![1.0]])
+    }
+}
+
+fn open_gate(gate: &Arc<(Mutex<bool>, Condvar)>) {
+    *gate.0.lock().unwrap() = true;
+    gate.1.notify_all();
+}
+
+/// Spin (bounded) until `entered` reaches `n`.
+fn await_entered(entered: &AtomicUsize, n: usize) {
+    for _ in 0..50_000 {
+        if entered.load(Ordering::SeqCst) >= n {
+            return;
+        }
+        std::thread::sleep(Duration::from_micros(100));
+    }
+    panic!("worker never dequeued (entered {} < {n})", entered.load(Ordering::SeqCst));
+}
+
+#[test]
+fn overload_sheds_with_typed_backpressure_and_drains_accepted_requests() {
+    let (backend, gate, entered) = GatedBackend::new();
+    let engines =
+        vec![FailoverEngine::new(vec![Box::new(backend) as Box<dyn InferenceBackend>]).unwrap()];
+    let cfg = ServeConfig {
+        max_batch: 1,
+        max_wait: Duration::ZERO,
+        queue_cap: 2,
+        ..ServeConfig::default()
+    };
+    let srv = InferenceServer::new(engines, cfg).unwrap();
+
+    // First request is dequeued and held at the gate; the queue is empty
+    // again once the worker has it.
+    let mut handles = vec![srv.submit(vec![]).unwrap()];
+    await_entered(&entered, 1);
+    // Two more fill the bounded queue; the next must be shed, typed.
+    handles.push(srv.submit(vec![]).unwrap());
+    handles.push(srv.submit(vec![]).unwrap());
+    match srv.submit(vec![]) {
+        Err(FdtError::ServerOverloaded { depth, cap }) => {
+            assert_eq!((depth, cap), (2, 2));
+        }
+        other => panic!("expected ServerOverloaded, got {:?}", other.map(|_| "a handle")),
+    }
+
+    // Back-pressure sheds at the door only: everything accepted is
+    // still answered once the backend unblocks.
+    open_gate(&gate);
+    for h in handles {
+        assert_eq!(h.wait().unwrap(), vec![vec![1.0]]);
+    }
+    let report = srv.shutdown();
+    assert_eq!(report.completed, 3);
+    assert_eq!(report.rejected, 1);
+    assert_eq!(report.failed, 0);
+}
+
+#[test]
+fn shutdown_drains_backlog_and_batches_it() {
+    let (backend, gate, entered) = GatedBackend::new();
+    let engines =
+        vec![FailoverEngine::new(vec![Box::new(backend) as Box<dyn InferenceBackend>]).unwrap()];
+    let cfg = ServeConfig { max_batch: 4, max_wait: Duration::ZERO, ..ServeConfig::default() };
+    let srv = InferenceServer::new(engines, cfg).unwrap();
+
+    // Hold the worker on request 0, then build a 3-deep backlog.
+    let mut handles = vec![srv.submit(vec![]).unwrap()];
+    await_entered(&entered, 1);
+    for _ in 0..3 {
+        handles.push(srv.submit(vec![]).unwrap());
+    }
+    open_gate(&gate);
+
+    // Graceful shutdown: the backlog is drained, not dropped — and
+    // because it was already queued, it drains as one micro-batch.
+    let report = srv.shutdown();
+    for h in handles {
+        assert_eq!(h.wait().unwrap(), vec![vec![1.0]]);
+    }
+    assert_eq!(report.completed, 4);
+    assert_eq!(report.batch_hist, vec![(1, 1), (3, 1)]);
+    assert_eq!(report.queue_depth_max, 3);
+    assert!((report.mean_batch() - 2.0).abs() < 1e-12);
+}
