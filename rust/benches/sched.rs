@@ -38,7 +38,7 @@ fn main() {
         // Heuristic comparison: hill-valley only.
         let heur = sched::schedule(
             &m,
-            SchedOptions { bnb_node_budget: 0, wall_ms: None, use_sp: false },
+            SchedOptions { bnb_node_budget: 0, wall_ms: None, use_sp: false, search_threads: 1 },
         );
         println!(
             "{:<10} {:>7} {:>12} {:>12} {:>10} {:>14.3?} {:>14}",
@@ -61,6 +61,48 @@ fn main() {
                 .num("median_s", t.median.as_secs_f64()),
         ));
     }
+    // Parallel exact-search scaling: the same full B&B (SP tier disabled
+    // so the search tree is actually walked) at 1 vs 4 workers on the
+    // hardest zoo instance. On a single-core runner the speedup hovers
+    // around 1.0x — decomposition overhead included — and grows with
+    // physical cores; the `speedup` key is deliberately unsuffixed so
+    // bench-trend treats it as informational rather than directional.
+    println!("\nparallel B&B scaling (SWIFTNET, SP tier disabled):");
+    {
+        let g = models::by_name("SWIFTNET").unwrap();
+        let grouping = fuse(&g);
+        let m = MemModel::new(&g, &grouping);
+        let bnb_opts = |threads: usize| SchedOptions {
+            bnb_node_budget: 5_000_000,
+            wall_ms: Some(30_000),
+            use_sp: false,
+            search_threads: threads,
+        };
+        let s1 = sched::schedule(&m, bnb_opts(1));
+        let s4 = sched::schedule(&m, bnb_opts(4));
+        if !s1.degraded && !s4.degraded {
+            assert_eq!(s1.peak, s4.peak, "parallel search must be bit-identical");
+            assert_eq!(s1.order, s4.order, "parallel search must be bit-identical");
+        }
+        let t1 = bench(0, 3, Duration::ZERO, || sched::schedule(&m, bnb_opts(1)).peak);
+        let t4 = bench(0, 3, Duration::ZERO, || sched::schedule(&m, bnb_opts(4)).peak);
+        let speedup = t1.median.as_secs_f64() / t4.median.as_secs_f64().max(1e-9);
+        println!(
+            "  1 thread {:?}   4 threads {:?}   speedup {speedup:.2}x (cores: {})",
+            t1.median,
+            t4.median,
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        );
+        records.push((
+            "par_scaling_swiftnet".to_string(),
+            JsonRecord::new()
+                .int("peak", s1.peak as u64)
+                .num("seq_median_s", t1.median.as_secs_f64())
+                .num("par4_median_s", t4.median.as_secs_f64())
+                .num("speedup", speedup),
+        ));
+    }
+
     match write_json("BENCH_sched.json", &records) {
         Ok(()) => println!("wrote BENCH_sched.json"),
         Err(e) => eprintln!("could not write BENCH_sched.json: {e}"),

@@ -7,7 +7,15 @@
 //! (flagged as degraded) instead of running unboundedly. The coordinator
 //! then falls back B&B → first-fit/heuristic → untiled and records the
 //! degradation in the flow result.
+//!
+//! [`SharedBudget`] extends the same contract to multi-threaded search:
+//! node counts aggregate across workers through one shared atomic, a
+//! tripped limit raises a sticky stop flag every worker observes within
+//! one polling interval (256 expansions), and `exhausted()` reports
+//! whether a limit *actually* bound the search — the flow's `degraded`
+//! flags are set iff it did.
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Instant;
 
 /// Resource limits for one solver invocation.
@@ -65,6 +73,91 @@ impl Deadline {
     }
 }
 
+/// A started [`Budget`] shared by every worker of one parallel search.
+///
+/// Workers call [`expand`](SharedBudget::expand) once per search-tree
+/// node; the count is aggregated in a single atomic so the node limit
+/// applies to the search as a whole, not per worker. Either limit
+/// tripping raises a sticky stop flag — subsequent `expand()` calls on
+/// *any* worker return `false` immediately, so the whole search unwinds
+/// within one polling interval. The deadline is polled every 256
+/// aggregate expansions (and on the very first, so a zero wall budget
+/// trips before any real work).
+#[derive(Debug)]
+pub struct SharedBudget {
+    max_nodes: u64,
+    expanded: AtomicU64,
+    deadline: Deadline,
+    stop: AtomicBool,
+}
+
+impl SharedBudget {
+    /// Start `budget`'s wall-clock and share it between workers.
+    pub fn start(budget: Budget) -> SharedBudget {
+        SharedBudget {
+            max_nodes: budget.max_nodes,
+            expanded: AtomicU64::new(0),
+            deadline: budget.start(),
+            stop: AtomicBool::new(false),
+        }
+    }
+
+    /// Count one node expansion. Returns `false` when the search must
+    /// stop (node budget exceeded or wall-clock expired) — sticky: once
+    /// any worker trips a limit, every caller sees `false`.
+    #[inline]
+    pub fn expand(&self) -> bool {
+        if self.stop.load(Ordering::Relaxed) {
+            return false;
+        }
+        let n = self.expanded.fetch_add(1, Ordering::Relaxed) + 1;
+        if n > self.max_nodes || (n & 0xFF == 1 && self.deadline.expired()) {
+            self.stop.store(true, Ordering::Relaxed);
+            return false;
+        }
+        true
+    }
+
+    /// Sticky stop flag: a limit tripped somewhere.
+    #[inline]
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+
+    /// True iff a limit actually bound the search — the contract behind
+    /// every `degraded` flag downstream.
+    pub fn exhausted(&self) -> bool {
+        self.stopped()
+    }
+
+    /// Aggregate node expansions so far (across all workers).
+    pub fn expanded(&self) -> u64 {
+        self.expanded.load(Ordering::Relaxed)
+    }
+}
+
+/// Resolve the worker count for parallel exact search, once per flow:
+/// an explicit `requested > 0` wins, then `FDT_SEARCH_THREADS`, then
+/// [`std::thread::available_parallelism`] (the same resolution pattern
+/// as the executor's `FDT_EXEC_THREADS`). Always at least 1.
+///
+/// Unlike the executor the env var is re-read on every call rather than
+/// cached in a `OnceLock`: search-thread resolution happens once per
+/// flow anyway, and tests drive both values through one process.
+pub fn search_threads(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    if let Ok(v) = std::env::var("FDT_SEARCH_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,5 +173,58 @@ mod tests {
     fn zero_wall_expires_immediately() {
         let d = Budget { max_nodes: u64::MAX, wall_ms: Some(0) }.start();
         assert!(d.expired());
+    }
+
+    #[test]
+    fn shared_budget_counts_nodes_exactly() {
+        let b = SharedBudget::start(Budget::nodes(3));
+        assert!(b.expand());
+        assert!(b.expand());
+        assert!(b.expand());
+        assert!(!b.expand(), "fourth expansion exceeds max_nodes = 3");
+        assert!(b.stopped() && b.exhausted());
+        // Sticky: still stopped, and the count no longer grows.
+        let before = b.expanded();
+        assert!(!b.expand());
+        assert_eq!(b.expanded(), before);
+    }
+
+    #[test]
+    fn shared_budget_zero_wall_stops_on_first_expand() {
+        let b = SharedBudget::start(Budget { max_nodes: u64::MAX, wall_ms: Some(0) });
+        assert!(!b.expand());
+        assert!(b.exhausted());
+    }
+
+    #[test]
+    fn shared_budget_completion_is_not_exhaustion() {
+        let b = SharedBudget::start(Budget::UNBOUNDED);
+        for _ in 0..1000 {
+            assert!(b.expand());
+        }
+        assert!(!b.exhausted(), "a search that finished within budget is not degraded");
+        assert_eq!(b.expanded(), 1000);
+    }
+
+    #[test]
+    fn shared_budget_aggregates_across_threads() {
+        let b = SharedBudget::start(Budget::nodes(1000));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| while b.expand() {});
+            }
+        });
+        // All workers together stopped within one polling interval of the
+        // cap: each racing worker overshoots by at most its own in-flight
+        // increment before observing the sticky stop.
+        assert!(b.exhausted());
+        let n = b.expanded();
+        assert!((1001..=1004).contains(&n), "aggregate count {n} not within one increment/worker");
+    }
+
+    #[test]
+    fn search_threads_resolution_order() {
+        assert_eq!(search_threads(3), 3, "explicit request wins");
+        assert!(search_threads(0) >= 1, "auto resolution is always at least 1");
     }
 }

@@ -1,0 +1,367 @@
+//! Persistent cross-run screening memo.
+//!
+//! The coordinator's fingerprint memo (post-transform [`Graph::fingerprint`]
+//! → [`Screen`](super::Screen)) is solved once per flow run; this module
+//! persists the cutoff-independent part of it to disk so repeated
+//! explorations of the same model family are near-instant across
+//! processes.
+//!
+//! * **Location** — `FDT_MEMO_DIR`, else `$XDG_CACHE_HOME/fdt`, else
+//!   `~/.cache/fdt` (see [`default_dir`]). The library never touches the
+//!   cache unless [`FlowOptions::memo_dir`](super::FlowOptions::memo_dir)
+//!   is set; the `fdt optimize` CLI enables it by default (`--no-memo`
+//!   opts out).
+//! * **Keying** — one versioned JSON file per
+//!   `(graph fingerprint, screening-options hash)` pair; the body repeats
+//!   both keys and the loader verifies them, so a renamed or stale file
+//!   can never leak foreign entries into a run.
+//! * **What persists** — only `Invalid` and `Ram` screens: both are
+//!   determined by the tiled graph + screening options alone.
+//!   `AboveIncumbent` is relative to the run's incumbent cutoff and is
+//!   never written.
+//! * **Failure policy** — a corrupt, truncated, wrong-version or
+//!   mismatched-key file degrades to a cold run with a typed
+//!   [`FdtError::MemoCache`] warning recorded in the flow's
+//!   degradations; so does an unwritable cache dir at save time. Never a
+//!   panic, never a wrong plan: entries only seed the in-process memo,
+//!   and every plan that leaves the flow still passes the `verify` gate.
+
+use super::Screen;
+use crate::error::FdtError;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Format version; bump whenever screening semantics change so stale
+/// caches are ignored (with a warning) instead of misinterpreted.
+pub const MEMO_VERSION: u64 = 1;
+
+/// What the persistent memo did for one flow run (reported in
+/// [`FlowResult::memo`](super::FlowResult::memo) and printed by the CLI).
+#[derive(Debug, Clone)]
+pub struct MemoStats {
+    /// The cache file backing this run.
+    pub path: PathBuf,
+    /// Entries loaded from a previous run (0 = cold).
+    pub loaded: usize,
+    /// Screening memo hits during this run (persistent + in-run).
+    pub hits: u64,
+    /// Entries written back at the end of the run.
+    pub stored: usize,
+}
+
+/// Resolve the default cache directory: `FDT_MEMO_DIR`, else
+/// `$XDG_CACHE_HOME/fdt`, else `~/.cache/fdt`. `None` when no home is
+/// resolvable (the CLI then runs memo-less).
+pub fn default_dir() -> Option<PathBuf> {
+    if let Ok(d) = std::env::var("FDT_MEMO_DIR") {
+        if !d.is_empty() {
+            return Some(PathBuf::from(d));
+        }
+    }
+    if let Ok(d) = std::env::var("XDG_CACHE_HOME") {
+        if !d.is_empty() {
+            return Some(Path::new(&d).join("fdt"));
+        }
+    }
+    std::env::var("HOME")
+        .ok()
+        .filter(|h| !h.is_empty())
+        .map(|h| Path::new(&h).join(".cache").join("fdt"))
+}
+
+/// One run's handle on its cache file.
+pub(super) struct Store {
+    path: PathBuf,
+    graph_fp: u64,
+    opts_hash: u64,
+}
+
+impl Store {
+    pub(super) fn new(dir: &Path, graph_fp: u64, opts_hash: u64) -> Store {
+        let file = format!("fdt-memo-v{MEMO_VERSION}-{graph_fp:016x}-{opts_hash:016x}.json");
+        Store { path: dir.join(file), graph_fp, opts_hash }
+    }
+
+    pub(super) fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Load previously persisted entries. `Ok(vec![])` on a missing file
+    /// (a plain cold start); `Err` on anything unreadable or inconsistent
+    /// — the caller records the warning and proceeds cold.
+    pub(super) fn load(&self) -> Result<Vec<(u64, Screen)>, FdtError> {
+        let text = match std::fs::read_to_string(&self.path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => return Err(self.err(format!("unreadable: {e}"))),
+        };
+        let doc = parse(&text).map_err(|r| self.err(format!("corrupt JSON ({r})")))?;
+        if doc.version != MEMO_VERSION {
+            return Err(self.err(format!(
+                "version {} (this build writes {MEMO_VERSION}); stale cache ignored",
+                doc.version
+            )));
+        }
+        if doc.graph_fp != self.graph_fp || doc.opts_hash != self.opts_hash {
+            return Err(self.err(format!(
+                "fingerprint mismatch (file {:016x}/{:016x}, expected {:016x}/{:016x})",
+                doc.graph_fp, doc.opts_hash, self.graph_fp, self.opts_hash
+            )));
+        }
+        Ok(doc
+            .entries
+            .into_iter()
+            .map(|(fp, v)| (fp, if v < 0 { Screen::Invalid } else { Screen::Ram(v as usize) }))
+            .collect())
+    }
+
+    /// Persist `entries` atomically (temp file + rename). Failures are
+    /// typed warnings — a read-only cache dir must not fail the flow.
+    pub(super) fn save(&self, entries: &[(u64, Screen)]) -> Result<(), FdtError> {
+        let Some(dir) = self.path.parent() else {
+            return Err(self.err("no parent directory".to_string()));
+        };
+        std::fs::create_dir_all(dir).map_err(|e| self.err(format!("cannot create dir: {e}")))?;
+        let mut body = String::with_capacity(64 + entries.len() * 24);
+        body.push_str(&format!(
+            "{{\"version\":{MEMO_VERSION},\"graph_fp\":\"{:016x}\",\"opts_hash\":\"{:016x}\",\"entries\":[",
+            self.graph_fp, self.opts_hash
+        ));
+        let mut emitted = 0usize;
+        for (fp, s) in entries {
+            let v: i64 = match s {
+                Screen::Invalid => -1,
+                Screen::Ram(r) => i64::try_from(*r).unwrap_or(i64::MAX),
+                Screen::AboveIncumbent => continue, // cutoff-relative; never persisted
+            };
+            if emitted > 0 {
+                body.push(',');
+            }
+            emitted += 1;
+            body.push_str(&format!("[\"{fp:016x}\",{v}]"));
+        }
+        body.push_str("]}\n");
+        let tmp = self.path.with_extension("json.tmp");
+        let write = || -> std::io::Result<()> {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(body.as_bytes())?;
+            f.sync_all()?;
+            std::fs::rename(&tmp, &self.path)
+        };
+        write().map_err(|e| {
+            let _ = std::fs::remove_file(&tmp);
+            self.err(format!("cannot write: {e}"))
+        })
+    }
+
+    fn err(&self, reason: String) -> FdtError {
+        FdtError::MemoCache { path: self.path.display().to_string(), reason }
+    }
+}
+
+struct Doc {
+    version: u64,
+    graph_fp: u64,
+    opts_hash: u64,
+    entries: Vec<(u64, i64)>,
+}
+
+/// Strict recursive-descent parser for exactly the shape [`Store::save`]
+/// writes (`serde` is not in the offline vendor set). Anything else —
+/// truncation, garbage, type confusion — is a parse error, which the
+/// loader surfaces as a typed corrupt-cache warning.
+fn parse(text: &str) -> Result<Doc, String> {
+    let mut p = Parser { b: text.as_bytes(), i: 0 };
+    p.ws();
+    p.expect(b'{')?;
+    let mut version = None;
+    let mut graph_fp = None;
+    let mut opts_hash = None;
+    let mut entries = None;
+    loop {
+        p.ws();
+        let key = p.string()?;
+        p.ws();
+        p.expect(b':')?;
+        p.ws();
+        match key.as_str() {
+            "version" => version = Some(p.integer()? as u64),
+            "graph_fp" => graph_fp = Some(p.hex_string()?),
+            "opts_hash" => opts_hash = Some(p.hex_string()?),
+            "entries" => {
+                let mut es = Vec::new();
+                p.expect(b'[')?;
+                p.ws();
+                if p.peek() == Some(b']') {
+                    p.i += 1;
+                } else {
+                    loop {
+                        p.ws();
+                        p.expect(b'[')?;
+                        p.ws();
+                        let fp = p.hex_string()?;
+                        p.ws();
+                        p.expect(b',')?;
+                        p.ws();
+                        let v = p.integer()?;
+                        p.ws();
+                        p.expect(b']')?;
+                        es.push((fp, v));
+                        p.ws();
+                        match p.next() {
+                            Some(b',') => continue,
+                            Some(b']') => break,
+                            _ => return Err("expected ',' or ']' in entries".to_string()),
+                        }
+                    }
+                }
+                entries = Some(es);
+            }
+            other => return Err(format!("unexpected key `{other}`")),
+        }
+        p.ws();
+        match p.next() {
+            Some(b',') => continue,
+            Some(b'}') => break,
+            _ => return Err("expected ',' or '}'".to_string()),
+        }
+    }
+    Ok(Doc {
+        version: version.ok_or("missing version")?,
+        graph_fp: graph_fp.ok_or("missing graph_fp")?,
+        opts_hash: opts_hash.ok_or("missing opts_hash")?,
+        entries: entries.ok_or("missing entries")?,
+    })
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+    fn next(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if c.is_some() {
+            self.i += 1;
+        }
+        c
+    }
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        match self.next() {
+            Some(got) if got == c => Ok(()),
+            got => Err(format!("expected `{}`, got {:?}", c as char, got.map(|g| g as char))),
+        }
+    }
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c == b'"' {
+                let s = std::str::from_utf8(&self.b[start..self.i])
+                    .map_err(|_| "non-utf8 string".to_string())?
+                    .to_string();
+                self.i += 1;
+                return Ok(s);
+            }
+            if c == b'\\' {
+                return Err("escapes unsupported".to_string());
+            }
+            self.i += 1;
+        }
+        Err("unterminated string".to_string())
+    }
+    fn hex_string(&mut self) -> Result<u64, String> {
+        let s = self.string()?;
+        u64::from_str_radix(&s, 16).map_err(|e| format!("bad hex `{s}`: {e}"))
+    }
+    fn integer(&mut self) -> Result<i64, String> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while self.peek().is_some_and(|c| c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        if self.i == start {
+            return Err("expected integer".to_string());
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| "non-utf8 number".to_string())?
+            .parse::<i64>()
+            .map_err(|e| format!("bad integer: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        // CARGO_TARGET_TMPDIR only exists for integration tests/benches;
+        // unit tests get a pid-scoped corner of the system temp dir.
+        let d = std::env::temp_dir().join(format!("fdt-memo-unit-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn round_trips_entries() {
+        let dir = tmpdir("roundtrip");
+        let store = Store::new(&dir, 0xabc, 0xdef);
+        assert!(store.load().unwrap().is_empty(), "missing file is a silent cold start");
+        let entries =
+            vec![(1u64, Screen::Invalid), (2, Screen::Ram(4096)), (3, Screen::AboveIncumbent)];
+        store.save(&entries).unwrap();
+        let back = store.load().unwrap();
+        // AboveIncumbent is cutoff-relative and dropped on write.
+        assert_eq!(back.len(), 2);
+        assert!(back.contains(&(1, Screen::Invalid)));
+        assert!(back.contains(&(2, Screen::Ram(4096))));
+    }
+
+    #[test]
+    fn wrong_keys_and_corruption_are_typed_errors() {
+        let dir = tmpdir("corrupt");
+        let store = Store::new(&dir, 7, 9);
+        store.save(&[(1, Screen::Ram(10))]).unwrap();
+        // Mismatched expected keys (same file on disk, different graph).
+        let other = Store { path: store.path.clone(), graph_fp: 8, opts_hash: 9 };
+        let e = other.load().unwrap_err();
+        assert!(matches!(&e, FdtError::MemoCache { reason, .. } if reason.contains("mismatch")), "{e}");
+        // Garbage body.
+        std::fs::write(&store.path, "{\"version\": nope").unwrap();
+        let e = store.load().unwrap_err();
+        assert!(matches!(&e, FdtError::MemoCache { reason, .. } if reason.contains("corrupt")), "{e}");
+        // Wrong version.
+        std::fs::write(
+            &store.path,
+            "{\"version\":999,\"graph_fp\":\"0000000000000007\",\"opts_hash\":\"0000000000000009\",\"entries\":[]}",
+        )
+        .unwrap();
+        let e = store.load().unwrap_err();
+        assert!(matches!(&e, FdtError::MemoCache { reason, .. } if reason.contains("version")), "{e}");
+    }
+
+    #[test]
+    fn default_dir_honours_env_override() {
+        // Can't mutate the process env safely under the parallel test
+        // harness; just assert the fallback chain yields *some* directory
+        // on a machine with HOME set, and that FDT_MEMO_DIR (when set by
+        // the harness) wins.
+        if let Ok(d) = std::env::var("FDT_MEMO_DIR") {
+            assert_eq!(default_dir(), Some(PathBuf::from(d)));
+        } else if std::env::var("HOME").is_ok_and(|h| !h.is_empty()) {
+            assert!(default_dir().is_some());
+        }
+    }
+}

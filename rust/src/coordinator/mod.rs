@@ -29,10 +29,35 @@
 //! * **Persistent screening pool** — one set of worker threads serves
 //!   the whole run through a shared work queue (no per-candidate
 //!   `thread::scope` spawn/join churn).
+//! * **Exact screening rank** ([`FlowOptions::exact_screen_rank`], the
+//!   default) — candidates are ranked by their screened *schedule peak*
+//!   instead of a first-fit layout total, and `AboveIncumbent` is only
+//!   produced when provable (the pre-search lower bound reaches the
+//!   incumbent, or the screening search *completed* and its exact peak
+//!   does — any full-fidelity arena is `>=` the optimal schedule peak).
+//!   This skips the screening conflict/first-fit pass entirely and
+//!   removes the ambiguous-candidate exact re-screen the first-fit rank
+//!   needs. Final results stay protected by the accept-only-if-improved
+//!   full evaluation; `exact_screen_rank: false` restores the legacy
+//!   first-fit rank bit-for-bit.
+//! * **Parallel exact search** — the full-fidelity schedule/layout B&Bs
+//!   fan out over [`FlowOptions::search_threads`] workers (resolved once
+//!   at flow start from the option or `FDT_SEARCH_THREADS`, like
+//!   `exec_threads`); completed searches are bit-identical across thread
+//!   counts (see the `bnb` module docs). Screening solves stay pinned to
+//!   one thread — the screening pool is already candidate-parallel.
+//! * **Persistent cross-run memo** ([`FlowOptions::memo_dir`], see
+//!   [`memo`]) — the cutoff-independent screening entries are persisted
+//!   per `(graph fingerprint, screening-options hash)` and re-seeded on
+//!   the next run of the same model; corrupt or stale cache files degrade
+//!   to a cold run with a typed warning.
 //!
-//! All four optimizations are result-preserving; [`FlowOptions::legacy`]
-//! disables them so benches can measure the speedup and tests can assert
-//! byte-identical [`Evaluation`]s.
+//! The first four optimizations are result-preserving;
+//! [`FlowOptions::legacy`] disables them (and the exact rank) so benches
+//! can measure the speedup and tests can assert byte-identical
+//! [`Evaluation`]s against the first-fit-ranked configuration.
+
+pub mod memo;
 
 use crate::analysis::{graph_macs, MemModel};
 use crate::error::{FdtError, FdtResult};
@@ -44,6 +69,7 @@ use crate::tiling::discovery::{discover, DiscoveryOptions};
 use crate::tiling::PathConfig;
 use crate::transform::apply_tiling;
 use crate::util::FnvHashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
 /// Measured cost of a graph under the full deployment flow.
@@ -87,6 +113,22 @@ pub struct FlowOptions {
     /// Bound screening by the incumbent best RAM (early B&B abandon +
     /// layout skip).
     pub incumbent_cutoff: bool,
+    /// Worker threads for the full-fidelity exact searches (schedule and
+    /// layout B&B). `0` = auto: `FDT_SEARCH_THREADS` if set, else the
+    /// machine's available parallelism. Resolved once at flow start and
+    /// written into `sched`/`layout`; completed searches are
+    /// bit-identical across thread counts.
+    pub search_threads: usize,
+    /// Rank screened candidates by their exact schedule peak instead of
+    /// a first-fit layout total (see module docs). Default on;
+    /// [`FlowOptions::legacy`] turns it off.
+    pub exact_screen_rank: bool,
+    /// Directory for the persistent cross-run screening memo (see
+    /// [`memo`]). `None` (the library default) keeps the memo
+    /// process-local; the `fdt optimize` CLI fills this in from
+    /// `FDT_MEMO_DIR` / `~/.cache/fdt` unless `--no-memo`. Only
+    /// consulted when `memoize` is on.
+    pub memo_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for FlowOptions {
@@ -95,13 +137,21 @@ impl Default for FlowOptions {
             sched: SchedOptions::default(),
             layout: LayoutOptions::default(),
             discovery: DiscoveryOptions::default(),
-            screening_sched: SchedOptions { bnb_node_budget: 50_000, wall_ms: None, use_sp: true },
+            screening_sched: SchedOptions {
+                bnb_node_budget: 50_000,
+                wall_ms: None,
+                use_sp: true,
+                search_threads: 1,
+            },
             max_iterations: 8,
             max_candidates: 6,
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             max_mac_overhead_pct: None,
             memoize: true,
             incumbent_cutoff: true,
+            search_threads: 0,
+            exact_screen_rank: true,
+            memo_dir: None,
         }
     }
 }
@@ -109,14 +159,19 @@ impl Default for FlowOptions {
 impl FlowOptions {
     /// Pre-overhaul behaviour: exhaustive discovery (no dedup/dominance
     /// pruning), no fingerprint memo, no incumbent-bounded screening, no
-    /// plan reuse. The optimizations are result-preserving, so this
-    /// produces identical [`Evaluation`]s — it exists so benches can
-    /// measure the speedup and tests can assert the equivalence.
+    /// plan reuse, first-fit screening rank. The result-preserving
+    /// optimizations produce identical [`Evaluation`]s against a
+    /// first-fit-ranked default (`legacy()` vs `default()` with
+    /// `exact_screen_rank: false`) — benches measure the speedup and
+    /// tests assert the equivalence there. The exact screening rank is
+    /// *not* result-preserving by construction (it can pick a different
+    /// per-candidate winner), so it is off here too.
     pub fn legacy() -> FlowOptions {
         FlowOptions {
             discovery: DiscoveryOptions { dedup: false, ..DiscoveryOptions::default() },
             memoize: false,
             incumbent_cutoff: false,
+            exact_screen_rank: false,
             ..FlowOptions::default()
         }
     }
@@ -144,8 +199,14 @@ pub struct FlowResult {
     /// Human-readable notes recorded whenever the flow gracefully
     /// degraded instead of failing: solver budgets that ran out (best
     /// incumbent kept), screening workers that panicked on a candidate
-    /// (candidate skipped). Empty on a fully clean run.
+    /// (candidate skipped), memo-cache files that were corrupt or
+    /// unwritable (cold run). Empty on a fully clean run.
     pub degradations: Vec<String>,
+    /// Resolved exact-search worker thread count actually used.
+    pub search_threads: usize,
+    /// Persistent cross-run memo activity, when a cache dir was
+    /// configured (see [`FlowOptions::memo_dir`]).
+    pub memo: Option<memo::MemoStats>,
 }
 
 impl FlowResult {
@@ -239,12 +300,16 @@ pub fn critical_buffers(m: &MemModel, schedule: &[usize], l: &Layout) -> Vec<Ten
 enum Screen {
     /// Transform invalid for this graph, or MAC budget exceeded.
     Invalid,
-    /// Provably unable to beat the incumbent: the schedule peak lower
-    /// bound — or the computed screening peak — already reaches it, and
-    /// the screened first-fit total can only be larger. The exact value
-    /// was not computed.
+    /// Provably unable to beat the incumbent. Under the exact screening
+    /// rank this is emitted only on proof: the pre-search peak lower
+    /// bound reaches the incumbent, or the screening search *completed*
+    /// and its exact peak does (every full-fidelity arena is `>=` the
+    /// optimal schedule peak). Under the first-fit rank it is the legacy
+    /// heuristic shortcut (computed screening peak reaches the
+    /// incumbent). Cutoff-relative, so never persisted across runs.
     AboveIncumbent,
-    /// Legacy-exact screened arena upper bound (first-fit total).
+    /// The candidate's screening rank: exact schedule peak
+    /// (`exact_screen_rank`) or first-fit arena total (legacy rank).
     Ram(usize),
 }
 
@@ -262,6 +327,9 @@ struct ScreenCtx {
     /// threshold); configurations exceeding it are rejected (§5.2).
     mac_cap: Option<u64>,
     memo: Arc<Mutex<ScreenMemo>>,
+    /// Screening memo hits this run (persistent-seeded + in-run), for
+    /// [`memo::MemoStats`].
+    memo_hits: Arc<AtomicU64>,
 }
 
 /// Evaluate one candidate cheaply. `cutoff` is the incumbent best RAM
@@ -282,8 +350,14 @@ fn screen_one(g: &Graph, cfg: &PathConfig, ctx: &ScreenCtx, cutoff: usize, exact
     let fp = if ctx.opts.memoize {
         let fp = tiled.fingerprint();
         match ctx.memo.lock().unwrap_or_else(|p| p.into_inner()).get(&fp).copied() {
-            Some(hit @ (Screen::Invalid | Screen::Ram(_))) => return hit,
-            Some(Screen::AboveIncumbent) if !exact => return Screen::AboveIncumbent,
+            Some(hit @ (Screen::Invalid | Screen::Ram(_))) => {
+                ctx.memo_hits.fetch_add(1, Ordering::Relaxed);
+                return hit;
+            }
+            Some(Screen::AboveIncumbent) if !exact => {
+                ctx.memo_hits.fetch_add(1, Ordering::Relaxed);
+                return Screen::AboveIncumbent;
+            }
             _ => {}
         }
         Some(fp)
@@ -301,9 +375,25 @@ fn screen_one(g: &Graph, cfg: &PathConfig, ctx: &ScreenCtx, cutoff: usize, exact
         return Screen::AboveIncumbent;
     }
     let s = sched::schedule(&m, ctx.opts.screening_sched);
-    // The screened first-fit total can never undercut the schedule peak,
-    // so a peak at/above the incumbent loses outright — skip the layout.
-    let result = if !exact && s.peak >= cutoff {
+    let result = if ctx.opts.exact_screen_rank {
+        // Exact rank: the screened schedule peak is the candidate's score
+        // — no conflicts/first-fit pass at all. `AboveIncumbent` only on
+        // proof: a *completed* search's peak is the true optimum, and any
+        // full-fidelity arena is >= its own schedule peak >= that optimum
+        // — so `s.optimal && s.peak >= cutoff` means the candidate
+        // provably cannot improve the incumbent. A budget-truncated
+        // screen (`!s.optimal`) keeps its `Ram` rank even at/above the
+        // cutoff: its true optimum may be lower, and the winner's
+        // accept-only-if-improved full evaluation protects the result.
+        if !exact && s.optimal && s.peak >= cutoff {
+            Screen::AboveIncumbent
+        } else {
+            Screen::Ram(s.peak)
+        }
+    } else if !exact && s.peak >= cutoff {
+        // Legacy rank: the screened first-fit total can never undercut
+        // the schedule peak, so a peak at/above the incumbent loses
+        // outright — skip the layout.
         Screen::AboveIncumbent
     } else {
         // Screening uses the first-fit layout (fast); the exact planner
@@ -456,12 +546,18 @@ fn best_ram(results: &[Screen]) -> Option<(usize, usize)> {
 
 /// Screen a batch of configs; returns `(best_ram_and_index, tested)`.
 ///
-/// Result-identical to the pre-overhaul flow: `AboveIncumbent` configs
-/// have a legacy screened value `>= cutoff`, so they can only influence
-/// the argmin when *no* config screens below the incumbent. In that
-/// ambiguous case every config is re-screened exactly (memo hits make
-/// the already-valued ones free) so the winner the legacy flow would
-/// have full-evaluated is reproduced bit-for-bit.
+/// Under the first-fit rank this is result-identical to the pre-overhaul
+/// flow: `AboveIncumbent` configs have a legacy screened value
+/// `>= cutoff`, so they can only influence the argmin when *no* config
+/// screens below the incumbent. In that ambiguous case every config is
+/// re-screened exactly (memo hits make the already-valued ones free) so
+/// the winner the legacy flow would have full-evaluated is reproduced
+/// bit-for-bit.
+///
+/// Under the exact screening rank there is no ambiguity to resolve:
+/// every `AboveIncumbent` is a *proof* the config cannot beat the
+/// incumbent, so when nothing screens below the cutoff the whole batch
+/// is provably skippable and the fallback never runs.
 fn screen_configs(
     g: &Arc<Graph>,
     configs: &Arc<Vec<PathConfig>>,
@@ -501,7 +597,8 @@ fn screen_configs(
     let results = run(false, degradations);
     let tested = results.len();
     let mut best = best_ram(&results);
-    let ambiguous = !best.is_some_and(|(ram, _)| ram < cutoff)
+    let ambiguous = !ctx.opts.exact_screen_rank
+        && !best.is_some_and(|(ram, _)| ram < cutoff)
         && results.iter().any(|r| matches!(r, Screen::AboveIncumbent));
     if ambiguous {
         best = best_ram(&run(true, degradations));
@@ -582,8 +679,41 @@ pub fn try_optimize(g: &Graph, opts: &FlowOptions) -> FdtResult<FlowResult> {
     )
 }
 
+/// Hash of every option that determines a screened value, keying the
+/// persistent memo file. Thread counts are deliberately excluded:
+/// completed searches are value-identical across thread counts and
+/// screening is pinned to one search thread anyway. `exact_screen_rank`
+/// *is* included — it changes what `Ram` means (exact schedule peak vs
+/// first-fit total).
+fn screen_opts_hash(opts: &FlowOptions, mac_cap: Option<u64>) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = crate::util::Fnv::default();
+    opts.screening_sched.bnb_node_budget.hash(&mut h);
+    opts.screening_sched.wall_ms.hash(&mut h);
+    opts.screening_sched.use_sp.hash(&mut h);
+    opts.exact_screen_rank.hash(&mut h);
+    mac_cap.hash(&mut h);
+    h.finish()
+}
+
 fn optimize_inner(g: &Graph, opts: &FlowOptions) -> FlowResult {
     let t0 = std::time::Instant::now();
+    // Resolve the exact-search thread count once for the whole run (same
+    // pattern as exec threads: option wins, else FDT_SEARCH_THREADS, else
+    // available parallelism) and pin it into the full-fidelity solver
+    // options. Screening keeps one search thread per solve — the
+    // screening pool is already candidate-parallel, and nesting the two
+    // would oversubscribe.
+    let resolved = {
+        let mut o = opts.clone();
+        let st = crate::budget::search_threads(o.search_threads);
+        o.search_threads = st;
+        o.sched.search_threads = st;
+        o.layout.search_threads = st;
+        o.screening_sched.search_threads = 1;
+        o
+    };
+    let opts = &resolved;
     let mut layout_memo = layout::Memo::default();
     let mut degradations: Vec<String> = Vec::new();
     let (initial, grouping0, s0, l0) = evaluate_planned(g, opts, &mut layout_memo);
@@ -604,7 +734,31 @@ fn optimize_inner(g: &Graph, opts: &FlowOptions) -> FlowResult {
         opts: Arc::new(opts.clone()),
         mac_cap,
         memo: Arc::new(Mutex::new(ScreenMemo::default())),
+        memo_hits: Arc::new(AtomicU64::new(0)),
     };
+    // Seed the screening memo from the persistent cross-run cache, when
+    // configured. Any load failure (corrupt, stale, unreadable) is a
+    // typed warning and a cold start — never a panic or a wrong plan.
+    let store = if opts.memoize {
+        opts.memo_dir
+            .as_ref()
+            .map(|d| memo::Store::new(d, g.fingerprint(), screen_opts_hash(opts, mac_cap)))
+    } else {
+        None
+    };
+    let mut memo_loaded = 0usize;
+    if let Some(store) = &store {
+        match store.load() {
+            Ok(entries) => {
+                memo_loaded = entries.len();
+                let mut m = ctx.memo.lock().unwrap_or_else(|p| p.into_inner());
+                for (fp, s) in entries {
+                    m.insert(fp, s);
+                }
+            }
+            Err(e) => degradations.push(e.to_string()),
+        }
+    }
     let mut pool: Option<ScreenPool> = None;
     let mut current: Arc<Graph> = Arc::new(g.clone());
     let mut current_eval = initial.clone();
@@ -674,6 +828,30 @@ fn optimize_inner(g: &Graph, opts: &FlowOptions) -> FlowResult {
         break; // no candidate improved: flow terminates
     }
 
+    // Persist the cutoff-independent screening entries for the next run
+    // of this model family. `AboveIncumbent` is relative to this run's
+    // incumbent and is filtered out by the store.
+    let memo_stats = store.map(|store| {
+        let entries: Vec<(u64, Screen)> = ctx
+            .memo
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .iter()
+            .map(|(&fp, &s)| (fp, s))
+            .filter(|(_, s)| !matches!(s, Screen::AboveIncumbent))
+            .collect();
+        let stored = entries.len();
+        if let Err(e) = store.save(&entries) {
+            degradations.push(e.to_string());
+        }
+        memo::MemoStats {
+            path: store.path().to_path_buf(),
+            loaded: memo_loaded,
+            hits: ctx.memo_hits.load(Ordering::Relaxed),
+            stored,
+        }
+    });
+
     FlowResult {
         graph: Arc::try_unwrap(current).unwrap_or_else(|a| (*a).clone()),
         initial,
@@ -682,6 +860,8 @@ fn optimize_inner(g: &Graph, opts: &FlowOptions) -> FlowResult {
         configs_tested,
         elapsed: t0.elapsed(),
         degradations,
+        search_threads: opts.search_threads,
+        memo: memo_stats,
     }
 }
 

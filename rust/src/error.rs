@@ -125,6 +125,12 @@ pub enum FdtError {
     /// rejected up front (back-pressure) instead of growing the queue
     /// without bound. Carries the observed depth and the configured cap.
     ServerOverloaded { depth: usize, cap: usize },
+    /// A persistent screening-memo cache file was unreadable, corrupt,
+    /// stale (wrong version) or keyed for a different graph/options, or
+    /// the cache dir was unwritable at save time. Always a *warning*:
+    /// the flow degrades to a cold run — never a panic, never a wrong
+    /// plan.
+    MemoCache { path: String, reason: String },
     /// The static plan verifier rejected a `(Graph, Schedule, Layout)`
     /// triple; carries the structured counterexample.
     PlanVerification(PlanViolation),
@@ -184,6 +190,9 @@ impl fmt::Display for FdtError {
             }
             FdtError::ServerOverloaded { depth, cap } => {
                 write!(f, "server overloaded: request queue at depth {depth} (cap {cap})")
+            }
+            FdtError::MemoCache { path, reason } => {
+                write!(f, "memo cache `{path}`: {reason} (ignored; cold run)")
             }
             FdtError::PlanVerification(v) => {
                 write!(f, "plan verification failed: {v}")

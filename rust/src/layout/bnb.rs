@@ -11,41 +11,100 @@
 //! optimal solution; incumbent + clique lower-bound pruning and duplicate
 //! -choice elimination keep it tractable for the buffer counts real
 //! TinyML graphs produce (fusion leaves a few dozen RAM buffers).
+//!
+//! # Parallel search and determinism
+//!
+//! Mirrors `sched::bnb` (see its module docs): with `threads > 1` the
+//! placement-order tree is decomposed breadth-first into a frontier of
+//! tasks that `std::thread::scope` workers steal through a shared atomic
+//! index, all pruning against a shared incumbent (`AtomicUsize` arena
+//! mirror + mutex-guarded best [`Layout`]) and one aggregated
+//! [`SharedBudget`]. A *completed* search that improved on the warm
+//! start replaces the racy arrival-order incumbent with a canonical
+//! offset vector rebuilt deterministically ([`lex_place`]): the first
+//! placement order in the fixed seed preference that reaches the proven
+//! optimal arena. Results are therefore bit-identical across thread
+//! counts whenever the search completes; only budget-truncated
+//! (degraded) searches may differ.
 
 use super::{heuristic, Layout};
-use crate::budget::{Budget, Deadline};
+use crate::budget::{Budget, SharedBudget};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
-struct Ctx<'a> {
+/// Immutable problem data plus the shared incumbent of one search.
+struct Shared<'a> {
     sizes: &'a [usize],
     /// Sorted adjacency lists (sorted once at build for alloc-free
     /// neighbourhood comparison in the duplicate-elimination check).
     adj: Vec<Vec<usize>>,
-    budget: u64,
-    expanded: u64,
-    deadline: Deadline,
-    timed_out: bool,
-    best: Layout,
     lb: usize,
-    /// Reused interval scratch — `first_fit_offset` runs at every node of
-    /// the search tree and must not allocate (hot path, §Perf).
+    /// Seed order preference: big + highly-conflicting buffers first
+    /// tends to find the optimum early, tightening the incumbent. Also
+    /// the fixed branching order of the canonical reconstruction.
+    pref: Vec<usize>,
+    /// Lock-free mirror of the incumbent arena size, read in every prune.
+    best_total: AtomicUsize,
+    /// Authoritative incumbent; the atomic mirror is updated inside this
+    /// lock so it never runs ahead of the offsets.
+    best: Mutex<Layout>,
+    budget: SharedBudget,
+}
+
+impl Shared<'_> {
+    #[inline]
+    fn bound(&self) -> usize {
+        self.best_total.load(Ordering::Relaxed)
+    }
+
+    /// Offer a complete placement; kept only on strict improvement.
+    fn offer(&self, offsets: &[usize], total: usize) {
+        let mut g = self.best.lock().unwrap_or_else(|p| p.into_inner());
+        if total < g.total {
+            g.offsets = offsets.to_vec();
+            g.total = total;
+            g.strategy = "bnb";
+            g.optimal = false;
+            self.best_total.store(total, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Per-worker scratch: interval buffer for [`first_fit_offset`] and the
+/// per-depth undo stacks of the incremental first-fit cache — both reused
+/// across the whole search so the hot path never allocates (§Perf).
+struct Scratch {
     ivs: Vec<(usize, usize)>,
+    saves: Vec<Vec<(usize, usize)>>,
+}
+
+impl Scratch {
+    fn new(n: usize) -> Scratch {
+        Scratch { ivs: Vec::new(), saves: vec![Vec::new(); n + 1] }
+    }
 }
 
 /// Lowest feasible offset for buffer `b` given placed conflicting buffers.
-fn first_fit_offset(b: usize, size: usize, ctx: &mut Ctx, offsets: &[usize]) -> usize {
+fn first_fit_offset(
+    b: usize,
+    size: usize,
+    sizes: &[usize],
+    adj: &[Vec<usize>],
+    offsets: &[usize],
+    ivs: &mut Vec<(usize, usize)>,
+) -> usize {
     // Zero-sized buffers occupy no bytes and always fit at offset 0.
     if size == 0 {
         return 0;
     }
     // Collect occupied intervals of conflicting placed buffers into the
     // reused scratch (no allocation).
-    let mut ivs = std::mem::take(&mut ctx.ivs);
     ivs.clear();
     ivs.extend(
-        ctx.adj[b]
+        adj[b]
             .iter()
             .filter(|&&o| offsets[o] != usize::MAX)
-            .map(|&o| (offsets[o], offsets[o] + ctx.sizes[o])),
+            .map(|&o| (offsets[o], offsets[o] + sizes[o])),
     );
     ivs.sort_unstable();
     let mut at = 0usize;
@@ -55,7 +114,6 @@ fn first_fit_offset(b: usize, size: usize, ctx: &mut Ctx, offsets: &[usize]) -> 
         }
         at = at.max(e);
     }
-    ctx.ivs = ivs;
     at
 }
 
@@ -82,6 +140,252 @@ fn same_neighbourhood(adj: &[Vec<usize>], a: usize, b: usize) -> bool {
     }
 }
 
+/// Rebuild the incremental first-fit cache for a task state: `at[b]` is
+/// the landing offset of every unplaced `b` under the placed set.
+fn rebuild_at(sh: &Shared, offsets: &[usize], ivs: &mut Vec<(usize, usize)>) -> Vec<usize> {
+    (0..sh.sizes.len())
+        .map(|b| {
+            if offsets[b] == usize::MAX {
+                first_fit_offset(b, sh.sizes[b], sh.sizes, &sh.adj, offsets, ivs)
+            } else {
+                offsets[b]
+            }
+        })
+        .collect()
+}
+
+/// Returns false when a budget limit tripped somewhere below.
+fn dfs(
+    sh: &Shared,
+    sc: &mut Scratch,
+    offsets: &mut Vec<usize>,
+    placed: usize,
+    cur_total: usize,
+    at: &mut Vec<usize>,
+) -> bool {
+    if cur_total.max(sh.lb) >= sh.bound() {
+        return true;
+    }
+    let n = sh.sizes.len();
+    if placed == n {
+        sh.offer(offsets, cur_total);
+        return true;
+    }
+    if !sh.budget.expand() {
+        return false;
+    }
+    // Admissible look-ahead: placements only add occupied intervals, so a
+    // buffer's cached first-fit offset can only grow — every unplaced `b`
+    // must end at `>= at[b] + size[b]` in any completion of this node.
+    {
+        let mut future = cur_total;
+        for &b in &sh.pref {
+            if offsets[b] == usize::MAX {
+                future = future.max(at[b] + sh.sizes[b]);
+            }
+        }
+        if future.max(sh.lb) >= sh.bound() {
+            return true;
+        }
+    }
+
+    let mut complete = true;
+    // Duplicate elimination: two unplaced buffers with identical size,
+    // landing offset *and* conflict neighbourhood are interchangeable —
+    // try only the first. Bucketing on (offset, size) keeps the costly
+    // neighbourhood comparison to genuinely colliding candidates.
+    let mut seen: crate::util::FnvHashMap<(usize, usize), Vec<usize>> = Default::default();
+    for pi in 0..sh.pref.len() {
+        let b = sh.pref[pi];
+        if offsets[b] != usize::MAX {
+            continue;
+        }
+        let land = at[b];
+        let bucket = seen.entry((land, sh.sizes[b])).or_default();
+        if bucket.iter().any(|&o| same_neighbourhood(&sh.adj, o, b)) {
+            continue;
+        }
+        bucket.push(b);
+        offsets[b] = land;
+        // Update the cached offsets of b's unplaced neighbours (only they
+        // can be affected), saving the old values in this depth's slot.
+        let mut save = std::mem::take(&mut sc.saves[placed]);
+        save.clear();
+        for ai in 0..sh.adj[b].len() {
+            let c = sh.adj[b][ai];
+            if offsets[c] == usize::MAX {
+                save.push((c, at[c]));
+                at[c] = first_fit_offset(c, sh.sizes[c], sh.sizes, &sh.adj, offsets, &mut sc.ivs);
+            }
+        }
+        sc.saves[placed] = save;
+        complete &= dfs(sh, sc, offsets, placed + 1, cur_total.max(land + sh.sizes[b]), at);
+        for i in 0..sc.saves[placed].len() {
+            let (c, old) = sc.saves[placed][i];
+            at[c] = old;
+        }
+        offsets[b] = usize::MAX;
+        if sh.budget.stopped() {
+            return false;
+        }
+        if cur_total.max(sh.lb) >= sh.bound() {
+            return complete; // incumbent improved below us
+        }
+    }
+    complete
+}
+
+/// A pending subtree of the placement-order search: the partial offset
+/// assignment plus its running arena size.
+#[derive(Clone)]
+struct Task {
+    offsets: Vec<usize>,
+    placed: usize,
+    cur_total: usize,
+}
+
+/// Breadth-first frontier decomposition (same pruning and child
+/// enumeration as [`dfs`]) until at least `target` pending subtrees
+/// exist for the workers to steal.
+fn decompose(sh: &Shared, target: usize) -> Vec<Task> {
+    let n = sh.sizes.len();
+    let mut ivs: Vec<(usize, usize)> = Vec::new();
+    let mut queue: std::collections::VecDeque<Task> = std::collections::VecDeque::new();
+    queue.push_back(Task { offsets: vec![usize::MAX; n], placed: 0, cur_total: 0 });
+    while queue.len() < target {
+        let Some(t) = queue.pop_front() else { break };
+        if t.cur_total.max(sh.lb) >= sh.bound() {
+            continue;
+        }
+        if t.placed == n {
+            sh.offer(&t.offsets, t.cur_total);
+            continue;
+        }
+        if !sh.budget.expand() {
+            queue.push_front(t);
+            break;
+        }
+        let at = rebuild_at(sh, &t.offsets, &mut ivs);
+        let mut future = t.cur_total;
+        for &b in &sh.pref {
+            if t.offsets[b] == usize::MAX {
+                future = future.max(at[b] + sh.sizes[b]);
+            }
+        }
+        if future.max(sh.lb) >= sh.bound() {
+            continue;
+        }
+        let mut seen: crate::util::FnvHashMap<(usize, usize), Vec<usize>> = Default::default();
+        for &b in &sh.pref {
+            if t.offsets[b] != usize::MAX {
+                continue;
+            }
+            let land = at[b];
+            let bucket = seen.entry((land, sh.sizes[b])).or_default();
+            if bucket.iter().any(|&o| same_neighbourhood(&sh.adj, o, b)) {
+                continue;
+            }
+            bucket.push(b);
+            let mut child = t.clone();
+            child.offsets[b] = land;
+            child.placed += 1;
+            child.cur_total = t.cur_total.max(land + sh.sizes[b]);
+            queue.push_back(child);
+        }
+    }
+    queue.into()
+}
+
+/// Deterministic reconstruction: the first placement order (in the fixed
+/// `pref` branching order, with the same duplicate elimination as the
+/// search) whose first-fit arena stays within `threshold` — the proven
+/// optimal total. Greedy first-success DFS; returns `None` only when the
+/// reconstruction budget trips (a witness order is known to exist).
+fn lex_place(sh: &Shared, threshold: usize, budget: Budget) -> Option<Vec<usize>> {
+    let n = sh.sizes.len();
+    let sb = SharedBudget::start(budget);
+    let mut sc = Scratch::new(n);
+    let mut offsets = vec![usize::MAX; n];
+    let mut at = rebuild_at(sh, &offsets, &mut sc.ivs);
+    if lex_dfs(sh, threshold, &sb, &mut sc, &mut offsets, 0, 0, &mut at) {
+        Some(offsets)
+    } else {
+        None
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn lex_dfs(
+    sh: &Shared,
+    threshold: usize,
+    sb: &SharedBudget,
+    sc: &mut Scratch,
+    offsets: &mut Vec<usize>,
+    placed: usize,
+    cur_total: usize,
+    at: &mut Vec<usize>,
+) -> bool {
+    let n = sh.sizes.len();
+    if placed == n {
+        return true;
+    }
+    if !sb.expand() {
+        return false;
+    }
+    // Admissible look-ahead (same argument as the search DFS).
+    {
+        let mut future = cur_total;
+        for &b in &sh.pref {
+            if offsets[b] == usize::MAX {
+                future = future.max(at[b] + sh.sizes[b]);
+            }
+        }
+        if future > threshold {
+            return false;
+        }
+    }
+    let mut seen: crate::util::FnvHashMap<(usize, usize), Vec<usize>> = Default::default();
+    for pi in 0..sh.pref.len() {
+        let b = sh.pref[pi];
+        if offsets[b] != usize::MAX {
+            continue;
+        }
+        let land = at[b];
+        if land + sh.sizes[b] > threshold {
+            continue;
+        }
+        let bucket = seen.entry((land, sh.sizes[b])).or_default();
+        if bucket.iter().any(|&o| same_neighbourhood(&sh.adj, o, b)) {
+            continue;
+        }
+        bucket.push(b);
+        offsets[b] = land;
+        let mut save = std::mem::take(&mut sc.saves[placed]);
+        save.clear();
+        for ai in 0..sh.adj[b].len() {
+            let c = sh.adj[b][ai];
+            if offsets[c] == usize::MAX {
+                save.push((c, at[c]));
+                at[c] = first_fit_offset(c, sh.sizes[c], sh.sizes, &sh.adj, offsets, &mut sc.ivs);
+            }
+        }
+        sc.saves[placed] = save;
+        let total = cur_total.max(land + sh.sizes[b]);
+        if lex_dfs(sh, threshold, sb, sc, offsets, placed + 1, total, at) {
+            return true; // keep the applied prefix: offsets is the answer
+        }
+        for i in 0..sc.saves[placed].len() {
+            let (c, old) = sc.saves[placed][i];
+            at[c] = old;
+        }
+        offsets[b] = usize::MAX;
+        if sb.stopped() {
+            return false;
+        }
+    }
+    false
+}
+
 /// Exactly place buffers. `lb_hint` is an external lower bound (e.g. the
 /// schedule's peak live bytes — a clique bound, since simultaneously live
 /// buffers pairwise conflict). Returns `(layout, completed)`.
@@ -95,16 +399,29 @@ pub fn place_with_lb(
     place_budgeted(sizes, conflicts, Budget::nodes(node_budget), warm, lb_hint)
 }
 
-/// [`place_with_lb`] under a full anytime [`Budget`] (node count and/or
-/// wall clock). Either limit running out returns the best incumbent with
-/// `completed = false` — the anytime contract: a starved solver degrades,
-/// it never fails.
+/// [`place_with_lb`] under a full anytime [`Budget`], single-threaded.
 pub fn place_budgeted(
     sizes: &[usize],
     conflicts: &[(usize, usize)],
     budget: Budget,
     warm: Option<Layout>,
     lb_hint: usize,
+) -> (Layout, bool) {
+    place_budgeted_mt(sizes, conflicts, budget, warm, lb_hint, 1)
+}
+
+/// [`place_budgeted`] across `threads` workers (see module docs: the
+/// result is bit-identical to `threads = 1` whenever the search runs to
+/// completion). Either limit running out returns the best incumbent with
+/// `completed = false` — the anytime contract: a starved solver degrades,
+/// it never fails.
+pub fn place_budgeted_mt(
+    sizes: &[usize],
+    conflicts: &[(usize, usize)],
+    budget: Budget,
+    warm: Option<Layout>,
+    lb_hint: usize,
+    threads: usize,
 ) -> (Layout, bool) {
     let n = sizes.len();
     if n == 0 {
@@ -131,36 +448,69 @@ pub fn place_budgeted(
         warm.optimal = true;
         return (warm, true);
     }
+    let warm_total = warm.total;
 
-    let mut ctx = Ctx {
+    let mut pref: Vec<usize> = (0..n).collect();
+    pref.sort_by_key(|&b| std::cmp::Reverse((sizes[b], adj[b].len())));
+
+    let sh = Shared {
         sizes,
         adj,
-        budget: budget.max_nodes,
-        expanded: 0,
-        deadline: budget.start(),
-        timed_out: false,
-        best: warm,
         lb,
-        ivs: Vec::new(),
+        pref,
+        best_total: AtomicUsize::new(warm_total),
+        best: Mutex::new(warm),
+        budget: SharedBudget::start(budget),
     };
-    let mut offsets = vec![usize::MAX; n];
-    // Seed order preference: big + highly-conflicting buffers first tends
-    // to find the optimum early, tightening the incumbent.
-    let mut pref: Vec<usize> = (0..n).collect();
-    pref.sort_by_key(|&b| std::cmp::Reverse((ctx.sizes[b], ctx.adj[b].len())));
 
-    // Incrementally-maintained first-fit offsets: `at[b]` is the landing
-    // offset of `b` under the *current* placed set. Placing `p` only
-    // perturbs `at[c]` for conflicting `c`, so each node recomputes
-    // deg(p) offsets instead of n (§Perf: this pass took the layout B&B
-    // from ~40% of RAD flow time to single digits).
-    let mut at: Vec<usize> = (0..n).map(|b| first_fit_offset(b, sizes[b], &mut ctx, &offsets)).collect();
-    let mut saves: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n + 1];
-    let completed = dfs(&mut ctx, &pref, &mut offsets, 0, 0, &mut at, &mut saves);
-    ctx.best.strategy = "bnb";
-    ctx.best.optimal = completed || ctx.best.total <= ctx.lb;
-    let complete = ctx.best.optimal;
-    (ctx.best, complete)
+    let threads = threads.max(1);
+    if threads == 1 {
+        let mut sc = Scratch::new(n);
+        let mut offsets = vec![usize::MAX; n];
+        let mut at = rebuild_at(&sh, &offsets, &mut sc.ivs);
+        dfs(&sh, &mut sc, &mut offsets, 0, 0, &mut at);
+    } else {
+        let tasks = decompose(&sh, threads * 16);
+        if !sh.budget.stopped() && !tasks.is_empty() {
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|s| {
+                for _ in 0..threads.min(tasks.len()) {
+                    s.spawn(|| {
+                        let mut sc = Scratch::new(n);
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= tasks.len() || sh.budget.stopped() {
+                                break;
+                            }
+                            let t = &tasks[i];
+                            let mut offsets = t.offsets.clone();
+                            let mut at = rebuild_at(&sh, &offsets, &mut sc.ivs);
+                            dfs(&sh, &mut sc, &mut offsets, t.placed, t.cur_total, &mut at);
+                        }
+                    });
+                }
+            });
+        }
+    }
+
+    let mut completed = !sh.budget.exhausted();
+    let mut best = {
+        let g = sh.best.lock().unwrap_or_else(|p| p.into_inner());
+        g.clone()
+    };
+    if completed && best.total < warm_total {
+        // Canonicalize the racy arrival-order incumbent (see module docs);
+        // fresh node budget so reconstruction cost does not depend on how
+        // many nodes the (possibly parallel) value search burned.
+        match lex_place(&sh, best.total, budget) {
+            Some(offsets) => best.offsets = offsets,
+            None => completed = false, // reconstruction budget tripped: keep incumbent, degrade
+        }
+    }
+    best.strategy = "bnb";
+    best.optimal = completed || best.total <= lb;
+    let complete = best.optimal;
+    (best, complete)
 }
 
 /// [`place_with_lb`] without an external bound.
@@ -171,93 +521,6 @@ pub fn place(
     warm: Option<Layout>,
 ) -> (Layout, bool) {
     place_with_lb(sizes, conflicts, node_budget, warm, 0)
-}
-
-fn dfs(
-    ctx: &mut Ctx,
-    pref: &[usize],
-    offsets: &mut Vec<usize>,
-    placed: usize,
-    cur_total: usize,
-    at: &mut Vec<usize>,
-    saves: &mut Vec<Vec<(usize, usize)>>,
-) -> bool {
-    if cur_total.max(ctx.lb) >= ctx.best.total {
-        return true;
-    }
-    let n = ctx.sizes.len();
-    if placed == n {
-        ctx.best = Layout { offsets: offsets.clone(), total: cur_total, strategy: "bnb", optimal: false };
-        return true;
-    }
-    ctx.expanded += 1;
-    // Wall-clock check amortized over 256 expansions (and on the very
-    // first, so a zero budget trips immediately); sticky once hit.
-    if ctx.expanded & 0xFF == 1 && ctx.deadline.expired() {
-        ctx.timed_out = true;
-    }
-    if ctx.expanded > ctx.budget || ctx.timed_out {
-        return false;
-    }
-    // Admissible look-ahead: placements only add occupied intervals, so a
-    // buffer's cached first-fit offset can only grow — every unplaced `b`
-    // must end at `>= at[b] + size[b]` in any completion of this node.
-    {
-        let mut future = cur_total;
-        for &b in pref {
-            if offsets[b] == usize::MAX {
-                future = future.max(at[b] + ctx.sizes[b]);
-            }
-        }
-        if future.max(ctx.lb) >= ctx.best.total {
-            return true;
-        }
-    }
-
-    let mut complete = true;
-    // Duplicate elimination: two unplaced buffers with identical size,
-    // landing offset *and* conflict neighbourhood are interchangeable —
-    // try only the first. Bucketing on (offset, size) keeps the costly
-    // neighbourhood comparison to genuinely colliding candidates.
-    let mut seen: crate::util::FnvHashMap<(usize, usize), Vec<usize>> = Default::default();
-    for pi in 0..pref.len() {
-        let b = pref[pi];
-        if offsets[b] != usize::MAX {
-            continue;
-        }
-        let land = at[b];
-        let bucket = seen.entry((land, ctx.sizes[b])).or_default();
-        if bucket.iter().any(|&o| same_neighbourhood(&ctx.adj, o, b)) {
-            continue;
-        }
-        bucket.push(b);
-        offsets[b] = land;
-        // Update the cached offsets of b's unplaced neighbours (only they
-        // can be affected), saving the old values in this depth's slot.
-        let mut save = std::mem::take(&mut saves[placed]);
-        save.clear();
-        for ai in 0..ctx.adj[b].len() {
-            let c = ctx.adj[b][ai];
-            if offsets[c] == usize::MAX {
-                save.push((c, at[c]));
-                at[c] = first_fit_offset(c, ctx.sizes[c], ctx, offsets);
-            }
-        }
-        saves[placed] = save;
-        complete &= dfs(ctx, pref, offsets, placed + 1, cur_total.max(land + ctx.sizes[b]), at, saves);
-        for i in 0..saves[placed].len() {
-            let (c, old) = saves[placed][i];
-            at[c] = old;
-        }
-        offsets[b] = usize::MAX;
-        if ctx.expanded > ctx.budget || ctx.timed_out {
-            return false;
-        }
-        if cur_total.max(ctx.lb) >= ctx.best.total {
-            return complete; // incumbent improved below us
-        }
-    }
-    complete
 }
 
 #[cfg(test)]
@@ -298,6 +561,19 @@ mod tests {
     }
 
     #[test]
+    fn starved_parallel_budget_returns_valid_incumbent() {
+        let sizes = vec![100, 40, 60, 80, 20];
+        let conflicts = vec![(0, 1), (1, 2), (2, 3), (3, 4), (0, 4)];
+        let starved =
+            [Budget::nodes(0), Budget::nodes(2), Budget { max_nodes: u64::MAX, wall_ms: Some(0) }];
+        for budget in starved {
+            let (l, complete) = place_budgeted_mt(&sizes, &conflicts, budget, None, 0, 4);
+            assert!(!complete, "{budget:?}");
+            assert!(l.is_valid(&sizes, &conflicts), "{budget:?}");
+        }
+    }
+
+    #[test]
     fn matches_brute_force_on_random_instances() {
         let mut seed = 0xabcdu64;
         let mut rnd = move || {
@@ -325,6 +601,42 @@ mod tests {
                 brute_force_total(&sizes, &conflicts),
                 "case {case}: sizes {sizes:?} conflicts {conflicts:?}"
             );
+        }
+    }
+
+    #[test]
+    fn parallel_placement_is_bit_identical_to_sequential() {
+        let mut seed = 0x5eedu64;
+        let mut rnd = move || {
+            seed ^= seed << 13;
+            seed ^= seed >> 7;
+            seed ^= seed << 17;
+            seed
+        };
+        for case in 0..25 {
+            let n = 4 + (rnd() % 5) as usize; // 4..8 buffers
+            let sizes: Vec<usize> = (0..n).map(|_| 8 + (rnd() % 200) as usize).collect();
+            let mut conflicts = Vec::new();
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    if rnd() % 3 != 0 {
+                        conflicts.push((i, j));
+                    }
+                }
+            }
+            let (seq, c1) =
+                place_budgeted_mt(&sizes, &conflicts, Budget::UNBOUNDED, None, 0, 1);
+            assert!(c1, "case {case}");
+            for threads in [2, 4] {
+                let (par, cn) =
+                    place_budgeted_mt(&sizes, &conflicts, Budget::UNBOUNDED, None, 0, threads);
+                assert!(cn, "case {case}");
+                assert_eq!(par.total, seq.total, "case {case}, {threads} threads");
+                assert_eq!(
+                    par.offsets, seq.offsets,
+                    "case {case}, {threads} threads: offsets must be byte-identical"
+                );
+            }
         }
     }
 }

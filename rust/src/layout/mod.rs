@@ -77,11 +77,16 @@ pub struct LayoutOptions {
     /// node budget only). On expiry the best incumbent is kept and the
     /// SA fallback gets its shot, exactly as on node-budget exhaustion.
     pub wall_ms: Option<u64>,
+    /// Worker threads for the exact placer (min 1). Results are
+    /// bit-identical across thread counts whenever the search completes
+    /// within budget (see `bnb` module docs); the flow resolves this once
+    /// at start from `FlowOptions::search_threads` / `FDT_SEARCH_THREADS`.
+    pub search_threads: usize,
 }
 
 impl Default for LayoutOptions {
     fn default() -> Self {
-        LayoutOptions { bnb_node_budget: 2_000_000, wall_ms: None }
+        LayoutOptions { bnb_node_budget: 2_000_000, wall_ms: None, search_threads: 1 }
     }
 }
 
@@ -122,6 +127,7 @@ pub fn plan_memoized(
         clique_lb.hash(&mut h);
         opts.bnb_node_budget.hash(&mut h);
         opts.wall_ms.hash(&mut h);
+        opts.search_threads.hash(&mut h);
         h.finish()
     };
     if let Some(l) = memo.get(&key) {
@@ -142,7 +148,7 @@ fn plan_instance(
     let warm = heuristic::first_fit_by_size(sizes, conflicts);
     let budget = crate::budget::Budget { max_nodes: opts.bnb_node_budget, wall_ms: opts.wall_ms };
     let (mut layout, complete) =
-        bnb::place_budgeted(sizes, conflicts, budget, Some(warm), clique_lb);
+        bnb::place_budgeted_mt(sizes, conflicts, budget, Some(warm), clique_lb, opts.search_threads);
     if !complete {
         for seed in [7, 11, 23] {
             let sa = heuristic::hill_climb_sa(sizes, conflicts, 2000, seed);

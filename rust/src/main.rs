@@ -8,6 +8,7 @@
 //! fdt fig1                        # quantified Fig 1 overlap growth
 //! fdt discover-demo               # Fig 5 path-discovery walkthrough
 //! fdt optimize MODEL [--fdt-only|--ffmt-only] [--dot FILE]
+//!              [--search-threads N] [--no-memo]
 //! fdt layout-compare [MODEL ...]  # §5.1 optimal vs TVM heuristic
 //! fdt sched-bench                 # §5.1 SwiftNet scheduling runtime
 //! fdt flow-stats [MODEL ...]      # §5.1 configs + flow runtime
@@ -64,7 +65,8 @@ fn help() {
     println!(
         "fdt — Fused Depthwise Tiling for TinyML memory optimization\n\
          commands: table1 | table2 [MODEL..] | fig1 | discover-demo |\n\
-         optimize MODEL [--fdt-only|--ffmt-only] [--dot FILE] |\n\
+         optimize MODEL [--fdt-only|--ffmt-only] [--dot FILE]\n\
+         \x20        [--search-threads N] [--no-memo] |\n\
          layout-compare [MODEL..] | sched-bench | flow-stats [MODEL..] |\n\
          verify MODEL [--optimized] | verify-artifacts [DIR] |\n\
          serve MODEL [N] | dot MODEL |\n\
@@ -155,6 +157,19 @@ fn optimize(args: &[String]) {
     if args.iter().any(|a| a == "--ffmt-only") {
         opts.discovery.enable_fdt = false;
     }
+    if let Some(pos) = args.iter().position(|a| a == "--search-threads") {
+        let n = args
+            .get(pos + 1)
+            .and_then(|s| s.parse::<usize>().ok())
+            .expect("--search-threads N (a positive integer)");
+        opts.search_threads = n;
+    }
+    // The CLI persists the screening memo across runs by default (the
+    // library default is off); `--no-memo` opts out, e.g. for timing
+    // cold-start exploration.
+    if !args.iter().any(|a| a == "--no-memo") {
+        opts.memo_dir = fdt::coordinator::memo::default_dir();
+    }
     let r = fdt::coordinator::optimize(&g, &opts);
     println!("{}", g.summary());
     println!(
@@ -168,6 +183,17 @@ fn optimize(args: &[String]) {
         r.configs_tested,
         r.elapsed
     );
+    println!("search threads: {}", r.search_threads);
+    match &r.memo {
+        Some(m) => println!(
+            "memo: {} entries loaded, {} hits, {} stored -> {}",
+            m.loaded,
+            m.hits,
+            m.stored,
+            m.path.display()
+        ),
+        None => println!("memo: disabled"),
+    }
     for it in &r.iterations {
         println!(
             "  tiled {} via {} : {} -> {} B",

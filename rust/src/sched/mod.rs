@@ -44,11 +44,16 @@ pub struct SchedOptions {
     pub wall_ms: Option<u64>,
     /// Prefer the SP algorithm when the graph is series-parallel.
     pub use_sp: bool,
+    /// Worker threads for the branch-and-bound tier (min 1). Results are
+    /// bit-identical across thread counts whenever the search completes
+    /// within budget (see `bnb` module docs); the flow resolves this once
+    /// at start from `FlowOptions::search_threads` / `FDT_SEARCH_THREADS`.
+    pub search_threads: usize,
 }
 
 impl Default for SchedOptions {
     fn default() -> Self {
-        SchedOptions { bnb_node_budget: 1_000_000, wall_ms: None, use_sp: true }
+        SchedOptions { bnb_node_budget: 1_000_000, wall_ms: None, use_sp: true, search_threads: 1 }
     }
 }
 
@@ -172,7 +177,7 @@ pub fn schedule_with_cutoff(m: &MemModel, opts: SchedOptions, cutoff: usize) -> 
     };
     let budget = Budget { max_nodes: node_budget, wall_ms: opts.wall_ms };
     let (bnb_sched, complete) =
-        bnb::schedule_budgeted(m, budget, Some(warm.clone()), cutoff);
+        bnb::schedule_budgeted_mt(m, budget, Some(warm.clone()), cutoff, opts.search_threads);
 
     // Pick the best of all tiers (they are all valid orders).
     let mut best = warm;

@@ -16,6 +16,10 @@
 //! * **budget exhaustion** — [`starved_flow_options`] zeroes the node
 //!   *and* wall-clock budgets of both exact solvers, so the flow must
 //!   degrade to heuristic plans rather than fail;
+//! * **memo-cache damage** — [`corrupt_memo_files`] vandalizes persistent
+//!   screening-memo files ([`MemoCorruption`]: garbage, wrong version,
+//!   foreign fingerprint, truncation), so a warm flow run must degrade
+//!   to a cold one with a typed warning — never a panic or wrong plan;
 //! * **allocation-cap breach** — drive
 //!   [`Int8Executable::run_with_cap`](crate::exec::int8::Int8Executable::run_with_cap)
 //!   with [`arena_cap_below`] to guarantee an
@@ -175,6 +179,57 @@ pub fn starved_flow_options() -> FlowOptions {
 /// planned arena (saturating at 0 so even a 1-byte arena breaches).
 pub fn arena_cap_below(arena_bytes: usize) -> usize {
     arena_bytes.saturating_sub(1)
+}
+
+/// Ways a persistent screening-memo cache file can be damaged on disk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemoCorruption {
+    /// Body replaced with non-JSON garbage.
+    Garbage,
+    /// Well-formed body claiming a future format version.
+    WrongVersion,
+    /// Well-formed body at the current version, keyed for a different
+    /// graph/options pair.
+    WrongFingerprint,
+    /// File truncated mid-document.
+    Truncated,
+}
+
+/// Corrupt every `fdt-memo-*.json` file under `dir` in the given way;
+/// returns how many files were damaged. The flow must respond to each of
+/// these with a typed [`FdtError::MemoCache`] degradation and a cold run
+/// — never a panic or a wrong plan.
+pub fn corrupt_memo_files(dir: &std::path::Path, kind: MemoCorruption) -> std::io::Result<usize> {
+    let mut damaged = 0usize;
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        let name = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
+        if !name.starts_with("fdt-memo-") || !name.ends_with(".json") {
+            continue;
+        }
+        match kind {
+            MemoCorruption::Garbage => std::fs::write(&path, b"this is not json {{{")?,
+            MemoCorruption::WrongVersion => std::fs::write(
+                &path,
+                b"{\"version\":999999,\"graph_fp\":\"0\",\"opts_hash\":\"0\",\"entries\":[]}"
+                    as &[u8],
+            )?,
+            MemoCorruption::WrongFingerprint => std::fs::write(
+                &path,
+                format!(
+                    "{{\"version\":{},\"graph_fp\":\"deadbeefdeadbeef\",\
+                     \"opts_hash\":\"deadbeefdeadbeef\",\"entries\":[]}}",
+                    crate::coordinator::memo::MEMO_VERSION
+                ),
+            )?,
+            MemoCorruption::Truncated => {
+                let body = std::fs::read(&path)?;
+                std::fs::write(&path, &body[..body.len() / 2])?;
+            }
+        }
+        damaged += 1;
+    }
+    Ok(damaged)
 }
 
 #[cfg(test)]

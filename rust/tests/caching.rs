@@ -2,6 +2,12 @@
 //! pruning and the memoized, incumbent-bounded coordinator must be
 //! *result-preserving* — same configs chosen, byte-identical
 //! [`fdt::coordinator::Evaluation`]s — while doing far less work.
+//!
+//! The legacy-identity comparisons pin `exact_screen_rank: false`: the
+//! exact screening rank (the default) deliberately ranks candidates by
+//! exact schedule peak instead of the legacy first-fit total, so it is
+//! compared for *validity* (never worse than the untiled graph, no
+//! spurious MACs), not bit-identity.
 
 use fdt::coordinator::{optimize, FlowOptions};
 use fdt::graph::{ActKind, DType, GraphBuilder, Padding};
@@ -74,10 +80,16 @@ fn dominance_pruning_keeps_a_subset_with_identical_slice_shapes() {
     }
 }
 
+/// The optimized-but-result-preserving configuration: every speedup on,
+/// ranked exactly like the pre-overhaul flow (first-fit screening).
+fn optimized_first_fit_rank() -> FlowOptions {
+    FlowOptions { exact_screen_rank: false, ..FlowOptions::default() }
+}
+
 #[test]
 fn memoized_flow_matches_unmemoized_on_kws() {
     let g = models::kws();
-    let fast = optimize(&g, &FlowOptions::default());
+    let fast = optimize(&g, &optimized_first_fit_rank());
     let slow = optimize(&g, &FlowOptions::legacy());
     // Byte-identical evaluations: the memo/cutoff/pruning machinery may
     // only skip provably losing work.
@@ -97,10 +109,32 @@ fn memoized_flow_matches_unmemoized_on_kws() {
 #[test]
 fn memoized_flow_matches_unmemoized_on_txt_and_radar() {
     for g in [models::txt(), models::radar()] {
-        let fast = optimize(&g, &FlowOptions::default());
+        let fast = optimize(&g, &optimized_first_fit_rank());
         let slow = optimize(&g, &FlowOptions::legacy());
         assert_eq!(fast.final_eval.ram, slow.final_eval.ram, "{}", g.name);
         assert_eq!(fast.final_eval.macs, slow.final_eval.macs, "{}", g.name);
         assert_eq!(fast.final_eval.sched_peak, slow.final_eval.sched_peak, "{}", g.name);
+    }
+}
+
+#[test]
+fn exact_screen_rank_never_loses_to_the_untiled_graph() {
+    // The exact rank skips screening layouts entirely and prunes on
+    // provable bounds only; the accept-only-if-improved full evaluation
+    // guarantees the result is monotone in the initial evaluation, and
+    // FDT configurations still add no MACs.
+    // Thresholds mirror the existing flow-integration expectations
+    // (paper: KWS 18.1%, TXT 76.2%).
+    for (g, min_savings) in [(models::kws(), 10.0), (models::txt(), 50.0)] {
+        let opts = FlowOptions::default();
+        assert!(opts.exact_screen_rank, "exact rank is the default");
+        let r = optimize(&g, &opts);
+        assert!(r.final_eval.ram <= r.initial.ram, "{}", g.name);
+        assert!(
+            r.ram_savings_pct() > min_savings,
+            "{}: exact rank found only {:.1}%",
+            g.name,
+            r.ram_savings_pct()
+        );
     }
 }

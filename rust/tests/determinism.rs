@@ -1,0 +1,119 @@
+//! Determinism suite for the parallel exact search.
+//!
+//! Contract (see the `sched::bnb` / `layout::bnb` module docs): whenever
+//! an exact search *completes* within its budget, the returned
+//! `(Schedule, Layout)` is bit-identical across worker thread counts —
+//! the parallel searches establish the optimal value, and a
+//! deterministic lexicographic reconstruction rebuilds the canonical
+//! witness. Only budget-truncated (degraded) searches are exempt: their
+//! incumbents legitimately depend on visit order.
+//!
+//! The suite covers the model zoo, 32 seeded random graphs, full
+//! `coordinator::optimize` flows, and byte-identity of int8 inference
+//! outputs executed through plans produced at different thread counts.
+
+use fdt::analysis::MemModel;
+use fdt::coordinator::{self, FlowOptions};
+use fdt::graph::fusion::fuse;
+use fdt::layout::{self, LayoutOptions};
+use fdt::models;
+use fdt::sched::{self, SchedOptions};
+use fdt::testing::random_graph;
+
+fn sched_opts(threads: usize) -> SchedOptions {
+    SchedOptions { search_threads: threads, ..SchedOptions::default() }
+}
+
+fn layout_opts(threads: usize) -> LayoutOptions {
+    LayoutOptions { search_threads: threads, ..LayoutOptions::default() }
+}
+
+/// Solve `g` at 1 thread, then re-solve at 2 and 4 threads and assert
+/// byte-identical results. `require_complete` additionally asserts the
+/// searches finish within budget (so the identity clause is known to be
+/// exercised, not vacuously skipped).
+fn assert_plan_identical(g: &fdt::Graph, require_complete: bool) {
+    let grouping = fuse(g);
+    let m = MemModel::new(g, &grouping);
+    let s1 = sched::schedule(&m, sched_opts(1));
+    if require_complete {
+        assert!(!s1.degraded, "{}: schedule search must complete within budget", g.name);
+    }
+    let l1 = layout::plan(&m, &s1.order, layout_opts(1));
+    for threads in [2usize, 4] {
+        let st = sched::schedule(&m, sched_opts(threads));
+        if !s1.degraded {
+            assert_eq!(s1.order, st.order, "{} x{threads}: schedule order", g.name);
+            assert_eq!(s1.peak, st.peak, "{} x{threads}: schedule peak", g.name);
+            assert_eq!(s1.strategy, st.strategy, "{} x{threads}: strategy", g.name);
+            assert_eq!(s1.optimal, st.optimal, "{} x{threads}: optimality", g.name);
+            assert!(!st.degraded, "{} x{threads}: parallel search must also complete", g.name);
+        }
+        let lt = layout::plan(&m, &st.order, layout_opts(threads));
+        if !s1.degraded && l1.optimal {
+            assert_eq!(l1.offsets, lt.offsets, "{} x{threads}: layout offsets", g.name);
+            assert_eq!(l1.total, lt.total, "{} x{threads}: arena total", g.name);
+            assert_eq!(l1.strategy, lt.strategy, "{} x{threads}: layout strategy", g.name);
+        }
+    }
+}
+
+#[test]
+fn zoo_plans_are_bit_identical_across_thread_counts() {
+    for g in models::zoo() {
+        // The small models must complete at default budgets; the POS/SSD
+        // planning instances are allowed to truncate (in which case the
+        // identity clause does not apply by contract).
+        let small = !g.name.starts_with("POS") && !g.name.starts_with("SSD");
+        assert_plan_identical(&g, small);
+    }
+}
+
+#[test]
+fn random_graphs_plan_bit_identically_across_thread_counts() {
+    for seed in 0..32u64 {
+        let g = random_graph(seed);
+        assert_plan_identical(&g, true);
+    }
+}
+
+#[test]
+fn full_flow_is_identical_across_search_threads() {
+    let mk = |threads: usize| FlowOptions { search_threads: threads, ..FlowOptions::default() };
+    for g in [models::kws(), models::magic_wand(), models::radar()] {
+        let r1 = coordinator::optimize(&g, &mk(1));
+        let r4 = coordinator::optimize(&g, &mk(4));
+        assert_eq!(r1.search_threads, 1);
+        assert_eq!(r4.search_threads, 4);
+        assert_eq!(r1.final_eval.ram, r4.final_eval.ram, "{}", g.name);
+        assert_eq!(r1.final_eval.sched_peak, r4.final_eval.sched_peak, "{}", g.name);
+        assert_eq!(r1.graph.fingerprint(), r4.graph.fingerprint(), "{}", g.name);
+        assert_eq!(r1.iterations.len(), r4.iterations.len(), "{}", g.name);
+        for (a, b) in r1.iterations.iter().zip(&r4.iterations) {
+            assert_eq!(a.config, b.config, "{}: same accepted config", g.name);
+            assert_eq!(a.ram_after, b.ram_after, "{}", g.name);
+        }
+    }
+}
+
+#[test]
+fn int8_outputs_are_byte_identical_across_search_threads() {
+    let mk = |threads: usize| FlowOptions { search_threads: threads, ..FlowOptions::default() };
+    for g in [models::kws(), models::txt()] {
+        let r1 = coordinator::optimize(&g, &mk(1));
+        let r4 = coordinator::optimize(&g, &mk(4));
+        assert_eq!(r1.graph.fingerprint(), r4.graph.fingerprint(), "{}", g.name);
+        let cal = fdt::quant::calibrate(&g, 2, 7).unwrap();
+        let t1 = fdt::quant::transfer(&g, &cal, &r1.graph);
+        let t4 = fdt::quant::transfer(&g, &cal, &r4.graph);
+        let e1 = coordinator::int8_executable(&r1.graph, &mk(1), &t1)
+            .unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        let e4 = coordinator::int8_executable(&r4.graph, &mk(4), &t4)
+            .unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        assert_eq!(e1.arena_bytes(), e4.arena_bytes(), "{}: same planned arena", g.name);
+        let inputs = fdt::exec::random_inputs(&g, 11);
+        let o1 = e1.run(&inputs).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        let o4 = e4.run(&inputs).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        assert_eq!(o1, o4, "{}: int8 outputs must be byte-identical", g.name);
+    }
+}

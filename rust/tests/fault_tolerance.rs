@@ -116,6 +116,41 @@ fn starved_budgets_still_produce_valid_degraded_plans() {
 }
 
 #[test]
+fn starved_budgets_under_parallel_search_degrade_identically_in_kind() {
+    // Budget semantics must survive the work-stealing search: with 4
+    // workers sharing one atomic node counter / wall-clock deadline, a
+    // starved run still returns a valid best-incumbent plan, flags it
+    // degraded, and records it in `FlowResult::degradations`. (Degraded
+    // *orders* may differ across thread counts — only completed searches
+    // carry the bit-identity contract.)
+    let g = branchy_graph();
+    for (node_budget, wall_ms) in [(0u64, None), (3, None), (u64::MAX, Some(0u64))] {
+        let mut opts = starved_flow_options();
+        opts.search_threads = 4;
+        opts.sched.bnb_node_budget = node_budget;
+        opts.sched.wall_ms = wall_ms;
+        opts.layout.bnb_node_budget = node_budget;
+        opts.layout.wall_ms = wall_ms;
+        let r = try_optimize(&g, &opts)
+            .unwrap_or_else(|e| panic!("starved parallel flow (nodes={node_budget}): {e}"));
+        assert_eq!(r.search_threads, 4, "requested thread count is resolved verbatim");
+        assert!(r.final_eval.ram > 0);
+        assert!(
+            !r.degradations.is_empty(),
+            "starved parallel solvers must record degradation (nodes={node_budget}, wall={wall_ms:?})"
+        );
+        // The degraded plan still passes the mandatory verify gate inside
+        // the flow, and still compiles + runs.
+        let cal = fdt::quant::calibrate(&r.graph, 1, 7).unwrap();
+        let exe =
+            int8_executable(&r.graph, &opts, &cal).expect("degraded parallel plan must compile");
+        assert_eq!(exe.arena_bytes(), r.final_eval.ram);
+        let inputs = fdt::exec::random_inputs(&r.graph, 5);
+        exe.run(&inputs).expect("degraded parallel plan must execute");
+    }
+}
+
+#[test]
 fn fault_injected_engine_falls_back_to_working_int8_executor() {
     // Acceptance: when the preferred engine fails, the chain serves the
     // request from the CPU int8 backend (an Int8Executable underneath).

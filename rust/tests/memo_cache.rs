@@ -1,0 +1,109 @@
+//! Persistent cross-run screening memo: cold/warm behaviour and chaos.
+//!
+//! The flow must (a) persist its cutoff-independent screening entries,
+//! (b) reload them on the next run of the same model with an *identical*
+//! resulting plan, and (c) respond to any damaged or unwritable cache —
+//! garbage JSON, wrong version, foreign fingerprint, truncation, an
+//! unwritable path — with a typed `FdtError::MemoCache` degradation and
+//! a cold run. Never a panic, never a different plan.
+
+use fdt::coordinator::{optimize, FlowOptions};
+use fdt::models;
+use fdt::testing::chaos::{corrupt_memo_files, MemoCorruption};
+use std::path::{Path, PathBuf};
+
+fn memo_dir(tag: &str) -> PathBuf {
+    let d = Path::new(env!("CARGO_TARGET_TMPDIR")).join(format!("memo-cache-{tag}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn opts_with_memo(dir: &Path) -> FlowOptions {
+    FlowOptions { memo_dir: Some(dir.to_path_buf()), ..FlowOptions::default() }
+}
+
+#[test]
+fn warm_run_hits_the_persistent_memo_with_identical_plan() {
+    let dir = memo_dir("warm");
+    let g = models::kws();
+    let cold = optimize(&g, &opts_with_memo(&dir));
+    let m0 = cold.memo.as_ref().expect("memo stats when a cache dir is configured");
+    assert_eq!(m0.loaded, 0, "first run is cold");
+    assert!(m0.stored > 0, "cold run persists screening entries");
+    assert!(m0.path.exists(), "cache file written at {}", m0.path.display());
+    assert!(
+        cold.degradations.iter().all(|d| !d.contains("memo cache")),
+        "clean cold run: {:?}",
+        cold.degradations
+    );
+
+    let warm = optimize(&g, &opts_with_memo(&dir));
+    let m1 = warm.memo.as_ref().unwrap();
+    assert!(m1.loaded > 0, "warm run reloads the persisted entries");
+    assert!(m1.hits > 0, "warm run hits the persistent memo");
+    assert_eq!(warm.final_eval.ram, cold.final_eval.ram, "identical plan warm vs cold");
+    assert_eq!(warm.final_eval.sched_peak, cold.final_eval.sched_peak);
+    assert_eq!(warm.graph.fingerprint(), cold.graph.fingerprint());
+    assert_eq!(warm.iterations.len(), cold.iterations.len());
+}
+
+#[test]
+fn library_default_runs_without_any_cache() {
+    let r = optimize(&models::kws(), &FlowOptions::default());
+    assert!(r.memo.is_none(), "no cache dir configured -> no memo stats");
+}
+
+#[test]
+fn every_corruption_degrades_to_a_cold_run_with_typed_warning() {
+    let g = models::kws();
+    let baseline = optimize(&g, &FlowOptions::default());
+    for kind in [
+        MemoCorruption::Garbage,
+        MemoCorruption::WrongVersion,
+        MemoCorruption::WrongFingerprint,
+        MemoCorruption::Truncated,
+    ] {
+        let dir = memo_dir(&format!("corrupt-{kind:?}"));
+        let cold = optimize(&g, &opts_with_memo(&dir));
+        assert!(cold.memo.as_ref().unwrap().stored > 0, "{kind:?}: cache must exist first");
+        assert_eq!(corrupt_memo_files(&dir, kind).unwrap(), 1, "{kind:?}: one file damaged");
+
+        let warm = optimize(&g, &opts_with_memo(&dir));
+        let m = warm.memo.as_ref().unwrap();
+        assert_eq!(m.loaded, 0, "{kind:?}: a damaged cache must not seed entries");
+        assert!(
+            warm.degradations.iter().any(|d| d.contains("memo cache")),
+            "{kind:?}: typed warning expected, got {:?}",
+            warm.degradations
+        );
+        assert_eq!(
+            warm.final_eval.ram, baseline.final_eval.ram,
+            "{kind:?}: the plan must match a cacheless run"
+        );
+        assert_eq!(warm.graph.fingerprint(), baseline.graph.fingerprint(), "{kind:?}");
+        // The damaged file is rewritten with good entries afterwards.
+        assert!(m.stored > 0, "{kind:?}: run re-persists clean entries");
+    }
+}
+
+#[test]
+fn unwritable_cache_path_degrades_with_typed_warning_never_a_panic() {
+    // Point the cache "directory" at a regular file: loading and saving
+    // both fail at the filesystem level regardless of the uid running
+    // the tests (chmod-based read-only dirs are invisible to root).
+    let base = memo_dir("unwritable");
+    let file_as_dir = base.join("occupied");
+    std::fs::write(&file_as_dir, b"not a directory").unwrap();
+    let g = models::kws();
+    let r = optimize(&g, &opts_with_memo(&file_as_dir));
+    let m = r.memo.as_ref().expect("stats still reported");
+    assert_eq!(m.loaded, 0);
+    assert!(
+        r.degradations.iter().any(|d| d.contains("memo cache")),
+        "typed warning expected, got {:?}",
+        r.degradations
+    );
+    let baseline = optimize(&g, &FlowOptions::default());
+    assert_eq!(r.final_eval.ram, baseline.final_eval.ram, "plan unaffected by cache failure");
+}

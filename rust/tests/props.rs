@@ -79,8 +79,8 @@ fn schedules_are_valid_topo_orders() {
         let m = MemModel::new(&g, &grouping);
         for opts in [
             SchedOptions::default(),
-            SchedOptions { bnb_node_budget: 0, wall_ms: None, use_sp: true },
-            SchedOptions { bnb_node_budget: 0, wall_ms: None, use_sp: false },
+            SchedOptions { bnb_node_budget: 0, wall_ms: None, use_sp: true, search_threads: 1 },
+            SchedOptions { bnb_node_budget: 0, wall_ms: None, use_sp: false, search_threads: 1 },
         ] {
             let s = sched::schedule(&m, opts);
             assert!(is_valid_order(&m, &s.order), "seed {seed}, {:?}", opts);
@@ -97,7 +97,7 @@ fn exact_scheduler_never_loses_to_heuristic() {
         let m = MemModel::new(&g, &grouping);
         let exact = sched::schedule(&m, SchedOptions::default());
         let heur =
-            sched::schedule(&m, SchedOptions { bnb_node_budget: 0, wall_ms: None, use_sp: false });
+            sched::schedule(&m, SchedOptions { bnb_node_budget: 0, wall_ms: None, use_sp: false, search_threads: 1 });
         assert!(
             exact.peak <= heur.peak,
             "seed {seed}: exact {} > heuristic {}",
@@ -120,10 +120,10 @@ fn sp_matches_bnb_on_sp_graphs() {
         }
         sp_cases += 1;
         let sp =
-            sched::schedule(&m, SchedOptions { bnb_node_budget: 0, wall_ms: None, use_sp: true });
+            sched::schedule(&m, SchedOptions { bnb_node_budget: 0, wall_ms: None, use_sp: true, search_threads: 1 });
         let bnb = sched::schedule(
             &m,
-            SchedOptions { bnb_node_budget: 10_000_000, wall_ms: None, use_sp: false },
+            SchedOptions { bnb_node_budget: 10_000_000, wall_ms: None, use_sp: false, search_threads: 1 },
         );
         assert!(bnb.optimal, "seed {seed}: B&B must finish on these sizes");
         assert_eq!(sp.peak, bnb.peak, "seed {seed}: SP-optimal != B&B-optimal");

@@ -26,16 +26,16 @@ use fdt::{FdtError, VerifyCheck};
 /// Solver budgets small enough to keep the big zoo models (PoseNet,
 /// SSDLite) fast in debug builds while still exercising the B&B path.
 fn capped() -> (SchedOptions, LayoutOptions) {
-    let s = SchedOptions { bnb_node_budget: 200_000, wall_ms: Some(2_000), use_sp: true };
-    let l = LayoutOptions { bnb_node_budget: 200_000, wall_ms: Some(2_000) };
+    let s = SchedOptions { bnb_node_budget: 200_000, wall_ms: Some(2_000), use_sp: true, search_threads: 1 };
+    let l = LayoutOptions { bnb_node_budget: 200_000, wall_ms: Some(2_000), search_threads: 1 };
     (s, l)
 }
 
 /// Budget-zero options: the B&B solvers fall back to their heuristics
 /// (hill-valley schedule, first-fit layout) immediately.
 fn heuristic() -> (SchedOptions, LayoutOptions) {
-    let s = SchedOptions { bnb_node_budget: 0, wall_ms: Some(1), use_sp: true };
-    let l = LayoutOptions { bnb_node_budget: 0, wall_ms: Some(1) };
+    let s = SchedOptions { bnb_node_budget: 0, wall_ms: Some(1), use_sp: true, search_threads: 1 };
+    let l = LayoutOptions { bnb_node_budget: 0, wall_ms: Some(1), search_threads: 1 };
     (s, l)
 }
 
